@@ -1,0 +1,39 @@
+//! Quickstart: partition a social-network surrogate with Revolver and
+//! print the paper's two quality metrics.
+//!
+//!     cargo run --release --example quickstart
+
+use revolver::config::RevolverConfig;
+use revolver::graph::gen::{generate_dataset, Dataset};
+use revolver::metrics::quality;
+use revolver::partitioners::{revolver::Revolver, Partitioner};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A LiveJournal-shaped graph (right-skewed social network).
+    let graph = generate_dataset(Dataset::Lj, 1 << 13, /*seed=*/ 7)?;
+    println!(
+        "graph: |V|={}, |E|={} (LiveJournal surrogate)",
+        graph.num_vertices(),
+        graph.num_edges()
+    );
+
+    // 2. Paper settings (§V-F) with k=8 partitions.
+    let cfg = RevolverConfig { parts: 8, seed: 42, ..Default::default() };
+    let k = cfg.parts;
+
+    // 3. Partition.
+    let out = Revolver::new(cfg).partition(&graph);
+
+    // 4. Evaluate (§V-E metrics).
+    let q = quality::evaluate(&graph, &out.labels, k);
+    println!("steps executed:       {}", out.trace.steps());
+    println!("converged at:         {:?}", out.trace.converged_at);
+    println!("local edges:          {:.4}  (higher = less communication)", q.local_edges);
+    println!("max normalized load:  {:.4}  (1.0 = perfect balance)", q.max_normalized_load);
+    println!("wall time:            {:.2}s", out.trace.wall_time_s);
+
+    // Partition sizes.
+    let loads = quality::partition_loads(&graph, &out.labels, k);
+    println!("partition loads (out-edges): {loads:?}");
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Social-network partitioning study — the paper intro's motivating
+//! workload: place a power-law friendship graph (LiveJournal/Orkut
+//! class) across cloud machines so PageRank-style analytics minimize
+//! communication without hot-spotting any one machine.
+//!
+//! Compares all four §V-D algorithms on LJ- and OK-shaped surrogates and
+//! prints a Figure-3-style mini-table.
+//!
+//!     cargo run --release --example social_network
+
+use revolver::config::RevolverConfig;
+use revolver::graph::gen::{generate_dataset, Dataset};
+use revolver::metrics::quality;
+use revolver::metrics::report::{Report, ResultRow};
+use revolver::partitioners::by_name;
+
+fn main() -> anyhow::Result<()> {
+    let mut report = Report::new();
+
+    for ds in [Dataset::Lj, Dataset::Ok] {
+        let graph = generate_dataset(ds, 1 << 12, 7)?;
+        println!(
+            "=== {} surrogate: |V|={}, |E|={} ===",
+            ds.paper_stats().full_name,
+            graph.num_vertices(),
+            graph.num_edges()
+        );
+        for algo in ["revolver", "spinner", "hash", "range"] {
+            for k in [4usize, 16] {
+                let cfg = RevolverConfig { parts: k, seed: 1, ..Default::default() };
+                let out = by_name(algo, cfg)?.partition(&graph);
+                let q = quality::evaluate(&graph, &out.labels, k);
+                println!(
+                    "  {algo:>9} k={k:<3} local edges {:.4}   max norm load {:.4}",
+                    q.local_edges, q.max_normalized_load
+                );
+                report.push(ResultRow {
+                    graph: ds.name().to_string(),
+                    algorithm: algo.to_string(),
+                    parts: k as u32,
+                    local_edges: q.local_edges,
+                    max_normalized_load: q.max_normalized_load,
+                    steps: out.trace.steps(),
+                    wall_time_s: out.trace.wall_time_s,
+                    runs: 1,
+                });
+            }
+        }
+    }
+
+    // The paper's headline checks (§V-G.1, §V-H.1) on this run:
+    let rows = report.rows();
+    let rev_mnl_worst = rows
+        .iter()
+        .filter(|r| r.algorithm == "revolver")
+        .map(|r| r.max_normalized_load)
+        .fold(0.0f64, f64::max);
+    println!("\nworst Revolver max-normalized-load across runs: {rev_mnl_worst:.4}");
+    println!("(the paper's claim: Revolver never sacrifices balance — expect ≈1.0,");
+    println!(" while Range on skewed graphs blows up and Hash wastes local edges)");
+
+    report.write_files(std::path::Path::new("results"), "social_network")?;
+    println!("\nwrote results/social_network.csv and .json");
+    Ok(())
+}

@@ -1,0 +1,131 @@
+"""AOT lowering: JAX (L2 + L1) -> HLO text artifacts for the Rust runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that the published xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Emits, per (B, k) configuration:
+    artifacts/step_b{B}_k{k}.hlo.txt        fused score+signal+LA update
+    artifacts/la_update_b{B}_k{k}.hlo.txt   signal+LA update only
+    artifacts/score_b{B}_k{k}.hlo.txt       normalized LP scoring only
+and a ``manifest.json`` describing shapes/params so the Rust runtime can
+select and validate an artifact without re-deriving conventions.
+
+Usage: python -m compile.aot --out ../artifacts [--batch 256] [--parts 8,32]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Paper settings (Sec. V-F): alpha = 1, beta = 0.1.
+ALPHA = 1.0
+BETA = 0.1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO module -> XlaComputation -> HLO text (id-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, example_args):
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def emit(out_dir: str, batch: int, parts: list[int]) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "alpha": ALPHA,
+        "beta": BETA,
+        "batch": batch,
+        "entries": [],
+    }
+
+    for k in parts:
+        f32 = jnp.float32
+        hist = jax.ShapeDtypeStruct((batch, k), f32)
+        wsum = jax.ShapeDtypeStruct((batch,), f32)
+        loads = jax.ShapeDtypeStruct((k,), f32)
+        cap = jax.ShapeDtypeStruct((), f32)
+        p = jax.ShapeDtypeStruct((batch, k), f32)
+        raw_w = jax.ShapeDtypeStruct((batch, k), f32)
+
+        entries = {
+            f"step_b{batch}_k{k}": (
+                functools.partial(model.batched_step, alpha=ALPHA, beta=BETA),
+                (hist, wsum, loads, cap, p, raw_w),
+                ["hist", "wsum", "loads", "capacity", "p", "raw_w"],
+                ["scores", "p_next"],
+            ),
+            f"la_update_b{batch}_k{k}": (
+                functools.partial(model.batched_la_update, alpha=ALPHA, beta=BETA),
+                (p, raw_w),
+                ["p", "raw_w"],
+                ["p_next"],
+            ),
+            f"score_b{batch}_k{k}": (
+                model.batched_score,
+                (hist, wsum, loads, cap),
+                ["hist", "wsum", "loads", "capacity"],
+                ["scores"],
+            ),
+        }
+
+        for name, (fn, args, in_names, out_names) in entries.items():
+            text = lower_entry(fn, args)
+            path = os.path.join(out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["entries"].append(
+                {
+                    "name": name,
+                    "file": f"{name}.hlo.txt",
+                    "batch": batch,
+                    "k": k,
+                    "inputs": [
+                        {"name": n, "shape": list(a.shape), "dtype": "f32"}
+                        for n, a in zip(in_names, args)
+                    ],
+                    "outputs": out_names,
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument(
+        "--parts",
+        default="8,32",
+        help="comma-separated k values to emit artifacts for",
+    )
+    args = ap.parse_args()
+    parts = [int(x) for x in args.parts.split(",") if x]
+    emit(args.out, args.batch, parts)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: batched weighted learning-automaton update.
+
+Implements eqs. (8)/(9) of the paper — the m^2 inner loop of Revolver —
+for a (B, k) batch of probability vectors in one VMEM-resident block.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the paper runs this
+loop per-vertex on Xeon cores; on a TPU we tile the batch dimension into
+``block_b``-row blocks, keep P/W/R resident in VMEM for the whole k-pass
+sweep (one HBM round-trip per block instead of k), and let the VPU
+vectorize the k-wide elementwise update. ``interpret=True`` is mandatory
+on this CPU-only image — real TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["la_update", "DEFAULT_BLOCK_B"]
+
+# 256 rows x k<=256 cols x 4 bytes x 3 live operands ~= 0.75 MiB VMEM:
+# comfortably inside a TPU core's ~16 MiB VMEM with double-buffering room.
+DEFAULT_BLOCK_B = 256
+
+
+def _la_update_kernel(p_ref, w_ref, r_ref, out_ref, *, alpha, beta, k):
+    """One (block_b, k) tile: sequential sweep over the k signals."""
+    p0 = p_ref[...]
+    w = w_ref[...]
+    r = r_ref[...]
+
+    col = jax.lax.broadcasted_iota(jnp.int32, p0.shape, dimension=1)
+
+    def body(i, p):
+        wi = jax.lax.dynamic_slice_in_dim(w, i, 1, axis=1)  # (B, 1)
+        ri = jax.lax.dynamic_slice_in_dim(r, i, 1, axis=1)  # (B, 1)
+        onehot = (col == i).astype(jnp.float32)
+
+        # Reward branch, eq. (8).
+        p_rew = onehot * (p + alpha * wi * (1.0 - p)) + (1.0 - onehot) * (
+            p * (1.0 - alpha * wi)
+        )
+        # Penalty branch, eq. (9) — additive term weighted by the
+        # receiving element's weight w_j (see ref.la_update_ref).
+        scaled = p * (1.0 - beta * wi)
+        p_pen = scaled + (1.0 - onehot) * (beta * w / (k - 1))
+
+        return jnp.where(ri > 0.5, p_pen, p_rew)
+
+    p = jax.lax.fori_loop(0, k, body, p0)
+
+    # Renormalize (float drift over the k-pass sweep).
+    p = jnp.clip(p, 1e-12, None)
+    out_ref[...] = p / jnp.sum(p, axis=1, keepdims=True)
+
+
+def la_update(p, w, r, alpha, beta, *, block_b: int = DEFAULT_BLOCK_B):
+    """Batched weighted-LA probability update (eqs. 8-9).
+
+    Args:
+        p: (B, k) float32 probability vectors.
+        w: (B, k) float32 half-normalized weights (reward half sums to 1,
+           penalty half sums to 1 — see ``ref.signal_ref``).
+        r: (B, k) float32 reinforcement signals (0 reward / 1 penalty).
+        alpha, beta: python-scalar learning parameters (baked into the
+           kernel — one compiled artifact per (alpha, beta) setting).
+        block_b: batch tile height.
+
+    Returns:
+        (B, k) float32 updated probability vectors, rows summing to 1.
+    """
+    B, k = p.shape
+    if k < 2:
+        raise ValueError(f"weighted LA needs k >= 2 actions, got k={k}")
+    block_b = min(block_b, B)
+    if B % block_b != 0:
+        # Pad the batch to a block multiple; padded rows are discarded.
+        pad = block_b - (B % block_b)
+        p = jnp.concatenate([p, jnp.full((pad, k), 1.0 / k, p.dtype)], axis=0)
+        w = jnp.concatenate([w, jnp.zeros((pad, k), w.dtype)], axis=0)
+        r = jnp.concatenate([r, jnp.ones((pad, k), r.dtype)], axis=0)
+        out = la_update(p, w, r, alpha, beta, block_b=block_b)
+        return out[:B]
+
+    kernel = functools.partial(
+        _la_update_kernel, alpha=float(alpha), beta=float(beta), k=k
+    )
+    grid = (p.shape[0] // block_b,)
+    spec = pl.BlockSpec((block_b, k), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(p.shape, jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(p.astype(jnp.float32), w.astype(jnp.float32), r.astype(jnp.float32))

@@ -1,0 +1,177 @@
+"""Pure-jnp reference oracle for the Pallas kernels.
+
+Every function here is the mathematically-literal transcription of the
+paper's equations, written with no regard for performance. The Pallas
+kernels in `la_update.py` / `score.py` and the fused L2 step in
+`model.py` are asserted allclose against these by `python/tests/`.
+
+Shapes (batch-of-vertices convention):
+    B — number of vertices in the batch
+    k — number of partitions (= LA actions, m in the paper)
+
+Equations implemented (paper numbering):
+    (8)/(9)  weighted-LA probability update      -> ``la_update_ref``
+    (10)-(12) normalized LP score                 -> ``score_ref``
+    (13)+Sec IV-D.6  weight vector & signal split -> ``signal_ref``
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "la_update_ref",
+    "score_ref",
+    "signal_ref",
+    "step_ref",
+]
+
+
+def la_update_ref(p, w, r, alpha, beta):
+    """Weighted learning-automaton update, eqs. (8) and (9).
+
+    The paper applies the update once per reinforcement signal ``r_i``
+    (m passes over an m-vector, m^2 scalar work).  Pass ``i`` uses
+    weight ``w_i`` and signal ``r_i``:
+
+      reward  (r_i = 0):  p_i += alpha*w_i*(1-p_i);  p_j *= (1-alpha*w_i)
+      penalty (r_i = 1):  p_i *= (1-beta*w_i);
+                          p_j  = p_j*(1-beta*w_i) + beta/(m-1)
+
+    The penalty redistribution term is weighted by the *receiving*
+    element's weight w_j (``beta*w_j/(m-1)``) — eq. (9) as printed
+    subscripts the weight with j; the unweighted beta/(m-1) variant
+    hands probability mass back to known-bad actions every pass and
+    freezes the automaton at a high noise floor (DESIGN.md F4). A
+    renormalization closes the sweep to keep P a distribution under
+    float arithmetic.
+
+    Args:
+        p: (B, k) probability vectors.
+        w: (B, k) weights, each half (reward/penalty) summing to 1.
+        r: (B, k) reinforcement signals, 0 = reward, 1 = penalty.
+        alpha, beta: scalar learning parameters.
+
+    Returns:
+        (B, k) updated probability vectors (rows sum to 1).
+    """
+    p = jnp.asarray(p, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    r = jnp.asarray(r, jnp.float32)
+    B, k = p.shape
+
+    # Sequential sweep over the k signals, exactly as the paper's m^2
+    # formulation prescribes.
+    for i in range(k):
+        wi = w[:, i : i + 1]  # (B, 1)
+        ri = r[:, i : i + 1]  # (B, 1)
+        onehot = jnp.zeros((B, k), jnp.float32).at[:, i].set(1.0)
+
+        # Reward branch, eq. (8).
+        p_rew_i = p + alpha * wi * (1.0 - p)
+        p_rew_j = p * (1.0 - alpha * wi)
+        p_rew = onehot * p_rew_i + (1.0 - onehot) * p_rew_j
+
+        # Penalty branch, eq. (9) — additive term weighted by w_j.
+        p_pen_i = p * (1.0 - beta * wi)
+        p_pen_j = p * (1.0 - beta * wi) + beta * w / (k - 1)
+        p_pen = onehot * p_pen_i + (1.0 - onehot) * p_pen_j
+
+        p = jnp.where(ri > 0.5, p_pen, p_rew)
+
+    # Float-arithmetic renormalization (see docstring).
+    p = jnp.clip(p, 1e-12, None)
+    return p / jnp.sum(p, axis=1, keepdims=True)
+
+
+def score_ref(hist, wsum, loads, capacity):
+    """Normalized LP score, eqs. (10)-(12).
+
+    score(v, l) = (tau(v, l) + pi(l)) / 2
+      tau(v, l) = (sum_{u in N(v)} w(u,v) * delta(psi(u), l)) / sum w(u,v)
+      pi(l)     = (1 - b(l)/C) / sum_i (1 - b(l_i)/C)
+
+    The neighbour gather is done host-side; the kernel consumes the
+    per-vertex label-weight histogram ``hist[v, l] = sum_{u in N(v)}
+    w(u,v) * delta(psi(u), l)`` and the per-vertex total weight ``wsum``.
+
+    Footnote 1: if any penalty term is negative (overloaded partition,
+    b(l) > C), all penalties are shifted by the minimum negative value
+    before normalization.
+
+    Args:
+        hist: (B, k) neighbour label-weight histogram.
+        wsum: (B,) or (B, 1) total neighbour weight per vertex.
+        loads: (k,) current partition loads b(l).
+        capacity: scalar C.
+
+    Returns:
+        (B, k) scores.
+    """
+    hist = jnp.asarray(hist, jnp.float32)
+    wsum = jnp.asarray(wsum, jnp.float32).reshape(-1, 1)
+    loads = jnp.asarray(loads, jnp.float32)
+
+    tau = hist / jnp.maximum(wsum, 1e-12)
+
+    pen = 1.0 - loads / capacity  # (k,)
+    # Footnote 1: augment with respect to the minimum negative value.
+    min_pen = jnp.min(pen)
+    pen = jnp.where(min_pen < 0.0, pen - min_pen, pen)
+    denom = jnp.sum(pen)
+    pi = pen / jnp.maximum(denom, 1e-12)  # (k,)
+
+    return (tau + pi[None, :]) / 2.0
+
+
+def signal_ref(weights):
+    """Reinforcement-signal construction, Sec. IV-D.6.
+
+    Split the raw weight vector at its mean: w_i > mean -> reward
+    (r_i = 0), else penalty (r_i = 1). Each entry's weight is its
+    deviation |w_i - mean| (an entry at the mean carries no signal —
+    DESIGN.md F3); each half is normalized independently so each sums to
+    1 (and the whole vector sums to 2). Degenerate halves (empty, or
+    all-at-mean) get a uniform distribution over their members so the LA
+    update stays well-defined.
+
+    Args:
+        weights: (B, k) raw accumulated weights (eq. 13 output).
+
+    Returns:
+        (w_norm, r): both (B, k); r is 0.0 for reward, 1.0 for penalty.
+    """
+    weights = jnp.asarray(weights, jnp.float32)
+    mean = jnp.mean(weights, axis=1, keepdims=True)
+    r = jnp.where(weights > mean, 0.0, 1.0)  # (B, k)
+    dev = jnp.abs(weights - mean)
+
+    def half_norm(mask):
+        cnt = jnp.sum(mask, axis=1, keepdims=True)
+        s = jnp.sum(dev * mask, axis=1, keepdims=True)
+        # If the half's deviations sum to 0 (or the half is empty
+        # elsewhere), fall back to uniform over the half's members.
+        uniform = mask / jnp.maximum(cnt, 1.0)
+        scaled = dev * mask / jnp.where(s > 0.0, s, 1.0)
+        return jnp.where(s > 0.0, scaled, uniform)
+
+    rew_mask = 1.0 - r
+    pen_mask = r
+    w_norm = half_norm(rew_mask) + half_norm(pen_mask)
+    return w_norm, r
+
+
+def step_ref(hist, wsum, loads, capacity, p, raw_w, alpha, beta):
+    """Fused per-batch Revolver numeric step (the L2 computation).
+
+    score -> (returned for the host's argmax/lambda bookkeeping), then
+    signal construction from the host-accumulated raw weights (eq. 13),
+    then the weighted-LA update.
+
+    Returns:
+        (scores, p_next): (B, k) each.
+    """
+    scores = score_ref(hist, wsum, loads, capacity)
+    w_norm, r = signal_ref(raw_w)
+    p_next = la_update_ref(p, w_norm, r, alpha, beta)
+    return scores, p_next

@@ -1,0 +1,88 @@
+"""L2: the batched Revolver numeric step as a JAX computation.
+
+This is the dense half of one Revolver step for a B-vertex batch,
+composed from the L1 Pallas kernels:
+
+    scores  = score(hist, wsum, loads, C)        # eqs. (10)-(12), Pallas
+    w, r    = signal(raw_w)                      # Sec. IV-D.6, jnp
+    p_next  = la_update(p, w, r, alpha, beta)    # eqs. (8)-(9),  Pallas
+
+The irregular half (CSR neighbour gather, roulette-wheel action draws,
+migration) stays in the Rust coordinator; this graph is lowered once by
+``aot.py`` to HLO text and executed from Rust via PJRT.
+
+All functions are shape-polymorphic in Python but are lowered at fixed
+example shapes — one artifact per (B, k, alpha, beta) configuration.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.la_update import la_update
+from .kernels.score import score
+
+__all__ = ["signal", "batched_step", "batched_la_update", "batched_score"]
+
+
+def signal(raw_w):
+    """Reinforcement signal construction (Sec. IV-D.6), pure jnp.
+
+    Mean-split the accumulated weight vector into reward/penalty halves;
+    each entry's weight is its deviation |w - mean| and each half is
+    normalized to sum 1 (so sum(W) = 2, as eqs. 8-9 require). Degenerate
+    halves fall back to uniform. Mirrors `ref.signal_ref` and the Rust
+    `la::signal::build_signals` exactly.
+
+    Args:
+        raw_w: (B, k) raw weights accumulated by eq. (13) on the host.
+
+    Returns:
+        (w_norm, r): (B, k) float32 each; r is 0 = reward, 1 = penalty.
+    """
+    raw_w = jnp.asarray(raw_w, jnp.float32)
+    mean = jnp.mean(raw_w, axis=1, keepdims=True)
+    r = jnp.where(raw_w > mean, 0.0, 1.0)
+    dev = jnp.abs(raw_w - mean)
+
+    def half_norm(mask):
+        cnt = jnp.sum(mask, axis=1, keepdims=True)
+        s = jnp.sum(dev * mask, axis=1, keepdims=True)
+        uniform = mask / jnp.maximum(cnt, 1.0)
+        scaled = dev * mask / jnp.where(s > 0.0, s, 1.0)
+        return jnp.where(s > 0.0, scaled, uniform)
+
+    w_norm = half_norm(1.0 - r) + half_norm(r)
+    return w_norm, r
+
+
+def batched_step(hist, wsum, loads, capacity, p, raw_w, *, alpha, beta):
+    """Fused dense Revolver step for one vertex batch.
+
+    Args:
+        hist: (B, k) neighbour label-weight histogram.
+        wsum: (B,) total neighbour weight per vertex.
+        loads: (k,) partition loads b(l).
+        capacity: scalar C.
+        p: (B, k) LA probability vectors.
+        raw_w: (B, k) raw eq.-(13) weights.
+        alpha, beta: python scalars, baked at lowering time.
+
+    Returns:
+        (scores, p_next): (B, k) float32 each.
+    """
+    scores = score(hist, wsum, loads, capacity)
+    w_norm, r = signal(raw_w)
+    p_next = la_update(p, w_norm, r, alpha, beta)
+    return scores, p_next
+
+
+def batched_la_update(p, raw_w, *, alpha, beta):
+    """Signal construction + weighted-LA update only (no scoring)."""
+    w_norm, r = signal(raw_w)
+    return la_update(p, w_norm, r, alpha, beta)
+
+
+def batched_score(hist, wsum, loads, capacity):
+    """Normalized LP scoring only."""
+    return score(hist, wsum, loads, capacity)

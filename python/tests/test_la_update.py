@@ -1,0 +1,90 @@
+"""Pallas weighted-LA update kernel vs the pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.la_update import la_update
+from compile.kernels.ref import la_update_ref, signal_ref
+
+RNG = np.random.default_rng(0)
+
+
+def make_inputs(b, k, seed=0):
+    """Random probability vectors + half-normalized weights + signals."""
+    rng = np.random.default_rng(seed)
+    p = rng.random((b, k)).astype(np.float32) + 1e-3
+    p /= p.sum(axis=1, keepdims=True)
+    raw_w = rng.random((b, k)).astype(np.float32)
+    w, r = signal_ref(raw_w)
+    return jnp.asarray(p), jnp.asarray(w), jnp.asarray(r)
+
+
+@pytest.mark.parametrize("b,k", [(1, 2), (4, 8), (256, 32), (300, 7), (32, 256)])
+def test_matches_ref(b, k):
+    p, w, r = make_inputs(b, k)
+    got = la_update(p, w, r, 1.0, 0.1)
+    want = la_update_ref(p, w, r, 1.0, 0.1)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("b,k", [(8, 4), (64, 16)])
+def test_rows_sum_to_one(b, k):
+    p, w, r = make_inputs(b, k, seed=1)
+    got = la_update(p, w, r, 1.0, 0.1)
+    np.testing.assert_allclose(np.asarray(got).sum(axis=1), 1.0, atol=1e-5)
+
+
+def test_probabilities_stay_positive():
+    p, w, r = make_inputs(16, 8, seed=2)
+    got = np.asarray(la_update(p, w, r, 1.0, 0.1))
+    assert (got > 0).all()
+
+
+def test_reward_increases_rewarded_action():
+    """A pure-reward signal on action 0 must increase p_0."""
+    k = 4
+    p = jnp.full((1, k), 1.0 / k, jnp.float32)
+    w = jnp.zeros((1, k), jnp.float32).at[0, 0].set(1.0)
+    # r: action 0 reward, others penalty with uniform penalty weights.
+    r = jnp.ones((1, k), jnp.float32).at[0, 0].set(0.0)
+    w = w.at[0, 1:].set(1.0 / (k - 1))
+    got = np.asarray(la_update(p, w, r, 0.5, 0.1))
+    assert got[0, 0] > 1.0 / k
+
+
+def test_zero_alpha_beta_is_identity_up_to_renorm():
+    p, w, r = make_inputs(8, 8, seed=3)
+    got = np.asarray(la_update(p, w, r, 0.0, 0.0))
+    np.testing.assert_allclose(got, np.asarray(p), rtol=1e-5, atol=1e-6)
+
+
+def test_block_padding_consistency():
+    """Non-multiple batch sizes must agree with the exact-block result."""
+    p, w, r = make_inputs(300, 8, seed=4)
+    full = np.asarray(la_update(p, w, r, 1.0, 0.1, block_b=256))
+    small = np.asarray(la_update(p, w, r, 1.0, 0.1, block_b=300))
+    np.testing.assert_allclose(full, small, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 40),
+    k=st.integers(2, 24),
+    alpha=st.floats(0.0, 1.0),
+    beta=st.floats(0.0, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(b, k, alpha, beta, seed):
+    p, w, r = make_inputs(b, k, seed=seed)
+    got = la_update(p, w, r, alpha, beta, block_b=16)
+    want = la_update_ref(p, w, r, alpha, beta)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got).sum(axis=1), 1.0, atol=1e-4)
+
+
+def test_k1_rejected():
+    p = jnp.ones((2, 1), jnp.float32)
+    with pytest.raises(ValueError):
+        la_update(p, p, p, 1.0, 0.1)

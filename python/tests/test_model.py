@@ -1,0 +1,90 @@
+"""L2 fused step vs the oracle, plus signal-construction invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import signal_ref, step_ref
+
+
+def make_inputs(b, k, seed=0):
+    rng = np.random.default_rng(seed)
+    hist = rng.random((b, k)).astype(np.float32) * 5.0
+    wsum = hist.sum(axis=1) + 0.1
+    cap = 50.0
+    loads = rng.random(k).astype(np.float32) * cap
+    p = rng.random((b, k)).astype(np.float32) + 1e-3
+    p /= p.sum(axis=1, keepdims=True)
+    raw_w = rng.random((b, k)).astype(np.float32)
+    return tuple(jnp.asarray(x) for x in (hist, wsum, loads)) + (
+        cap,
+        jnp.asarray(p),
+        jnp.asarray(raw_w),
+    )
+
+
+@pytest.mark.parametrize("b,k", [(8, 4), (256, 32), (100, 8)])
+def test_step_matches_ref(b, k):
+    hist, wsum, loads, cap, p, raw_w = make_inputs(b, k)
+    scores, p_next = model.batched_step(
+        hist, wsum, loads, cap, p, raw_w, alpha=1.0, beta=0.1
+    )
+    scores_ref, p_next_ref = step_ref(hist, wsum, loads, cap, p, raw_w, 1.0, 0.1)
+    np.testing.assert_allclose(scores, scores_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(p_next, p_next_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_signal_matches_ref():
+    rng = np.random.default_rng(1)
+    raw_w = jnp.asarray(rng.random((32, 16)).astype(np.float32))
+    w_got, r_got = model.signal(raw_w)
+    w_want, r_want = signal_ref(raw_w)
+    np.testing.assert_allclose(w_got, w_want, rtol=1e-6)
+    np.testing.assert_allclose(r_got, r_want)
+
+
+def test_signal_halves_sum_to_one():
+    rng = np.random.default_rng(2)
+    raw_w = jnp.asarray(rng.random((16, 9)).astype(np.float32))
+    w, r = model.signal(raw_w)
+    w, r = np.asarray(w), np.asarray(r)
+    rew = (w * (1 - r)).sum(axis=1)
+    pen = (w * r).sum(axis=1)
+    np.testing.assert_allclose(rew, 1.0, atol=1e-5)
+    np.testing.assert_allclose(pen, 1.0, atol=1e-5)
+    np.testing.assert_allclose(w.sum(axis=1), 2.0, atol=1e-5)
+
+
+def test_signal_all_equal_weights():
+    """All-equal weights: nothing is > mean, so everything is penalty;
+    the empty reward half must fall back to something finite."""
+    raw_w = jnp.full((4, 8), 0.5, jnp.float32)
+    w, r = model.signal(raw_w)
+    assert np.isfinite(np.asarray(w)).all()
+    np.testing.assert_allclose(np.asarray(r), 1.0)  # all penalties
+
+
+def test_signal_all_zero_weights():
+    raw_w = jnp.zeros((4, 8), jnp.float32)
+    w, r = model.signal(raw_w)
+    assert np.isfinite(np.asarray(w)).all()
+
+
+def test_la_update_entry_matches_composition():
+    hist, wsum, loads, cap, p, raw_w = make_inputs(64, 8, seed=3)
+    got = model.batched_la_update(p, raw_w, alpha=1.0, beta=0.1)
+    _, want = step_ref(hist, wsum, loads, cap, p, raw_w, 1.0, 0.1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 24), k=st.integers(2, 16), seed=st.integers(0, 2**31 - 1))
+def test_step_hypothesis(b, k, seed):
+    hist, wsum, loads, cap, p, raw_w = make_inputs(b, k, seed=seed)
+    scores, p_next = model.batched_step(
+        hist, wsum, loads, cap, p, raw_w, alpha=1.0, beta=0.1
+    )
+    np.testing.assert_allclose(np.asarray(p_next).sum(axis=1), 1.0, atol=1e-4)
+    assert np.isfinite(np.asarray(scores)).all()

@@ -1,0 +1,78 @@
+"""Pallas normalized-LP score kernel vs the pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import score_ref
+from compile.kernels.score import score
+
+
+def make_inputs(b, k, seed=0, overload=False):
+    rng = np.random.default_rng(seed)
+    hist = rng.random((b, k)).astype(np.float32) * 10.0
+    wsum = hist.sum(axis=1) + rng.random(b).astype(np.float32)
+    cap = 100.0
+    loads = rng.random(k).astype(np.float32) * (cap * (1.5 if overload else 0.9))
+    return jnp.asarray(hist), jnp.asarray(wsum), jnp.asarray(loads), cap
+
+
+@pytest.mark.parametrize("b,k", [(1, 2), (16, 8), (256, 32), (100, 7)])
+def test_matches_ref(b, k):
+    hist, wsum, loads, cap = make_inputs(b, k)
+    got = score(hist, wsum, loads, cap)
+    want = score_ref(hist, wsum, loads, cap)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_overloaded_partition_footnote1():
+    """Negative penalties (b(l) > C) take the augmentation path."""
+    hist, wsum, loads, cap = make_inputs(32, 8, seed=1, overload=True)
+    assert (np.asarray(loads) > cap).any()
+    got = score(hist, wsum, loads, cap)
+    want = score_ref(hist, wsum, loads, cap)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    assert np.isfinite(np.asarray(got)).all()
+
+
+def test_score_bounded():
+    """tau in [0,1] and pi sums to 1 => scores in [0, 1]."""
+    hist, wsum, loads, cap = make_inputs(64, 16, seed=2)
+    got = np.asarray(score(hist, wsum, loads, cap))
+    assert (got >= 0).all() and (got <= 1.0 + 1e-6).all()
+
+
+def test_empty_neighbourhood_is_safe():
+    """wsum = 0 (isolated vertex) must not produce NaN/inf."""
+    hist = jnp.zeros((4, 8), jnp.float32)
+    wsum = jnp.zeros((4,), jnp.float32)
+    loads = jnp.ones((8,), jnp.float32)
+    got = np.asarray(score(hist, wsum, loads, 10.0))
+    assert np.isfinite(got).all()
+
+
+def test_uniform_loads_give_uniform_penalty():
+    """Equal loads => pi uniform => score differences come from tau only."""
+    k = 8
+    hist = jnp.zeros((1, k), jnp.float32).at[0, 3].set(5.0)
+    wsum = jnp.full((1,), 5.0, jnp.float32)
+    loads = jnp.full((k,), 2.0, jnp.float32)
+    got = np.asarray(score(hist, wsum, loads, 10.0))
+    # partition 3 has tau=1 + pi=1/k; others tau=0 + pi=1/k.
+    np.testing.assert_allclose(got[0, 3], (1.0 + 1.0 / k) / 2.0, rtol=1e-5)
+    np.testing.assert_allclose(got[0, 0], (0.0 + 1.0 / k) / 2.0, rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 50),
+    k=st.integers(2, 32),
+    seed=st.integers(0, 2**31 - 1),
+    overload=st.booleans(),
+)
+def test_hypothesis_sweep(b, k, seed, overload):
+    hist, wsum, loads, cap = make_inputs(b, k, seed=seed, overload=overload)
+    got = score(hist, wsum, loads, cap, block_b=16)
+    want = score_ref(hist, wsum, loads, cap)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,60 @@
+//! E5 — §IV-A / §V-I ablation: weighted vs classic learning automata.
+//!
+//! The paper motivates the weighted LA by the curse of dimensionality:
+//! with many actions, the classic single-reward update concentrates too
+//! slowly / too harshly. This ablation swaps only the LA update rule and
+//! sweeps k, measuring final quality.
+//!
+//!     cargo bench --bench ablation_weighted_la
+
+use revolver::config::RevolverConfig;
+use revolver::graph::gen::{generate_dataset, Dataset};
+use revolver::metrics::quality;
+use revolver::partitioners::by_name;
+use revolver::util::bench::full_scale;
+
+fn main() {
+    let n = if full_scale() { 1 << 14 } else { 1 << 12 };
+    let parts: &[usize] =
+        if full_scale() { &[4, 16, 64, 128, 256] } else { &[4, 32, 128] };
+    let g = generate_dataset(Dataset::Lj, n, 7).unwrap();
+    println!(
+        "=== E5 — weighted vs classic LA on LJ surrogate (|V|={}, |E|={}) ===\n",
+        g.num_vertices(),
+        g.num_edges()
+    );
+    println!(
+        "{:>4} | {:>21} | {:>21} | weighted wins le",
+        "k", "weighted le / mnl", "classic le / mnl"
+    );
+
+    let mut wins = 0;
+    for &k in parts {
+        let mut res = Vec::new();
+        for classic in [false, true] {
+            let cfg = RevolverConfig {
+                parts: k,
+                classic_la: classic,
+                seed: 3,
+                ..Default::default()
+            };
+            let out = by_name("revolver", cfg).unwrap().partition(&g);
+            res.push(quality::evaluate(&g, &out.labels, k));
+        }
+        let win = res[0].local_edges >= res[1].local_edges - 1e-6;
+        wins += win as u32;
+        println!(
+            "{:>4} | {:>9.4} / {:>9.4} | {:>9.4} / {:>9.4} | {}",
+            k,
+            res[0].local_edges,
+            res[0].max_normalized_load,
+            res[1].local_edges,
+            res[1].max_normalized_load,
+            if win { "yes" } else { "no" }
+        );
+    }
+    println!(
+        "\nweighted LA local-edges wins: {wins}/{} (paper §V-I: the gap should widen with k)",
+        parts.len()
+    );
+}

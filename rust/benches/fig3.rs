@@ -1,0 +1,86 @@
+//! E2 — Figure 3 reproduction: average local edges (bars) and max
+//! normalized load (lines) for {Revolver, Spinner, Hash, Range} across
+//! all nine graphs and a sweep of partition counts.
+//!
+//! Smoke scale (default): 3 partition counts, 1 run, 4k vertices —
+//! finishes in a few minutes on one core. Full scale
+//! (REVOLVER_BENCH_SCALE=full): the paper's 9 partition counts
+//! {2,...,256}, 10 runs averaged, 16k vertices.
+//!
+//! Output: the per-graph series (same rows the paper plots) on stdout
+//! and results/fig3_<scale>.csv + .json.
+
+use revolver::config::RevolverConfig;
+use revolver::graph::gen::{generate_dataset, Dataset};
+use revolver::metrics::quality;
+use revolver::metrics::report::{Report, ResultRow};
+use revolver::partitioners::by_name;
+use revolver::util::bench::full_scale;
+use revolver::util::Stopwatch;
+
+fn main() {
+    let full = full_scale();
+    let (n, parts, runs): (usize, &[usize], u32) = if full {
+        (1 << 14, &[2, 4, 8, 16, 32, 64, 128, 192, 256], 10)
+    } else {
+        (1 << 12, &[2, 8, 32], 1)
+    };
+    println!(
+        "=== Figure 3 sweep (scale: {} vertices, k in {parts:?}, {runs} run(s)) ===",
+        n
+    );
+
+    let mut report = Report::new();
+    for ds in Dataset::ALL {
+        let g = generate_dataset(ds, n, 7).unwrap();
+        eprintln!("[fig3] {} |V|={} |E|={}", ds.name(), g.num_vertices(), g.num_edges());
+        for algo in ["revolver", "spinner", "hash", "range"] {
+            for &k in parts {
+                let sw = Stopwatch::start();
+                let mut le = 0.0;
+                let mut mnl = 0.0;
+                let mut steps = 0u32;
+                for run in 0..runs {
+                    let cfg = RevolverConfig {
+                        parts: k,
+                        seed: 42 + run as u64,
+                        ..Default::default()
+                    };
+                    let out = by_name(algo, cfg).unwrap().partition(&g);
+                    let q = quality::evaluate(&g, &out.labels, k);
+                    le += q.local_edges;
+                    mnl += q.max_normalized_load;
+                    steps += out.trace.steps();
+                }
+                report.push(ResultRow {
+                    graph: ds.name().to_string(),
+                    algorithm: algo.to_string(),
+                    parts: k as u32,
+                    local_edges: le / runs as f64,
+                    max_normalized_load: mnl / runs as f64,
+                    steps: steps / runs,
+                    wall_time_s: sw.elapsed_s() / runs as f64,
+                    runs,
+                });
+            }
+        }
+    }
+
+    print!("{}", report.to_table());
+
+    // The paper's headline claims, checked over the whole sweep:
+    let rows = report.rows();
+    let rev_wins_balance = rows
+        .iter()
+        .filter(|r| r.algorithm == "revolver")
+        .all(|r| {
+            rows.iter()
+                .filter(|o| o.graph == r.graph && o.parts == r.parts && o.algorithm != "revolver")
+                .all(|o| r.max_normalized_load <= o.max_normalized_load + 0.10)
+        });
+    println!("Revolver best-or-tied max normalized load everywhere: {rev_wins_balance}");
+
+    let stem = if full { "fig3_full" } else { "fig3_smoke" };
+    report.write_files(std::path::Path::new("results"), stem).unwrap();
+    println!("wrote results/{stem}.csv and .json");
+}

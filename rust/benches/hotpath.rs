@@ -1,0 +1,116 @@
+//! Hot-path microbenchmarks — the §Perf working set: per-primitive
+//! latencies and the end-to-end step throughput the optimization loop
+//! tracks (EXPERIMENTS.md §Perf).
+//!
+//!     cargo bench --bench hotpath
+
+use revolver::config::RevolverConfig;
+use revolver::graph::gen::{generate_dataset, Dataset};
+use revolver::la::roulette;
+use revolver::la::signal::build_signals_into;
+use revolver::la::weighted::WeightedLa;
+use revolver::la::Signal;
+use revolver::lp::{neighbor_histogram, normalized};
+use revolver::partitioners::{revolver::Revolver, spinner::Spinner, Partitioner};
+use revolver::util::bench::{bench, full_scale};
+use revolver::util::rng::Rng;
+
+fn main() {
+    let n = if full_scale() { 1 << 15 } else { 1 << 13 };
+    let g = generate_dataset(Dataset::Lj, n, 7).unwrap();
+    let k = 32usize;
+    println!(
+        "=== hot-path microbenchmarks (LJ surrogate |V|={} |E|={}, k={k}) ===\n",
+        g.num_vertices(),
+        g.num_edges()
+    );
+
+    // Primitive 1: neighbour histogram (the CSR-bound gather).
+    let labels: Vec<u32> = {
+        let mut rng = Rng::new(1);
+        (0..g.num_vertices()).map(|_| rng.below(k as u64) as u32).collect()
+    };
+    let mut hist = vec![0.0f32; k];
+    let r = bench("neighbor_histogram (all vertices)", 2, 10, || {
+        let mut acc = 0.0f32;
+        for v in 0..g.num_vertices() as u32 {
+            acc += neighbor_histogram(
+                g.neighbors(v),
+                g.neighbor_weights(v),
+                |u| labels[u as usize],
+                &mut hist,
+            );
+        }
+        acc
+    });
+    println!("{r}   ({:.1}M edge-visits/s)", r.throughput(2 * g.num_edges() as u64) / 1e6);
+
+    // Primitive 2: normalized LP score.
+    let mut pi = vec![0.0f32; k];
+    let loads: Vec<f32> = (0..k).map(|i| 900.0 + i as f32).collect();
+    normalized::penalty_into(&loads, 64_000.0, &mut pi);
+    let mut scores = vec![0.0f32; k];
+    let hist2: Vec<f32> = (0..k).map(|i| i as f32).collect();
+    let r = bench("score_into x 100k", 2, 10, || {
+        let mut best = 0usize;
+        for _ in 0..100_000 {
+            best = normalized::score_into(&hist2, 42.0, &pi, &mut scores);
+        }
+        best
+    });
+    println!("{r}   ({:.1}M scores/s)", r.throughput(100_000) / 1e6);
+
+    // Primitive 3: signal construction + weighted LA update.
+    let raw: Vec<f32> = (0..k).map(|i| (i % 5) as f32).collect();
+    let mut w = vec![0.0f32; k];
+    let mut s = vec![Signal::Penalty; k];
+    let mut p = vec![1.0 / k as f32; k];
+    let r = bench("signal+weighted_update x 100k", 2, 10, || {
+        for _ in 0..100_000 {
+            build_signals_into(&raw, &mut w, &mut s);
+            WeightedLa::update(&mut p, &w, &s, 1.0, 0.1);
+        }
+        p[0]
+    });
+    println!("{r}   ({:.1}M LA-updates/s)", r.throughput(100_000) / 1e6);
+
+    // Primitive 4: roulette wheel.
+    let mut rng = Rng::new(2);
+    let r = bench("roulette_spin x 1M", 2, 10, || {
+        let mut acc = 0usize;
+        for _ in 0..1_000_000 {
+            acc += roulette::spin(&p, &mut rng);
+        }
+        acc
+    });
+    println!("{r}   ({:.1}M spins/s)", r.throughput(1_000_000) / 1e6);
+
+    // End-to-end: one full Revolver / Spinner step (the §Perf headline).
+    println!();
+    for (name, steps) in [("revolver", 10u32), ("spinner", 10)] {
+        let cfg = RevolverConfig {
+            parts: k,
+            max_steps: steps,
+            halt_window: u32::MAX,
+            threads: 1,
+            seed: 3,
+            ..Default::default()
+        };
+        let r = match name {
+            "revolver" => {
+                let p = Revolver::new(cfg);
+                bench(&format!("{name} {steps} steps e2e"), 1, 3, || {
+                    p.partition(&g).labels.len()
+                })
+            }
+            _ => {
+                let p = Spinner::new(cfg);
+                bench(&format!("{name} {steps} steps e2e"), 1, 3, || {
+                    p.partition(&g).labels.len()
+                })
+            }
+        };
+        let edge_visits = steps as u64 * 2 * g.num_edges() as u64;
+        println!("{r}   ({:.2}M edge-visits/s)", r.throughput(edge_visits) / 1e6);
+    }
+}

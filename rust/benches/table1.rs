@@ -1,0 +1,54 @@
+//! E1 — Table I reproduction: dataset statistics (|V|, |E|, density,
+//! Pearson's 1st skewness) for the nine surrogate graphs, side by side
+//! with the paper's reference values, plus generator throughput.
+//!
+//!     cargo bench --bench table1
+//!     REVOLVER_BENCH_SCALE=full cargo bench --bench table1
+
+use revolver::graph::gen::{generate_dataset, Dataset};
+use revolver::graph::stats;
+use revolver::util::bench::{bench, full_scale};
+use revolver::util::with_commas;
+
+fn main() {
+    let n = if full_scale() { 1 << 16 } else { 1 << 13 };
+    println!("=== Table I — surrogate dataset statistics (scale: {n} vertices) ===\n");
+    println!(
+        "{:<6} | {:>10} {:>12} {:>9} {:>7} | paper: {:>8} {:>8} {:>6} {:>6} | class match",
+        "graph", "|V|", "|E|", "D(e-5)", "skew", "|V|", "|E|", "D(e-5)", "skew"
+    );
+
+    let mut matches = 0;
+    for ds in Dataset::ALL {
+        let g = generate_dataset(ds, n, 7).unwrap();
+        let s = stats::compute(&g);
+        let p = ds.paper_stats();
+        let ours = stats::classify_skew(s.skewness);
+        let theirs = stats::classify_skew(p.skew);
+        let class_ok = ours == theirs;
+        matches += class_ok as u32;
+        println!(
+            "{:<6} | {:>10} {:>12} {:>9.3} {:>7.3} | {:>8} {:>8} {:>6.2} {:>6.2} | {}",
+            ds.name(),
+            with_commas(s.vertices as u64),
+            with_commas(s.edges as u64),
+            s.density * 1e5,
+            s.skewness,
+            format!("{:.2}M", p.vertices / 1e6),
+            format!("{:.1}M", p.edges / 1e6),
+            p.density_e5,
+            p.skew,
+            if class_ok { "yes" } else { "NO" },
+        );
+    }
+    println!("\nskew-class agreement: {matches}/9 (density is scale-dependent; skew class is the fidelity criterion, DESIGN.md §4)");
+
+    println!("\n=== generator throughput ===");
+    for ds in [Dataset::Lj, Dataset::Usa, Dataset::Hlwd] {
+        let r = bench(&format!("generate {} ({} vertices)", ds.name(), n), 1, 3, || {
+            generate_dataset(ds, n, 7).unwrap().num_edges()
+        });
+        let edges = generate_dataset(ds, n, 7).unwrap().num_edges();
+        println!("{r}   ({:.1}M edges/s)", r.throughput(edges as u64) / 1e6);
+    }
+}

@@ -1,0 +1,98 @@
+//! E7 — L1/L2 runtime benchmarks: latency of the AOT-compiled XLA
+//! kernels (score, la_update, fused step) vs the native Rust
+//! implementations at the same batch shape, plus end-to-end Revolver
+//! step throughput under both engines.
+//!
+//! Requires `make artifacts`.
+//!
+//!     cargo bench --bench xla_runtime
+
+use revolver::config::{Engine, RevolverConfig};
+use revolver::graph::gen::{generate_dataset, Dataset};
+use revolver::la::signal::build_signals_into;
+use revolver::la::weighted::WeightedLa;
+use revolver::la::Signal;
+use revolver::lp::normalized;
+use revolver::partitioners::{revolver::Revolver, Partitioner};
+use revolver::runtime::XlaStepEngine;
+use revolver::util::bench::bench;
+use revolver::util::rng::Rng;
+
+const BATCH: usize = 256;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+        return;
+    }
+
+    println!("=== E7 — XLA kernel latency vs native (batch {BATCH}) ===\n");
+    for k in [8usize, 32] {
+        let mut eng = XlaStepEngine::load("artifacts", BATCH, k, 1.0, 0.1).unwrap();
+        let mut rng = Rng::new(1);
+        let hist: Vec<f32> = (0..BATCH * k).map(|_| rng.next_f32() * 5.0).collect();
+        let wsum: Vec<f32> = (0..BATCH).map(|_| 8.0).collect();
+        let loads: Vec<f32> = (0..k).map(|_| rng.next_f32() * 900.0).collect();
+        let probs = vec![1.0 / k as f32; BATCH * k];
+        let raw_w: Vec<f32> = (0..BATCH * k).map(|_| rng.next_f32()).collect();
+
+        let r = bench(&format!("xla score       k={k}"), 3, 30, || {
+            eng.score(&hist, &wsum, &loads, 1000.0).unwrap()
+        });
+        println!("{r}   ({:.1}M vertex-scores/s)", r.throughput(BATCH as u64) / 1e6);
+
+        let r = bench(&format!("xla la_update   k={k}"), 3, 30, || {
+            eng.la_update(&probs, &raw_w).unwrap()
+        });
+        println!("{r}   ({:.1}M LA-updates/s)", r.throughput(BATCH as u64) / 1e6);
+
+        // Native equivalents at identical batch shape.
+        let mut pi = vec![0.0f32; k];
+        let mut scores = vec![0.0f32; k];
+        let r = bench(&format!("native score    k={k}"), 3, 30, || {
+            normalized::penalty_into(&loads, 1000.0, &mut pi);
+            let mut acc = 0.0f32;
+            for i in 0..BATCH {
+                normalized::score_into(&hist[i * k..(i + 1) * k], wsum[i], &pi, &mut scores);
+                acc += scores[0];
+            }
+            acc
+        });
+        println!("{r}");
+
+        let mut w_norm = vec![0.0f32; k];
+        let mut sigs = vec![Signal::Penalty; k];
+        let r = bench(&format!("native la_update k={k}"), 3, 30, || {
+            let mut p = probs.clone();
+            for i in 0..BATCH {
+                build_signals_into(&raw_w[i * k..(i + 1) * k], &mut w_norm, &mut sigs);
+                WeightedLa::update(&mut p[i * k..(i + 1) * k], &w_norm, &sigs, 1.0, 0.1);
+            }
+            p
+        });
+        println!("{r}\n");
+    }
+
+    println!("=== end-to-end Revolver step throughput, native vs xla engine ===\n");
+    let g = generate_dataset(Dataset::Lj, 1 << 12, 7).unwrap();
+    for engine in [Engine::Native, Engine::Xla] {
+        let cfg = RevolverConfig {
+            parts: 8,
+            engine,
+            max_steps: 10,
+            halt_window: u32::MAX,
+            threads: 1,
+            seed: 9,
+            ..Default::default()
+        };
+        let rev = Revolver::new(cfg);
+        let r = bench(&format!("revolver 10 steps ({engine:?})"), 1, 3, || {
+            rev.partition(&g).labels.len()
+        });
+        let edge_visits = 10 * g.num_edges() as u64;
+        println!("{r}   ({:.2}M edge-visits/s)", r.throughput(edge_visits) / 1e6);
+    }
+    println!("\n(the native engine wins on CPU: PJRT buffer round-trips dominate at");
+    println!(" this batch size — the XLA path exists to validate the three-layer");
+    println!(" architecture and to model the TPU deployment, see DESIGN.md §Perf)");
+}

@@ -1,0 +1,285 @@
+//! Run configuration: the paper's hyper-parameters (§V-F) plus engine
+//! knobs, loadable from a TOML-subset file and overridable from the CLI.
+//!
+//! The TOML reader supports the subset real configs use — `key = value`
+//! pairs, `[section]` headers, strings, ints, floats, bools, comments —
+//! which covers every config this project ships (the full TOML crate is
+//! unavailable offline).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Which engine executes the dense numeric step of Revolver.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// Pure-Rust scoring + LA update (default; the paper's C/C++ analog).
+    Native,
+    /// Batched scoring + LA update through the AOT-compiled XLA
+    /// artifact via PJRT (L1/L2 integration).
+    Xla,
+}
+
+impl std::str::FromStr for Engine {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_lowercase().as_str() {
+            "native" => Ok(Engine::Native),
+            "xla" => Ok(Engine::Xla),
+            other => bail!("unknown engine {other:?} (expected native|xla)"),
+        }
+    }
+}
+
+/// Execution model for Revolver (the paper implements both, §V-C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutionModel {
+    /// Free-running workers over shared state (the paper's headline
+    /// C/C++ implementation).
+    Asynchronous,
+    /// BSP with per-step barriers and frozen label snapshots (the
+    /// Giraph-style variant; ablation E4).
+    Synchronous,
+}
+
+/// All knobs of a Revolver/Spinner run. Defaults are the paper's §V-F
+/// settings.
+#[derive(Debug, Clone)]
+pub struct RevolverConfig {
+    /// Number of partitions k.
+    pub parts: usize,
+    /// Imbalance ratio ε (capacity C = (1+ε)|E|/k).
+    pub epsilon: f64,
+    /// Maximum number of steps (paper: 290).
+    pub max_steps: u32,
+    /// Consecutive low-improvement steps before halting (paper: 5).
+    pub halt_window: u32,
+    /// Minimum score improvement θ (paper: 0.001).
+    pub halt_theta: f64,
+    /// LA reward rate α (paper: 1).
+    pub alpha: f32,
+    /// LA penalty rate β (paper: 0.1).
+    pub beta: f32,
+    /// Worker threads (paper: one per core).
+    pub threads: usize,
+    /// RNG seed.
+    pub seed: u64,
+    /// Async (paper headline) or sync (ablation).
+    pub execution: ExecutionModel,
+    /// Native Rust or XLA/PJRT numeric engine.
+    pub engine: Engine,
+    /// Artifacts directory for Engine::Xla.
+    pub artifacts_dir: String,
+    /// Use the classic (unweighted) LA update — ablation E5.
+    pub classic_la: bool,
+    /// Record a full quality trace point every `trace_every` steps
+    /// (0 = only the final point; 1 = Figure-4 style per-step traces).
+    /// Tracing costs an O(|E|) metrics pass per sampled step.
+    pub trace_every: u32,
+}
+
+impl Default for RevolverConfig {
+    fn default() -> Self {
+        RevolverConfig {
+            parts: 8,
+            epsilon: 0.05,
+            max_steps: 290,
+            halt_window: 5,
+            halt_theta: 0.001,
+            alpha: 1.0,
+            beta: 0.1,
+            threads: default_threads(),
+            seed: 42,
+            execution: ExecutionModel::Asynchronous,
+            engine: Engine::Native,
+            artifacts_dir: "artifacts".to_string(),
+            classic_la: false,
+            trace_every: 0,
+        }
+    }
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+impl RevolverConfig {
+    /// Validate parameter ranges, including the paper's eq. (2)
+    /// non-empty-partition condition `(k−1)·ε << 1` (we enforce the
+    /// weak form `(k−1)·ε < k`, i.e. capacity×k covers |E|, and warn
+    /// via error only on nonsensical values).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.parts >= 2, "parts must be >= 2, got {}", self.parts);
+        anyhow::ensure!(self.epsilon >= 0.0, "epsilon must be >= 0");
+        anyhow::ensure!(self.max_steps >= 1, "max_steps must be >= 1");
+        anyhow::ensure!(self.halt_window >= 1, "halt_window must be >= 1");
+        anyhow::ensure!(self.halt_theta >= 0.0, "halt_theta must be >= 0");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.alpha),
+            "alpha must be in [0,1], got {}",
+            self.alpha
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.beta),
+            "beta must be in [0,1], got {}",
+            self.beta
+        );
+        anyhow::ensure!(self.threads >= 1, "threads must be >= 1");
+        Ok(())
+    }
+
+    /// Load from a TOML-subset file; keys may be flat or under
+    /// `[revolver]`.
+    pub fn from_toml_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read config {:?}", path.as_ref()))?;
+        Self::from_toml_str(&text)
+    }
+
+    /// Parse from TOML-subset text.
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let kv = parse_toml_subset(text)?;
+        let mut cfg = RevolverConfig::default();
+        for (key, value) in &kv {
+            // Accept both flat keys and `revolver.` / section-qualified.
+            let k = key.strip_prefix("revolver.").unwrap_or(key);
+            match k {
+                "parts" => cfg.parts = value.parse().context("parts")?,
+                "epsilon" => cfg.epsilon = value.parse().context("epsilon")?,
+                "max_steps" => cfg.max_steps = value.parse().context("max_steps")?,
+                "halt_window" => cfg.halt_window = value.parse().context("halt_window")?,
+                "halt_theta" => cfg.halt_theta = value.parse().context("halt_theta")?,
+                "alpha" => cfg.alpha = value.parse().context("alpha")?,
+                "beta" => cfg.beta = value.parse().context("beta")?,
+                "threads" => cfg.threads = value.parse().context("threads")?,
+                "seed" => cfg.seed = value.parse().context("seed")?,
+                "execution" => {
+                    cfg.execution = match value.as_str() {
+                        "async" | "asynchronous" => ExecutionModel::Asynchronous,
+                        "sync" | "synchronous" => ExecutionModel::Synchronous,
+                        other => bail!("unknown execution model {other:?}"),
+                    }
+                }
+                "engine" => cfg.engine = value.parse()?,
+                "artifacts_dir" => cfg.artifacts_dir = value.clone(),
+                "classic_la" => cfg.classic_la = value.parse().context("classic_la")?,
+                "trace_every" => cfg.trace_every = value.parse().context("trace_every")?,
+                other => bail!("unknown config key {other:?}"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Parse `key = value` / `[section]` TOML subset into dotted keys.
+fn parse_toml_subset(text: &str) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            section = name.trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{}.{}", section, k.trim())
+        };
+        let mut val = v.trim().to_string();
+        // Strip string quotes.
+        if (val.starts_with('"') && val.ends_with('"') && val.len() >= 2)
+            || (val.starts_with('\'') && val.ends_with('\'') && val.len() >= 2)
+        {
+            val = val[1..val.len() - 1].to_string();
+        }
+        out.insert(key, val);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect `#` inside quotes.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_settings() {
+        let c = RevolverConfig::default();
+        assert_eq!(c.max_steps, 290);
+        assert_eq!(c.halt_window, 5);
+        assert!((c.halt_theta - 0.001).abs() < 1e-12);
+        assert!((c.epsilon - 0.05).abs() < 1e-12);
+        assert_eq!(c.alpha, 1.0);
+        assert_eq!(c.beta, 0.1);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn toml_flat() {
+        let c = RevolverConfig::from_toml_str(
+            "parts = 16\nepsilon = 0.1\nseed = 7\nengine = \"xla\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.parts, 16);
+        assert!((c.epsilon - 0.1).abs() < 1e-12);
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.engine, Engine::Xla);
+    }
+
+    #[test]
+    fn toml_sectioned_with_comments() {
+        let c = RevolverConfig::from_toml_str(
+            "# experiment\n[revolver]\nparts = 4 # four ways\nexecution = \"sync\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.parts, 4);
+        assert_eq!(c.execution, ExecutionModel::Synchronous);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(RevolverConfig::from_toml_str("nope = 1\n").is_err());
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(RevolverConfig::from_toml_str("parts = 1\n").is_err());
+        assert!(RevolverConfig::from_toml_str("alpha = 2.0\n").is_err());
+        assert!(RevolverConfig::from_toml_str("parts = banana\n").is_err());
+    }
+
+    #[test]
+    fn engine_parse() {
+        assert_eq!("native".parse::<Engine>().unwrap(), Engine::Native);
+        assert_eq!("XLA".parse::<Engine>().unwrap(), Engine::Xla);
+        assert!("gpu".parse::<Engine>().is_err());
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let c =
+            RevolverConfig::from_toml_str("artifacts_dir = \"my#dir\"\n").unwrap();
+        assert_eq!(c.artifacts_dir, "my#dir");
+    }
+}

@@ -1,0 +1,109 @@
+//! Contiguous vertex chunking — the paper's |V|/n-per-thread layout.
+
+/// Partition `0..n` into at most `threads` contiguous, near-equal chunks
+/// (first `n % threads` chunks get one extra vertex). Never produces an
+/// empty chunk: for tiny inputs the chunk count shrinks to `n`.
+#[derive(Debug, Clone)]
+pub struct Chunks {
+    n: usize,
+    bounds: Vec<usize>,
+}
+
+impl Chunks {
+    pub fn new(n: usize, threads: usize) -> Self {
+        assert!(n > 0, "cannot chunk an empty vertex set");
+        let t = threads.max(1).min(n);
+        let base = n / t;
+        let extra = n % t;
+        let mut bounds = Vec::with_capacity(t + 1);
+        let mut pos = 0;
+        bounds.push(0);
+        for c in 0..t {
+            pos += base + usize::from(c < extra);
+            bounds.push(pos);
+        }
+        debug_assert_eq!(*bounds.last().unwrap(), n);
+        Chunks { n, bounds }
+    }
+
+    /// Number of chunks (== worker threads used).
+    pub fn len(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Total vertices.
+    pub fn total(&self) -> usize {
+        self.n
+    }
+
+    /// Vertex range of chunk `c`.
+    pub fn range(&self, c: usize) -> std::ops::Range<usize> {
+        self.bounds[c]..self.bounds[c + 1]
+    }
+
+    /// Which chunk a vertex belongs to (binary search; not hot-path).
+    pub fn chunk_of(&self, v: usize) -> usize {
+        debug_assert!(v < self.n);
+        match self.bounds.binary_search(&v) {
+            Ok(i) if i == self.len() => i - 1,
+            Ok(i) => i,
+            Err(i) => i - 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_split() {
+        let c = Chunks::new(100, 4);
+        assert_eq!(c.len(), 4);
+        for i in 0..4 {
+            assert_eq!(c.range(i).len(), 25);
+        }
+    }
+
+    #[test]
+    fn uneven_split_front_loaded() {
+        let c = Chunks::new(10, 3);
+        assert_eq!(c.range(0).len(), 4);
+        assert_eq!(c.range(1).len(), 3);
+        assert_eq!(c.range(2).len(), 3);
+    }
+
+    #[test]
+    fn more_threads_than_vertices() {
+        let c = Chunks::new(3, 8);
+        assert_eq!(c.len(), 3);
+        assert!((0..c.len()).all(|i| c.range(i).len() == 1));
+    }
+
+    #[test]
+    fn ranges_cover_exactly() {
+        let c = Chunks::new(1003, 7);
+        let mut covered = vec![false; 1003];
+        for i in 0..c.len() {
+            for v in c.range(i) {
+                assert!(!covered[v], "vertex {v} covered twice");
+                covered[v] = true;
+            }
+        }
+        assert!(covered.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn chunk_of_consistent_with_ranges() {
+        let c = Chunks::new(97, 5);
+        for i in 0..c.len() {
+            for v in c.range(i) {
+                assert_eq!(c.chunk_of(v), i, "vertex {v}");
+            }
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Convergence detection (§IV-D.9): halt when the global score has not
+//! improved by at least θ for `window` consecutive steps.
+
+/// Tracks the global score S^i across steps and fires after `window`
+/// consecutive sub-θ improvements.
+#[derive(Debug, Clone)]
+pub struct ConvergenceDetector {
+    theta: f64,
+    window: u32,
+    last_score: Option<f64>,
+    stall: u32,
+}
+
+impl ConvergenceDetector {
+    pub fn new(theta: f64, window: u32) -> Self {
+        assert!(window >= 1);
+        ConvergenceDetector { theta, window, last_score: None, stall: 0 }
+    }
+
+    /// Feed this step's score; returns `true` when the run should halt.
+    pub fn observe(&mut self, score: f64) -> bool {
+        let improved = match self.last_score {
+            None => true, // first observation never counts as a stall
+            Some(prev) => (score - prev) >= self.theta,
+        };
+        self.last_score = Some(score);
+        if improved {
+            self.stall = 0;
+        } else {
+            self.stall += 1;
+        }
+        self.stall >= self.window
+    }
+
+    /// Consecutive stalled steps so far.
+    pub fn stalled(&self) -> u32 {
+        self.stall
+    }
+
+    pub fn reset(&mut self) {
+        self.last_score = None;
+        self.stall = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn halts_after_window_stalls() {
+        let mut d = ConvergenceDetector::new(0.001, 3);
+        assert!(!d.observe(0.5));
+        assert!(!d.observe(0.5)); // stall 1
+        assert!(!d.observe(0.5)); // stall 2
+        assert!(d.observe(0.5)); // stall 3 -> halt
+    }
+
+    #[test]
+    fn improvement_resets() {
+        let mut d = ConvergenceDetector::new(0.001, 2);
+        assert!(!d.observe(0.5));
+        assert!(!d.observe(0.5)); // stall 1
+        assert!(!d.observe(0.6)); // improvement, reset
+        assert!(!d.observe(0.6)); // stall 1
+        assert!(d.observe(0.6)); // stall 2 -> halt
+    }
+
+    #[test]
+    fn sub_theta_improvement_counts_as_stall() {
+        let mut d = ConvergenceDetector::new(0.01, 2);
+        assert!(!d.observe(0.5));
+        assert!(!d.observe(0.505)); // +0.005 < theta => stall
+        assert!(d.observe(0.5099));
+    }
+
+    #[test]
+    fn decreasing_score_stalls() {
+        let mut d = ConvergenceDetector::new(0.001, 2);
+        assert!(!d.observe(0.5));
+        assert!(!d.observe(0.4));
+        assert!(d.observe(0.3));
+    }
+
+    #[test]
+    fn reset_clears_history() {
+        let mut d = ConvergenceDetector::new(0.001, 1);
+        assert!(!d.observe(0.5));
+        assert!(d.observe(0.5));
+        d.reset();
+        assert!(!d.observe(0.5));
+    }
+}

@@ -1,0 +1,73 @@
+//! Execution coordination: vertex chunking, the barrier-phased worker
+//! engine, and convergence detection.
+//!
+//! The paper's C/C++ implementation "balances the vertices among working
+//! threads via allocating each subset of vertices to a separate thread"
+//! (§V-C): vertices are split into contiguous chunks of ~|V|/n and each
+//! chunk is pinned to one worker. Within a step the asynchronous model
+//! lets workers free-run over shared atomics; a lightweight barrier
+//! separates the action/demand phase from the migrate/learn phase, and
+//! the synchronous (Giraph-style) model additionally freezes label
+//! snapshots per step.
+
+pub mod chunks;
+pub mod convergence;
+
+pub use chunks::Chunks;
+pub use convergence::ConvergenceDetector;
+
+use crossbeam_utils::thread as cb_thread;
+
+/// Run `worker(chunk_index, chunk_range)` on `chunks.len()` scoped
+/// threads and wait for all of them. Panics propagate.
+///
+/// This is the engine the partitioners drive; it is deliberately dumb —
+/// all interesting state lives in the shared structures the closures
+/// capture (DESIGN.md §6).
+pub fn run_chunked<F>(chunks: &Chunks, worker: F)
+where
+    F: Fn(usize, std::ops::Range<usize>) + Sync,
+{
+    if chunks.len() == 1 {
+        // Fast path: no thread spawn for single-threaded runs.
+        worker(0, chunks.range(0));
+        return;
+    }
+    cb_thread::scope(|s| {
+        for c in 0..chunks.len() {
+            let worker = &worker;
+            let range = chunks.range(c);
+            s.spawn(move |_| worker(c, range));
+        }
+    })
+    .expect("worker thread panicked");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn all_vertices_visited_once() {
+        let chunks = Chunks::new(1003, 4);
+        let visits: Vec<AtomicUsize> = (0..1003).map(|_| AtomicUsize::new(0)).collect();
+        run_chunked(&chunks, |_, range| {
+            for v in range {
+                visits[v].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(visits.iter().all(|v| v.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn single_thread_fast_path() {
+        let chunks = Chunks::new(10, 1);
+        let count = AtomicUsize::new(0);
+        run_chunked(&chunks, |c, range| {
+            assert_eq!(c, 0);
+            count.fetch_add(range.len(), Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 10);
+    }
+}

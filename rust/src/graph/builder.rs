@@ -1,0 +1,183 @@
+//! Graph construction: edge accumulation -> dedup -> CSR + undirected
+//! weighted adjacency (eq. 4).
+
+use crate::VertexId;
+use super::csr::Graph;
+
+/// Accumulates directed edges and finalizes them into a [`Graph`].
+///
+/// Self-loops are dropped and duplicate directed edges are deduplicated
+/// (the paper's datasets are simple graphs). The undirected adjacency
+/// merges both directions; an edge present in both directions gets
+/// weight 2.0 (eq. 4), otherwise 1.0.
+pub struct GraphBuilder {
+    n: usize,
+    edges: Vec<(VertexId, VertexId)>,
+}
+
+impl GraphBuilder {
+    pub fn new(num_vertices: usize) -> Self {
+        assert!(num_vertices > 0, "graph must have at least one vertex");
+        assert!(
+            num_vertices <= u32::MAX as usize,
+            "VertexId is u32; at most 2^32-1 vertices"
+        );
+        GraphBuilder { n: num_vertices, edges: Vec::new() }
+    }
+
+    /// Pre-reserve for `m` edges.
+    pub fn with_capacity(num_vertices: usize, m: usize) -> Self {
+        let mut b = Self::new(num_vertices);
+        b.edges.reserve(m);
+        b
+    }
+
+    /// Add one directed edge. Out-of-range endpoints panic (programmer
+    /// error); self-loops are silently dropped (data artifact).
+    #[inline]
+    pub fn edge(&mut self, src: VertexId, dst: VertexId) -> &mut Self {
+        assert!((src as usize) < self.n && (dst as usize) < self.n, "edge out of range");
+        if src != dst {
+            self.edges.push((src, dst));
+        }
+        self
+    }
+
+    /// Add many edges (builder-chaining convenience).
+    pub fn edges(mut self, es: &[(VertexId, VertexId)]) -> Self {
+        for &(s, d) in es {
+            self.edge(s, d);
+        }
+        self
+    }
+
+    /// Number of (pre-dedup) edges accumulated so far.
+    pub fn pending_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Finalize into CSR form.
+    pub fn build(mut self) -> Graph {
+        let n = self.n;
+
+        // Sort + dedup directed edges. Sorting by (src, dst) also gives
+        // us the forward CSR layout directly.
+        self.edges.sort_unstable();
+        self.edges.dedup();
+
+        // Forward CSR.
+        let mut fwd_offsets = vec![0u64; n + 1];
+        for &(s, _) in &self.edges {
+            fwd_offsets[s as usize + 1] += 1;
+        }
+        for i in 0..n {
+            fwd_offsets[i + 1] += fwd_offsets[i];
+        }
+        let fwd_targets: Vec<VertexId> = self.edges.iter().map(|&(_, d)| d).collect();
+
+        // Undirected adjacency with eq.-(4) weights. Build a mirrored
+        // edge list tagged by direction, then merge per (min-endpoint
+        // ordering is irrelevant; we need per-vertex sorted lists).
+        // For each vertex v, the neighbour u gets weight 2.0 iff both
+        // (v,u) and (u,v) exist in the directed graph.
+        let m = self.edges.len();
+        let mut und: Vec<(VertexId, VertexId, bool)> = Vec::with_capacity(2 * m);
+        // tag=true => original direction (v -> u), false => reversed.
+        for &(s, d) in &self.edges {
+            und.push((s, d, true));
+            und.push((d, s, false));
+        }
+        und.sort_unstable_by_key(|&(a, b, _)| (a, b));
+
+        let mut und_offsets = vec![0u64; n + 1];
+        let mut und_targets: Vec<VertexId> = Vec::with_capacity(und.len());
+        let mut und_weights: Vec<f32> = Vec::with_capacity(und.len());
+
+        let mut i = 0;
+        while i < und.len() {
+            let (v, u, _) = und[i];
+            let mut j = i + 1;
+            let mut both = false;
+            while j < und.len() && und[j].0 == v && und[j].1 == u {
+                both = true; // a (v,u) pair appearing twice means both directions exist
+                j += 1;
+            }
+            und_offsets[v as usize + 1] += 1;
+            und_targets.push(u);
+            und_weights.push(if both { 2.0 } else { 1.0 });
+            i = j;
+        }
+        for i in 0..n {
+            und_offsets[i + 1] += und_offsets[i];
+        }
+
+        Graph::from_parts(n, fwd_offsets, fwd_targets, und_offsets, und_targets, und_weights)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedup_directed() {
+        let g = GraphBuilder::new(2).edges(&[(0, 1), (0, 1), (0, 1)]).build();
+        assert_eq!(g.num_edges(), 1);
+    }
+
+    #[test]
+    fn self_loops_dropped() {
+        let g = GraphBuilder::new(2).edges(&[(0, 0), (0, 1), (1, 1)]).build();
+        assert_eq!(g.num_edges(), 1);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn undirected_merge() {
+        // star: 0->1, 0->2, 2->0  (0-2 reciprocal)
+        let g = GraphBuilder::new(3).edges(&[(0, 1), (0, 2), (2, 0)]).build();
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbor_weights(0), &[1.0, 2.0]);
+        assert_eq!(g.neighbors(1), &[0]);
+        assert_eq!(g.neighbor_weights(1), &[1.0]);
+        assert_eq!(g.neighbors(2), &[0]);
+        assert_eq!(g.neighbor_weights(2), &[2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "edge out of range")]
+    fn out_of_range_panics() {
+        let mut b = GraphBuilder::new(2);
+        b.edge(0, 5);
+    }
+
+    #[test]
+    fn weights_total_matches_eq4() {
+        // Sum over v of sum_{u in N(v)} w(u,v) counts one-way edges twice
+        // (once per endpoint, weight 1) and reciprocal pairs twice * 2.
+        // 0->1 one-way, 1<->2 reciprocal.
+        let g = GraphBuilder::new(3).edges(&[(0, 1), (1, 2), (2, 1)]).build();
+        let total: f32 = (0..3)
+            .flat_map(|v| g.neighbor_weights(v).iter().copied())
+            .sum();
+        assert_eq!(total, 2.0 * 1.0 + 2.0 * 2.0);
+    }
+
+    #[test]
+    fn large_random_graph_validates() {
+        use crate::util::rng::Rng;
+        let n = 500;
+        let mut rng = Rng::new(99);
+        let mut b = GraphBuilder::with_capacity(n, 5000);
+        for _ in 0..5000 {
+            b.edge(rng.below(n as u64) as u32, rng.below(n as u64) as u32);
+        }
+        let g = b.build();
+        g.validate().unwrap();
+        // Undirected degree >= max(out_degree contribution).
+        for v in 0..n as u32 {
+            assert!(g.und_degree(v) >= 0u32);
+            assert!(g.out_degree(v) as usize <= n);
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! Compressed-sparse-row graph storage.
+
+use crate::VertexId;
+
+/// A directed graph in CSR form, with a precomputed *undirected* weighted
+/// adjacency for label propagation.
+///
+/// Invariants (established by [`super::builder::GraphBuilder`], relied on
+/// throughout the hot paths):
+/// * `fwd_offsets.len() == n + 1`, `fwd_offsets[n] == fwd_targets.len()`
+/// * `und_offsets.len() == n + 1`, `und_offsets[n] == und_targets.len()`
+/// * neighbour lists are sorted and deduplicated,
+/// * `und_weights[i]` is eq. (4)'s ŵ: 2.0 if both directions exist,
+///   1.0 otherwise,
+/// * no self-loops.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    /// Number of vertices.
+    n: usize,
+    /// Forward (out-edge) CSR offsets, length n+1.
+    fwd_offsets: Vec<u64>,
+    /// Forward CSR targets, length = |E| (directed edges).
+    fwd_targets: Vec<VertexId>,
+    /// Undirected CSR offsets, length n+1.
+    und_offsets: Vec<u64>,
+    /// Undirected CSR targets.
+    und_targets: Vec<VertexId>,
+    /// Eq. (4) weights, parallel to `und_targets`.
+    und_weights: Vec<f32>,
+}
+
+impl Graph {
+    pub(crate) fn from_parts(
+        n: usize,
+        fwd_offsets: Vec<u64>,
+        fwd_targets: Vec<VertexId>,
+        und_offsets: Vec<u64>,
+        und_targets: Vec<VertexId>,
+        und_weights: Vec<f32>,
+    ) -> Self {
+        debug_assert_eq!(fwd_offsets.len(), n + 1);
+        debug_assert_eq!(und_offsets.len(), n + 1);
+        debug_assert_eq!(*fwd_offsets.last().unwrap() as usize, fwd_targets.len());
+        debug_assert_eq!(*und_offsets.last().unwrap() as usize, und_targets.len());
+        debug_assert_eq!(und_targets.len(), und_weights.len());
+        Graph { n, fwd_offsets, fwd_targets, und_offsets, und_targets, und_weights }
+    }
+
+    /// Number of vertices |V|.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    /// Number of directed edges |E|.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.fwd_targets.len()
+    }
+
+    /// Out-degree of `v` — the paper's `deg(v)` used for load accounting.
+    #[inline]
+    pub fn out_degree(&self, v: VertexId) -> u32 {
+        let v = v as usize;
+        (self.fwd_offsets[v + 1] - self.fwd_offsets[v]) as u32
+    }
+
+    /// Out-neighbours of `v`.
+    #[inline]
+    pub fn out_neighbors(&self, v: VertexId) -> &[VertexId] {
+        let v = v as usize;
+        &self.fwd_targets[self.fwd_offsets[v] as usize..self.fwd_offsets[v + 1] as usize]
+    }
+
+    /// Undirected neighbourhood N(v), deduplicated.
+    #[inline]
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        let v = v as usize;
+        &self.und_targets[self.und_offsets[v] as usize..self.und_offsets[v + 1] as usize]
+    }
+
+    /// Eq. (4) weights ŵ(u,v) parallel to [`Self::neighbors`].
+    #[inline]
+    pub fn neighbor_weights(&self, v: VertexId) -> &[f32] {
+        let v = v as usize;
+        &self.und_weights[self.und_offsets[v] as usize..self.und_offsets[v + 1] as usize]
+    }
+
+    /// Undirected degree |N(v)|.
+    #[inline]
+    pub fn und_degree(&self, v: VertexId) -> u32 {
+        let v = v as usize;
+        (self.und_offsets[v + 1] - self.und_offsets[v]) as u32
+    }
+
+    /// Iterate all directed edges as (src, dst).
+    pub fn edges(&self) -> impl Iterator<Item = (VertexId, VertexId)> + '_ {
+        (0..self.n).flat_map(move |v| {
+            self.out_neighbors(v as VertexId)
+                .iter()
+                .map(move |&u| (v as VertexId, u))
+        })
+    }
+
+    /// Approximate resident bytes (diagnostics / VMEM-style budgeting).
+    pub fn memory_bytes(&self) -> usize {
+        (self.fwd_offsets.len() + self.und_offsets.len()) * 8
+            + self.fwd_targets.len() * 4
+            + self.und_targets.len() * 4
+            + self.und_weights.len() * 4
+    }
+
+    /// Structural self-check (used by tests and the loader).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.fwd_offsets.len() == self.n + 1, "bad fwd offsets");
+        anyhow::ensure!(self.und_offsets.len() == self.n + 1, "bad und offsets");
+        for v in 0..self.n {
+            anyhow::ensure!(
+                self.fwd_offsets[v] <= self.fwd_offsets[v + 1],
+                "fwd offsets not monotone at {v}"
+            );
+            let ns = self.neighbors(v as VertexId);
+            for w in ns.windows(2) {
+                anyhow::ensure!(w[0] < w[1], "neighbors of {v} not sorted/dedup");
+            }
+            for &u in self.out_neighbors(v as VertexId) {
+                anyhow::ensure!((u as usize) < self.n, "edge target out of range");
+                anyhow::ensure!(u as usize != v, "self-loop at {v}");
+            }
+            for (&u, &w) in ns.iter().zip(self.neighbor_weights(v as VertexId)) {
+                anyhow::ensure!((u as usize) < self.n, "und target out of range");
+                anyhow::ensure!(w == 1.0 || w == 2.0, "weight must be 1 or 2, got {w}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn triangle() {
+        // 0->1, 1->2, 2->0 : each vertex out-degree 1, N(v) of size 2.
+        let g = GraphBuilder::new(3)
+            .edges(&[(0, 1), (1, 2), (2, 0)])
+            .build();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 3);
+        for v in 0..3 {
+            assert_eq!(g.out_degree(v), 1);
+            assert_eq!(g.und_degree(v), 2);
+            // No reciprocal pairs -> all weights 1.
+            assert!(g.neighbor_weights(v).iter().all(|&w| w == 1.0));
+        }
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn reciprocal_weight_two() {
+        let g = GraphBuilder::new(2).edges(&[(0, 1), (1, 0)]).build();
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.neighbor_weights(0), &[2.0]);
+        assert_eq!(g.neighbor_weights(1), &[2.0]);
+    }
+
+    #[test]
+    fn edges_iterator_count() {
+        let g = GraphBuilder::new(4)
+            .edges(&[(0, 1), (0, 2), (1, 3), (2, 3)])
+            .build();
+        assert_eq!(g.edges().count(), 4);
+        assert!(g.edges().all(|(s, t)| (s as usize) < 4 && (t as usize) < 4));
+    }
+
+    #[test]
+    fn isolated_vertex() {
+        let g = GraphBuilder::new(3).edges(&[(0, 1)]).build();
+        assert_eq!(g.out_degree(2), 0);
+        assert_eq!(g.und_degree(2), 0);
+        assert!(g.neighbors(2).is_empty());
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn memory_accounting_positive() {
+        let g = GraphBuilder::new(10).edges(&[(0, 1), (1, 2)]).build();
+        assert!(g.memory_bytes() > 0);
+    }
+}

@@ -1,0 +1,110 @@
+//! Barabási–Albert preferential attachment — surrogate for the dense
+//! right-skewed social graphs (Orkut, Hollywood).
+
+use crate::graph::builder::GraphBuilder;
+use crate::graph::csr::Graph;
+use crate::util::rng::Rng;
+
+/// Generate a BA graph: each new vertex attaches to `m_attach` existing
+/// vertices chosen proportionally to degree (implemented with the
+/// repeated-endpoint-list trick), plus the reciprocal edge — BA models
+/// friendships, which are mutual, giving the dense symmetric core Orkut
+/// and Hollywood have.
+pub fn barabasi_albert(n: usize, m_attach: usize, seed: u64) -> Graph {
+    assert!(n >= 4);
+    let m_attach = m_attach.max(1).min(n - 1);
+    let mut rng = Rng::new(seed ^ 0x42414247); // "BABG"
+    let mut builder = GraphBuilder::with_capacity(n, 2 * n * m_attach);
+
+    // `endpoints` holds every edge endpoint ever created; sampling
+    // uniformly from it IS degree-proportional sampling.
+    let mut endpoints: Vec<u32> = Vec::with_capacity(2 * n * m_attach);
+
+    // Seed clique over the first m_attach+1 vertices.
+    let seed_sz = (m_attach + 1).min(n);
+    for i in 0..seed_sz as u32 {
+        for j in 0..seed_sz as u32 {
+            if i < j {
+                builder.edge(i, j);
+                builder.edge(j, i);
+                endpoints.push(i);
+                endpoints.push(j);
+            }
+        }
+    }
+
+    for v in seed_sz as u32..n as u32 {
+        // BTreeSet: deterministic iteration order (HashSet's RandomState
+        // would make the generator nondeterministic across processes).
+        let mut picked = std::collections::BTreeSet::new();
+        let mut guard = 0;
+        while picked.len() < m_attach && guard < 50 * m_attach {
+            guard += 1;
+            let u = endpoints[rng.below_usize(endpoints.len())];
+            if u != v {
+                picked.insert(u);
+            }
+        }
+        for &u in &picked {
+            builder.edge(v, u);
+            builder.edge(u, v);
+            endpoints.push(v);
+            endpoints.push(u);
+        }
+    }
+    builder.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::stats;
+
+    #[test]
+    fn size_and_validity() {
+        let g = barabasi_albert(1000, 10, 1);
+        g.validate().unwrap();
+        // ~2 * m_attach directed edges per vertex.
+        let f = g.num_edges() as f64 / g.num_vertices() as f64;
+        assert!(f > 15.0 && f < 25.0, "edge factor {f}");
+    }
+
+    #[test]
+    fn right_skewed_with_hubs() {
+        let g = barabasi_albert(4096, 20, 2);
+        let s = stats::compute(&g);
+        assert!(s.skewness > 0.1, "BA must be right-skewed, got {}", s.skewness);
+        assert!(s.max_out_degree as f64 > 4.0 * s.mean_out_degree);
+    }
+
+    #[test]
+    fn mostly_reciprocal() {
+        // BA friendships are mutual: most und-weights should be 2.0.
+        let g = barabasi_albert(512, 8, 3);
+        let mut twos = 0usize;
+        let mut total = 0usize;
+        for v in 0..512u32 {
+            for &w in g.neighbor_weights(v) {
+                total += 1;
+                if w == 2.0 {
+                    twos += 1;
+                }
+            }
+        }
+        assert!(twos as f64 / total as f64 > 0.95, "{twos}/{total}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = barabasi_albert(256, 6, 9);
+        let b = barabasi_albert(256, 6, 9);
+        assert_eq!(a.edges().collect::<Vec<_>>(), b.edges().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn m_attach_clamped() {
+        // m_attach > n-1 must not panic.
+        let g = barabasi_albert(8, 100, 1);
+        g.validate().unwrap();
+    }
+}

@@ -1,0 +1,205 @@
+//! Synthetic graph generators — the substitute substrate for the paper's
+//! nine datasets (DESIGN.md §4).
+//!
+//! The paper's own analysis attributes every partitioning-quality result
+//! to two dataset properties: **density** and **out-degree skewness**
+//! (plus id-locality for Range). Each generator below reproduces one of
+//! those regimes; [`generate_dataset`] maps each paper dataset to a
+//! surrogate with matching |E|/|V| ratio and skew class.
+
+pub mod ba;
+pub mod erdos_renyi;
+pub mod rmat;
+pub mod road;
+pub mod ws;
+
+use super::csr::Graph;
+use anyhow::Result;
+
+/// The nine paper datasets (Table I).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    /// Wiki-topcats: right-skewed web graph, |E|/|V| ≈ 16.
+    Wiki,
+    /// UK-2007@1M: *highly* right-skewed web graph, |E|/|V| ≈ 41.
+    Uk,
+    /// USA-road: left-skewed planar road network, |E|/|V| ≈ 2.4.
+    Usa,
+    /// Stackoverflow: skew-free interaction graph, |E|/|V| ≈ 24.
+    So,
+    /// LiveJournal: right-skewed social network, |E|/|V| ≈ 14.
+    Lj,
+    /// EN-wiki-2013: right-skewed web graph, |E|/|V| ≈ 24.
+    En,
+    /// Orkut: right-skewed dense social network, |E|/|V| ≈ 38.
+    Ok,
+    /// Hollywood-2011: right-skewed very dense collaboration, |E|/|V| ≈ 105.
+    Hlwd,
+    /// EU-2015-host: near-skew-free huge host graph, |E|/|V| ≈ 34.
+    Eu,
+}
+
+impl Dataset {
+    pub const ALL: [Dataset; 9] = [
+        Dataset::Wiki,
+        Dataset::Uk,
+        Dataset::Usa,
+        Dataset::So,
+        Dataset::Lj,
+        Dataset::En,
+        Dataset::Ok,
+        Dataset::Hlwd,
+        Dataset::Eu,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::Wiki => "wiki",
+            Dataset::Uk => "uk",
+            Dataset::Usa => "usa",
+            Dataset::So => "so",
+            Dataset::Lj => "lj",
+            Dataset::En => "en",
+            Dataset::Ok => "ok",
+            Dataset::Hlwd => "hlwd",
+            Dataset::Eu => "eu",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Dataset> {
+        Dataset::ALL.iter().copied().find(|d| d.name() == s.to_lowercase())
+    }
+
+    /// Paper Table I reference values (full-scale originals).
+    pub fn paper_stats(&self) -> PaperStats {
+        match self {
+            Dataset::Wiki => PaperStats::new("Wiki-topcats", 1.79e6, 28.51e6, 0.88, 0.35),
+            Dataset::Uk => PaperStats::new("UK-2007@1M", 1.00e6, 41.24e6, 4.12, 0.81),
+            Dataset::Usa => PaperStats::new("USA-road", 23.9e6, 58.33e6, 0.01, -0.59),
+            Dataset::So => PaperStats::new("Stackoverflow", 2.60e6, 63.49e6, 0.93, 0.08),
+            Dataset::Lj => PaperStats::new("LiveJournal", 4.84e6, 68.99e6, 0.29, 0.36),
+            Dataset::En => PaperStats::new("EN-wiki-2013", 4.20e6, 101.3e6, 0.57, 0.35),
+            Dataset::Ok => PaperStats::new("Orkut", 3.07e6, 117.1e6, 1.24, 0.29),
+            Dataset::Hlwd => PaperStats::new("Hollywood", 2.18e6, 228.9e6, 4.81, 0.32),
+            Dataset::Eu => PaperStats::new("EU-2015-host", 11.2e6, 386.9e6, 0.30, 0.07),
+        }
+    }
+}
+
+/// Table I reference row for a paper dataset.
+#[derive(Debug, Clone)]
+pub struct PaperStats {
+    pub full_name: &'static str,
+    pub vertices: f64,
+    pub edges: f64,
+    /// Density ×10⁻⁵ as printed in Table I.
+    pub density_e5: f64,
+    pub skew: f64,
+}
+
+impl PaperStats {
+    fn new(full_name: &'static str, v: f64, e: f64, d: f64, s: f64) -> Self {
+        PaperStats { full_name, vertices: v, edges: e, density_e5: d, skew: s }
+    }
+}
+
+/// Generate the surrogate for `ds` with approximately `target_vertices`
+/// vertices (edge count follows the dataset's |E|/|V| ratio).
+///
+/// Deterministic in (`ds`, `target_vertices`, `seed`).
+pub fn generate_dataset(ds: Dataset, target_vertices: usize, seed: u64) -> Result<Graph> {
+    anyhow::ensure!(target_vertices >= 64, "need at least 64 vertices");
+    let n = target_vertices;
+    let g = match ds {
+        // Right-skewed web/social graphs: R-MAT with the Graph500-ish
+        // skew parameters; edge factor from Table I's |E|/|V|.
+        Dataset::Wiki => rmat::rmat(n, 16 * n, 0.57, 0.19, 0.19, seed),
+        Dataset::Lj => rmat::rmat(n, 14 * n, 0.57, 0.19, 0.19, seed),
+        Dataset::En => rmat::rmat(n, 24 * n, 0.57, 0.19, 0.19, seed),
+        // UK: highly right-skewed — raise `a` to deepen the power law —
+        // and webgraph-like id clustering (BFS-ish relabel inside rmat
+        // keeps consecutive-id locality high, which is what lets Range
+        // exploit it; see §V-G.2).
+        Dataset::Uk => rmat::rmat_clustered(n, 41 * n, 0.65, 0.16, 0.16, seed),
+        // USA: planar grid-with-diagonals road network; left-skewed
+        // (mode degree > mean because most intersections have full
+        // connectivity, boundary ones fewer).
+        Dataset::Usa => road::road(n, seed),
+        // SO: skew-free Erdős–Rényi.
+        Dataset::So => erdos_renyi::erdos_renyi(n, 24 * n, seed),
+        // OK / HLWD: dense right-skewed social graphs — Barabási–Albert
+        // preferential attachment (heavier tail than ER, denser core
+        // than R-MAT at the same edge factor).
+        Dataset::Ok => ba::barabasi_albert(n, 38, seed),
+        Dataset::Hlwd => ba::barabasi_albert(n, 105.min(n / 4), seed),
+        // EU: huge, near-skew-free, with strong id locality (hosts are
+        // crawled in order) — Watts–Strogatz ring (locality) + ER noise.
+        Dataset::Eu => ws::watts_strogatz_mix(n, 34, 0.12, seed),
+    };
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::stats;
+
+    #[test]
+    fn all_datasets_generate_and_validate() {
+        for ds in Dataset::ALL {
+            let g = generate_dataset(ds, 512, 1).unwrap();
+            g.validate().unwrap_or_else(|e| panic!("{}: {e}", ds.name()));
+            assert!(g.num_edges() > 0, "{} empty", ds.name());
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate_dataset(Dataset::Lj, 256, 7).unwrap();
+        let b = generate_dataset(Dataset::Lj, 256, 7).unwrap();
+        assert_eq!(a.edges().collect::<Vec<_>>(), b.edges().collect::<Vec<_>>());
+        let c = generate_dataset(Dataset::Lj, 256, 8).unwrap();
+        assert_ne!(a.edges().collect::<Vec<_>>(), c.edges().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn skew_classes_match_paper() {
+        // At 4096 vertices the skew sign must match Table I's class:
+        // the generators are tuned for this (DESIGN.md §4).
+        let right = [Dataset::Wiki, Dataset::Lj, Dataset::Ok, Dataset::Hlwd];
+        for ds in right {
+            let g = generate_dataset(ds, 4096, 3).unwrap();
+            let s = stats::compute(&g);
+            assert!(s.skewness > 0.1, "{} expected right skew, got {}", ds.name(), s.skewness);
+        }
+        let usa = generate_dataset(Dataset::Usa, 4096, 3).unwrap();
+        let s = stats::compute(&usa);
+        assert!(s.skewness < 0.0, "usa expected left skew, got {}", s.skewness);
+    }
+
+    #[test]
+    fn edge_factors_roughly_match() {
+        for (ds, lo, hi) in [
+            (Dataset::Wiki, 8.0, 17.0),
+            (Dataset::So, 15.0, 25.0),
+            (Dataset::Usa, 1.5, 4.5),
+        ] {
+            let g = generate_dataset(ds, 2048, 5).unwrap();
+            let f = g.num_edges() as f64 / g.num_vertices() as f64;
+            assert!(f >= lo && f <= hi, "{}: edge factor {f} outside [{lo},{hi}]", ds.name());
+        }
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for ds in Dataset::ALL {
+            assert_eq!(Dataset::from_name(ds.name()), Some(ds));
+        }
+        assert_eq!(Dataset::from_name("nope"), None);
+    }
+
+    #[test]
+    fn too_small_is_error() {
+        assert!(generate_dataset(Dataset::Lj, 10, 0).is_err());
+    }
+}

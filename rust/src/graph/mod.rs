@@ -1,0 +1,22 @@
+//! Graph substrate: storage (CSR), construction, I/O, synthetic
+//! generators and dataset statistics.
+//!
+//! The paper's partitioners need, per vertex `v`:
+//!   * out-neighbours (directed edges define partition load, §II),
+//!   * the full undirected neighbourhood `N(v)` with the edge weight
+//!     `ŵ(u,v)` of eq. (4): 1 for a one-way edge, 2 for a reciprocal
+//!     pair,
+//!   * `deg(v)` = out-degree (load accounting is in outgoing edges).
+//!
+//! [`csr::Graph`] stores exactly that: a forward CSR over out-edges plus
+//! a merged *undirected* CSR whose per-edge weights are precomputed by
+//! [`builder::GraphBuilder`].
+
+pub mod builder;
+pub mod csr;
+pub mod gen;
+pub mod io;
+pub mod stats;
+
+pub use csr::Graph;
+pub use builder::GraphBuilder;

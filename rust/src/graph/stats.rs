@@ -1,0 +1,171 @@
+//! Dataset statistics — everything Table I reports: |V|, |E|, density
+//! `D = |E| / (|V|·(|V|−1))`, and Pearson's 1st skewness coefficient
+//! `(μ − mode) / σ` of the out-degree distribution.
+
+use super::csr::Graph;
+
+/// Summary statistics for a graph (the Table I row).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphStats {
+    pub vertices: usize,
+    pub edges: usize,
+    /// Density ×1 (Table I prints ×10⁻⁵).
+    pub density: f64,
+    /// Pearson's 1st skewness coefficient of the out-degree distribution.
+    pub skewness: f64,
+    pub mean_out_degree: f64,
+    pub mode_out_degree: u32,
+    pub stddev_out_degree: f64,
+    pub max_out_degree: u32,
+}
+
+/// Compute the full Table-I statistics for `g`.
+pub fn compute(g: &Graph) -> GraphStats {
+    let n = g.num_vertices();
+    let m = g.num_edges();
+    let density = if n > 1 {
+        m as f64 / (n as f64 * (n as f64 - 1.0))
+    } else {
+        0.0
+    };
+
+    // Out-degree distribution.
+    let mut sum = 0.0f64;
+    let mut max_deg = 0u32;
+    let mut hist: std::collections::HashMap<u32, u64> = std::collections::HashMap::new();
+    for v in 0..n {
+        let d = g.out_degree(v as u32);
+        sum += d as f64;
+        max_deg = max_deg.max(d);
+        *hist.entry(d).or_insert(0) += 1;
+    }
+    let mean = sum / n as f64;
+
+    let mut var = 0.0f64;
+    for v in 0..n {
+        let d = g.out_degree(v as u32) as f64;
+        var += (d - mean) * (d - mean);
+    }
+    let stddev = (var / n as f64).sqrt();
+
+    // Mode: most frequent out-degree (ties -> smallest degree, for
+    // determinism).
+    let mode = hist
+        .iter()
+        .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(a.0)))
+        .map(|(&d, _)| d)
+        .unwrap_or(0);
+
+    let skewness = if stddev > 0.0 {
+        (mean - mode as f64) / stddev
+    } else {
+        0.0
+    };
+
+    GraphStats {
+        vertices: n,
+        edges: m,
+        density,
+        skewness,
+        mean_out_degree: mean,
+        mode_out_degree: mode,
+        stddev_out_degree: stddev,
+        max_out_degree: max_deg,
+    }
+}
+
+/// Skew classification used by the paper's analysis (§V-G).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SkewClass {
+    /// Pearson coefficient < −0.3 (e.g. USA road).
+    LeftSkewed,
+    /// |coefficient| ≤ 0.15 (e.g. SO, EU).
+    SkewFree,
+    /// 0.15 < coefficient ≤ 0.6 (e.g. WIKI, LJ, OK).
+    RightSkewed,
+    /// coefficient > 0.6 (e.g. UK).
+    HighlyRightSkewed,
+}
+
+pub fn classify_skew(pearson: f64) -> SkewClass {
+    if pearson < -0.3 {
+        SkewClass::LeftSkewed
+    } else if pearson.abs() <= 0.15 {
+        SkewClass::SkewFree
+    } else if pearson <= 0.6 {
+        SkewClass::RightSkewed
+    } else {
+        SkewClass::HighlyRightSkewed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn complete_graph_density_one() {
+        // K4 directed both ways: density = 12 / (4*3) = 1.
+        let mut b = GraphBuilder::new(4);
+        for i in 0..4u32 {
+            for j in 0..4u32 {
+                if i != j {
+                    b.edge(i, j);
+                }
+            }
+        }
+        let s = compute(&b.build());
+        assert!((s.density - 1.0).abs() < 1e-12);
+        // All degrees equal -> stddev 0 -> skewness 0 by convention.
+        assert_eq!(s.skewness, 0.0);
+        assert_eq!(s.mode_out_degree, 3);
+    }
+
+    #[test]
+    fn right_skew_positive() {
+        // One hub with high out-degree, many leaves with degree 0:
+        // mode = 0, mean > 0 => positive Pearson coefficient.
+        let mut b = GraphBuilder::new(101);
+        for i in 1..=100u32 {
+            b.edge(0, i);
+        }
+        let s = compute(&b.build());
+        assert!(s.skewness > 0.0, "hub graph must be right-skewed, got {}", s.skewness);
+        assert_eq!(s.mode_out_degree, 0);
+        assert_eq!(s.max_out_degree, 100);
+    }
+
+    #[test]
+    fn left_skew_negative() {
+        // Most vertices at degree 3 (mode=3), a few at 0 =>
+        // mean < mode => negative coefficient.
+        let n = 50u32;
+        let mut b = GraphBuilder::new(n as usize + 10);
+        for v in 0..n {
+            for j in 1..=3u32 {
+                b.edge(v, (v + j) % n);
+            }
+        }
+        // 10 extra isolated vertices pull the mean below the mode.
+        let s = compute(&b.build());
+        assert!(s.skewness < 0.0, "got {}", s.skewness);
+    }
+
+    #[test]
+    fn classify_bands() {
+        assert_eq!(classify_skew(-0.59), SkewClass::LeftSkewed);
+        assert_eq!(classify_skew(0.08), SkewClass::SkewFree);
+        assert_eq!(classify_skew(0.35), SkewClass::RightSkewed);
+        assert_eq!(classify_skew(0.81), SkewClass::HighlyRightSkewed);
+    }
+
+    #[test]
+    fn mean_matches_m_over_n() {
+        let g = GraphBuilder::new(10)
+            .edges(&[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)])
+            .build();
+        let s = compute(&g);
+        assert!((s.mean_out_degree - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,131 @@
+//! Classic variable-structure learning automaton (paper §III-B,
+//! eqs. 6–7) — the baseline the weighted automaton improves on (§IV-A,
+//! ablated in E5).
+
+use super::{roulette, Signal};
+use crate::util::rng::Rng;
+
+/// Textbook L_{R-P} automaton over `m` actions.
+#[derive(Debug, Clone)]
+pub struct ClassicLa {
+    probs: Vec<f32>,
+}
+
+impl ClassicLa {
+    /// Uniform initial distribution 1/m (§IV-C step 3).
+    pub fn new(m: usize) -> Self {
+        assert!(m >= 2, "need at least 2 actions");
+        ClassicLa { probs: vec![1.0 / m as f32; m] }
+    }
+
+    #[inline]
+    pub fn num_actions(&self) -> usize {
+        self.probs.len()
+    }
+
+    #[inline]
+    pub fn probabilities(&self) -> &[f32] {
+        &self.probs
+    }
+
+    /// Draw an action via the roulette wheel.
+    #[inline]
+    pub fn select(&self, rng: &mut Rng) -> usize {
+        roulette::spin(&self.probs, rng)
+    }
+
+    /// Apply eq. (6) (reward) or eq. (7) (penalty) for action `i`.
+    pub fn update(&mut self, i: usize, signal: Signal, alpha: f32, beta: f32) {
+        let m = self.probs.len();
+        debug_assert!(i < m);
+        match signal {
+            Signal::Reward => {
+                for j in 0..m {
+                    if j == i {
+                        self.probs[j] += alpha * (1.0 - self.probs[j]);
+                    } else {
+                        self.probs[j] *= 1.0 - alpha;
+                    }
+                }
+            }
+            Signal::Penalty => {
+                let spread = beta / (m as f32 - 1.0);
+                for j in 0..m {
+                    if j == i {
+                        self.probs[j] *= 1.0 - beta;
+                    } else {
+                        self.probs[j] = self.probs[j] * (1.0 - beta) + spread;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Index of the current most probable action.
+    pub fn argmax(&self) -> usize {
+        self.probs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sum(la: &ClassicLa) -> f32 {
+        la.probabilities().iter().sum()
+    }
+
+    #[test]
+    fn initial_uniform() {
+        let la = ClassicLa::new(4);
+        assert!(la.probabilities().iter().all(|&p| (p - 0.25).abs() < 1e-6));
+    }
+
+    #[test]
+    fn reward_conserves_sum() {
+        let mut la = ClassicLa::new(5);
+        la.update(2, Signal::Reward, 0.3, 0.1);
+        assert!((sum(&la) - 1.0).abs() < 1e-5, "sum={}", sum(&la));
+        assert!(la.probabilities()[2] > 0.2);
+    }
+
+    #[test]
+    fn penalty_conserves_sum() {
+        let mut la = ClassicLa::new(5);
+        la.update(2, Signal::Penalty, 0.3, 0.1);
+        assert!((sum(&la) - 1.0).abs() < 1e-5, "sum={}", sum(&la));
+        assert!(la.probabilities()[2] < 0.2);
+    }
+
+    #[test]
+    fn repeated_reward_converges() {
+        let mut la = ClassicLa::new(8);
+        for _ in 0..100 {
+            la.update(3, Signal::Reward, 0.1, 0.05);
+        }
+        assert!(la.probabilities()[3] > 0.99);
+        assert_eq!(la.argmax(), 3);
+    }
+
+    #[test]
+    fn selection_tracks_probabilities() {
+        let mut la = ClassicLa::new(3);
+        for _ in 0..50 {
+            la.update(1, Signal::Reward, 0.2, 0.1);
+        }
+        let mut rng = Rng::new(7);
+        let hits = (0..1000).filter(|_| la.select(&mut rng) == 1).count();
+        assert!(hits > 950, "hits={hits}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn single_action_rejected() {
+        ClassicLa::new(1);
+    }
+}

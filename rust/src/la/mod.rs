@@ -1,0 +1,32 @@
+//! Learning automata (the RL substrate, paper §III-B and §IV-A).
+//!
+//! * [`classic`] — the textbook variable-structure automaton with the
+//!   single-action L_{R-P} update (eqs. 6–7); kept as the ablation
+//!   baseline for §V-I's scalability claim.
+//! * [`weighted`] — the paper's contribution: the *weighted* automaton
+//!   whose update distributes reinforcement across the whole action set
+//!   via a weight vector with each half (reward/penalty) summing to 1
+//!   (eqs. 8–9).
+//! * [`signal`] — construction of the weight vector and reinforcement
+//!   signals from neighbour feedback (eq. 13 + §IV-D.6 mean split).
+//! * [`roulette`] — probability-proportional action sampling.
+
+pub mod classic;
+pub mod roulette;
+pub mod signal;
+pub mod weighted;
+
+/// Reinforcement signal per action: the paper encodes reward as 0 and
+/// penalty as 1 (§III-B), which we keep for fidelity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Signal {
+    Reward,
+    Penalty,
+}
+
+impl Signal {
+    #[inline]
+    pub fn is_reward(self) -> bool {
+        matches!(self, Signal::Reward)
+    }
+}

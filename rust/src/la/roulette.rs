@@ -1,0 +1,94 @@
+//! Roulette-wheel (fitness-proportional) selection over a probability
+//! vector — how an automaton draws its action (§III-B, citing Goldberg's
+//! probability matching).
+
+use crate::util::rng::Rng;
+
+/// Draw an index proportionally to `probs` (assumed non-negative; need
+/// not be exactly normalized — the draw is scaled by the actual sum).
+///
+/// Returns the last non-zero-probability index if accumulated rounding
+/// leaves the wheel short (guaranteeing a valid index).
+#[inline]
+pub fn spin(probs: &[f32], rng: &mut Rng) -> usize {
+    debug_assert!(!probs.is_empty());
+    let total: f32 = probs.iter().sum();
+    if total <= 0.0 {
+        // Degenerate distribution: fall back to uniform.
+        return rng.below_usize(probs.len());
+    }
+    let mut target = rng.next_f32() * total;
+    let mut last_nonzero = 0usize;
+    for (i, &p) in probs.iter().enumerate() {
+        if p > 0.0 {
+            last_nonzero = i;
+            if target < p {
+                return i;
+            }
+            target -= p;
+        }
+    }
+    last_nonzero
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn respects_distribution() {
+        let probs = [0.1f32, 0.6, 0.3];
+        let mut rng = Rng::new(1);
+        let mut counts = [0usize; 3];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[spin(&probs, &mut rng)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let frac = c as f64 / n as f64;
+            assert!(
+                (frac - probs[i] as f64).abs() < 0.01,
+                "action {i}: {frac} vs {}",
+                probs[i]
+            );
+        }
+    }
+
+    #[test]
+    fn zero_probability_never_drawn() {
+        let probs = [0.0f32, 1.0, 0.0];
+        let mut rng = Rng::new(2);
+        for _ in 0..1000 {
+            assert_eq!(spin(&probs, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn unnormalized_ok() {
+        let probs = [2.0f32, 6.0, 2.0];
+        let mut rng = Rng::new(3);
+        let mut counts = [0usize; 3];
+        for _ in 0..50_000 {
+            counts[spin(&probs, &mut rng)] += 1;
+        }
+        let frac1 = counts[1] as f64 / 50_000.0;
+        assert!((frac1 - 0.6).abs() < 0.02, "{frac1}");
+    }
+
+    #[test]
+    fn degenerate_all_zero_uniform() {
+        let probs = [0.0f32; 4];
+        let mut rng = Rng::new(4);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..100 {
+            seen.insert(spin(&probs, &mut rng));
+        }
+        assert!(seen.len() > 1, "all-zero wheel should fall back to uniform");
+    }
+
+    #[test]
+    fn single_action() {
+        let mut rng = Rng::new(5);
+        assert_eq!(spin(&[1.0], &mut rng), 0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Weight-vector and reinforcement-signal construction (§IV-D.5/6).
+//!
+//! Per step, vertex `v` accumulates a raw weight per partition from its
+//! neighbours' best-score labels (eq. 13): neighbour `u` whose λ(u) = l
+//! contributes ŵ(u,v) to `raw[l]` if v's LA chose l (δ(ψ(v), λ(u)) = 1),
+//! or 1 if partition l still has positive migration probability.
+//!
+//! The raw vector is then split at its **mean**: entries above the mean
+//! become rewards (r=0), the rest penalties (r=1). Each entry's weight
+//! is its **deviation from the mean** |w − mean|, and each half is
+//! normalized to sum 1 so Σw = 2 as eqs. (8)-(9) require.
+//!
+//! Deviation-proportional weights (rather than raw-proportional) are the
+//! disambiguation that makes the mean split meaningful: an entry sitting
+//! exactly at the mean carries no signal, an entry far above it carries
+//! a strong reward — without this, entries hovering near the mean flip
+//! between reward and penalty with near-maximal weights and the automata
+//! never settle (DESIGN.md §Fidelity-notes F3).
+//!
+//! Semantics mirror `ref.py::signal_ref` exactly (strict `>` mean
+//! comparison, degenerate halves fall back to uniform-over-members).
+
+use super::Signal;
+
+/// Split `raw` at its mean and half-normalize the deviations.
+///
+/// Returns the normalized weight vector and per-action signals.
+pub fn build_signals(raw: &[f32]) -> (Vec<f32>, Vec<Signal>) {
+    let mut w = vec![0.0f32; raw.len()];
+    let mut s = vec![Signal::Penalty; raw.len()];
+    build_signals_into(raw, &mut w, &mut s);
+    (w, s)
+}
+
+/// Allocation-free variant for the hot path: writes into caller scratch.
+pub fn build_signals_into(raw: &[f32], w_out: &mut [f32], s_out: &mut [Signal]) {
+    let m = raw.len();
+    debug_assert!(m >= 2);
+    debug_assert_eq!(w_out.len(), m);
+    debug_assert_eq!(s_out.len(), m);
+
+    let mean: f32 = raw.iter().sum::<f32>() / m as f32;
+
+    let mut rew_sum = 0.0f32;
+    let mut rew_cnt = 0u32;
+    let mut pen_sum = 0.0f32;
+    let mut pen_cnt = 0u32;
+    for (i, &x) in raw.iter().enumerate() {
+        let dev = (x - mean).abs();
+        w_out[i] = dev;
+        if x > mean {
+            s_out[i] = Signal::Reward;
+            rew_sum += dev;
+            rew_cnt += 1;
+        } else {
+            s_out[i] = Signal::Penalty;
+            pen_sum += dev;
+            pen_cnt += 1;
+        }
+    }
+
+    // Half-normalization with the same degenerate-half fallbacks as
+    // ref.py: positive sum -> scale by sum; zero sum -> uniform over the
+    // half's members (empty half -> nothing to write).
+    for i in 0..m {
+        let (sum, cnt) = match s_out[i] {
+            Signal::Reward => (rew_sum, rew_cnt),
+            Signal::Penalty => (pen_sum, pen_cnt),
+        };
+        w_out[i] = if sum > 0.0 {
+            w_out[i] / sum
+        } else if cnt > 0 {
+            1.0 / cnt as f32
+        } else {
+            0.0
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn half_sums(w: &[f32], s: &[Signal]) -> (f32, f32) {
+        let mut rew = 0.0;
+        let mut pen = 0.0;
+        for (x, sig) in w.iter().zip(s.iter()) {
+            match sig {
+                Signal::Reward => rew += x,
+                Signal::Penalty => pen += x,
+            }
+        }
+        (rew, pen)
+    }
+
+    #[test]
+    fn halves_sum_to_one() {
+        let raw = [0.9f32, 0.1, 0.5, 0.7, 0.05, 0.3];
+        let (w, s) = build_signals(&raw);
+        let (rew, pen) = half_sums(&w, &s);
+        assert!((rew - 1.0).abs() < 1e-5, "rew={rew}");
+        assert!((pen - 1.0).abs() < 1e-5, "pen={pen}");
+        let total: f32 = w.iter().sum();
+        assert!((total - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn above_mean_is_reward() {
+        let raw = [1.0f32, 0.0, 0.0, 0.0];
+        let (_, s) = build_signals(&raw);
+        assert_eq!(s[0], Signal::Reward);
+        assert!(s[1..].iter().all(|&x| x == Signal::Penalty));
+    }
+
+    #[test]
+    fn all_equal_all_penalty() {
+        // Strict > mean: equal weights mean nothing is rewarded; the
+        // empty reward half contributes 0 and the penalty half is
+        // normalized over everything.
+        let raw = [0.5f32; 4];
+        let (w, s) = build_signals(&raw);
+        assert!(s.iter().all(|&x| x == Signal::Penalty));
+        let total: f32 = w.iter().sum();
+        assert!((total - 1.0).abs() < 1e-5, "only penalty half populated");
+    }
+
+    #[test]
+    fn all_zero_uniform_penalty() {
+        let raw = [0.0f32; 5];
+        let (w, s) = build_signals(&raw);
+        assert!(s.iter().all(|&x| x == Signal::Penalty));
+        assert!(w.iter().all(|&x| (x - 0.2).abs() < 1e-6));
+    }
+
+    #[test]
+    fn zero_sum_reward_half_impossible_but_zero_pen_half_uniform() {
+        // Penalty half with all-zero raw values: uniform over members.
+        let raw = [1.0f32, 0.0, 0.0];
+        let (w, s) = build_signals(&raw);
+        assert_eq!(s[0], Signal::Reward);
+        assert!((w[0] - 1.0).abs() < 1e-6);
+        assert!((w[1] - 0.5).abs() < 1e-6);
+        assert!((w[2] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn into_variant_matches() {
+        let raw = [0.3f32, 0.9, 0.2, 0.8, 0.1];
+        let (w1, s1) = build_signals(&raw);
+        let mut w2 = vec![0.0; 5];
+        let mut s2 = vec![Signal::Penalty; 5];
+        build_signals_into(&raw, &mut w2, &mut s2);
+        assert_eq!(w1, w2);
+        assert_eq!(s1, s2);
+    }
+}

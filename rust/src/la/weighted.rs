@@ -1,0 +1,252 @@
+//! Weighted learning automaton — the paper's core contribution (§IV-A,
+//! eqs. 8–9).
+//!
+//! Unlike the classic automaton, which reinforces a single action per
+//! step, the weighted automaton applies **all m reinforcement signals in
+//! one step**, each scaled by a weight; the reward half and the penalty
+//! half of the weight vector each sum to 1 (so Σw = 2). The update is a
+//! sequential sweep of eq. (8)/(9) over the m signals — the paper's m²
+//! formulation — followed by a float-drift renormalization. The penalty
+//! redistribution term is weighted per receiving element (`β·w_j/(m−1)`,
+//! eq. (9)'s printed `w_j` subscript — see the comment in [`WeightedLa::update`]).
+//!
+//! This implementation is kept **bit-for-bit semantically identical** to
+//! the Python oracle `python/compile/kernels/ref.py::la_update_ref` (and
+//! hence the Pallas kernel): same sweep order, same clamps, same f32
+//! arithmetic. The `--engine xla` parity tests rely on this.
+
+use super::{roulette, Signal};
+use crate::util::rng::Rng;
+
+/// Minimum probability kept after renormalization (matches ref.py).
+const P_FLOOR: f32 = 1e-12;
+
+/// A weighted learning automaton over `m` actions.
+///
+/// The probability vector is stored externally in a flat slab (one slab
+/// per coordinator chunk — see DESIGN.md §6) for cache density; this
+/// type provides the *operations* over a `&mut [f32]` row.
+pub struct WeightedLa;
+
+impl WeightedLa {
+    /// Initialize a row to the uniform distribution (§IV-C step 3).
+    pub fn init(probs: &mut [f32]) {
+        let m = probs.len();
+        debug_assert!(m >= 2);
+        let u = 1.0 / m as f32;
+        probs.iter_mut().for_each(|p| *p = u);
+    }
+
+    /// Draw an action via the roulette wheel.
+    #[inline]
+    pub fn select(probs: &[f32], rng: &mut Rng) -> usize {
+        roulette::spin(probs, rng)
+    }
+
+    /// Apply the full weighted update: sweep eq. (8)/(9) over all m
+    /// signals in index order, then renormalize.
+    ///
+    /// * `probs` — the automaton's probability row (modified in place).
+    /// * `weights` — weight vector W(n); each half should sum to 1
+    ///   (see [`super::signal`]). Entries in [0, 1].
+    /// * `signals` — reinforcement signal per action.
+    /// * `alpha`, `beta` — reward/penalty learning rates.
+    pub fn update(
+        probs: &mut [f32],
+        weights: &[f32],
+        signals: &[Signal],
+        alpha: f32,
+        beta: f32,
+    ) {
+        let m = probs.len();
+        debug_assert_eq!(weights.len(), m);
+        debug_assert_eq!(signals.len(), m);
+        debug_assert!(m >= 2);
+        let pen_spread = beta / (m as f32 - 1.0);
+
+        // Each pass applies one uniform vector operation to the whole
+        // row and then patches the diagonal element — branchless inner
+        // loops the compiler auto-vectorizes (perf log P1: ~3× over the
+        // per-element `if j == i` form, identical arithmetic).
+        for i in 0..m {
+            let wi = weights[i];
+            match signals[i] {
+                Signal::Reward => {
+                    // eq. (8): p_i += α·w_i·(1-p_i); p_j *= (1-α·w_i).
+                    let scale = 1.0 - alpha * wi;
+                    let pi_new = probs[i] + alpha * wi * (1.0 - probs[i]);
+                    for p in probs.iter_mut() {
+                        *p *= scale;
+                    }
+                    probs[i] = pi_new;
+                }
+                Signal::Penalty => {
+                    // eq. (9): p_i *= (1-β·w_i);
+                    //          p_j = p_j·(1-β·w_i) + β·w_j/(m-1).
+                    // The additive redistribution is weighted by the
+                    // *receiving* element's weight w_j — eq. (9) as
+                    // printed subscripts the weight with j, and the
+                    // unweighted β/(m-1) variant hands probability mass
+                    // back to known-bad actions every pass, freezing the
+                    // automaton at a high noise floor (DESIGN.md F4).
+                    let scale = 1.0 - beta * wi;
+                    let pi_new = probs[i] * scale;
+                    for (p, &w) in probs.iter_mut().zip(weights.iter()) {
+                        *p = *p * scale + pen_spread * w;
+                    }
+                    probs[i] = pi_new;
+                }
+            }
+        }
+
+        // Renormalize (identical to ref.py: clamp then divide).
+        let mut sum = 0.0f32;
+        for p in probs.iter_mut() {
+            if *p < P_FLOOR {
+                *p = P_FLOOR;
+            }
+            sum += *p;
+        }
+        let inv = 1.0 / sum;
+        probs.iter_mut().for_each(|p| *p *= inv);
+    }
+
+    /// Index of the most probable action.
+    pub fn argmax(probs: &[f32]) -> usize {
+        let mut best = 0usize;
+        let mut best_p = probs[0];
+        for (i, &p) in probs.iter().enumerate().skip(1) {
+            if p > best_p {
+                best_p = p;
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::la::signal::build_signals;
+
+    fn uniform(m: usize) -> Vec<f32> {
+        vec![1.0 / m as f32; m]
+    }
+
+    #[test]
+    fn sum_stays_one() {
+        let m = 8;
+        let mut p = uniform(m);
+        let raw: Vec<f32> = (0..m).map(|i| i as f32 / m as f32).collect();
+        let (w, s) = build_signals(&raw);
+        WeightedLa::update(&mut p, &w, &s, 1.0, 0.1);
+        let sum: f32 = p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5, "sum={sum}");
+    }
+
+    #[test]
+    fn heavily_rewarded_action_rises() {
+        let m = 4;
+        let mut p = uniform(m);
+        // Action 3 gets all the reward weight, others split penalty.
+        let w = [1.0 / 3.0, 1.0 / 3.0, 1.0 / 3.0, 1.0];
+        let s = [Signal::Penalty, Signal::Penalty, Signal::Penalty, Signal::Reward];
+        for _ in 0..20 {
+            WeightedLa::update(&mut p, &w, &s, 0.5, 0.1);
+        }
+        assert_eq!(WeightedLa::argmax(&p), 3);
+        assert!(p[3] > 0.8, "p={p:?}");
+    }
+
+    #[test]
+    fn probabilities_stay_positive() {
+        let m = 16;
+        let mut p = uniform(m);
+        let raw: Vec<f32> = (0..m).map(|i| if i == 0 { 1.0 } else { 0.0 }).collect();
+        let (w, s) = build_signals(&raw);
+        for _ in 0..200 {
+            WeightedLa::update(&mut p, &w, &s, 1.0, 0.1);
+        }
+        assert!(p.iter().all(|&x| x > 0.0));
+        assert!(p.iter().all(|&x| x.is_finite()));
+    }
+
+    #[test]
+    fn zero_rates_identity_up_to_renorm() {
+        let m = 6;
+        let mut p = vec![0.3, 0.1, 0.2, 0.15, 0.15, 0.1];
+        let before = p.clone();
+        let raw: Vec<f32> = (0..m).map(|i| i as f32).collect();
+        let (w, s) = build_signals(&raw);
+        WeightedLa::update(&mut p, &w, &s, 0.0, 0.0);
+        for (a, b) in p.iter().zip(before.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn scalability_uniformity_vs_classic() {
+        // §V-I: with many actions, the weighted update must not collapse
+        // the distribution onto one action after a single mixed step the
+        // way classic single-reward updates do with large alpha.
+        let m = 256;
+        let mut p = uniform(m);
+        let raw: Vec<f32> = (0..m).map(|i| (i % 7) as f32).collect();
+        let (w, s) = build_signals(&raw);
+        WeightedLa::update(&mut p, &w, &s, 1.0, 0.1);
+        let max = p.iter().cloned().fold(0.0f32, f32::max);
+        assert!(max < 0.5, "weighted update should spread mass, max={max}");
+    }
+
+    #[test]
+    fn matches_naive_transcription() {
+        // Independent naive transcription of eqs. (8)-(9) in f64.
+        let m = 5;
+        let mut p = vec![0.2f32; m];
+        let w = [0.5, 0.5, 0.4, 0.3, 0.3];
+        let s = [
+            Signal::Reward,
+            Signal::Reward,
+            Signal::Penalty,
+            Signal::Penalty,
+            Signal::Penalty,
+        ];
+        let (alpha, beta) = (1.0f32, 0.1f32);
+
+        let mut q: Vec<f64> = p.iter().map(|&x| x as f64).collect();
+        for i in 0..m {
+            let wi = w[i] as f64;
+            let mut next = q.clone();
+            match s[i] {
+                Signal::Reward => {
+                    for j in 0..m {
+                        next[j] = if j == i {
+                            q[j] + alpha as f64 * wi * (1.0 - q[j])
+                        } else {
+                            q[j] * (1.0 - alpha as f64 * wi)
+                        };
+                    }
+                }
+                Signal::Penalty => {
+                    for j in 0..m {
+                        next[j] = if j == i {
+                            q[j] * (1.0 - beta as f64 * wi)
+                        } else {
+                            q[j] * (1.0 - beta as f64 * wi)
+                                + beta as f64 * w[j] as f64 / (m as f64 - 1.0)
+                        };
+                    }
+                }
+            }
+            q = next;
+        }
+        let qs: f64 = q.iter().sum();
+        let q_norm: Vec<f64> = q.iter().map(|x| x / qs).collect();
+
+        WeightedLa::update(&mut p, &w, &s, alpha, beta);
+        for (a, b) in p.iter().zip(q_norm.iter()) {
+            assert!((*a as f64 - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,57 @@
+//! # Revolver — vertex-centric graph partitioning with reinforcement learning
+//!
+//! A full reproduction of *"Partitioning Graphs for the Cloud using
+//! Reinforcement Learning"* (Hasanzadeh Mofrad, Melhem, Hammoud, 2019):
+//! an asynchronous, shared-memory, vertex-centric balanced graph
+//! partitioner where every vertex owns a **weighted learning automaton**
+//! trained by a **normalized label-propagation** objective.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the coordinator: graph substrate, partition
+//!   state, the four partitioners (Revolver / Spinner / Hash / Range),
+//!   the asynchronous chunked thread engine, metrics, config and CLI.
+//! * **L2 (python/compile/model.py)** — the dense per-batch numeric step
+//!   (normalized LP scores, signal construction, weighted-LA update) as
+//!   a JAX computation, AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the LA update
+//!   (eqs. 8–9) and LP scoring (eqs. 10–12).
+//!
+//! The [`runtime`] module loads the AOT artifacts via PJRT (the `xla`
+//! crate) so Revolver's probability updates can run through the compiled
+//! XLA path (`--engine xla`); the default pure-Rust path (`--engine
+//! native`) is asserted numerically equivalent in integration tests.
+//! Python never runs on the request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use revolver::graph::gen::{Dataset, generate_dataset};
+//! use revolver::partitioners::{Partitioner, revolver::Revolver};
+//! use revolver::config::RevolverConfig;
+//! use revolver::metrics::quality;
+//!
+//! let graph = generate_dataset(Dataset::Lj, 1 << 14, 7).unwrap();
+//! let cfg = RevolverConfig { parts: 8, ..Default::default() };
+//! let out = Revolver::new(cfg).partition(&graph);
+//! println!("local edges = {:.3}", quality::local_edges(&graph, &out.labels));
+//! println!("max norm load = {:.3}", quality::max_normalized_load(&graph, &out.labels, 8));
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod graph;
+pub mod la;
+pub mod lp;
+pub mod metrics;
+pub mod partition;
+pub mod partitioners;
+pub mod runtime;
+pub mod util;
+
+/// Vertex id type. Graphs in the paper reach 23.9M vertices; `u32` covers
+/// 4.29B and halves CSR memory versus `u64`.
+pub type VertexId = u32;
+
+/// Partition label type. The paper sweeps k up to 256; `u32` leaves room.
+pub type Label = u32;

@@ -1,0 +1,72 @@
+//! Label-propagation scoring functions.
+//!
+//! * [`normalized`] — the paper's normalized LP (eqs. 10–12): both the
+//!   neighbourhood term τ and the penalty term π are normalized to
+//!   [0, 1], so neither can dominate (§IV-B) — this is what keeps
+//!   Revolver's partitions balanced.
+//! * [`spinner`] — Spinner's original scoring (eqs. 3–5), where the
+//!   penalty `π̂(l) = b(l)/C` is *unnormalized* against the
+//!   neighbourhood term; the baseline whose imbalance the paper
+//!   criticises (§V-H.1).
+//!
+//! Both operate on a caller-provided scratch histogram so the hot loop
+//! allocates nothing.
+
+pub mod normalized;
+pub mod spinner;
+
+/// Accumulate the neighbour label-weight histogram
+/// `hist[l] = Σ_{u∈N(v)} ŵ(u,v)·δ(ψ(u), l)` and the total weight
+/// `Σ ŵ(u,v)` for vertex `v`. Shared by both scoring functions.
+///
+/// `labels_of` maps a neighbour to its current label — the asynchronous
+/// engine passes a relaxed atomic read, the synchronous engine a frozen
+/// snapshot.
+#[inline]
+pub fn neighbor_histogram<F>(
+    neighbors: &[u32],
+    weights: &[f32],
+    labels_of: F,
+    hist: &mut [f32],
+) -> f32
+where
+    F: Fn(u32) -> u32,
+{
+    debug_assert_eq!(neighbors.len(), weights.len());
+    hist.iter_mut().for_each(|h| *h = 0.0);
+    let mut wsum = 0.0f32;
+    for (&u, &w) in neighbors.iter().zip(weights.iter()) {
+        let l = labels_of(u) as usize;
+        debug_assert!(l < hist.len());
+        // SAFETY-equivalent: labels are always < k by construction
+        // (PartitionState never stores an out-of-range label); checked
+        // in debug builds above.
+        hist[l] += w;
+        wsum += w;
+    }
+    wsum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_accumulates_weights() {
+        let neighbors = [0u32, 1, 2, 3];
+        let weights = [1.0f32, 2.0, 1.0, 2.0];
+        // labels: 0->0, 1->1, 2->0, 3->1
+        let mut hist = vec![0.0f32; 2];
+        let wsum = neighbor_histogram(&neighbors, &weights, |u| u % 2, &mut hist);
+        assert_eq!(wsum, 6.0);
+        assert_eq!(hist, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn empty_neighborhood() {
+        let mut hist = vec![7.0f32; 3];
+        let wsum = neighbor_histogram(&[], &[], |_| 0, &mut hist);
+        assert_eq!(wsum, 0.0);
+        assert!(hist.iter().all(|&h| h == 0.0), "hist must be cleared");
+    }
+}

@@ -1,0 +1,132 @@
+//! The paper's normalized label propagation (eqs. 10–12).
+//!
+//! `score(v,l) = (τ(v,l) + π(l)) / 2` with
+//! `τ(v,l) = hist[l] / Σŵ` (normalized neighbourhood affinity) and
+//! `π(l) = (1 − b(l)/C) / Σᵢ(1 − b(lᵢ)/C)` (normalized remaining
+//! capacity), including footnote 1's shift when some partition exceeds
+//! its capacity. Numeric semantics mirror `ref.py::score_ref` /
+//! `kernels/score.py` exactly so the `--engine xla` path is
+//! interchangeable.
+
+/// Compute the normalized penalty vector π (eq. 12 + footnote 1) from
+/// the current loads. Computed **once per step** (or per batch) and
+/// shared across vertices — π only depends on global loads.
+pub fn penalty_into(loads: &[f32], capacity: f32, out: &mut [f32]) {
+    debug_assert_eq!(loads.len(), out.len());
+    let mut min_pen = f32::INFINITY;
+    for (o, &b) in out.iter_mut().zip(loads.iter()) {
+        let pen = 1.0 - b / capacity;
+        *o = pen;
+        if pen < min_pen {
+            min_pen = pen;
+        }
+    }
+    // Footnote 1: augment w.r.t. the minimum negative value.
+    if min_pen < 0.0 {
+        out.iter_mut().for_each(|o| *o -= min_pen);
+    }
+    let sum: f32 = out.iter().sum();
+    let inv = 1.0 / sum.max(1e-12);
+    out.iter_mut().for_each(|o| *o *= inv);
+}
+
+/// Fill `scores[l] = (hist[l]/wsum + pi[l]) / 2` (eq. 10) and return the
+/// argmax — the paper's λ(v) (§IV-D.3).
+///
+/// `wsum == 0` (isolated vertex) degrades gracefully to τ = 0.
+#[inline]
+pub fn score_into(hist: &[f32], wsum: f32, pi: &[f32], scores: &mut [f32]) -> usize {
+    debug_assert_eq!(hist.len(), pi.len());
+    debug_assert_eq!(hist.len(), scores.len());
+    let inv_w = if wsum > 1e-12 { 1.0 / wsum } else { 0.0 };
+    let mut best = 0usize;
+    let mut best_s = f32::NEG_INFINITY;
+    for l in 0..hist.len() {
+        let tau = hist[l] * inv_w;
+        let s = (tau + pi[l]) * 0.5;
+        scores[l] = s;
+        if s > best_s {
+            best_s = s;
+            best = l;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn penalty_normalized() {
+        let loads = [10.0f32, 20.0, 30.0];
+        let mut pi = vec![0.0f32; 3];
+        penalty_into(&loads, 40.0, &mut pi);
+        let sum: f32 = pi.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        // Emptier partitions get higher penalty-term scores.
+        assert!(pi[0] > pi[1] && pi[1] > pi[2]);
+    }
+
+    #[test]
+    fn penalty_overload_footnote1() {
+        // b(2) > C => raw penalty negative => shift then normalize.
+        let loads = [10.0f32, 20.0, 60.0];
+        let mut pi = vec![0.0f32; 3];
+        penalty_into(&loads, 40.0, &mut pi);
+        assert!(pi.iter().all(|&x| x >= 0.0));
+        let sum: f32 = pi.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        assert_eq!(pi[2], 0.0, "overloaded partition's penalty shifts to zero");
+    }
+
+    #[test]
+    fn score_prefers_neighbour_majority_when_balanced() {
+        let hist = [1.0f32, 5.0, 2.0];
+        let pi = [1.0 / 3.0f32; 3];
+        let mut scores = vec![0.0f32; 3];
+        let best = score_into(&hist, 8.0, &pi, &mut scores);
+        assert_eq!(best, 1);
+        // All scores in [0, 1].
+        assert!(scores.iter().all(|&s| (0.0..=1.0).contains(&s)));
+    }
+
+    #[test]
+    fn score_balances_against_overloaded_majority() {
+        // Neighbour majority on partition 0, but 0 is overloaded and 1
+        // empty: the normalized penalty must be able to flip the choice
+        // when the majority is weak.
+        let hist = [1.1f32, 1.0];
+        let loads = [99.0f32, 1.0];
+        let mut pi = vec![0.0f32; 2];
+        penalty_into(&loads, 100.0, &mut pi);
+        let mut scores = vec![0.0f32; 2];
+        let best = score_into(&hist, 2.1, &pi, &mut scores);
+        assert_eq!(best, 1, "scores={scores:?} pi={pi:?}");
+    }
+
+    #[test]
+    fn isolated_vertex_scores_by_penalty_only() {
+        let hist = [0.0f32, 0.0];
+        let pi = [0.7f32, 0.3];
+        let mut scores = vec![0.0f32; 2];
+        let best = score_into(&hist, 0.0, &pi, &mut scores);
+        assert_eq!(best, 0);
+        assert!((scores[0] - 0.35).abs() < 1e-6);
+    }
+
+    #[test]
+    fn matches_python_oracle_values() {
+        // Cross-checked against ref.py::score_ref by hand:
+        // hist=[3,1], wsum=4, loads=[10,30], C=40
+        // tau = [0.75, 0.25]; pen=[0.75,0.25]; pi=[0.75,0.25]
+        // score = [(0.75+0.75)/2, (0.25+0.25)/2] = [0.75, 0.25]
+        let hist = [3.0f32, 1.0];
+        let mut pi = vec![0.0f32; 2];
+        penalty_into(&[10.0, 30.0], 40.0, &mut pi);
+        let mut scores = vec![0.0f32; 2];
+        score_into(&hist, 4.0, &pi, &mut scores);
+        assert!((scores[0] - 0.75).abs() < 1e-6, "{scores:?}");
+        assert!((scores[1] - 0.25).abs() < 1e-6);
+    }
+}

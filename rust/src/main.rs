@@ -1,0 +1,336 @@
+//! `revolver` — CLI launcher for the Revolver graph-partitioning system.
+//!
+//! Subcommands:
+//!   partition    run one algorithm on one graph, print quality metrics
+//!   sweep        Figure-3 grid: graphs × algorithms × partition counts
+//!   convergence  Figure-4 per-step traces (Revolver vs Spinner)
+//!   stats        Table-I statistics for the surrogate datasets
+//!   generate     materialize a surrogate dataset to disk
+//!   info         toolchain / artifact diagnostics
+//!
+//! Examples:
+//!   revolver partition --graph lj --vertices 16384 --algorithm revolver --parts 8
+//!   revolver sweep --graphs lj,so --parts 2,4,8 --runs 3 --out results
+//!   revolver convergence --graph lj --parts 32 --vertices 16384
+//!   revolver stats --all
+//!   revolver partition --graph lj --engine xla --parts 8
+
+use anyhow::{bail, Context, Result};
+
+use revolver::config::{Engine, ExecutionModel, RevolverConfig};
+use revolver::graph::gen::{generate_dataset, Dataset};
+use revolver::graph::{io, stats, Graph};
+use revolver::metrics::quality;
+use revolver::metrics::report::{Report, ResultRow};
+use revolver::partitioners::{by_name, Partitioner};
+use revolver::util::args::Args;
+use revolver::util::{with_commas, Stopwatch};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let mut args = Args::from_env()?;
+    match args.subcommand() {
+        Some("partition") => cmd_partition(args),
+        Some("sweep") => cmd_sweep(args),
+        Some("convergence") => cmd_convergence(args),
+        Some("stats") => cmd_stats(args),
+        Some("generate") => cmd_generate(args),
+        Some("info") => cmd_info(args),
+        Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
+        None => {
+            // Help path: consume nothing, print usage.
+            let _ = args.get_bool("help");
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "usage: revolver <partition|sweep|convergence|stats|generate|info> [flags]
+  common flags:
+    --graph <wiki|uk|usa|so|lj|en|ok|hlwd|eu|path/to/edges.txt>
+    --vertices N          surrogate scale (default 16384)
+    --parts k             number of partitions (default 8)
+    --seed S              RNG seed (default 42)
+    --threads T           worker threads
+    --config file.toml    load RevolverConfig from file
+  partition:  --algorithm <revolver|spinner|hash|range> --engine <native|xla>
+  sweep:      --graphs a,b,c --algorithms a,b --parts 2,4,8 --runs R --out dir
+  convergence: --parts k --steps N --out dir
+  stats:      --all | --graph g
+  generate:   --graph g --out file [--format txt|bin]";
+
+/// Shared flag parsing: build a RevolverConfig from --config + overrides.
+fn config_from(args: &mut Args) -> Result<RevolverConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) if !path.is_empty() => RevolverConfig::from_toml_file(path)?,
+        _ => RevolverConfig::default(),
+    };
+    // `--parts` may be a comma list (sweep); the base config takes the
+    // first entry, sweep overrides per-k.
+    cfg.parts = args.get_list("parts", &[cfg.parts])?[0];
+    cfg.epsilon = args.get_or("epsilon", cfg.epsilon)?;
+    cfg.max_steps = args.get_or("steps", cfg.max_steps)?;
+    cfg.halt_window = args.get_or("halt-window", cfg.halt_window)?;
+    cfg.halt_theta = args.get_or("halt-theta", cfg.halt_theta)?;
+    cfg.alpha = args.get_or("alpha", cfg.alpha)?;
+    cfg.beta = args.get_or("beta", cfg.beta)?;
+    cfg.threads = args.get_or("threads", cfg.threads)?;
+    cfg.seed = args.get_or("seed", cfg.seed)?;
+    cfg.trace_every = args.get_or("trace-every", cfg.trace_every)?;
+    if let Some(engine) = args.get("engine") {
+        cfg.engine = engine.parse()?;
+    }
+    if let Some(exec) = args.get("execution") {
+        cfg.execution = match exec.as_str() {
+            "async" | "asynchronous" => ExecutionModel::Asynchronous,
+            "sync" | "synchronous" => ExecutionModel::Synchronous,
+            other => bail!("unknown execution model {other:?}"),
+        };
+    }
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifacts_dir = dir;
+    }
+    cfg.classic_la = args.get_bool("classic-la");
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Load a graph: surrogate dataset name, or a file path (.txt/.bin).
+fn load_graph(args: &mut Args) -> Result<(String, Graph)> {
+    let name = args.get("graph").unwrap_or_else(|| "lj".to_string());
+    let vertices: usize = args.get_or("vertices", 16384)?;
+    let seed: u64 = args.get_or("graph-seed", 7)?;
+    if let Some(ds) = Dataset::from_name(&name) {
+        let g = generate_dataset(ds, vertices, seed)?;
+        return Ok((ds.name().to_string(), g));
+    }
+    let path = std::path::Path::new(&name);
+    if !path.exists() {
+        bail!(
+            "--graph {name:?} is neither a dataset name ({:?}) nor an existing file",
+            Dataset::ALL.iter().map(|d| d.name()).collect::<Vec<_>>()
+        );
+    }
+    let g = if name.ends_with(".bin") {
+        io::load_binary(path)?
+    } else {
+        io::load_edge_list(path)?
+    };
+    let stem = path.file_stem().unwrap_or_default().to_string_lossy().to_string();
+    Ok((stem, g))
+}
+
+fn cmd_partition(mut args: Args) -> Result<()> {
+    let algorithm = args.get("algorithm").unwrap_or_else(|| "revolver".to_string());
+    let (gname, g) = load_graph(&mut args)?;
+    let cfg = config_from(&mut args)?;
+    args.finish()?;
+
+    let k = cfg.parts;
+    eprintln!(
+        "partitioning {gname} (|V|={}, |E|={}) with {algorithm}, k={k}, engine={:?}",
+        with_commas(g.num_vertices() as u64),
+        with_commas(g.num_edges() as u64),
+        cfg.engine,
+    );
+    let p = by_name(&algorithm, cfg)?;
+    let sw = Stopwatch::start();
+    let out = p.partition(&g);
+    let q = quality::evaluate(&g, &out.labels, k);
+    println!("graph:               {gname}");
+    println!("algorithm:           {algorithm}");
+    println!("partitions:          {k}");
+    println!("steps:               {}", out.trace.steps());
+    println!("converged at:        {:?}", out.trace.converged_at);
+    println!("local edges:         {:.4}", q.local_edges);
+    println!("edge cuts:           {:.4}", 1.0 - q.local_edges);
+    println!("max normalized load: {:.4}", q.max_normalized_load);
+    println!("wall time:           {:.2}s", sw.elapsed_s());
+    Ok(())
+}
+
+fn cmd_sweep(mut args: Args) -> Result<()> {
+    let graphs: Vec<String> =
+        args.get_list("graphs", &["lj".to_string()])?;
+    let algorithms: Vec<String> = args.get_list(
+        "algorithms",
+        &[
+            "revolver".to_string(),
+            "spinner".to_string(),
+            "hash".to_string(),
+            "range".to_string(),
+        ],
+    )?;
+    let parts: Vec<usize> = args.get_list("parts", &[2usize, 4, 8, 16, 32])?;
+    let runs: u32 = args.get_or("runs", 1)?;
+    let out_dir = args.get("out").unwrap_or_else(|| "results".to_string());
+    let vertices: usize = args.get_or("vertices", 16384)?;
+    let base_cfg = config_from(&mut args)?;
+    args.finish()?;
+
+    let mut report = Report::new();
+    for gname in &graphs {
+        let ds = Dataset::from_name(gname)
+            .with_context(|| format!("unknown dataset {gname:?} in --graphs"))?;
+        let g = generate_dataset(ds, vertices, 7)?;
+        eprintln!(
+            "sweep: {gname} |V|={} |E|={}",
+            with_commas(g.num_vertices() as u64),
+            with_commas(g.num_edges() as u64)
+        );
+        for algo in &algorithms {
+            for &k in &parts {
+                let mut le_sum = 0.0;
+                let mut mnl_sum = 0.0;
+                let mut steps_sum = 0u32;
+                let sw = Stopwatch::start();
+                for run in 0..runs {
+                    let mut cfg = base_cfg.clone();
+                    cfg.parts = k;
+                    cfg.seed = base_cfg.seed + run as u64;
+                    let p = by_name(algo, cfg)?;
+                    let out = p.partition(&g);
+                    let q = quality::evaluate(&g, &out.labels, k);
+                    le_sum += q.local_edges;
+                    mnl_sum += q.max_normalized_load;
+                    steps_sum += out.trace.steps();
+                }
+                let row = ResultRow {
+                    graph: gname.clone(),
+                    algorithm: algo.clone(),
+                    parts: k as u32,
+                    local_edges: le_sum / runs as f64,
+                    max_normalized_load: mnl_sum / runs as f64,
+                    steps: steps_sum / runs,
+                    wall_time_s: sw.elapsed_s() / runs as f64,
+                    runs,
+                };
+                eprintln!(
+                    "  {algo:>9} k={k:<4} local={:.4} mnl={:.4}",
+                    row.local_edges, row.max_normalized_load
+                );
+                report.push(row);
+            }
+        }
+    }
+    print!("{}", report.to_table());
+    report.write_files(std::path::Path::new(&out_dir), "fig3_sweep")?;
+    eprintln!("wrote {out_dir}/fig3_sweep.csv and .json");
+    Ok(())
+}
+
+fn cmd_convergence(mut args: Args) -> Result<()> {
+    let (gname, g) = load_graph(&mut args)?;
+    let out_dir = args.get("out").unwrap_or_else(|| "results".to_string());
+    let mut cfg = config_from(&mut args)?;
+    args.finish()?;
+    cfg.trace_every = cfg.trace_every.max(1);
+    // Figure 4 runs the full step budget without early halting.
+    cfg.halt_window = u32::MAX;
+
+    std::fs::create_dir_all(&out_dir)?;
+    for algo in ["revolver", "spinner"] {
+        let p = by_name(algo, cfg.clone())?;
+        eprintln!("convergence: {algo} on {gname} k={}", cfg.parts);
+        let out = p.partition(&g);
+        let path = format!("{out_dir}/fig4_{algo}_{gname}_k{}.csv", cfg.parts);
+        std::fs::write(&path, out.trace.to_csv())?;
+        let last = out.trace.final_point().unwrap();
+        println!(
+            "{algo:>9}: final local edges {:.4}, max norm load {:.4} ({} steps) -> {path}",
+            last.local_edges,
+            last.max_normalized_load,
+            out.trace.steps()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_stats(mut args: Args) -> Result<()> {
+    let all = args.get_bool("all");
+    let vertices: usize = args.get_or("vertices", 16384)?;
+    let seed: u64 = args.get_or("graph-seed", 7)?;
+    let datasets: Vec<Dataset> = if all {
+        Dataset::ALL.to_vec()
+    } else {
+        let name = args.get("graph").unwrap_or_else(|| "lj".to_string());
+        vec![Dataset::from_name(&name).with_context(|| format!("unknown dataset {name:?}"))?]
+    };
+    args.finish()?;
+
+    println!(
+        "{:<8} {:>10} {:>12} {:>10} {:>8} | paper: {:>9} {:>9} {:>7} {:>6}",
+        "graph", "|V|", "|E|", "D(x1e-5)", "skew", "|V|", "|E|", "D", "skew"
+    );
+    for ds in datasets {
+        let g = generate_dataset(ds, vertices, seed)?;
+        let s = stats::compute(&g);
+        let p = ds.paper_stats();
+        println!(
+            "{:<8} {:>10} {:>12} {:>10.3} {:>8.3} | {:>9} {:>9} {:>7.2} {:>6.2}",
+            ds.name(),
+            with_commas(s.vertices as u64),
+            with_commas(s.edges as u64),
+            s.density * 1e5,
+            s.skewness,
+            format!("{:.2}M", p.vertices / 1e6),
+            format!("{:.2}M", p.edges / 1e6),
+            p.density_e5,
+            p.skew,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_generate(mut args: Args) -> Result<()> {
+    let name = args.get("graph").unwrap_or_else(|| "lj".to_string());
+    let vertices: usize = args.get_or("vertices", 16384)?;
+    let seed: u64 = args.get_or("graph-seed", 7)?;
+    let format = args.get("format").unwrap_or_else(|| "bin".to_string());
+    let out = args
+        .get("out")
+        .unwrap_or_else(|| format!("data/{name}_{vertices}.{format}"));
+    args.finish()?;
+
+    let ds = Dataset::from_name(&name).with_context(|| format!("unknown dataset {name:?}"))?;
+    let g = generate_dataset(ds, vertices, seed)?;
+    if let Some(parent) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    match format.as_str() {
+        "bin" => io::save_binary(&g, &out)?,
+        "txt" => io::save_edge_list(&g, &out)?,
+        other => bail!("unknown format {other:?} (txt|bin)"),
+    }
+    println!(
+        "wrote {out}: |V|={} |E|={}",
+        with_commas(g.num_vertices() as u64),
+        with_commas(g.num_edges() as u64)
+    );
+    Ok(())
+}
+
+fn cmd_info(mut args: Args) -> Result<()> {
+    let artifacts = args.get("artifacts").unwrap_or_else(|| "artifacts".to_string());
+    args.finish()?;
+    println!("revolver {} ({})", env!("CARGO_PKG_VERSION"), env!("CARGO_PKG_NAME"));
+    println!("threads available: {}", std::thread::available_parallelism()?.get());
+    match revolver::runtime::Runtime::open(&artifacts) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("artifacts ({artifacts}):");
+            for e in &rt.manifest().entries {
+                println!("  {:<22} batch={} k={} file={}", e.name, e.batch, e.k, e.file);
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e:#})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! Partitioning-quality metrics (§V-E) and experiment reporting.
+//!
+//! * [`quality`] — *local edges* and *max normalized load*, the two
+//!   metrics every figure in the paper plots.
+//! * [`trace`] — per-step convergence traces (Figure 4).
+//! * [`report`] — CSV / JSON / pretty-table emitters for the bench
+//!   harness.
+
+pub mod quality;
+pub mod report;
+pub mod trace;

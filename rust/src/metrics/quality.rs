@@ -1,0 +1,132 @@
+//! The paper's two quality metrics (§V-E).
+
+use crate::graph::Graph;
+use crate::Label;
+
+/// *Local edges*: fraction of directed edges with both endpoints in the
+/// same partition — `Σ_{(u,v)∈E} δ(ψ(u),ψ(v)) / |E|`. Higher is better.
+pub fn local_edges(g: &Graph, labels: &[Label]) -> f64 {
+    debug_assert_eq!(labels.len(), g.num_vertices());
+    let mut local = 0u64;
+    for v in 0..g.num_vertices() {
+        let lv = labels[v];
+        for &u in g.out_neighbors(v as u32) {
+            if labels[u as usize] == lv {
+                local += 1;
+            }
+        }
+    }
+    local as f64 / g.num_edges().max(1) as f64
+}
+
+/// *Edge cuts* = 1 − local edges (§V-E).
+pub fn edge_cuts(g: &Graph, labels: &[Label]) -> f64 {
+    1.0 - local_edges(g, labels)
+}
+
+/// Per-partition loads b(l) in outgoing edges.
+pub fn partition_loads(g: &Graph, labels: &[Label], k: usize) -> Vec<u64> {
+    let mut loads = vec![0u64; k];
+    for v in 0..g.num_vertices() {
+        let l = labels[v] as usize;
+        debug_assert!(l < k, "label {l} out of range {k}");
+        loads[l] += g.out_degree(v as u32) as u64;
+    }
+    loads
+}
+
+/// *Max normalized load*: `max_l b(l) / (|E|/k)`. 1.0 is perfect
+/// balance; the paper's ε=0.05 admits up to 1.05.
+pub fn max_normalized_load(g: &Graph, labels: &[Label], k: usize) -> f64 {
+    let loads = partition_loads(g, labels, k);
+    let max = loads.iter().copied().max().unwrap_or(0) as f64;
+    let expected = g.num_edges() as f64 / k as f64;
+    if expected > 0.0 {
+        max / expected
+    } else {
+        0.0
+    }
+}
+
+/// Both metrics in one pass-friendly bundle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quality {
+    pub local_edges: f64,
+    pub max_normalized_load: f64,
+}
+
+pub fn evaluate(g: &Graph, labels: &[Label], k: usize) -> Quality {
+    Quality {
+        local_edges: local_edges(g, labels),
+        max_normalized_load: max_normalized_load(g, labels, k),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn two_cliques() -> Graph {
+        // Vertices 0-2 fully connected, 3-5 fully connected, one bridge.
+        let mut b = GraphBuilder::new(6);
+        for &(i, j) in &[(0, 1), (1, 2), (2, 0), (3, 4), (4, 5), (5, 3)] {
+            b.edge(i, j);
+        }
+        b.edge(0, 3);
+        b.build()
+    }
+
+    #[test]
+    fn perfect_split() {
+        let g = two_cliques();
+        let labels = vec![0, 0, 0, 1, 1, 1];
+        // 6 of 7 edges internal.
+        assert!((local_edges(&g, &labels) - 6.0 / 7.0).abs() < 1e-12);
+        assert!((edge_cuts(&g, &labels) - 1.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_partition_all_local() {
+        let g = two_cliques();
+        let labels = vec![0; 6];
+        assert_eq!(local_edges(&g, &labels), 1.0);
+    }
+
+    #[test]
+    fn loads_count_out_degrees() {
+        let g = two_cliques();
+        let labels = vec![0, 0, 0, 1, 1, 1];
+        let loads = partition_loads(&g, &labels, 2);
+        // Vertex 0 has out-degree 2 (0->1, 0->3); 1,2 have 1 each.
+        assert_eq!(loads[0], 4);
+        assert_eq!(loads[1], 3);
+        assert_eq!(loads.iter().sum::<u64>(), g.num_edges() as u64);
+    }
+
+    #[test]
+    fn max_normalized_load_balanced_is_near_one() {
+        let g = two_cliques();
+        let labels = vec![0, 0, 0, 1, 1, 1];
+        // max(4,3) / (7/2) = 4 / 3.5
+        let mnl = max_normalized_load(&g, &labels, 2);
+        assert!((mnl - 4.0 / 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_normalized_load_degenerate_all_in_one() {
+        let g = two_cliques();
+        let labels = vec![0; 6];
+        // Everything in partition 0 of 2: max = 7, expected = 3.5 => 2.0.
+        assert!((max_normalized_load(&g, &labels, 2) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn evaluate_bundles_both() {
+        let g = two_cliques();
+        let labels = vec![0, 0, 0, 1, 1, 1];
+        let q = evaluate(&g, &labels, 2);
+        assert_eq!(q.local_edges, local_edges(&g, &labels));
+        assert_eq!(q.max_normalized_load, max_normalized_load(&g, &labels, 2));
+    }
+}

@@ -1,0 +1,209 @@
+//! Experiment result reporting: pretty tables for the terminal, CSV for
+//! plotting, JSON for machine consumption (the bench harness emits all
+//! three).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// One experiment row: (graph, algorithm, k) -> metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResultRow {
+    pub graph: String,
+    pub algorithm: String,
+    pub parts: u32,
+    pub local_edges: f64,
+    pub max_normalized_load: f64,
+    pub steps: u32,
+    pub wall_time_s: f64,
+    pub runs: u32,
+}
+
+/// Accumulates rows and renders them in the three output formats.
+#[derive(Debug, Default)]
+pub struct Report {
+    rows: Vec<ResultRow>,
+}
+
+impl Report {
+    pub fn new() -> Self {
+        Report::default()
+    }
+
+    pub fn push(&mut self, row: ResultRow) {
+        self.rows.push(row);
+    }
+
+    pub fn rows(&self) -> &[ResultRow] {
+        &self.rows
+    }
+
+    /// CSV with a fixed header (matches the bench harness' plot scripts).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "graph,algorithm,parts,local_edges,max_normalized_load,steps,wall_time_s,runs\n",
+        );
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{},{},{},{:.6},{:.6},{},{:.3},{}\n",
+                r.graph,
+                r.algorithm,
+                r.parts,
+                r.local_edges,
+                r.max_normalized_load,
+                r.steps,
+                r.wall_time_s,
+                r.runs
+            ));
+        }
+        out
+    }
+
+    /// JSON array of row objects.
+    pub fn to_json(&self) -> String {
+        let arr: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                let mut m = BTreeMap::new();
+                m.insert("graph".into(), Json::Str(r.graph.clone()));
+                m.insert("algorithm".into(), Json::Str(r.algorithm.clone()));
+                m.insert("parts".into(), Json::Num(r.parts as f64));
+                m.insert("local_edges".into(), Json::Num(r.local_edges));
+                m.insert(
+                    "max_normalized_load".into(),
+                    Json::Num(r.max_normalized_load),
+                );
+                m.insert("steps".into(), Json::Num(r.steps as f64));
+                m.insert("wall_time_s".into(), Json::Num(r.wall_time_s));
+                m.insert("runs".into(), Json::Num(r.runs as f64));
+                Json::Obj(m)
+            })
+            .collect();
+        Json::Arr(arr).to_string()
+    }
+
+    /// Figure-3-style grouped table: per graph, one row per k with one
+    /// column pair (local edges, max-norm load) per algorithm.
+    pub fn to_table(&self) -> String {
+        let mut algos: Vec<String> = Vec::new();
+        for r in &self.rows {
+            if !algos.contains(&r.algorithm) {
+                algos.push(r.algorithm.clone());
+            }
+        }
+        let mut graphs: Vec<String> = Vec::new();
+        for r in &self.rows {
+            if !graphs.contains(&r.graph) {
+                graphs.push(r.graph.clone());
+            }
+        }
+
+        let mut by_key: BTreeMap<(String, u32, String), &ResultRow> = BTreeMap::new();
+        let mut parts: Vec<u32> = Vec::new();
+        for r in &self.rows {
+            by_key.insert((r.graph.clone(), r.parts, r.algorithm.clone()), r);
+            if !parts.contains(&r.parts) {
+                parts.push(r.parts);
+            }
+        }
+        parts.sort_unstable();
+
+        let mut out = String::new();
+        for g in &graphs {
+            out.push_str(&format!("=== {} — local edges | max normalized load ===\n", g));
+            out.push_str(&format!("{:>6}", "k"));
+            for a in &algos {
+                out.push_str(&format!(" | {:^21}", a));
+            }
+            out.push('\n');
+            for &k in &parts {
+                out.push_str(&format!("{:>6}", k));
+                for a in &algos {
+                    match by_key.get(&(g.clone(), k, a.clone())) {
+                        Some(r) => out.push_str(&format!(
+                            " | {:>9.4}  {:>9.4}",
+                            r.local_edges, r.max_normalized_load
+                        )),
+                        None => out.push_str(&format!(" | {:^21}", "-")),
+                    }
+                }
+                out.push('\n');
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write CSV + JSON next to each other under `dir` with `stem`.
+    pub fn write_files(&self, dir: &std::path::Path, stem: &str) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{stem}.csv")), self.to_csv())?;
+        std::fs::write(dir.join(format!("{stem}.json")), self.to_json())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(g: &str, a: &str, k: u32, le: f64) -> ResultRow {
+        ResultRow {
+            graph: g.into(),
+            algorithm: a.into(),
+            parts: k,
+            local_edges: le,
+            max_normalized_load: 1.02,
+            steps: 100,
+            wall_time_s: 1.5,
+            runs: 10,
+        }
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut rep = Report::new();
+        rep.push(row("lj", "revolver", 8, 0.75));
+        let csv = rep.to_csv();
+        assert!(csv.contains("lj,revolver,8,0.750000,1.020000,100,1.500,10"));
+    }
+
+    #[test]
+    fn json_parses_back() {
+        let mut rep = Report::new();
+        rep.push(row("lj", "revolver", 8, 0.75));
+        rep.push(row("lj", "spinner", 8, 0.7));
+        let j = Json::parse(&rep.to_json()).unwrap();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("algorithm").unwrap().as_str(), Some("revolver"));
+        assert_eq!(arr[1].get("local_edges").unwrap().as_f64(), Some(0.7));
+    }
+
+    #[test]
+    fn table_contains_all_cells() {
+        let mut rep = Report::new();
+        for a in ["revolver", "spinner", "hash"] {
+            for k in [2u32, 4] {
+                rep.push(row("wiki", a, k, 0.5));
+            }
+        }
+        let t = rep.to_table();
+        assert!(t.contains("wiki"));
+        assert!(t.contains("revolver"));
+        assert!(t.lines().count() >= 4);
+    }
+
+    #[test]
+    fn write_files_roundtrip() {
+        let mut rep = Report::new();
+        rep.push(row("usa", "range", 16, 0.9));
+        let dir = std::env::temp_dir().join("revolver_report_test");
+        rep.write_files(&dir, "t").unwrap();
+        let csv = std::fs::read_to_string(dir.join("t.csv")).unwrap();
+        assert!(csv.contains("usa,range"));
+        let json = std::fs::read_to_string(dir.join("t.json")).unwrap();
+        assert!(Json::parse(&json).is_ok());
+    }
+}

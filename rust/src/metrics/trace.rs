@@ -1,0 +1,87 @@
+//! Per-step convergence traces — the data behind Figure 4.
+
+/// One sampled point of a partitioning run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TracePoint {
+    pub step: u32,
+    pub local_edges: f64,
+    pub max_normalized_load: f64,
+    /// Global mean score S^i — the convergence-check signal (§IV-D.9).
+    pub mean_score: f64,
+    /// Vertices that migrated during this step.
+    pub migrations: u64,
+}
+
+/// A full run trace plus its terminal summary.
+#[derive(Debug, Clone, Default)]
+pub struct RunTrace {
+    pub points: Vec<TracePoint>,
+    /// Step at which the convergence criterion fired (None = ran to
+    /// max_steps).
+    pub converged_at: Option<u32>,
+    pub wall_time_s: f64,
+}
+
+impl RunTrace {
+    pub fn push(&mut self, p: TracePoint) {
+        self.points.push(p);
+    }
+
+    pub fn final_point(&self) -> Option<&TracePoint> {
+        self.points.last()
+    }
+
+    /// Steps actually executed.
+    pub fn steps(&self) -> u32 {
+        self.points.last().map(|p| p.step + 1).unwrap_or(0)
+    }
+
+    /// CSV rows (`step,local_edges,max_norm_load,mean_score,migrations`).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("step,local_edges,max_normalized_load,mean_score,migrations\n");
+        for p in &self.points {
+            out.push_str(&format!(
+                "{},{:.6},{:.6},{:.6},{}\n",
+                p.step, p.local_edges, p.max_normalized_load, p.mean_score, p.migrations
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(step: u32, le: f64) -> TracePoint {
+        TracePoint {
+            step,
+            local_edges: le,
+            max_normalized_load: 1.0,
+            mean_score: le,
+            migrations: 5,
+        }
+    }
+
+    #[test]
+    fn push_and_final() {
+        let mut t = RunTrace::default();
+        assert_eq!(t.steps(), 0);
+        assert!(t.final_point().is_none());
+        t.push(pt(0, 0.3));
+        t.push(pt(1, 0.5));
+        assert_eq!(t.steps(), 2);
+        assert_eq!(t.final_point().unwrap().local_edges, 0.5);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut t = RunTrace::default();
+        t.push(pt(0, 0.25));
+        let csv = t.to_csv();
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("step,"));
+        assert!(lines[1].starts_with("0,0.25"));
+    }
+}

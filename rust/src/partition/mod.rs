@@ -1,0 +1,23 @@
+//! Shared partition state: labels, per-partition loads, capacities,
+//! per-step migration demand.
+//!
+//! Concurrency model (DESIGN.md §6): labels and loads are atomics with
+//! relaxed ordering — the asynchronous engine *wants* vertices to see
+//! fresh-but-unsynchronized state (§V-H.2), and every individual
+//! migration keeps the load invariant exact via `fetch_add` pairs.
+
+pub mod state;
+
+pub use state::{DemandTracker, PartitionState};
+
+/// Initial assignment policies for partition state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InitialAssignment {
+    /// `v mod k` — what Hash partitioning produces; Revolver and Spinner
+    /// both start from a random-ish balanced assignment.
+    Hash,
+    /// `⌊v·k/|V|⌋` — contiguous ranges.
+    Range,
+    /// Uniform random.
+    Random(u64),
+}

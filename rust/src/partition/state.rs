@@ -1,0 +1,318 @@
+//! Atomic partition state shared by all worker threads.
+
+use std::sync::atomic::{AtomicI64, AtomicU32, Ordering};
+
+use super::InitialAssignment;
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+use crate::{Label, VertexId};
+
+/// Shared mutable state of a k-way partitioning in progress.
+///
+/// * `labels[v]` — current partition of vertex v (relaxed atomics).
+/// * `loads[l]`  — b(l): total **out-degree** of vertices in l (§II
+///   counts partition size in outgoing edges).
+/// * `capacity`  — C = (1+ε)·|E|/k.
+///
+/// Invariant: Σ_l loads[l] == |E| at every quiescent point (each
+/// migration moves exactly `deg(v)` between two partitions atomically
+/// enough for the async model — the paper relies on progressive load
+/// exchange, not strict consistency).
+pub struct PartitionState {
+    k: usize,
+    capacity: f64,
+    epsilon: f64,
+    total_edges: u64,
+    labels: Vec<AtomicU32>,
+    loads: Vec<AtomicI64>,
+}
+
+impl PartitionState {
+    /// Build state over `g` with `k` partitions, imbalance `epsilon`,
+    /// and the given initial assignment.
+    pub fn new(g: &Graph, k: usize, epsilon: f64, init: InitialAssignment) -> Self {
+        assert!(k >= 2, "need at least 2 partitions");
+        let n = g.num_vertices();
+        let labels: Vec<AtomicU32> = match init {
+            InitialAssignment::Hash => {
+                (0..n).map(|v| AtomicU32::new((v % k) as u32)).collect()
+            }
+            InitialAssignment::Range => (0..n)
+                .map(|v| AtomicU32::new(((v as u128 * k as u128) / n as u128) as u32))
+                .collect(),
+            InitialAssignment::Random(seed) => {
+                let mut rng = Rng::new(seed);
+                (0..n).map(|_| AtomicU32::new(rng.below(k as u64) as u32)).collect()
+            }
+        };
+
+        let loads: Vec<AtomicI64> = (0..k).map(|_| AtomicI64::new(0)).collect();
+        for v in 0..n {
+            let l = labels[v].load(Ordering::Relaxed) as usize;
+            loads[l].fetch_add(g.out_degree(v as VertexId) as i64, Ordering::Relaxed);
+        }
+
+        let capacity = (1.0 + epsilon) * g.num_edges() as f64 / k as f64;
+        PartitionState {
+            k,
+            capacity,
+            epsilon,
+            total_edges: g.num_edges() as u64,
+            labels,
+            loads,
+        }
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Per-partition capacity C = (1+ε)·|E|/k — what the migration
+    /// gate's remaining capacity r(l) = C − b(l) is measured against.
+    #[inline]
+    pub fn capacity(&self) -> f64 {
+        self.capacity
+    }
+
+    /// System-level capacity (1+ε)·|E| — what eq. (12)'s penalty term is
+    /// normalized against ("π is normalized based on the total load of
+    /// the system", §IV-B). Normalizing against the *per-partition*
+    /// capacity instead amplifies sub-percent load differences into
+    /// order-one penalty swings and makes every vertex chase the
+    /// globally emptiest partition (DESIGN.md F2).
+    #[inline]
+    pub fn system_capacity(&self) -> f64 {
+        self.capacity * self.k as f64
+    }
+
+    #[inline]
+    pub fn epsilon(&self) -> f64 {
+        self.epsilon
+    }
+
+    /// Current label of `v` (relaxed — async engines tolerate staleness).
+    #[inline]
+    pub fn label(&self, v: VertexId) -> Label {
+        self.labels[v as usize].load(Ordering::Relaxed)
+    }
+
+    /// Current load b(l).
+    #[inline]
+    pub fn load(&self, l: usize) -> i64 {
+        self.loads[l].load(Ordering::Relaxed)
+    }
+
+    /// Snapshot all loads into `out` as f32 (for the scoring kernels).
+    pub fn loads_into(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.k);
+        for (o, l) in out.iter_mut().zip(self.loads.iter()) {
+            *o = l.load(Ordering::Relaxed) as f32;
+        }
+    }
+
+    /// Remaining capacity r(l) = C − b(l) (may be negative transiently).
+    #[inline]
+    pub fn remaining(&self, l: usize) -> f64 {
+        self.capacity - self.load(l) as f64
+    }
+
+    /// Migrate `v` (with out-degree `deg`) from its current label to
+    /// `to`. Returns the previous label. No-op if already there.
+    ///
+    /// The label swap uses `swap` so two racing migrations of the same
+    /// vertex still keep the load invariant: each swap observes the
+    /// true previous label and moves exactly `deg` of load.
+    #[inline]
+    pub fn migrate(&self, v: VertexId, to: Label, deg: u32) -> Label {
+        let from = self.labels[v as usize].swap(to, Ordering::Relaxed);
+        if from != to {
+            self.loads[from as usize].fetch_sub(deg as i64, Ordering::Relaxed);
+            self.loads[to as usize].fetch_add(deg as i64, Ordering::Relaxed);
+        }
+        from
+    }
+
+    /// Clone the labels into a plain vector (for metrics / reporting).
+    pub fn labels_snapshot(&self) -> Vec<Label> {
+        self.labels.iter().map(|l| l.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Check Σ loads == |E| (test/debug invariant).
+    pub fn check_load_invariant(&self) -> anyhow::Result<()> {
+        let sum: i64 = self.loads.iter().map(|l| l.load(Ordering::Relaxed)).sum();
+        anyhow::ensure!(
+            sum as u64 == self.total_edges,
+            "load invariant violated: Σb(l)={} != |E|={}",
+            sum,
+            self.total_edges
+        );
+        Ok(())
+    }
+}
+
+/// Per-step migration demand m(l) = Σ_{u∈M(l)} deg(u): the out-degree
+/// mass of vertices whose LA selected partition l this step (§IV-D.2).
+pub struct DemandTracker {
+    demand: Vec<AtomicI64>,
+}
+
+impl DemandTracker {
+    pub fn new(k: usize) -> Self {
+        DemandTracker { demand: (0..k).map(|_| AtomicI64::new(0)).collect() }
+    }
+
+    /// Register that a vertex with out-degree `deg` wants to join `l`.
+    #[inline]
+    pub fn add(&self, l: usize, deg: u32) {
+        self.demand[l].fetch_add(deg as i64, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self, l: usize) -> i64 {
+        self.demand[l].load(Ordering::Relaxed)
+    }
+
+    /// Zero all counters (start of each step).
+    pub fn reset(&self) {
+        for d in &self.demand {
+            d.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Migration probability for candidate partition `l` given current
+    /// state: min(1, r(l)/m(l)), 0 when the partition is full (§IV-D.2).
+    #[inline]
+    pub fn migration_probability(&self, state: &PartitionState, l: usize) -> f64 {
+        let demand = self.get(l) as f64;
+        if demand <= 0.0 {
+            return 1.0;
+        }
+        let remaining = state.remaining(l);
+        if remaining <= 0.0 {
+            return 0.0;
+        }
+        (remaining / demand).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn path_graph(n: usize) -> Graph {
+        let mut b = GraphBuilder::new(n);
+        for v in 0..n as u32 - 1 {
+            b.edge(v, v + 1);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn hash_init_balanced() {
+        let g = path_graph(100);
+        let st = PartitionState::new(&g, 4, 0.05, InitialAssignment::Hash);
+        for v in 0..100u32 {
+            assert_eq!(st.label(v), v % 4);
+        }
+        st.check_load_invariant().unwrap();
+    }
+
+    #[test]
+    fn range_init_contiguous() {
+        let g = path_graph(100);
+        let st = PartitionState::new(&g, 4, 0.05, InitialAssignment::Range);
+        assert_eq!(st.label(0), 0);
+        assert_eq!(st.label(24), 0);
+        assert_eq!(st.label(25), 1);
+        assert_eq!(st.label(99), 3);
+        st.check_load_invariant().unwrap();
+    }
+
+    #[test]
+    fn random_init_in_range_and_deterministic() {
+        let g = path_graph(50);
+        let a = PartitionState::new(&g, 3, 0.05, InitialAssignment::Random(7));
+        let b = PartitionState::new(&g, 3, 0.05, InitialAssignment::Random(7));
+        for v in 0..50u32 {
+            assert!(a.label(v) < 3);
+            assert_eq!(a.label(v), b.label(v));
+        }
+    }
+
+    #[test]
+    fn capacity_formula() {
+        let g = path_graph(101); // 100 edges
+        let st = PartitionState::new(&g, 4, 0.05, InitialAssignment::Hash);
+        assert!((st.capacity() - 1.05 * 100.0 / 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn migrate_moves_load() {
+        let g = path_graph(10); // vertices 0..8 have out-degree 1
+        let st = PartitionState::new(&g, 2, 0.05, InitialAssignment::Hash);
+        let before0 = st.load(0);
+        let before1 = st.load(1);
+        // v=0 has label 0, degree 1 -> move to 1.
+        let prev = st.migrate(0, 1, 1);
+        assert_eq!(prev, 0);
+        assert_eq!(st.load(0), before0 - 1);
+        assert_eq!(st.load(1), before1 + 1);
+        st.check_load_invariant().unwrap();
+        // Idempotent when target == current.
+        let prev = st.migrate(0, 1, 1);
+        assert_eq!(prev, 1);
+        st.check_load_invariant().unwrap();
+    }
+
+    #[test]
+    fn concurrent_migrations_keep_invariant() {
+        let g = path_graph(1000);
+        let st = std::sync::Arc::new(PartitionState::new(
+            &g,
+            8,
+            0.05,
+            InitialAssignment::Hash,
+        ));
+        let degs: Vec<u32> = (0..1000).map(|v| g.out_degree(v as u32)).collect();
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let st = st.clone();
+            let degs = degs.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(t);
+                for _ in 0..10_000 {
+                    let v = rng.below(1000) as u32;
+                    let to = rng.below(8) as u32;
+                    st.migrate(v, to, degs[v as usize]);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        st.check_load_invariant().unwrap();
+    }
+
+    #[test]
+    fn demand_tracker_probability() {
+        let g = path_graph(101); // 100 edges, C = 52.5 at k=2, eps=.05
+        let st = PartitionState::new(&g, 2, 0.05, InitialAssignment::Hash);
+        let d = DemandTracker::new(2);
+        assert_eq!(d.migration_probability(&st, 0), 1.0, "no demand => free move");
+        d.add(0, 10);
+        let p = d.migration_probability(&st, 0);
+        // remaining = 52.5 - 50 = 2.5 over demand 10 => 0.25.
+        assert!((p - 0.25).abs() < 1e-6, "p={p}");
+        d.reset();
+        assert_eq!(d.get(0), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 2 partitions")]
+    fn k1_rejected() {
+        let g = path_graph(10);
+        PartitionState::new(&g, 1, 0.05, InitialAssignment::Hash);
+    }
+}

@@ -1,0 +1,65 @@
+//! Hash partitioning (§V-D): vertex `v` goes to partition `v mod k`.
+//!
+//! The classic "no information" baseline: perfectly balanced in vertex
+//! count (and near-balanced in edges for skew-free graphs), but places
+//! neighbours apart on purpose-free grounds, so local edges ≈ 1/k.
+
+use super::{PartitionOutput, Partitioner};
+use crate::graph::Graph;
+use crate::metrics::trace::RunTrace;
+
+pub struct HashPartitioner {
+    k: usize,
+}
+
+impl HashPartitioner {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 2);
+        HashPartitioner { k }
+    }
+}
+
+impl Partitioner for HashPartitioner {
+    fn name(&self) -> &'static str {
+        "hash"
+    }
+
+    fn partition(&self, g: &Graph) -> PartitionOutput {
+        let labels = (0..g.num_vertices()).map(|v| (v % self.k) as u32).collect();
+        PartitionOutput { labels, trace: RunTrace::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{generate_dataset, Dataset};
+    use crate::metrics::quality;
+
+    #[test]
+    fn labels_are_v_mod_k() {
+        let g = generate_dataset(Dataset::So, 256, 1).unwrap();
+        let out = HashPartitioner::new(4).partition(&g);
+        for (v, &l) in out.labels.iter().enumerate() {
+            assert_eq!(l, (v % 4) as u32);
+        }
+    }
+
+    #[test]
+    fn local_edges_near_one_over_k() {
+        // On an ER graph, hash local edges ≈ 1/k.
+        let g = generate_dataset(Dataset::So, 2048, 2).unwrap();
+        let k = 8;
+        let out = HashPartitioner::new(k).partition(&g);
+        let le = quality::local_edges(&g, &out.labels);
+        assert!((le - 1.0 / k as f64).abs() < 0.02, "le={le}");
+    }
+
+    #[test]
+    fn balanced_on_skew_free() {
+        let g = generate_dataset(Dataset::So, 2048, 3).unwrap();
+        let out = HashPartitioner::new(8).partition(&g);
+        let mnl = quality::max_normalized_load(&g, &out.labels, 8);
+        assert!(mnl < 1.1, "mnl={mnl}");
+    }
+}

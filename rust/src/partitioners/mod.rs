@@ -1,0 +1,62 @@
+//! The four partitioning algorithms the paper evaluates (§V-D):
+//! Revolver (this paper), Spinner (LP baseline), Hash, and Range.
+
+pub mod hash;
+pub mod range;
+pub mod revolver;
+pub mod spinner;
+
+use crate::graph::Graph;
+use crate::metrics::trace::RunTrace;
+use crate::Label;
+
+/// Result of a partitioning run.
+#[derive(Debug, Clone)]
+pub struct PartitionOutput {
+    /// Final label per vertex.
+    pub labels: Vec<Label>,
+    /// Per-step trace (empty for the one-shot Hash/Range partitioners).
+    pub trace: RunTrace,
+}
+
+/// Common interface over all partitioners.
+pub trait Partitioner {
+    /// Short algorithm name used in reports ("revolver", "spinner", ...).
+    fn name(&self) -> &'static str;
+
+    /// Partition `g`; `k` and all other knobs come from the
+    /// implementation's config.
+    fn partition(&self, g: &Graph) -> PartitionOutput;
+}
+
+/// Construct a partitioner by report name — the CLI/bench entry point.
+pub fn by_name(
+    name: &str,
+    cfg: crate::config::RevolverConfig,
+) -> anyhow::Result<Box<dyn Partitioner>> {
+    match name.to_lowercase().as_str() {
+        "revolver" => Ok(Box::new(revolver::Revolver::new(cfg))),
+        "spinner" => Ok(Box::new(spinner::Spinner::new(cfg))),
+        "hash" => Ok(Box::new(hash::HashPartitioner::new(cfg.parts))),
+        "range" => Ok(Box::new(range::RangePartitioner::new(cfg.parts))),
+        other => anyhow::bail!(
+            "unknown partitioner {other:?} (expected revolver|spinner|hash|range)"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RevolverConfig;
+
+    #[test]
+    fn by_name_constructs_all() {
+        let cfg = RevolverConfig { parts: 4, ..Default::default() };
+        for name in ["revolver", "spinner", "hash", "range", "HASH"] {
+            let p = by_name(name, cfg.clone()).unwrap();
+            assert!(!p.name().is_empty());
+        }
+        assert!(by_name("metis", cfg).is_err());
+    }
+}

@@ -1,0 +1,88 @@
+//! Range partitioning (§V-D): vertex `v` goes to partition
+//! `⌊v·k/|V|⌋` — contiguous id ranges.
+//!
+//! Wins on graphs whose ids carry locality (roads, crawl-ordered webs)
+//! and loses catastrophically on load balance when degree mass is
+//! concentrated in an id range (§V-H.1: up to 60× worse max load).
+
+use super::{PartitionOutput, Partitioner};
+use crate::graph::Graph;
+use crate::metrics::trace::RunTrace;
+
+pub struct RangePartitioner {
+    k: usize,
+}
+
+impl RangePartitioner {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 2);
+        RangePartitioner { k }
+    }
+}
+
+impl Partitioner for RangePartitioner {
+    fn name(&self) -> &'static str {
+        "range"
+    }
+
+    fn partition(&self, g: &Graph) -> PartitionOutput {
+        let n = g.num_vertices() as u128;
+        let k = self.k as u128;
+        let labels = (0..g.num_vertices())
+            .map(|v| ((v as u128 * k) / n) as u32)
+            .collect();
+        PartitionOutput { labels, trace: RunTrace::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{generate_dataset, Dataset};
+    use crate::metrics::quality;
+
+    #[test]
+    fn contiguous_ranges() {
+        let g = generate_dataset(Dataset::So, 1000, 1).unwrap();
+        let out = RangePartitioner::new(4).partition(&g);
+        // Labels must be non-decreasing in v, span exactly 0..k.
+        for w in out.labels.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        assert_eq!(*out.labels.first().unwrap(), 0);
+        assert_eq!(*out.labels.last().unwrap(), 3);
+    }
+
+    #[test]
+    fn wins_local_edges_on_road() {
+        // §V-G.4: Range must beat Hash decisively on road networks.
+        let g = generate_dataset(Dataset::Usa, 4096, 2).unwrap();
+        let k = 8;
+        let range_le = quality::local_edges(
+            &g,
+            &RangePartitioner::new(k).partition(&g).labels,
+        );
+        let hash_le = quality::local_edges(
+            &g,
+            &super::super::hash::HashPartitioner::new(k).partition(&g).labels,
+        );
+        assert!(
+            range_le > 3.0 * hash_le,
+            "range={range_le} hash={hash_le}"
+        );
+    }
+
+    #[test]
+    fn terrible_load_on_clustered_web() {
+        // §V-H.1: on a hub-clustered (UK-like) graph, Range's max load
+        // explodes because low-id hubs concentrate degree mass.
+        let g = generate_dataset(Dataset::Uk, 4096, 3).unwrap();
+        let k = 16;
+        let mnl = quality::max_normalized_load(
+            &g,
+            &RangePartitioner::new(k).partition(&g).labels,
+            k,
+        );
+        assert!(mnl > 2.0, "expected badly imbalanced, got {mnl}");
+    }
+}

@@ -1,0 +1,690 @@
+//! Revolver — the paper's contribution (§IV): asynchronous vertex-centric
+//! partitioning where each vertex's **weighted learning automaton** picks
+//! its partition and is trained by the **normalized LP** objective.
+//!
+//! Step structure (§IV-D, Figure 2):
+//!  1. every LA draws an action (candidate partition) — roulette wheel;
+//!  2. candidates register migration *demand* m(l);
+//!  3. normalized LP scores (eqs. 10–12) are computed per vertex and the
+//!     argmax label λ(v) is published for neighbours;
+//!  4. the vertex migrates to its selected action with probability
+//!     min(1, r(l)/m(l)) when the action differs from its current label;
+//!  5. raw weights are accumulated from neighbour λ's (eq. 13);
+//!  6. the weight vector is mean-split into reward/penalty halves and
+//!     half-normalized (§IV-D.6);
+//!  7. the LA probability vector is updated (eqs. 8–9);
+//!  8. convergence: halt after `halt_window` consecutive sub-θ steps.
+//!
+//! **Asynchronous** mode (the paper's headline implementation) reads
+//! labels, loads and λ's live from shared atomics — workers see each
+//! other's migrations mid-step ("progressively exchanged loads",
+//! §V-H.2). **Synchronous** mode (ablation E4) freezes label/λ/load
+//! snapshots per step, Giraph-style.
+//!
+//! Threading: `threads` persistent workers (one per contiguous vertex
+//! chunk, the paper's |V|/n layout) synchronized by a barrier protocol —
+//! three barriers per step (step-start, post-action/demand, step-end).
+//! Persistent workers matter for two reasons: no thread-spawn cost in
+//! the 290-step loop, and the PJRT executable handles (`--engine xla`)
+//! are `!Send`, so each worker constructs and owns its own engine.
+//!
+//! Eq. (13) note: the printed equation mixes λ(v)/λ(u) and ψ indices
+//! inconsistently; we implement the reading consistent with §IV-C step 4
+//! ("scores … are evaluated by (13) to form the weight vector W"): the
+//! raw weight vector starts from the vertex's own score vector, and each
+//! neighbour u endorses partition λ(u) with ŵ(u,v)/Σŵ when v's selected
+//! action agrees, else 1/Σŵ while λ(u) has migration headroom. DESIGN.md
+//! §Fidelity-notes (F5–F7) records this and the other disambiguations.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+
+use super::{PartitionOutput, Partitioner};
+use crate::config::{Engine, ExecutionModel, RevolverConfig};
+use crate::coordinator::{Chunks, ConvergenceDetector};
+use crate::graph::Graph;
+use crate::la::signal::build_signals_into;
+use crate::la::weighted::WeightedLa;
+use crate::la::{roulette, Signal};
+use crate::lp::{neighbor_histogram, normalized as nlp};
+use crate::metrics::quality;
+use crate::metrics::trace::{RunTrace, TracePoint};
+use crate::partition::{DemandTracker, InitialAssignment, PartitionState};
+use crate::runtime::XlaStepEngine;
+use crate::util::rng::Rng;
+use crate::util::Stopwatch;
+use crate::VertexId;
+
+/// How many vertices share one load/π snapshot in the scoring loop (and
+/// one XLA batch in `--engine xla`; must match the artifact batch dim).
+pub const BATCH: usize = 256;
+
+pub struct Revolver {
+    cfg: RevolverConfig,
+}
+
+impl Revolver {
+    pub fn new(cfg: RevolverConfig) -> Self {
+        cfg.validate().expect("invalid config");
+        Revolver { cfg }
+    }
+
+    /// Access the effective configuration.
+    pub fn config(&self) -> &RevolverConfig {
+        &self.cfg
+    }
+}
+
+/// Per-worker mutable state: the probability slab for the chunk's
+/// vertices plus all scratch buffers, so the hot loop never allocates.
+struct ChunkState {
+    /// Flat (chunk_len × k) probability rows.
+    probs: Vec<f32>,
+    start: usize,
+    k: usize,
+    // Scratch (k-sized).
+    hist: Vec<f32>,
+    scores: Vec<f32>,
+    pi: Vec<f32>,
+    raw_w: Vec<f32>,
+    w_norm: Vec<f32>,
+    signals: Vec<Signal>,
+    loads: Vec<f32>,
+    /// Per-batch precomputed "partition still has migration headroom"
+    /// flags — replaces two atomic loads per neighbour in the eq.-(13)
+    /// accumulation (perf log P3).
+    headroom: Vec<bool>,
+}
+
+impl ChunkState {
+    fn new(range: std::ops::Range<usize>, k: usize) -> Self {
+        let len = range.len();
+        let mut probs = vec![0.0f32; len * k];
+        for row in probs.chunks_mut(k) {
+            WeightedLa::init(row);
+        }
+        ChunkState {
+            probs,
+            start: range.start,
+            k,
+            hist: vec![0.0; k],
+            scores: vec![0.0; k],
+            pi: vec![0.0; k],
+            raw_w: vec![0.0; k],
+            w_norm: vec![0.0; k],
+            signals: vec![Signal::Penalty; k],
+            loads: vec![0.0; k],
+            headroom: vec![true; k],
+        }
+    }
+
+    #[inline]
+    fn row_range(&self, v: usize) -> std::ops::Range<usize> {
+        let i = (v - self.start) * self.k;
+        i..i + self.k
+    }
+}
+
+/// Per-step frozen snapshots for the synchronous execution model
+/// (empty vectors in asynchronous mode).
+#[derive(Default)]
+struct StepSnapshots {
+    labels: Vec<u32>,
+    lambda: Vec<u32>,
+}
+
+impl Partitioner for Revolver {
+    fn name(&self) -> &'static str {
+        "revolver"
+    }
+
+    fn partition(&self, g: &Graph) -> PartitionOutput {
+        let sw = Stopwatch::start();
+        let cfg = &self.cfg;
+        let k = cfg.parts;
+        let n = g.num_vertices();
+        let sync = cfg.execution == ExecutionModel::Synchronous;
+
+        let state =
+            PartitionState::new(g, k, cfg.epsilon, InitialAssignment::Random(cfg.seed));
+        let chunks = Chunks::new(n, cfg.threads);
+        let t = chunks.len();
+        let base_rng = Rng::new(cfg.seed ^ 0x5245564F); // "REVO"
+
+        // λ(v): the argmax-score label each vertex publishes (§IV-D.3),
+        // initialized to the starting labels.
+        let lambda: Vec<AtomicU32> =
+            (0..n).map(|v| AtomicU32::new(state.label(v as u32))).collect();
+        // The action each LA selected this step.
+        let selected: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        let demand = DemandTracker::new(k);
+
+        // Probe the XLA engine on the main thread first: a worker panic
+        // behind the barrier protocol would deadlock the coordinator, so
+        // surface configuration errors (missing artifacts, wrong k,
+        // mismatched alpha/beta) eagerly and cleanly here.
+        if cfg.engine == Engine::Xla {
+            XlaStepEngine::load(&cfg.artifacts_dir, BATCH, k, cfg.alpha, cfg.beta)
+                .expect("failed to load XLA artifacts (run `make artifacts`)");
+        }
+
+        let barrier = Barrier::new(t + 1);
+        let stop = AtomicBool::new(false);
+        let snapshots: Mutex<Arc<StepSnapshots>> =
+            Mutex::new(Arc::new(StepSnapshots::default()));
+        let score_parts: Vec<AtomicU64> = (0..t).map(|_| AtomicU64::new(0)).collect();
+        let migration_parts: Vec<AtomicU64> = (0..t).map(|_| AtomicU64::new(0)).collect();
+
+        let mut detector = ConvergenceDetector::new(cfg.halt_theta, cfg.halt_window);
+        let mut trace = RunTrace::default();
+        let mut executed_steps: u32 = 0;
+
+        crossbeam_utils::thread::scope(|scope| {
+            // ── Workers ──
+            for c in 0..t {
+                let range = chunks.range(c);
+                let (g, state, demand, lambda, selected) =
+                    (&g, &state, &demand, &lambda, &selected);
+                let (barrier, stop, snapshots) = (&barrier, &stop, &snapshots);
+                let (score_parts, migration_parts) = (&score_parts, &migration_parts);
+                let base_rng = base_rng.clone();
+                scope.spawn(move |_| {
+                    let mut cs = ChunkState::new(range.clone(), k);
+                    // PJRT handles are !Send: construct inside the worker.
+                    let mut eng: Option<XlaStepEngine> = match cfg.engine {
+                        Engine::Xla => Some(
+                            XlaStepEngine::load(
+                                &cfg.artifacts_dir,
+                                BATCH,
+                                k,
+                                cfg.alpha,
+                                cfg.beta,
+                            )
+                            .expect("failed to load XLA artifacts (run `make artifacts`)"),
+                        ),
+                        Engine::Native => None,
+                    };
+                    let mut step: u64 = 0;
+                    loop {
+                        barrier.wait(); // W1: step start (main prepared)
+                        if stop.load(Ordering::Acquire) {
+                            break;
+                        }
+                        let snap = snapshots.lock().unwrap().clone();
+
+                        // ── Phase A: action selection + demand (§IV-D.1/2) ──
+                        let mut rng = base_rng.fork(step * 2 * t as u64 + c as u64);
+                        for v in range.clone() {
+                            let row = &cs.probs[cs.row_range(v)];
+                            let a = roulette::spin(row, &mut rng) as u32;
+                            selected[v].store(a, Ordering::Relaxed);
+                            if a != state.label(v as VertexId) {
+                                demand.add(a as usize, g.out_degree(v as VertexId));
+                            }
+                        }
+                        barrier.wait(); // W2: all demand registered
+
+                        // ── Phase B: score, λ, migrate, learn (§IV-D.3–7) ──
+                        let mut rng =
+                            base_rng.fork((step * 2 + 1) * t as u64 + c as u64);
+                        let mut score_sum = 0.0f64;
+                        let mut migrations = 0u64;
+                        let mut batch_start = range.start;
+                        while batch_start < range.end {
+                            let batch_end = (batch_start + BATCH).min(range.end);
+                            // One load/π snapshot per batch (async
+                            // staleness tolerance; exactly the artifact's
+                            // granularity).
+                            state.loads_into(&mut cs.loads);
+                            nlp::penalty_into(
+                                &cs.loads,
+                                state.system_capacity() as f32,
+                                &mut cs.pi,
+                            );
+                            let cap = state.capacity() as f32;
+                            for l in 0..k {
+                                cs.headroom[l] =
+                                    demand.get(l) <= 0 || cs.loads[l] < cap;
+                            }
+                            match eng.as_mut() {
+                                Some(eng) => {
+                                    score_sum += xla_batch(
+                                        g,
+                                        &mut cs,
+                                        eng,
+                                        batch_start..batch_end,
+                                        state,
+                                        demand,
+                                        lambda,
+                                        selected,
+                                        &snap,
+                                        sync,
+                                        &mut rng,
+                                        &mut migrations,
+                                        cfg,
+                                    );
+                                }
+                                None => {
+                                    for v in batch_start..batch_end {
+                                        score_sum += native_vertex(
+                                            g,
+                                            &mut cs,
+                                            v,
+                                            state,
+                                            demand,
+                                            lambda,
+                                            selected,
+                                            &snap,
+                                            sync,
+                                            &mut rng,
+                                            &mut migrations,
+                                            cfg,
+                                        );
+                                    }
+                                }
+                            }
+                            batch_start = batch_end;
+                        }
+                        score_parts[c].store(score_sum.to_bits(), Ordering::Relaxed);
+                        migration_parts[c].store(migrations, Ordering::Relaxed);
+                        barrier.wait(); // W3: step done; main aggregates
+                        step += 1;
+                    }
+                });
+            }
+
+            // ── Coordinator (main thread) ──
+            let executed_steps = &mut executed_steps;
+            for step in 0..cfg.max_steps {
+                *executed_steps = step + 1;
+                demand.reset();
+                if sync {
+                    *snapshots.lock().unwrap() = Arc::new(StepSnapshots {
+                        labels: state.labels_snapshot(),
+                        lambda: lambda.iter().map(|l| l.load(Ordering::Relaxed)).collect(),
+                    });
+                }
+                barrier.wait(); // W1
+                barrier.wait(); // W2
+                barrier.wait(); // W3
+
+                let mean_score = score_parts
+                    .iter()
+                    .map(|s| f64::from_bits(s.load(Ordering::Relaxed)))
+                    .sum::<f64>()
+                    / n as f64;
+                let migrations: u64 =
+                    migration_parts.iter().map(|m| m.load(Ordering::Relaxed)).sum();
+
+                if cfg.trace_every > 0 && step % cfg.trace_every == 0 {
+                    let labels = state.labels_snapshot();
+                    trace.push(TracePoint {
+                        step,
+                        local_edges: quality::local_edges(g, &labels),
+                        max_normalized_load: quality::max_normalized_load(g, &labels, k),
+                        mean_score,
+                        migrations,
+                    });
+                }
+
+                if detector.observe(mean_score) {
+                    trace.converged_at = Some(step);
+                    break;
+                }
+            }
+            stop.store(true, Ordering::Release);
+            barrier.wait(); // release workers into the stop check
+        })
+        .expect("revolver worker panicked");
+
+        let labels = state.labels_snapshot();
+        debug_assert!(state.check_load_invariant().is_ok());
+        if trace.points.is_empty() || cfg.trace_every == 0 {
+            let q = quality::evaluate(g, &labels, k);
+            trace.push(TracePoint {
+                step: executed_steps.max(1) - 1,
+                local_edges: q.local_edges,
+                max_normalized_load: q.max_normalized_load,
+                mean_score: 0.0,
+                migrations: 0,
+            });
+        }
+        trace.wall_time_s = sw.elapsed_s();
+        PartitionOutput { labels, trace }
+    }
+}
+
+#[inline]
+fn read_label(state: &PartitionState, snap: &StepSnapshots, sync: bool, u: u32) -> u32 {
+    if sync {
+        snap.labels[u as usize]
+    } else {
+        state.label(u)
+    }
+}
+
+#[inline]
+fn read_lambda(lambda: &[AtomicU32], snap: &StepSnapshots, sync: bool, u: u32) -> u32 {
+    if sync {
+        snap.lambda[u as usize]
+    } else {
+        lambda[u as usize].load(Ordering::Relaxed)
+    }
+}
+
+/// Native per-vertex phase-B body. Returns the vertex's best score
+/// (its contribution to the convergence signal S).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn native_vertex(
+    g: &Graph,
+    cs: &mut ChunkState,
+    v: usize,
+    state: &PartitionState,
+    demand: &DemandTracker,
+    lambda: &[AtomicU32],
+    selected: &[AtomicU32],
+    snap: &StepSnapshots,
+    sync: bool,
+    rng: &mut Rng,
+    migrations: &mut u64,
+    cfg: &RevolverConfig,
+) -> f64 {
+    let vid = v as VertexId;
+
+    // 3. Normalized LP scores + λ(v) (eqs. 10-12).
+    let wsum = neighbor_histogram(
+        g.neighbors(vid),
+        g.neighbor_weights(vid),
+        |u| read_label(state, snap, sync, u),
+        &mut cs.hist,
+    );
+    let best = nlp::score_into(&cs.hist, wsum, &cs.pi, &mut cs.scores);
+    lambda[v].store(best as u32, Ordering::Relaxed);
+
+    // 4. Migration (§IV-D.4): move to the sampled action when it beats
+    // the current partition's score (the Spinner-candidate analogue —
+    // Spinner also never migrates to a lower-score partition) and the
+    // capacity gate admits it. Vertices sitting in an *over-capacity*
+    // partition may leave unconditionally — draining b(l) > C back
+    // under the eq. (1) bound takes precedence over locality.
+    let action = selected[v].load(Ordering::Relaxed);
+    let current = state.label(vid);
+    if action != current
+        && (cs.scores[action as usize] >= cs.scores[current as usize]
+            || state.remaining(current as usize) < 0.0)
+    {
+        let p = demand.migration_probability(state, action as usize);
+        if p > 0.0 && rng.next_f64() < p {
+            state.migrate(vid, action, g.out_degree(vid));
+            *migrations += 1;
+        }
+    }
+    // Convergence signal S: the score of the vertex's (post-migration)
+    // assignment — the same global objective Spinner's halting check
+    // uses; the *best* score is a noisy constant on small graphs while
+    // this tracks actual assignment quality.
+    let current_score = cs.scores[state.label(vid) as usize] as f64;
+
+    // 5. Raw weights (§IV-C step 4 + eq. 13): start from the normalized
+    // LP scores ("scores generated from multiple passes of (10) are
+    // evaluated by (13) to form the weight vector W") and add the
+    // τ-normalized neighbour-preference modulation — neighbour u
+    // endorses partition λ(u) with ŵ(u,v)/Σŵ when v's action agrees,
+    // else with 1/Σŵ while λ(u) still has migration headroom.
+    cs.raw_w.copy_from_slice(&cs.scores);
+    let wsum_inv = if wsum > 1e-12 { 1.0 / wsum } else { 0.0 };
+    for (&u, &w_uv) in g.neighbors(vid).iter().zip(g.neighbor_weights(vid)) {
+        let lu = read_lambda(lambda, snap, sync, u) as usize;
+        if lu == action as usize {
+            cs.raw_w[lu] += w_uv * wsum_inv;
+        } else if cs.headroom[lu] {
+            cs.raw_w[lu] += wsum_inv;
+        }
+    }
+
+    // 6+7. Signals + LA update (§IV-D.6/7).
+    let rr = cs.row_range(v);
+    if cfg.classic_la {
+        // Ablation E5: classic single-action update (eqs. 6-7) — reward
+        // the selected action iff it matches λ(v).
+        let sig = if action as usize == best { Signal::Reward } else { Signal::Penalty };
+        classic_update_row(&mut cs.probs[rr], action as usize, sig, cfg.alpha, cfg.beta);
+    } else {
+        build_signals_into(&cs.raw_w, &mut cs.w_norm, &mut cs.signals);
+        // `probs` and the scratch vectors are distinct fields; split the
+        // borrows explicitly.
+        let ChunkState { probs, w_norm, signals, .. } = cs;
+        WeightedLa::update(&mut probs[rr], w_norm, signals, cfg.alpha, cfg.beta);
+    }
+
+    current_score
+}
+
+/// Classic L_{R-P} row update (eqs. 6-7) used by the E5 ablation.
+#[inline]
+fn classic_update_row(row: &mut [f32], i: usize, sig: Signal, alpha: f32, beta: f32) {
+    let m = row.len();
+    match sig {
+        Signal::Reward => {
+            for j in 0..m {
+                if j == i {
+                    row[j] += alpha * (1.0 - row[j]);
+                } else {
+                    row[j] *= 1.0 - alpha;
+                }
+            }
+        }
+        Signal::Penalty => {
+            let spread = beta / (m as f32 - 1.0);
+            for j in 0..m {
+                if j == i {
+                    row[j] *= 1.0 - beta;
+                } else {
+                    row[j] = row[j] * (1.0 - beta) + spread;
+                }
+            }
+        }
+    }
+}
+
+/// XLA-engine phase-B body for one batch: scores through the `score`
+/// artifact, migration host-side, LA updates through the `la_update`
+/// artifact. Numerically equivalent to the native path (asserted in
+/// integration tests).
+#[allow(clippy::too_many_arguments)]
+fn xla_batch(
+    g: &Graph,
+    cs: &mut ChunkState,
+    eng: &mut XlaStepEngine,
+    range: std::ops::Range<usize>,
+    state: &PartitionState,
+    demand: &DemandTracker,
+    lambda: &[AtomicU32],
+    selected: &[AtomicU32],
+    snap: &StepSnapshots,
+    sync: bool,
+    rng: &mut Rng,
+    migrations: &mut u64,
+    cfg: &RevolverConfig,
+) -> f64 {
+    let k = cs.k;
+    let len = range.len();
+    debug_assert!(len <= BATCH);
+    let _ = cfg;
+
+    // Gather histograms host-side (irregular CSR work stays on L3).
+    let mut hist = vec![0.0f32; BATCH * k];
+    let mut wsum = vec![0.0f32; BATCH];
+    for (i, v) in range.clone().enumerate() {
+        let vid = v as VertexId;
+        wsum[i] = neighbor_histogram(
+            g.neighbors(vid),
+            g.neighbor_weights(vid),
+            |u| read_label(state, snap, sync, u),
+            &mut hist[i * k..(i + 1) * k],
+        );
+    }
+    // Padded rows keep wsum=1 to avoid 0/0 in the kernel (scores unused).
+    for w in wsum[len..].iter_mut() {
+        *w = 1.0;
+    }
+
+    // L1 kernel: scores (B, k). The penalty term normalizes against the
+    // system-level capacity (see PartitionState::system_capacity).
+    let scores = eng
+        .score(&hist, &wsum, &cs.loads, state.system_capacity() as f32)
+        .expect("XLA score execution failed");
+
+    let mut score_sum = 0.0f64;
+    let mut raw_w = vec![0.0f32; BATCH * k];
+    let mut probs = vec![0.0f32; BATCH * k];
+    for (i, v) in range.clone().enumerate() {
+        let vid = v as VertexId;
+        let srow = &scores[i * k..(i + 1) * k];
+        let mut best = 0usize;
+        let mut best_s = f32::NEG_INFINITY;
+        for (l, &s) in srow.iter().enumerate() {
+            if s > best_s {
+                best_s = s;
+                best = l;
+            }
+        }
+        lambda[v].store(best as u32, Ordering::Relaxed);
+        let _ = best_s;
+
+        let action = selected[v].load(Ordering::Relaxed);
+        let current = state.label(vid);
+        if action != current
+            && (srow[action as usize] >= srow[current as usize]
+                || state.remaining(current as usize) < 0.0)
+        {
+            let p = demand.migration_probability(state, action as usize);
+            if p > 0.0 && rng.next_f64() < p {
+                state.migrate(vid, action, g.out_degree(vid));
+                *migrations += 1;
+            }
+        }
+        // Convergence signal: score of the post-migration assignment
+        // (matches `native_vertex`).
+        score_sum += srow[state.label(vid) as usize] as f64;
+
+        // Raw weights (§IV-C step 4 + eq. 13), same semantics as
+        // `native_vertex`.
+        let wrow = &mut raw_w[i * k..(i + 1) * k];
+        wrow.copy_from_slice(srow);
+        let wsum_inv = if wsum[i] > 1e-12 { 1.0 / wsum[i] } else { 0.0 };
+        for (&u, &w_uv) in g.neighbors(vid).iter().zip(g.neighbor_weights(vid)) {
+            let lu = read_lambda(lambda, snap, sync, u) as usize;
+            if lu == action as usize {
+                wrow[lu] += w_uv * wsum_inv;
+            } else if cs.headroom[lu] {
+                wrow[lu] += wsum_inv;
+            }
+        }
+        probs[i * k..(i + 1) * k].copy_from_slice(&cs.probs[cs.row_range(v)]);
+    }
+    // Pad rows beyond `len` with uniform distributions (the artifact has
+    // a fixed batch dimension).
+    for i in len..BATCH {
+        WeightedLa::init(&mut probs[i * k..(i + 1) * k]);
+    }
+
+    // L1 kernel: signal construction + weighted LA update (B, k).
+    let p_next = eng.la_update(&probs, &raw_w).expect("XLA la_update failed");
+    for (i, v) in range.enumerate() {
+        let rr = cs.row_range(v);
+        cs.probs[rr].copy_from_slice(&p_next[i * k..(i + 1) * k]);
+    }
+    score_sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{generate_dataset, Dataset};
+
+    fn small_cfg(k: usize) -> RevolverConfig {
+        RevolverConfig {
+            parts: k,
+            max_steps: 60,
+            threads: 2,
+            seed: 11,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn beats_hash_on_social_local_edges() {
+        let g = generate_dataset(Dataset::Lj, 2048, 1).unwrap();
+        let out = Revolver::new(small_cfg(4)).partition(&g);
+        let le = quality::local_edges(&g, &out.labels);
+        let hash_le = quality::local_edges(
+            &g,
+            &super::super::hash::HashPartitioner::new(4).partition(&g).labels,
+        );
+        assert!(le > hash_le + 0.1, "revolver={le} hash={hash_le}");
+    }
+
+    #[test]
+    fn balanced_within_epsilon_margin() {
+        // The paper's headline: max normalized load stays near 1+ε.
+        let g = generate_dataset(Dataset::Lj, 2048, 2).unwrap();
+        let out = Revolver::new(small_cfg(8)).partition(&g);
+        let mnl = quality::max_normalized_load(&g, &out.labels, 8);
+        assert!(mnl < 1.15, "mnl={mnl}");
+    }
+
+    #[test]
+    fn labels_valid() {
+        let g = generate_dataset(Dataset::So, 512, 3).unwrap();
+        let out = Revolver::new(small_cfg(8)).partition(&g);
+        assert_eq!(out.labels.len(), 512);
+        assert!(out.labels.iter().all(|&l| l < 8));
+    }
+
+    #[test]
+    fn deterministic_single_thread() {
+        let g = generate_dataset(Dataset::Wiki, 512, 4).unwrap();
+        let mut cfg = small_cfg(4);
+        cfg.threads = 1;
+        cfg.max_steps = 20;
+        let a = Revolver::new(cfg.clone()).partition(&g);
+        let b = Revolver::new(cfg).partition(&g);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn sync_mode_runs() {
+        let g = generate_dataset(Dataset::So, 512, 5).unwrap();
+        let mut cfg = small_cfg(4);
+        cfg.execution = ExecutionModel::Synchronous;
+        cfg.max_steps = 20;
+        let out = Revolver::new(cfg).partition(&g);
+        assert!(out.labels.iter().all(|&l| l < 4));
+    }
+
+    #[test]
+    fn classic_la_ablation_runs() {
+        let g = generate_dataset(Dataset::So, 512, 6).unwrap();
+        let mut cfg = small_cfg(4);
+        cfg.classic_la = true;
+        cfg.max_steps = 20;
+        let out = Revolver::new(cfg).partition(&g);
+        assert!(out.labels.iter().all(|&l| l < 4));
+    }
+
+    #[test]
+    fn trace_enabled_records_improvement() {
+        let g = generate_dataset(Dataset::Lj, 1024, 7).unwrap();
+        let mut cfg = small_cfg(4);
+        cfg.trace_every = 1;
+        cfg.max_steps = 40;
+        cfg.halt_window = 1000;
+        let out = Revolver::new(cfg).partition(&g);
+        assert!(out.trace.points.len() >= 30);
+        let first = out.trace.points.first().unwrap().local_edges;
+        let last = out.trace.points.last().unwrap().local_edges;
+        assert!(last > first, "local edges should improve: {first} -> {last}");
+    }
+}

@@ -1,0 +1,233 @@
+//! Spinner (Martella et al., ICDE'17) — the synchronous LP baseline
+//! (§III-A, eqs. 3–5), reimplemented faithfully: per-step frozen label
+//! snapshots (BSP), candidate = argmax of the *unnormalized* score,
+//! probabilistic migration gated on remaining capacity over demand.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+use super::{PartitionOutput, Partitioner};
+use crate::config::RevolverConfig;
+use crate::coordinator::{run_chunked, Chunks, ConvergenceDetector};
+use crate::graph::Graph;
+use crate::lp::{neighbor_histogram, spinner as sp};
+use crate::metrics::quality;
+use crate::metrics::trace::{RunTrace, TracePoint};
+use crate::partition::{DemandTracker, InitialAssignment, PartitionState};
+use crate::util::rng::Rng;
+use crate::util::Stopwatch;
+
+/// Sentinel meaning "no migration wanted this step".
+const STAY: u32 = u32::MAX;
+
+pub struct Spinner {
+    cfg: RevolverConfig,
+}
+
+impl Spinner {
+    pub fn new(cfg: RevolverConfig) -> Self {
+        cfg.validate().expect("invalid config");
+        Spinner { cfg }
+    }
+}
+
+impl Partitioner for Spinner {
+    fn name(&self) -> &'static str {
+        "spinner"
+    }
+
+    fn partition(&self, g: &Graph) -> PartitionOutput {
+        let sw = Stopwatch::start();
+        let cfg = &self.cfg;
+        let k = cfg.parts;
+        let n = g.num_vertices();
+        let state = PartitionState::new(g, k, cfg.epsilon, InitialAssignment::Random(cfg.seed));
+        let chunks = Chunks::new(n, cfg.threads);
+        let base_rng = Rng::new(cfg.seed ^ 0x5350494E); // "SPIN"
+
+        // Per-vertex candidate partition for this step (STAY = none).
+        let candidates: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(STAY)).collect();
+        let demand = DemandTracker::new(k);
+
+        let mut detector = ConvergenceDetector::new(cfg.halt_theta, cfg.halt_window);
+        let mut trace = RunTrace::default();
+        let mut executed_steps: u32 = 0;
+
+        // Per-chunk partial score sums (f64 bits in atomics; one writer
+        // per slot).
+        let score_parts: Vec<AtomicU64> = (0..chunks.len()).map(|_| AtomicU64::new(0)).collect();
+        let migration_count = AtomicU64::new(0);
+
+        for step in 0..cfg.max_steps {
+            executed_steps = step + 1;
+            demand.reset();
+            // BSP: freeze the label snapshot and the load-derived
+            // penalty for the whole step.
+            let snapshot = state.labels_snapshot();
+            let mut loads = vec![0.0f32; k];
+            state.loads_into(&mut loads);
+            let mut pi_hat = vec![0.0f32; k];
+            sp::penalty_into(&loads, state.capacity() as f32, &mut pi_hat);
+
+            // Phase 1: score every vertex against the snapshot; register
+            // candidates and demand.
+            run_chunked(&chunks, |c, range| {
+                let mut hist = vec![0.0f32; k];
+                let mut scores = vec![0.0f32; k];
+                let mut score_sum = 0.0f64;
+                for v in range {
+                    let vid = v as u32;
+                    let wsum = neighbor_histogram(
+                        g.neighbors(vid),
+                        g.neighbor_weights(vid),
+                        |u| snapshot[u as usize],
+                        &mut hist,
+                    );
+                    let best = sp::score_into(&hist, wsum, &pi_hat, &mut scores);
+                    let current = snapshot[v] as usize;
+                    score_sum += scores[current] as f64;
+                    if best != current {
+                        candidates[v].store(best as u32, Ordering::Relaxed);
+                        demand.add(best, g.out_degree(vid));
+                    } else {
+                        candidates[v].store(STAY, Ordering::Relaxed);
+                    }
+                }
+                score_parts[c].store(score_sum.to_bits(), Ordering::Relaxed);
+            });
+
+            // Migration probabilities frozen after the demand phase
+            // (this is Spinner's synchronous model).
+            let mig_prob: Vec<f64> =
+                (0..k).map(|l| demand.migration_probability(&state, l)).collect();
+
+            // Phase 2: probabilistic migrations.
+            migration_count.store(0, Ordering::Relaxed);
+            run_chunked(&chunks, |c, range| {
+                let mut rng = base_rng.fork(step as u64 * chunks.len() as u64 + c as u64);
+                let mut local_migrations = 0u64;
+                for v in range {
+                    let cand = candidates[v].load(Ordering::Relaxed);
+                    if cand == STAY {
+                        continue;
+                    }
+                    if rng.next_f64() < mig_prob[cand as usize] {
+                        state.migrate(v as u32, cand, g.out_degree(v as u32));
+                        local_migrations += 1;
+                    }
+                }
+                migration_count.fetch_add(local_migrations, Ordering::Relaxed);
+            });
+
+            // Convergence bookkeeping.
+            let mean_score = score_parts
+                .iter()
+                .map(|s| f64::from_bits(s.load(Ordering::Relaxed)))
+                .sum::<f64>()
+                / n as f64;
+            let migrations = migration_count.load(Ordering::Relaxed);
+
+            let trace_now = cfg.trace_every > 0 && step % cfg.trace_every == 0;
+            if trace_now {
+                let labels = state.labels_snapshot();
+                trace.push(TracePoint {
+                    step,
+                    local_edges: quality::local_edges(g, &labels),
+                    max_normalized_load: quality::max_normalized_load(g, &labels, k),
+                    mean_score,
+                    migrations,
+                });
+            }
+
+            if detector.observe(mean_score) {
+                trace.converged_at = Some(step);
+                break;
+            }
+        }
+
+        let labels = state.labels_snapshot();
+        debug_assert!(state.check_load_invariant().is_ok());
+        if trace.points.is_empty() || cfg.trace_every == 0 {
+            let q = quality::evaluate(g, &labels, k);
+            trace.push(TracePoint {
+                step: executed_steps.max(1) - 1,
+                local_edges: q.local_edges,
+                max_normalized_load: q.max_normalized_load,
+                mean_score: 0.0,
+                migrations: 0,
+            });
+        }
+        trace.wall_time_s = sw.elapsed_s();
+        PartitionOutput { labels, trace }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{generate_dataset, Dataset};
+
+    fn small_cfg(k: usize) -> RevolverConfig {
+        RevolverConfig {
+            parts: k,
+            max_steps: 60,
+            threads: 2,
+            seed: 7,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn improves_over_hash_on_social() {
+        let g = generate_dataset(Dataset::Lj, 2048, 1).unwrap();
+        let out = Spinner::new(small_cfg(4)).partition(&g);
+        let le = quality::local_edges(&g, &out.labels);
+        let hash_le = quality::local_edges(
+            &g,
+            &super::super::hash::HashPartitioner::new(4).partition(&g).labels,
+        );
+        assert!(le > hash_le + 0.1, "spinner={le} hash={hash_le}");
+    }
+
+    #[test]
+    fn labels_in_range_and_invariant() {
+        let g = generate_dataset(Dataset::So, 1024, 2).unwrap();
+        let out = Spinner::new(small_cfg(8)).partition(&g);
+        assert_eq!(out.labels.len(), 1024);
+        assert!(out.labels.iter().all(|&l| l < 8));
+    }
+
+    #[test]
+    fn deterministic_across_runs_single_thread() {
+        let g = generate_dataset(Dataset::Wiki, 512, 3).unwrap();
+        let mut cfg = small_cfg(4);
+        cfg.threads = 1;
+        let a = Spinner::new(cfg.clone()).partition(&g);
+        let b = Spinner::new(cfg).partition(&g);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn trace_recorded_when_enabled() {
+        let g = generate_dataset(Dataset::So, 512, 4).unwrap();
+        let mut cfg = small_cfg(4);
+        cfg.trace_every = 1;
+        cfg.max_steps = 10;
+        cfg.halt_window = 100; // don't halt early
+        let out = Spinner::new(cfg).partition(&g);
+        assert!(out.trace.points.len() >= 9, "{}", out.trace.points.len());
+        // Steps monotone.
+        for w in out.trace.points.windows(2) {
+            assert!(w[0].step < w[1].step);
+        }
+    }
+
+    #[test]
+    fn respects_capacity_loosely() {
+        // Spinner can overshoot epsilon (the paper's critique) but must
+        // stay within sanity bounds on a balanced graph.
+        let g = generate_dataset(Dataset::So, 2048, 5).unwrap();
+        let out = Spinner::new(small_cfg(8)).partition(&g);
+        let mnl = quality::max_normalized_load(&g, &out.labels, 8);
+        assert!(mnl < 1.8, "mnl={mnl}");
+    }
+}

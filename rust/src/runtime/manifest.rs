@@ -1,0 +1,189 @@
+//! `artifacts/manifest.json` reader — the contract between
+//! `python/compile/aot.py` and the Rust runtime.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One input tensor spec of an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputSpec {
+    pub name: String,
+    /// Dims; empty = scalar.
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One compiled-artifact entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    pub batch: usize,
+    pub k: usize,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<String>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub alpha: f64,
+    pub beta: f64,
+    pub batch: usize,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read {:?}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).context("parse manifest.json")?;
+        let get_num = |key: &str| -> Result<f64> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("manifest missing numeric {key:?}"))
+        };
+        let alpha = get_num("alpha")?;
+        let beta = get_num("beta")?;
+        let batch = get_num("batch")? as usize;
+
+        let mut entries = Vec::new();
+        for e in j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .context("manifest missing entries[]")?
+        {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .context("entry missing name")?
+                .to_string();
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .context("entry missing file")?
+                .to_string();
+            let batch = e.get("batch").and_then(Json::as_usize).context("entry batch")?;
+            let k = e.get("k").and_then(Json::as_usize).context("entry k")?;
+
+            let mut inputs = Vec::new();
+            for i in e.get("inputs").and_then(Json::as_arr).context("entry inputs")? {
+                inputs.push(InputSpec {
+                    name: i
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .context("input name")?
+                        .to_string(),
+                    shape: i
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .context("input shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("shape dim"))
+                        .collect::<Result<_>>()?,
+                    dtype: i
+                        .get("dtype")
+                        .and_then(Json::as_str)
+                        .unwrap_or("f32")
+                        .to_string(),
+                });
+            }
+            let outputs = e
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .context("entry outputs")?
+                .iter()
+                .map(|o| Ok(o.as_str().context("output name")?.to_string()))
+                .collect::<Result<_>>()?;
+
+            entries.push(ManifestEntry { name, file, batch, k, inputs, outputs });
+        }
+        Ok(Manifest { alpha, beta, batch, entries })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    /// All k values for which artifacts exist.
+    pub fn available_k(&self) -> Vec<usize> {
+        let mut ks: Vec<usize> = self.entries.iter().map(|e| e.k).collect();
+        ks.sort_unstable();
+        ks.dedup();
+        ks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "alpha": 1.0, "beta": 0.1, "batch": 256,
+      "entries": [
+        {"name": "score_b256_k8", "file": "score_b256_k8.hlo.txt",
+         "batch": 256, "k": 8,
+         "inputs": [
+           {"name": "hist", "shape": [256, 8], "dtype": "f32"},
+           {"name": "wsum", "shape": [256], "dtype": "f32"},
+           {"name": "loads", "shape": [8], "dtype": "f32"},
+           {"name": "capacity", "shape": [], "dtype": "f32"}],
+         "outputs": ["scores"]},
+        {"name": "la_update_b256_k8", "file": "la_update_b256_k8.hlo.txt",
+         "batch": 256, "k": 8,
+         "inputs": [
+           {"name": "p", "shape": [256, 8], "dtype": "f32"},
+           {"name": "raw_w", "shape": [256, 8], "dtype": "f32"}],
+         "outputs": ["p_next"]}
+      ]}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.alpha, 1.0);
+        assert_eq!(m.batch, 256);
+        assert_eq!(m.entries.len(), 2);
+        let e = m.find("score_b256_k8").unwrap();
+        assert_eq!(e.inputs.len(), 4);
+        assert_eq!(e.inputs[3].shape, Vec::<usize>::new());
+        assert_eq!(e.outputs, vec!["scores".to_string()]);
+        assert_eq!(m.available_k(), vec![8]);
+    }
+
+    #[test]
+    fn find_missing_none() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.find("nope").is_none());
+        assert_eq!(m.names().len(), 2);
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // When `make artifacts` has run, the real manifest must parse.
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(&p).unwrap();
+            assert!(!m.entries.is_empty());
+            for e in &m.entries {
+                assert!(p.parent().unwrap().join(&e.file).exists(), "{} missing", e.file);
+            }
+        }
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

@@ -1,0 +1,199 @@
+//! Minimal CLI argument parser (clap is unavailable in the offline
+//! vendored crate set, so the launcher parses flags with this).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, repeated
+//! flags, and positional arguments. Unknown-flag detection is the
+//! caller's responsibility via [`Args::finish`].
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand-style positionals + `--key value` flags.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+    consumed: std::collections::BTreeSet<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArgError {
+    #[error("flag --{0} expects a value")]
+    MissingValue(String),
+    #[error("flag --{0}: cannot parse {1:?}: {2}")]
+    BadValue(String, String, String),
+    #[error("unknown flags: {0:?}")]
+    Unknown(Vec<String>),
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self, ArgError> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else {
+                    // `--flag value` unless next token is another flag or absent.
+                    match it.peek() {
+                        Some(nxt) if !nxt.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.entry(rest.to_string()).or_default().push(v);
+                        }
+                        _ => {
+                            out.flags.entry(rest.to_string()).or_default().push(String::new());
+                        }
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process's own command line.
+    pub fn from_env() -> Result<Self, ArgError> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// First positional (subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// Raw string flag (last occurrence wins). Marks the flag consumed.
+    pub fn get(&mut self, key: &str) -> Option<String> {
+        self.consumed.insert(key.to_string());
+        self.flags.get(key).and_then(|v| v.last()).cloned()
+    }
+
+    /// Boolean flag: present (with or without value) => true; `--x=false`
+    /// and `--x false` are honoured.
+    pub fn get_bool(&mut self, key: &str) -> bool {
+        match self.get(key) {
+            None => false,
+            Some(v) => v.is_empty() || v == "true" || v == "1" || v == "yes",
+        }
+    }
+
+    /// Typed flag with default.
+    pub fn get_or<T: std::str::FromStr>(&mut self, key: &str, default: T) -> Result<T, ArgError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) if v.is_empty() => Err(ArgError::MissingValue(key.to_string())),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| ArgError::BadValue(key.to_string(), v, e.to_string())),
+        }
+    }
+
+    /// Comma-separated list flag, e.g. `--parts 2,4,8`.
+    pub fn get_list<T: std::str::FromStr>(
+        &mut self,
+        key: &str,
+        default: &[T],
+    ) -> Result<Vec<T>, ArgError>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) if v.is_empty() => Err(ArgError::MissingValue(key.to_string())),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.parse::<T>()
+                        .map_err(|e| ArgError::BadValue(key.to_string(), s.to_string(), e.to_string()))
+                })
+                .collect(),
+        }
+    }
+
+    /// Error if any flag was never consumed (caught typos).
+    pub fn finish(self) -> Result<(), ArgError> {
+        let unknown: Vec<String> = self
+            .flags
+            .keys()
+            .filter(|k| !self.consumed.contains(*k))
+            .cloned()
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(ArgError::Unknown(unknown))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let mut a = parse(&["sweep", "--parts", "2,4", "--seed=7", "--verbose"]);
+        assert_eq!(a.subcommand(), Some("sweep"));
+        assert_eq!(a.get_list::<u32>("parts", &[]).unwrap(), vec![2, 4]);
+        assert_eq!(a.get_or("seed", 0u64).unwrap(), 7);
+        assert!(a.get_bool("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults() {
+        let mut a = parse(&["run"]);
+        assert_eq!(a.get_or("steps", 290u32).unwrap(), 290);
+        assert_eq!(a.get_list::<u32>("parts", &[2, 4]).unwrap(), vec![2, 4]);
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn equals_form_and_last_wins() {
+        let mut a = parse(&["--k=8", "--k=16"]);
+        assert_eq!(a.get_or("k", 0u32).unwrap(), 16);
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        let mut a = parse(&["--k", "banana"]);
+        assert!(a.get_or("k", 0u32).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let mut a = parse(&["--real", "1", "--typo", "2"]);
+        let _ = a.get("real");
+        match a.finish() {
+            Err(ArgError::Unknown(u)) => assert_eq!(u, vec!["typo".to_string()]),
+            other => panic!("expected Unknown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bool_explicit_false() {
+        let mut a = parse(&["--flag", "false"]);
+        assert!(!a.get_bool("flag"));
+    }
+
+    #[test]
+    fn negative_number_value() {
+        // `--x -3` : "-3" does not start with "--" so it is a value.
+        let mut a = parse(&["--x", "-3"]);
+        assert_eq!(a.get_or("x", 0i64).unwrap(), -3);
+    }
+}

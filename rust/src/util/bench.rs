@@ -1,0 +1,125 @@
+//! Micro-benchmark harness (criterion is unavailable in the offline
+//! vendored crate set): warmup, repeated timed runs, and a
+//! median/mean/min report. Used by every target under `rust/benches/`.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    /// Throughput in items/second given `items` processed per iteration.
+    pub fn throughput(&self, items: u64) -> f64 {
+        items as f64 / (self.mean_ns / 1e9)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>10} median {:>10} mean {:>10} min ({} iters)",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.min_ns),
+            self.iters
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` iterations, returning
+/// per-iteration statistics. `f` should return something observable to
+/// keep the optimizer honest; its result is passed through
+/// `std::hint::black_box`.
+pub fn bench<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> BenchResult {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let median = samples[samples.len() / 2];
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        median_ns: median,
+        min_ns: samples[0],
+        max_ns: *samples.last().unwrap(),
+    }
+}
+
+/// Scale knob for bench workloads: `REVOLVER_BENCH_SCALE=full` runs the
+/// paper-shaped sweep, anything else (default) a fast smoke variant so
+/// `cargo bench` completes in minutes on one core.
+pub fn full_scale() -> bool {
+    std::env::var("REVOLVER_BENCH_SCALE").map(|v| v == "full").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop-ish", 2, 9, || {
+            std::hint::black_box((0..100).sum::<u64>())
+        });
+        assert!(r.min_ns <= r.median_ns);
+        assert!(r.median_ns <= r.max_ns);
+        assert!(r.mean_ns > 0.0);
+        assert_eq!(r.iters, 9);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1e9,
+            median_ns: 1e9,
+            min_ns: 1e9,
+            max_ns: 1e9,
+        };
+        assert!((r.throughput(1000) - 1000.0).abs() < 1e-9);
+        assert!((r.mean_ms() - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn display_formats() {
+        let r = bench("fmt", 0, 3, || 1 + 1);
+        let s = format!("{r}");
+        assert!(s.contains("fmt"));
+    }
+}

@@ -1,0 +1,60 @@
+//! Small self-contained substrates the rest of the crate builds on.
+//!
+//! The build environment is fully offline with a narrow vendored crate
+//! set, so the pieces a typical project would pull from crates.io —
+//! deterministic RNG, CLI parsing, JSON — are implemented here from
+//! scratch (see DESIGN.md §3, S6/S16/S17).
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+/// Format a large count with thousands separators (`1234567` → `1,234,567`).
+pub fn with_commas(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Simple wall-clock stopwatch for coarse phase timing.
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(std::time::Instant::now())
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn commas() {
+        assert_eq!(with_commas(0), "0");
+        assert_eq!(with_commas(999), "999");
+        assert_eq!(with_commas(1000), "1,000");
+        assert_eq!(with_commas(1234567), "1,234,567");
+        assert_eq!(with_commas(58333344), "58,333,344");
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        assert!(sw.elapsed_ms() >= 0.0);
+        assert!(sw.elapsed_s() >= 0.0);
+    }
+}

@@ -1,0 +1,207 @@
+//! End-to-end CLI tests: spawn the real `revolver` binary and check the
+//! launcher surface (subcommands, flags, config files, error paths).
+
+use std::process::Command;
+
+fn revolver() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_revolver"))
+}
+
+fn run(args: &[&str]) -> (bool, String, String) {
+    let out = revolver().args(args).output().expect("spawn revolver");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+    )
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let (ok, stdout, _) = run(&[]);
+    assert!(ok);
+    assert!(stdout.contains("usage: revolver"));
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let (ok, _, stderr) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown subcommand"));
+}
+
+#[test]
+fn unknown_flag_fails() {
+    let (ok, _, stderr) = run(&["stats", "--graph", "lj", "--bogus", "1"]);
+    assert!(!ok, "unknown flags must be rejected");
+    assert!(stderr.contains("bogus"), "{stderr}");
+}
+
+#[test]
+fn partition_runs_and_reports_metrics() {
+    let (ok, stdout, _) = run(&[
+        "partition",
+        "--graph",
+        "so",
+        "--vertices",
+        "512",
+        "--parts",
+        "4",
+        "--steps",
+        "5",
+        "--threads",
+        "1",
+    ]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("local edges:"));
+    assert!(stdout.contains("max normalized load:"));
+}
+
+#[test]
+fn partition_each_algorithm() {
+    for algo in ["revolver", "spinner", "hash", "range"] {
+        let (ok, stdout, stderr) = run(&[
+            "partition",
+            "--graph",
+            "wiki",
+            "--vertices",
+            "256",
+            "--parts",
+            "2",
+            "--steps",
+            "3",
+            "--algorithm",
+            algo,
+        ]);
+        assert!(ok, "{algo}: {stderr}");
+        assert!(stdout.contains(&format!("algorithm:           {algo}")));
+    }
+}
+
+#[test]
+fn stats_all_lists_nine_datasets() {
+    let (ok, stdout, _) = run(&["stats", "--all", "--vertices", "256"]);
+    assert!(ok);
+    for name in ["wiki", "uk", "usa", "so", "lj", "en", "ok", "hlwd", "eu"] {
+        assert!(stdout.contains(name), "missing {name} in stats output");
+    }
+}
+
+#[test]
+fn generate_then_partition_file() {
+    let dir = std::env::temp_dir().join("revolver_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("g.txt");
+    let (ok, stdout, _) = run(&[
+        "generate",
+        "--graph",
+        "lj",
+        "--vertices",
+        "256",
+        "--format",
+        "txt",
+        "--out",
+        path.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stdout}");
+    assert!(path.exists());
+
+    let (ok, stdout, stderr) = run(&[
+        "partition",
+        "--graph",
+        path.to_str().unwrap(),
+        "--parts",
+        "2",
+        "--steps",
+        "3",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("local edges:"));
+}
+
+#[test]
+fn sweep_writes_csv() {
+    let dir = std::env::temp_dir().join("revolver_cli_sweep");
+    let _ = std::fs::remove_dir_all(&dir);
+    let (ok, _, stderr) = run(&[
+        "sweep",
+        "--graphs",
+        "so",
+        "--algorithms",
+        "hash,range",
+        "--parts",
+        "2,4",
+        "--vertices",
+        "256",
+        "--out",
+        dir.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stderr}");
+    let csv = std::fs::read_to_string(dir.join("fig3_sweep.csv")).unwrap();
+    assert!(csv.lines().count() >= 5, "{csv}");
+    assert!(csv.contains("so,hash,2"));
+    assert!(csv.contains("so,range,4"));
+}
+
+#[test]
+fn convergence_writes_traces() {
+    let dir = std::env::temp_dir().join("revolver_cli_conv");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let (ok, _, stderr) = run(&[
+        "convergence",
+        "--graph",
+        "so",
+        "--vertices",
+        "256",
+        "--parts",
+        "2",
+        "--steps",
+        "4",
+        "--out",
+        dir.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stderr}");
+    for algo in ["revolver", "spinner"] {
+        let p = dir.join(format!("fig4_{algo}_so_k2.csv"));
+        let csv = std::fs::read_to_string(&p).unwrap();
+        assert!(csv.starts_with("step,local_edges"), "{p:?}");
+    }
+}
+
+#[test]
+fn config_file_drives_run() {
+    let dir = std::env::temp_dir().join("revolver_cli_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("run.toml");
+    std::fs::write(&cfg, "parts = 4\nmax_steps = 3\nthreads = 1\n").unwrap();
+    let (ok, stdout, stderr) = run(&[
+        "partition",
+        "--graph",
+        "so",
+        "--vertices",
+        "256",
+        "--config",
+        cfg.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("partitions:          4"));
+}
+
+#[test]
+fn bad_dataset_name_fails_with_hint() {
+    let (ok, _, stderr) = run(&["partition", "--graph", "nonexistent_ds"]);
+    assert!(!ok);
+    assert!(stderr.contains("neither a dataset name"), "{stderr}");
+}
+
+#[test]
+fn info_reports_artifacts_when_present() {
+    let (ok, stdout, _) = run(&["info"]);
+    assert!(ok);
+    assert!(stdout.contains("revolver"));
+    // With artifacts built, the manifest entries are listed.
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        assert!(stdout.contains("step_b256_k8"), "{stdout}");
+    }
+}

@@ -1,0 +1,178 @@
+//! Cross-module integration tests: generators → partitioners → metrics,
+//! config plumbing, and I/O round-trips through the full pipeline.
+
+use revolver::config::{ExecutionModel, RevolverConfig};
+use revolver::graph::gen::{generate_dataset, Dataset};
+use revolver::graph::{io, stats};
+use revolver::metrics::quality;
+use revolver::partitioners::by_name;
+
+fn cfg(k: usize, steps: u32) -> RevolverConfig {
+    RevolverConfig { parts: k, max_steps: steps, threads: 2, seed: 3, ..Default::default() }
+}
+
+#[test]
+fn all_algorithms_all_datasets_smoke() {
+    // Every partitioner must produce valid output on every dataset class.
+    for ds in Dataset::ALL {
+        let g = generate_dataset(ds, 256, 1).unwrap();
+        for algo in ["revolver", "spinner", "hash", "range"] {
+            let out = by_name(algo, cfg(4, 10)).unwrap().partition(&g);
+            assert_eq!(out.labels.len(), g.num_vertices(), "{algo}/{}", ds.name());
+            assert!(out.labels.iter().all(|&l| l < 4), "{algo}/{}", ds.name());
+            let q = quality::evaluate(&g, &out.labels, 4);
+            assert!((0.0..=1.0).contains(&q.local_edges));
+            assert!(q.max_normalized_load >= 1.0 - 1e-9);
+        }
+    }
+}
+
+#[test]
+fn figure3_shape_on_lj() {
+    // The core Figure-3 ordering on a right-skewed graph (k=8):
+    //   local edges: revolver ≳ spinner >> hash; hash ≈ 1/k
+    //   balance: revolver best (≈1.0), hash decent, range poor.
+    let g = generate_dataset(Dataset::Lj, 4096, 7).unwrap();
+    let k = 8;
+    let mut le = std::collections::HashMap::new();
+    let mut mnl = std::collections::HashMap::new();
+    for algo in ["revolver", "spinner", "hash", "range"] {
+        let out = by_name(algo, cfg(k, 290)).unwrap().partition(&g);
+        let q = quality::evaluate(&g, &out.labels, k);
+        le.insert(algo, q.local_edges);
+        mnl.insert(algo, q.max_normalized_load);
+    }
+    assert!(le["revolver"] > le["hash"] + 0.05, "{le:?}");
+    assert!(le["spinner"] > le["hash"] + 0.05, "{le:?}");
+    assert!(le["revolver"] > le["spinner"] - 0.02, "revolver must be ≳ spinner: {le:?}");
+    assert!((le["hash"] - 1.0 / k as f64).abs() < 0.05, "{le:?}");
+    assert!(mnl["revolver"] < 1.10, "{mnl:?}");
+    assert!(
+        mnl["revolver"] <= mnl["spinner"] + 0.02,
+        "revolver balance must not lose to spinner: {mnl:?}"
+    );
+}
+
+#[test]
+fn async_balances_better_than_sync() {
+    // §V-H.2: the asynchronous model's progressive load exchange gives
+    // better (or equal) balance than the synchronous variant.
+    let g = generate_dataset(Dataset::Ok, 2048, 3).unwrap();
+    let k = 8;
+    let mut m = std::collections::HashMap::new();
+    for exec in [ExecutionModel::Asynchronous, ExecutionModel::Synchronous] {
+        let mut c = cfg(k, 80);
+        c.execution = exec;
+        let out = by_name("revolver", c).unwrap().partition(&g);
+        m.insert(format!("{exec:?}"), quality::max_normalized_load(&g, &out.labels, k));
+    }
+    let a = m["Asynchronous"];
+    let s = m["Synchronous"];
+    assert!(a <= s + 0.05, "async {a} should not balance worse than sync {s}");
+}
+
+#[test]
+fn partition_after_io_roundtrip() {
+    // Generate → save → load → partition must equal partitioning the
+    // original (loaders preserve structure exactly).
+    let g = generate_dataset(Dataset::So, 512, 9).unwrap();
+    let dir = std::env::temp_dir().join("revolver_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("so.bin");
+    io::save_binary(&g, &path).unwrap();
+    let g2 = io::load_binary(&path).unwrap();
+
+    let out1 = by_name("revolver", cfg(4, 15)).unwrap().partition(&g);
+    let out2 = by_name("revolver", cfg(4, 15)).unwrap().partition(&g2);
+    // threads=2 introduces scheduling nondeterminism in the async engine,
+    // so compare quality, not labels.
+    let q1 = quality::evaluate(&g, &out1.labels, 4);
+    let q2 = quality::evaluate(&g2, &out2.labels, 4);
+    assert!((q1.local_edges - q2.local_edges).abs() < 0.05);
+}
+
+#[test]
+fn table1_surrogates_match_paper_classes() {
+    // Every surrogate must land in its paper dataset's skew class
+    // (DESIGN.md §4's substitution-fidelity check).
+    for (ds, expect_positive) in [
+        (Dataset::Wiki, true),
+        (Dataset::Uk, true),
+        (Dataset::Usa, false),
+        (Dataset::Lj, true),
+        (Dataset::En, true),
+        (Dataset::Ok, true),
+        (Dataset::Hlwd, true),
+    ] {
+        let g = generate_dataset(ds, 2048, 7).unwrap();
+        let s = stats::compute(&g);
+        assert_eq!(
+            s.skewness > 0.0,
+            expect_positive,
+            "{}: skew {} has wrong sign",
+            ds.name(),
+            s.skewness
+        );
+    }
+    // Skew-free classes: |skew| small.
+    for ds in [Dataset::So, Dataset::Eu] {
+        let g = generate_dataset(ds, 2048, 7).unwrap();
+        let s = stats::compute(&g);
+        assert!(s.skewness.abs() < 0.4, "{}: {}", ds.name(), s.skewness);
+    }
+}
+
+#[test]
+fn config_toml_to_partition() {
+    // A config file drives a run end to end.
+    let dir = std::env::temp_dir().join("revolver_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.toml");
+    std::fs::write(
+        &path,
+        "parts = 4\nmax_steps = 10\nthreads = 1\nseed = 5\nexecution = \"sync\"\n",
+    )
+    .unwrap();
+    let cfg = RevolverConfig::from_toml_file(&path).unwrap();
+    assert_eq!(cfg.execution, ExecutionModel::Synchronous);
+    let g = generate_dataset(Dataset::Wiki, 256, 2).unwrap();
+    let out = by_name("revolver", cfg).unwrap().partition(&g);
+    assert_eq!(out.labels.len(), 256);
+}
+
+#[test]
+fn convergence_traces_are_consistent() {
+    // trace_every=1 must yield one point per executed step with metrics
+    // matching an independent evaluation at the end.
+    let g = generate_dataset(Dataset::Lj, 1024, 4).unwrap();
+    let mut c = cfg(4, 25);
+    c.trace_every = 1;
+    c.halt_window = u32::MAX;
+    let out = by_name("revolver", c).unwrap().partition(&g);
+    assert_eq!(out.trace.points.len(), 25);
+    let last = out.trace.points.last().unwrap();
+    let q = quality::evaluate(&g, &out.labels, 4);
+    assert!((last.local_edges - q.local_edges).abs() < 1e-9);
+    assert!((last.max_normalized_load - q.max_normalized_load).abs() < 1e-9);
+}
+
+#[test]
+fn epsilon_zero_still_works() {
+    // Degenerate imbalance budget: migrations nearly all blocked, but
+    // the run must finish and stay valid.
+    let g = generate_dataset(Dataset::So, 512, 6).unwrap();
+    let mut c = cfg(4, 10);
+    c.epsilon = 0.0;
+    let out = by_name("revolver", c).unwrap().partition(&g);
+    assert!(out.labels.iter().all(|&l| l < 4));
+}
+
+#[test]
+fn large_k_exceeding_small_graph() {
+    // k close to |V|: every partition nearly empty; must not panic.
+    let g = generate_dataset(Dataset::So, 128, 8).unwrap();
+    let out = by_name("revolver", cfg(64, 5)).unwrap().partition(&g);
+    assert!(out.labels.iter().all(|&l| l < 64));
+    let out = by_name("spinner", cfg(64, 5)).unwrap().partition(&g);
+    assert!(out.labels.iter().all(|&l| l < 64));
+}

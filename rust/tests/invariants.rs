@@ -1,0 +1,232 @@
+//! Randomized property tests (proptest is unavailable offline, so these
+//! drive a seeded case generator through the same check/shrink-free
+//! harness style: many random cases per property, failures print the
+//! seed needed to reproduce).
+
+use revolver::config::RevolverConfig;
+use revolver::graph::gen::{generate_dataset, Dataset};
+use revolver::graph::GraphBuilder;
+use revolver::la::signal::build_signals;
+use revolver::la::weighted::WeightedLa;
+use revolver::la::Signal;
+use revolver::lp::{neighbor_histogram, normalized, spinner};
+use revolver::metrics::quality;
+use revolver::partition::{InitialAssignment, PartitionState};
+use revolver::partitioners::by_name;
+use revolver::util::json::Json;
+use revolver::util::rng::Rng;
+
+/// Run `prop` for `cases` random seeds, reporting the failing seed.
+fn forall(cases: u64, prop: impl Fn(u64)) {
+    for seed in 0..cases {
+        // Panics inside `prop` bubble up; wrap with seed context.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(seed)));
+        if let Err(e) = result {
+            panic!("property failed at seed={seed}: {e:?}");
+        }
+    }
+}
+
+fn random_distribution(rng: &mut Rng, k: usize) -> Vec<f32> {
+    let mut p: Vec<f32> = (0..k).map(|_| rng.next_f32() + 1e-4).collect();
+    let sum: f32 = p.iter().sum();
+    p.iter_mut().for_each(|x| *x /= sum);
+    p
+}
+
+#[test]
+fn prop_weighted_la_preserves_distribution() {
+    forall(200, |seed| {
+        let mut rng = Rng::new(seed);
+        let k = 2 + rng.below_usize(30);
+        let mut p = random_distribution(&mut rng, k);
+        let raw: Vec<f32> = (0..k).map(|_| rng.next_f32()).collect();
+        let (w, s) = build_signals(&raw);
+        let alpha = rng.next_f32();
+        let beta = rng.next_f32() * 0.5;
+        WeightedLa::update(&mut p, &w, &s, alpha, beta);
+        let sum: f32 = p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "sum={sum} k={k}");
+        assert!(p.iter().all(|&x| x > 0.0 && x.is_finite()));
+    });
+}
+
+#[test]
+fn prop_signal_halves_normalized() {
+    forall(300, |seed| {
+        let mut rng = Rng::new(seed);
+        let k = 2 + rng.below_usize(60);
+        let raw: Vec<f32> = (0..k).map(|_| rng.next_f32() * 10.0).collect();
+        let (w, s) = build_signals(&raw);
+        let rew: f32 = w.iter().zip(&s).filter(|(_, s)| s.is_reward()).map(|(w, _)| w).sum();
+        let pen: f32 = w.iter().zip(&s).filter(|(_, s)| !s.is_reward()).map(|(w, _)| w).sum();
+        // Non-degenerate raw vectors: both halves sum to 1.
+        if s.iter().any(|x| x.is_reward()) {
+            assert!((rew - 1.0).abs() < 1e-4, "rew={rew}");
+        }
+        assert!((pen - 1.0).abs() < 1e-4, "pen={pen}");
+        assert!(w.iter().all(|&x| (0.0..=1.0 + 1e-5).contains(&x)));
+    });
+}
+
+#[test]
+fn prop_normalized_penalty_is_distribution() {
+    forall(300, |seed| {
+        let mut rng = Rng::new(seed);
+        let k = 2 + rng.below_usize(40);
+        let cap = 1.0 + rng.next_f32() * 1000.0;
+        // Loads may exceed capacity (footnote-1 path).
+        let loads: Vec<f32> = (0..k).map(|_| rng.next_f32() * cap * 1.5).collect();
+        let mut pi = vec![0.0f32; k];
+        normalized::penalty_into(&loads, cap, &mut pi);
+        let sum: f32 = pi.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-3, "sum={sum}");
+        assert!(pi.iter().all(|&x| x >= 0.0));
+    });
+}
+
+#[test]
+fn prop_scores_bounded_and_argmax_correct() {
+    forall(200, |seed| {
+        let mut rng = Rng::new(seed);
+        let k = 2 + rng.below_usize(20);
+        let hist: Vec<f32> = (0..k).map(|_| rng.next_f32() * 5.0).collect();
+        let wsum: f32 = hist.iter().sum::<f32>() + rng.next_f32();
+        let mut pi = vec![0.0f32; k];
+        let loads: Vec<f32> = (0..k).map(|_| rng.next_f32() * 100.0).collect();
+        normalized::penalty_into(&loads, 120.0, &mut pi);
+        let mut scores = vec![0.0f32; k];
+        let best = normalized::score_into(&hist, wsum, &pi, &mut scores);
+        assert!(scores.iter().all(|&s| (0.0..=1.0 + 1e-5).contains(&s)));
+        let max = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert_eq!(scores[best], max);
+    });
+}
+
+#[test]
+fn prop_spinner_migration_probability_in_unit_range() {
+    forall(300, |seed| {
+        let mut rng = Rng::new(seed);
+        let p = spinner::migration_probability(
+            rng.next_f32() * 100.0,
+            rng.next_f32() * 150.0,
+            rng.next_f32() * 100.0 - 1.0,
+        );
+        assert!((0.0..=1.0).contains(&p), "p={p}");
+    });
+}
+
+#[test]
+fn prop_partition_loads_sum_to_edges() {
+    // After any partitioning run, Σ_l b(l) == |E| and labels < k.
+    forall(12, |seed| {
+        let mut rng = Rng::new(seed);
+        let ds = Dataset::ALL[rng.below_usize(9)];
+        let k = 2 + rng.below_usize(14);
+        let g = generate_dataset(ds, 256 + rng.below_usize(512), seed).unwrap();
+        let algo = ["revolver", "spinner", "hash", "range"][rng.below_usize(4)];
+        let cfg = RevolverConfig {
+            parts: k,
+            max_steps: 8,
+            threads: 1 + rng.below_usize(3),
+            seed,
+            ..Default::default()
+        };
+        let out = by_name(algo, cfg).unwrap().partition(&g);
+        let loads = quality::partition_loads(&g, &out.labels, k);
+        assert_eq!(loads.iter().sum::<u64>(), g.num_edges() as u64, "{algo} {}", ds.name());
+    });
+}
+
+#[test]
+fn prop_migrate_keeps_state_invariant() {
+    forall(50, |seed| {
+        let mut rng = Rng::new(seed);
+        let n = 64 + rng.below_usize(128);
+        let mut b = GraphBuilder::new(n);
+        for _ in 0..4 * n {
+            b.edge(rng.below(n as u64) as u32, rng.below(n as u64) as u32);
+        }
+        let g = b.build();
+        let k = 2 + rng.below_usize(6);
+        let st = PartitionState::new(&g, k, 0.05, InitialAssignment::Random(seed));
+        for _ in 0..500 {
+            let v = rng.below(n as u64) as u32;
+            st.migrate(v, rng.below(k as u64) as u32, g.out_degree(v));
+        }
+        st.check_load_invariant().unwrap();
+    });
+}
+
+#[test]
+fn prop_histogram_total_equals_weight_sum() {
+    forall(100, |seed| {
+        let mut rng = Rng::new(seed);
+        let g = generate_dataset(Dataset::Wiki, 512, seed).unwrap();
+        let k = 2 + rng.below_usize(8);
+        let labels: Vec<u32> = (0..512).map(|_| rng.below(k as u64) as u32).collect();
+        let mut hist = vec![0.0f32; k];
+        let v = rng.below(512) as u32;
+        let wsum = neighbor_histogram(
+            g.neighbors(v),
+            g.neighbor_weights(v),
+            |u| labels[u as usize],
+            &mut hist,
+        );
+        let total: f32 = hist.iter().sum();
+        assert!((total - wsum).abs() < 1e-3 * wsum.max(1.0), "{total} vs {wsum}");
+    });
+}
+
+#[test]
+fn prop_classic_la_update_preserves_distribution() {
+    use revolver::la::classic::ClassicLa;
+    forall(200, |seed| {
+        let mut rng = Rng::new(seed);
+        let k = 2 + rng.below_usize(20);
+        let mut la = ClassicLa::new(k);
+        for _ in 0..30 {
+            let i = rng.below_usize(k);
+            let sig = if rng.chance(0.5) { Signal::Reward } else { Signal::Penalty };
+            la.update(i, sig, rng.next_f32() * 0.9, rng.next_f32() * 0.5);
+        }
+        let sum: f32 = la.probabilities().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-3, "sum={sum}");
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_structures() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.next_f64() * 1e6).round()),
+            3 => Json::Str(format!("s{}", rng.next_u64() % 1000)),
+            4 => Json::Arr((0..rng.below_usize(4)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below_usize(4))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall(200, |seed| {
+        let mut rng = Rng::new(seed);
+        let j = random_json(&mut rng, 3);
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, j, "roundtrip failed for {text}");
+    });
+}
+
+#[test]
+fn prop_generators_always_valid() {
+    forall(30, |seed| {
+        let mut rng = Rng::new(seed);
+        let ds = Dataset::ALL[rng.below_usize(9)];
+        let n = 100 + rng.below_usize(900);
+        let g = generate_dataset(ds, n, seed).unwrap();
+        g.validate().unwrap_or_else(|e| panic!("{} n={n}: {e}", ds.name()));
+    });
+}

@@ -1,0 +1,205 @@
+//! L1/L2 ↔ L3 parity: the AOT-compiled XLA artifacts must compute the
+//! same numbers as the native Rust implementations of the same
+//! equations (eqs. 8-12 + signal construction).
+//!
+//! These tests need `make artifacts` to have run; they are skipped (with
+//! a loud message) when the artifacts directory is absent so `cargo
+//! test` works in a fresh checkout.
+
+use revolver::la::signal::build_signals;
+use revolver::la::weighted::WeightedLa;
+use revolver::lp::normalized;
+use revolver::runtime::{Runtime, XlaStepEngine};
+use revolver::util::rng::Rng;
+
+const BATCH: usize = 256;
+
+fn artifacts_available() -> bool {
+    let ok = std::path::Path::new("artifacts/manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+    }
+    ok
+}
+
+fn random_rows(rng: &mut Rng, rows: usize, k: usize, scale: f32) -> Vec<f32> {
+    (0..rows * k).map(|_| rng.next_f32() * scale).collect()
+}
+
+#[test]
+fn score_artifact_matches_native() {
+    if !artifacts_available() {
+        return;
+    }
+    for k in [8usize, 32] {
+        let mut eng = XlaStepEngine::load("artifacts", BATCH, k, 1.0, 0.1).unwrap();
+        let mut rng = Rng::new(42 + k as u64);
+        let hist = random_rows(&mut rng, BATCH, k, 5.0);
+        let wsum: Vec<f32> =
+            (0..BATCH).map(|i| hist[i * k..(i + 1) * k].iter().sum::<f32>() + 0.1).collect();
+        let capacity = 1000.0f32;
+        let loads: Vec<f32> = (0..k).map(|_| rng.next_f32() * capacity).collect();
+
+        let got = eng.score(&hist, &wsum, &loads, capacity).unwrap();
+
+        let mut pi = vec![0.0f32; k];
+        normalized::penalty_into(&loads, capacity, &mut pi);
+        let mut scores = vec![0.0f32; k];
+        for i in 0..BATCH {
+            normalized::score_into(&hist[i * k..(i + 1) * k], wsum[i], &pi, &mut scores);
+            for l in 0..k {
+                let (a, b) = (got[i * k + l], scores[l]);
+                assert!(
+                    (a - b).abs() < 1e-4,
+                    "k={k} row={i} l={l}: xla={a} native={b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn score_artifact_overload_footnote1_matches() {
+    if !artifacts_available() {
+        return;
+    }
+    let k = 8;
+    let mut eng = XlaStepEngine::load("artifacts", BATCH, k, 1.0, 0.1).unwrap();
+    let mut rng = Rng::new(7);
+    let hist = random_rows(&mut rng, BATCH, k, 3.0);
+    let wsum: Vec<f32> = (0..BATCH).map(|_| 10.0).collect();
+    let capacity = 100.0f32;
+    // One partition overloaded -> negative raw penalty -> shift path.
+    let mut loads: Vec<f32> = (0..k).map(|_| 50.0).collect();
+    loads[3] = 150.0;
+
+    let got = eng.score(&hist, &wsum, &loads, capacity).unwrap();
+    let mut pi = vec![0.0f32; k];
+    normalized::penalty_into(&loads, capacity, &mut pi);
+    let mut scores = vec![0.0f32; k];
+    for i in 0..BATCH {
+        normalized::score_into(&hist[i * k..(i + 1) * k], wsum[i], &pi, &mut scores);
+        for l in 0..k {
+            assert!((got[i * k + l] - scores[l]).abs() < 1e-4);
+        }
+    }
+}
+
+#[test]
+fn la_update_artifact_matches_native() {
+    if !artifacts_available() {
+        return;
+    }
+    for k in [8usize, 32] {
+        let mut eng = XlaStepEngine::load("artifacts", BATCH, k, 1.0, 0.1).unwrap();
+        let mut rng = Rng::new(99 + k as u64);
+        let mut probs = vec![0.0f32; BATCH * k];
+        for row in probs.chunks_mut(k) {
+            let mut p: Vec<f32> = (0..k).map(|_| rng.next_f32() + 1e-3).collect();
+            let s: f32 = p.iter().sum();
+            p.iter_mut().for_each(|x| *x /= s);
+            row.copy_from_slice(&p);
+        }
+        let raw_w = random_rows(&mut rng, BATCH, k, 1.0);
+
+        let got = eng.la_update(&probs, &raw_w).unwrap();
+
+        for i in 0..BATCH {
+            let mut native = probs[i * k..(i + 1) * k].to_vec();
+            let (w, s) = build_signals(&raw_w[i * k..(i + 1) * k]);
+            WeightedLa::update(&mut native, &w, &s, 1.0, 0.1);
+            for l in 0..k {
+                let (a, b) = (got[i * k + l], native[l]);
+                assert!(
+                    (a - b).abs() < 2e-4,
+                    "k={k} row={i} l={l}: xla={a} native={b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn la_update_artifact_rows_are_distributions() {
+    if !artifacts_available() {
+        return;
+    }
+    let k = 8;
+    let mut eng = XlaStepEngine::load("artifacts", BATCH, k, 1.0, 0.1).unwrap();
+    let probs = vec![1.0 / k as f32; BATCH * k];
+    let mut rng = Rng::new(3);
+    let raw_w = random_rows(&mut rng, BATCH, k, 2.0);
+    let got = eng.la_update(&probs, &raw_w).unwrap();
+    for row in got.chunks(k) {
+        let sum: f32 = row.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "row sum {sum}");
+        assert!(row.iter().all(|&p| p > 0.0));
+    }
+}
+
+#[test]
+fn step_artifact_composes_score_and_update() {
+    if !artifacts_available() {
+        return;
+    }
+    // The fused `step` artifact = score ∘ signal ∘ la_update; cross-check
+    // against the two split artifacts.
+    let k = 8;
+    let rt = Runtime::open("artifacts").unwrap();
+    let step = rt.compile(&format!("step_b{BATCH}_k{k}")).unwrap();
+    let mut eng = XlaStepEngine::load("artifacts", BATCH, k, 1.0, 0.1).unwrap();
+
+    let mut rng = Rng::new(11);
+    let hist = random_rows(&mut rng, BATCH, k, 4.0);
+    let wsum: Vec<f32> = (0..BATCH).map(|_| 8.0).collect();
+    let capacity = 500.0f32;
+    let loads: Vec<f32> = (0..k).map(|_| rng.next_f32() * capacity).collect();
+    let probs = vec![1.0 / k as f32; BATCH * k];
+    let raw_w = random_rows(&mut rng, BATCH, k, 1.0);
+
+    let outs = step
+        .run_f32(&[&hist, &wsum, &loads, &[capacity], &probs, &raw_w])
+        .unwrap();
+    assert_eq!(outs.len(), 2, "step artifact returns (scores, p_next)");
+
+    let scores = eng.score(&hist, &wsum, &loads, capacity).unwrap();
+    let p_next = eng.la_update(&probs, &raw_w).unwrap();
+    for (a, b) in outs[0].iter().zip(scores.iter()) {
+        assert!((a - b).abs() < 1e-5);
+    }
+    for (a, b) in outs[1].iter().zip(p_next.iter()) {
+        assert!((a - b).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn runtime_rejects_wrong_shapes() {
+    if !artifacts_available() {
+        return;
+    }
+    let rt = Runtime::open("artifacts").unwrap();
+    let e = rt.compile("score_b256_k8").unwrap();
+    // Too few inputs.
+    assert!(e.run_f32(&[&[1.0f32]]).is_err());
+    // Wrong element count.
+    let bad = vec![0.0f32; 7];
+    let wsum = vec![1.0f32; 256];
+    let loads = vec![0.0f32; 8];
+    assert!(e.run_f32(&[&bad, &wsum, &loads, &[1.0]]).is_err());
+}
+
+#[test]
+fn manifest_lists_expected_entries() {
+    if !artifacts_available() {
+        return;
+    }
+    let rt = Runtime::open("artifacts").unwrap();
+    let names = rt.manifest().names();
+    for k in [8, 32] {
+        for stem in ["step", "la_update", "score"] {
+            let want = format!("{stem}_b256_k{k}");
+            assert!(names.contains(&want.as_str()), "missing {want} in {names:?}");
+        }
+    }
+    assert_eq!(rt.manifest().available_k(), vec![8, 32]);
+}
