@@ -4,8 +4,8 @@
 //!
 //!     cargo bench --bench hotpath
 
-use revolver::config::RevolverConfig;
-use revolver::graph::gen::{generate_dataset, Dataset};
+use revolver::config::{RevolverConfig, Schedule};
+use revolver::graph::gen::{generate_dataset, rmat, Dataset};
 use revolver::la::roulette;
 use revolver::la::signal::build_signals_into;
 use revolver::la::weighted::WeightedLa;
@@ -13,6 +13,7 @@ use revolver::la::Signal;
 use revolver::lp::{neighbor_histogram, normalized};
 use revolver::partitioners::{revolver::Revolver, spinner::Spinner, Partitioner};
 use revolver::util::bench::{bench, full_scale};
+use revolver::util::json::Json;
 use revolver::util::rng::Rng;
 
 fn main() {
@@ -113,4 +114,51 @@ fn main() {
         let edge_visits = steps as u64 * 2 * g.num_edges() as u64;
         println!("{r}   ({:.2}M edge-visits/s)", r.throughput(edge_visits) / 1e6);
     }
+
+    // Scheduler comparison: vertex- vs degree-balanced chunking on a
+    // power-law R-MAT graph. Vertex-balanced chunks hand the hub-heavy
+    // prefix to one worker; every barrier then waits on it. The JSON
+    // line at the end feeds the BENCH trajectory.
+    let rn = if full_scale() { 1 << 15 } else { 1 << 13 };
+    let rg = rmat::rmat(rn, 16 * rn, 0.57, 0.19, 0.19, 11);
+    println!(
+        "\n=== scheduler: vertex vs degree chunks (R-MAT |V|={} |E|={}, k={k}) ===\n",
+        rg.num_vertices(),
+        rg.num_edges()
+    );
+    let steps = 5u32;
+    let mut rows: Vec<Json> = Vec::new();
+    for threads in [1usize, 2, 4, 8] {
+        for schedule in [Schedule::Vertex, Schedule::Degree] {
+            let cfg = RevolverConfig {
+                parts: k,
+                max_steps: steps,
+                halt_window: u32::MAX,
+                threads,
+                schedule,
+                seed: 3,
+                ..Default::default()
+            };
+            let p = Revolver::new(cfg);
+            let name = format!("revolver {steps} steps, t={threads}, {schedule:?}");
+            let r = bench(&name, 1, 3, || p.partition(&rg).labels.len());
+            println!("{r}");
+            rows.push(Json::Obj(
+                [
+                    ("bench".to_string(), Json::Str("schedule_rmat".to_string())),
+                    ("schedule".to_string(), Json::Str(format!("{schedule:?}").to_lowercase())),
+                    ("threads".to_string(), Json::Num(threads as f64)),
+                    ("steps".to_string(), Json::Num(steps as f64)),
+                    ("vertices".to_string(), Json::Num(rg.num_vertices() as f64)),
+                    ("edges".to_string(), Json::Num(rg.num_edges() as f64)),
+                    ("median_ns".to_string(), Json::Num(r.median_ns)),
+                    ("mean_ns".to_string(), Json::Num(r.mean_ns)),
+                    ("min_ns".to_string(), Json::Num(r.min_ns)),
+                ]
+                .into_iter()
+                .collect(),
+            ));
+        }
+    }
+    println!("\nBENCH_JSON {}", Json::Arr(rows).to_string());
 }

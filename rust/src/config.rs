@@ -43,6 +43,29 @@ pub enum ExecutionModel {
     Synchronous,
 }
 
+/// How the engine splits vertices across worker threads (DESIGN.md
+/// §Scheduler).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Schedule {
+    /// Contiguous ~|V|/n chunks — the paper's layout (default).
+    #[default]
+    Vertex,
+    /// Contiguous chunks balanced by cumulative out-degree, so a
+    /// power-law hub chunk no longer serializes the step barrier.
+    Degree,
+}
+
+impl std::str::FromStr for Schedule {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_lowercase().as_str() {
+            "vertex" => Ok(Schedule::Vertex),
+            "degree" => Ok(Schedule::Degree),
+            other => bail!("unknown schedule {other:?} (expected vertex|degree)"),
+        }
+    }
+}
+
 /// All knobs of a Revolver/Spinner run. Defaults are the paper's §V-F
 /// settings.
 #[derive(Debug, Clone)]
@@ -63,6 +86,8 @@ pub struct RevolverConfig {
     pub beta: f32,
     /// Worker threads (paper: one per core).
     pub threads: usize,
+    /// How vertices are split across worker threads.
+    pub schedule: Schedule,
     /// RNG seed.
     pub seed: u64,
     /// Async (paper headline) or sync (ablation).
@@ -90,6 +115,7 @@ impl Default for RevolverConfig {
             alpha: 1.0,
             beta: 0.1,
             threads: default_threads(),
+            schedule: Schedule::Vertex,
             seed: 42,
             execution: ExecutionModel::Asynchronous,
             engine: Engine::Native,
@@ -153,6 +179,7 @@ impl RevolverConfig {
                 "alpha" => cfg.alpha = value.parse().context("alpha")?,
                 "beta" => cfg.beta = value.parse().context("beta")?,
                 "threads" => cfg.threads = value.parse().context("threads")?,
+                "schedule" => cfg.schedule = value.parse()?,
                 "seed" => cfg.seed = value.parse().context("seed")?,
                 "execution" => {
                     cfg.execution = match value.as_str() {
@@ -274,6 +301,22 @@ mod tests {
         assert_eq!("native".parse::<Engine>().unwrap(), Engine::Native);
         assert_eq!("XLA".parse::<Engine>().unwrap(), Engine::Xla);
         assert!("gpu".parse::<Engine>().is_err());
+    }
+
+    #[test]
+    fn schedule_parse_and_default() {
+        assert_eq!(RevolverConfig::default().schedule, Schedule::Vertex);
+        assert_eq!("vertex".parse::<Schedule>().unwrap(), Schedule::Vertex);
+        assert_eq!("Degree".parse::<Schedule>().unwrap(), Schedule::Degree);
+        assert!("random".parse::<Schedule>().is_err());
+    }
+
+    #[test]
+    fn schedule_from_toml() {
+        let c = RevolverConfig::from_toml_str("schedule = \"degree\"\n").unwrap();
+        assert_eq!(c.schedule, Schedule::Degree);
+        let c = RevolverConfig::from_toml_str("[revolver]\nschedule = \"vertex\"\n").unwrap();
+        assert_eq!(c.schedule, Schedule::Vertex);
     }
 
     #[test]

@@ -1,8 +1,19 @@
-//! Contiguous vertex chunking — the paper's |V|/n-per-thread layout.
+//! Contiguous vertex chunking — the worker-thread work assignment.
+//!
+//! Two modes (selected via [`crate::config::Schedule`]):
+//!
+//! * **Vertex-balanced** ([`Chunks::new`]) — the paper's |V|/n-per-thread
+//!   layout: near-equal vertex counts per chunk.
+//! * **Degree-balanced** ([`Chunks::by_weight`]) — near-equal *cumulative
+//!   weight* per chunk (the engine passes `1 + out_degree(v)`). On
+//!   power-law graphs (BA/RMAT/LJ) the vertex-balanced layout hands one
+//!   chunk the hubs, and the whole barrier-synchronized step then waits
+//!   on that straggler; weight-balancing splits `0..n` at the weight
+//!   prefix-sum quantiles instead (DESIGN.md §Scheduler).
 
-/// Partition `0..n` into at most `threads` contiguous, near-equal chunks
-/// (first `n % threads` chunks get one extra vertex). Never produces an
-/// empty chunk: for tiny inputs the chunk count shrinks to `n`.
+/// Partition `0..n` into at most `threads` contiguous chunks.
+/// Never produces an empty chunk: for tiny inputs the chunk count
+/// shrinks to `n`.
 #[derive(Debug, Clone)]
 pub struct Chunks {
     n: usize,
@@ -10,6 +21,8 @@ pub struct Chunks {
 }
 
 impl Chunks {
+    /// Vertex-balanced: near-equal chunk sizes (first `n % threads`
+    /// chunks get one extra vertex).
     pub fn new(n: usize, threads: usize) -> Self {
         assert!(n > 0, "cannot chunk an empty vertex set");
         let t = threads.max(1).min(n);
@@ -26,13 +39,47 @@ impl Chunks {
         Chunks { n, bounds }
     }
 
+    /// Weight-balanced: chunk boundaries sit at the quantiles of the
+    /// cumulative `weight` prefix sum, so each chunk carries ~total/t
+    /// weight. Weights are clamped to ≥ 1, which both models the fixed
+    /// per-vertex cost and guarantees no empty chunk. Chunks stay
+    /// contiguous (the CSR-locality property the per-chunk probability
+    /// slabs rely on).
+    pub fn by_weight<W: Fn(usize) -> u64>(n: usize, threads: usize, weight: W) -> Self {
+        assert!(n > 0, "cannot chunk an empty vertex set");
+        let t = threads.max(1).min(n);
+        let total: u128 = (0..n).map(|v| weight(v).max(1) as u128).sum();
+        let mut bounds = Vec::with_capacity(t + 1);
+        bounds.push(0);
+        let mut acc: u128 = 0;
+        let mut v = 0usize;
+        for c in 0..t {
+            // Cumulative weight target for the end of chunk `c`, while
+            // always leaving ≥ 1 vertex for each of the later chunks.
+            let target = total * (c as u128 + 1) / t as u128;
+            let max_end = n - (t - 1 - c);
+            loop {
+                acc += weight(v).max(1) as u128;
+                v += 1;
+                if v >= max_end || acc >= target {
+                    break;
+                }
+            }
+            bounds.push(v);
+        }
+        debug_assert_eq!(*bounds.last().unwrap(), n);
+        Chunks { n, bounds }
+    }
+
     /// Number of chunks (== worker threads used).
     pub fn len(&self) -> usize {
         self.bounds.len() - 1
     }
 
+    /// A `Chunks` is never empty by construction (`n > 0` is asserted),
+    /// but derive this from `len()` instead of hard-coding it.
     pub fn is_empty(&self) -> bool {
-        false
+        self.len() == 0
     }
 
     /// Total vertices.
@@ -59,6 +106,8 @@ impl Chunks {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::gen::{ba, rmat};
+    use crate::graph::Graph;
 
     #[test]
     fn even_split() {
@@ -105,5 +154,109 @@ mod tests {
                 assert_eq!(c.chunk_of(v), i, "vertex {v}");
             }
         }
+    }
+
+    #[test]
+    fn is_empty_derives_from_len() {
+        // Regression: `is_empty` used to return a hard-coded `false`
+        // instead of consulting `len()`.
+        for (n, t) in [(1, 1), (5, 2), (100, 7), (3, 8)] {
+            let c = Chunks::new(n, t);
+            assert_eq!(c.is_empty(), c.len() == 0);
+            assert!(!c.is_empty(), "n={n} t={t} must yield ≥ 1 chunk");
+            let c = Chunks::by_weight(n, t, |v| v as u64);
+            assert_eq!(c.is_empty(), c.len() == 0);
+            assert!(!c.is_empty());
+        }
+    }
+
+    /// Cover-exactly + no-empty-chunk + chunk_of consistency for an
+    /// arbitrary Chunks instance.
+    fn assert_chunk_invariants(c: &Chunks, n: usize) {
+        assert_eq!(c.total(), n);
+        let mut covered = vec![false; n];
+        for i in 0..c.len() {
+            let r = c.range(i);
+            assert!(!r.is_empty(), "chunk {i} empty ({r:?})");
+            for v in r {
+                assert!(!covered[v], "vertex {v} covered twice");
+                covered[v] = true;
+                assert_eq!(c.chunk_of(v), i);
+            }
+        }
+        assert!(covered.iter().all(|&x| x), "not all vertices covered");
+    }
+
+    fn out_degrees(g: &Graph) -> Vec<u64> {
+        (0..g.num_vertices()).map(|v| g.out_degree(v as u32) as u64).collect()
+    }
+
+    #[test]
+    fn by_weight_invariants_on_ba_degrees() {
+        // Barabási–Albert: heavy right-skew (early vertices are hubs).
+        let g = ba::barabasi_albert(2048, 8, 7);
+        let deg = out_degrees(&g);
+        for t in [1usize, 2, 3, 4, 7, 8, 16] {
+            let c = Chunks::by_weight(deg.len(), t, |v| 1 + deg[v]);
+            assert_eq!(c.len(), t.min(deg.len()));
+            assert_chunk_invariants(&c, deg.len());
+        }
+    }
+
+    #[test]
+    fn by_weight_invariants_on_rmat_degrees() {
+        let g = rmat::rmat(2048, 16 * 2048, 0.57, 0.19, 0.19, 11);
+        let deg = out_degrees(&g);
+        for t in [2usize, 4, 8, 16] {
+            let c = Chunks::by_weight(deg.len(), t, |v| 1 + deg[v]);
+            assert_chunk_invariants(&c, deg.len());
+        }
+    }
+
+    #[test]
+    fn by_weight_balances_skewed_weights() {
+        // A BA hub chunk under vertex-balanced splitting carries far
+        // more than total/t weight; by_weight must keep every chunk
+        // within one max-weight vertex of the ideal share.
+        let g = ba::barabasi_albert(4096, 16, 3);
+        let w: Vec<u64> = out_degrees(&g).iter().map(|d| 1 + d).collect();
+        let total: u128 = w.iter().map(|&x| x as u128).sum();
+        let w_max = *w.iter().max().unwrap() as u128;
+        let t = 8usize;
+        let c = Chunks::by_weight(w.len(), t, |v| w[v]);
+        for i in 0..c.len() {
+            let cw: u128 = c.range(i).map(|v| w[v] as u128).sum();
+            assert!(
+                cw <= total / t as u128 + w_max + 1,
+                "chunk {i} weight {cw} exceeds ideal {} + max {w_max}",
+                total / t as u128
+            );
+        }
+    }
+
+    #[test]
+    fn by_weight_uniform_weights_match_vertex_split_sizes() {
+        // With uniform weights the degree-balanced split degenerates to
+        // (approximately) the vertex-balanced one.
+        let c = Chunks::by_weight(1000, 4, |_| 1);
+        for i in 0..4 {
+            assert_eq!(c.range(i).len(), 250);
+        }
+    }
+
+    #[test]
+    fn by_weight_zero_weights_are_clamped() {
+        // All-zero weights must not produce empty or short coverage.
+        let c = Chunks::by_weight(10, 3, |_| 0);
+        assert_chunk_invariants(&c, 10);
+    }
+
+    #[test]
+    fn by_weight_single_hub_does_not_starve_tail_chunks() {
+        // One vertex carries ~all the weight; the remaining chunks must
+        // still each receive at least one vertex.
+        let c = Chunks::by_weight(100, 4, |v| if v == 0 { 1_000_000 } else { 1 });
+        assert_chunk_invariants(&c, 100);
+        assert_eq!(c.range(0), 0..1, "hub chunk should stop right after the hub");
     }
 }

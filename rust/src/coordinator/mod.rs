@@ -1,14 +1,14 @@
-//! Execution coordination: vertex chunking, the barrier-phased worker
-//! engine, and convergence detection.
+//! Execution coordination primitives: vertex chunking and convergence
+//! detection, plus a one-shot parallel map ([`run_chunked`]) for code
+//! that does not need the persistent-worker superstep protocol.
 //!
 //! The paper's C/C++ implementation "balances the vertices among working
 //! threads via allocating each subset of vertices to a separate thread"
-//! (§V-C): vertices are split into contiguous chunks of ~|V|/n and each
-//! chunk is pinned to one worker. Within a step the asynchronous model
-//! lets workers free-run over shared atomics; a lightweight barrier
-//! separates the action/demand phase from the migrate/learn phase, and
-//! the synchronous (Giraph-style) model additionally freezes label
-//! snapshots per step.
+//! (§V-C): vertices are split into contiguous chunks and each chunk is
+//! pinned to one worker. [`Chunks`] owns that split (vertex- or
+//! degree-balanced); the persistent worker pool, barrier protocol and
+//! snapshot machinery that drive a full partitioning run live in
+//! [`crate::engine`].
 
 pub mod chunks;
 pub mod convergence;
@@ -16,14 +16,14 @@ pub mod convergence;
 pub use chunks::Chunks;
 pub use convergence::ConvergenceDetector;
 
-use crossbeam_utils::thread as cb_thread;
-
 /// Run `worker(chunk_index, chunk_range)` on `chunks.len()` scoped
 /// threads and wait for all of them. Panics propagate.
 ///
-/// This is the engine the partitioners drive; it is deliberately dumb —
-/// all interesting state lives in the shared structures the closures
-/// capture (DESIGN.md §6).
+/// This is deliberately dumb — all interesting state lives in the shared
+/// structures the closures capture. Partitioners do **not** use this:
+/// they run on [`crate::engine::run`], which keeps workers alive across
+/// steps. No in-crate caller remains; this stays as a small,
+/// unit-tested public utility for one-shot parallel sweeps.
 pub fn run_chunked<F>(chunks: &Chunks, worker: F)
 where
     F: Fn(usize, std::ops::Range<usize>) + Sync,
@@ -33,14 +33,13 @@ where
         worker(0, chunks.range(0));
         return;
     }
-    cb_thread::scope(|s| {
+    std::thread::scope(|s| {
         for c in 0..chunks.len() {
             let worker = &worker;
             let range = chunks.range(c);
-            s.spawn(move |_| worker(c, range));
+            s.spawn(move || worker(c, range));
         }
-    })
-    .expect("worker thread panicked");
+    });
 }
 
 #[cfg(test)]

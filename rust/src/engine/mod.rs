@@ -1,0 +1,522 @@
+//! Shared vertex-program execution engine — the superstep runtime every
+//! partitioner plugs into.
+//!
+//! The paper's core framing is vertex-centric: "each vertex is assigned
+//! an autonomous agent" that repeatedly senses its neighbourhood and
+//! acts. Spinner (Martella et al., arXiv:1404.3861) shows the same
+//! computation expressed as a reusable *vertex program* over a BSP
+//! runtime; Prioritized Restreaming (Awadelkarim & Ugander,
+//! arXiv:2007.03131) shows vertex ordering/assignment policy is a
+//! first-class lever of its own. This module factors both ideas out of
+//! the individual partitioners:
+//!
+//! * [`VertexProgram`] — the algorithm: a phase-A (action/demand) hook,
+//!   a phase-B (score/migrate/learn) hook, a per-worker scratch factory,
+//!   and two coordinator-side hooks that freeze per-step data.
+//! * [`run`] — the runtime: persistent workers (one per contiguous
+//!   chunk), the four-barrier step protocol, the
+//!   [`ExecutionModel`]::{Asynchronous, Synchronous} snapshot machinery,
+//!   per-step aggregate collection, trace recording and
+//!   convergence-driven halting.
+//!
+//! ## Step protocol
+//!
+//! Per step, coordinator (`==`) and the `t` workers (`--`) meet at four
+//! barriers:
+//!
+//! ```text
+//! == reset demand; freeze snapshots (sync mode); prepare_phase_a
+//! W1 ─────────────────────────────────────────────────────────────
+//! -- phase_a over own chunk (action selection, demand registration)
+//! W2 ─────────────────────────────────────────────────────────────
+//! == prepare_phase_b (e.g. freeze migration probabilities)
+//! W2b ────────────────────────────────────────────────────────────
+//! -- phase_b over own chunk (score, migrate, learn); send StepStats
+//! W3 ─────────────────────────────────────────────────────────────
+//! == aggregate stats; trace; convergence check
+//! ```
+//!
+//! Workers stay alive across the whole run: no thread-spawn cost inside
+//! the step loop, and per-worker scratch is built *on* the worker
+//! thread, so `!Send` resources (PJRT executable handles) can live in
+//! it.
+//!
+//! ## Scheduling
+//!
+//! Chunk boundaries come from [`crate::config::Schedule`]: the paper's
+//! vertex-balanced |V|/n split, or the degree-balanced split that keeps
+//! a power-law hub chunk from serializing the step barrier (DESIGN.md
+//! §Scheduler).
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{mpsc, Arc, Barrier, Mutex};
+
+use crate::config::{ExecutionModel, RevolverConfig, Schedule};
+use crate::coordinator::{Chunks, ConvergenceDetector};
+use crate::graph::Graph;
+use crate::metrics::quality;
+use crate::metrics::trace::{RunTrace, TracePoint};
+use crate::partition::{DemandTracker, InitialAssignment, PartitionState};
+use crate::partitioners::PartitionOutput;
+use crate::util::rng::Rng;
+use crate::util::Stopwatch;
+use crate::VertexId;
+
+/// Per-worker aggregates reported from the phase hooks and reduced by
+/// the coordinator each step (replaces ad-hoc bit-cast atomics).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StepStats {
+    /// Σ over own vertices of the convergence score contribution.
+    pub score_sum: f64,
+    /// Vertices of the own chunk migrated this step.
+    pub migrations: u64,
+}
+
+impl StepStats {
+    pub fn merged(self, other: StepStats) -> StepStats {
+        StepStats {
+            score_sum: self.score_sum + other.score_sum,
+            migrations: self.migrations + other.migrations,
+        }
+    }
+}
+
+/// Per-step frozen snapshots for the synchronous execution model
+/// (empty vectors in asynchronous mode).
+#[derive(Default)]
+struct StepSnapshots {
+    labels: Vec<u32>,
+    published: Vec<u32>,
+}
+
+/// Read-side view a vertex program gets during a step. Unifies the
+/// live-vs-frozen read paths the two execution models need: in
+/// asynchronous mode reads hit the shared atomics, in synchronous mode
+/// the per-step snapshot.
+pub struct StepCtx<'a> {
+    pub graph: &'a Graph,
+    pub state: &'a PartitionState,
+    pub demand: &'a DemandTracker,
+    /// 0-based step index.
+    pub step: u32,
+    published: &'a [AtomicU32],
+    snap: &'a StepSnapshots,
+    sync: bool,
+}
+
+impl StepCtx<'_> {
+    /// ψ(u): the partition label of `u` — live (async) or step-frozen
+    /// (sync).
+    #[inline]
+    pub fn label(&self, u: VertexId) -> u32 {
+        if self.sync {
+            self.snap.labels[u as usize]
+        } else {
+            self.state.label(u)
+        }
+    }
+
+    /// The per-vertex published value (λ(u) for Revolver) — live (async)
+    /// or step-frozen (sync).
+    #[inline]
+    pub fn published(&self, u: VertexId) -> u32 {
+        if self.sync {
+            self.snap.published[u as usize]
+        } else {
+            self.published[u as usize].load(Ordering::Relaxed)
+        }
+    }
+
+    /// Publish `val` for vertex `v`. Writes always hit the live array;
+    /// synchronous-mode *readers* keep seeing the frozen value until the
+    /// next step.
+    #[inline]
+    pub fn publish(&self, v: VertexId, val: u32) {
+        self.published[v as usize].store(val, Ordering::Relaxed);
+    }
+}
+
+/// A vertex-centric partitioning algorithm, expressed against the
+/// engine's superstep protocol. Implementations hold only configuration;
+/// all mutable per-run state lives in the engine (shared) or in
+/// [`VertexProgram::Scratch`] (per worker).
+pub trait VertexProgram: Sync {
+    /// Per-worker mutable scratch. Built on the worker thread itself
+    /// ([`VertexProgram::make_scratch`]), so it may hold `!Send`
+    /// resources such as PJRT executable handles.
+    type Scratch;
+    /// Data the coordinator freezes before phase A of each step (e.g.
+    /// Spinner's per-step penalty vector). `()` when nothing is frozen.
+    type PhaseA: Send + Sync;
+    /// Data the coordinator freezes between the phases (e.g. Spinner's
+    /// migration probabilities, which depend on complete demand).
+    type PhaseB: Send + Sync;
+
+    /// Execution model to run under. Programs may override the config —
+    /// Spinner is inherently BSP and always returns `Synchronous`.
+    fn execution(&self) -> ExecutionModel;
+
+    /// Salt XORed into `cfg.seed` for this program's RNG streams.
+    fn rng_salt(&self) -> u64;
+
+    /// Initial per-vertex published value (λ(v) for Revolver).
+    fn init_published(&self, v: VertexId, state: &PartitionState) -> u32;
+
+    /// Build scratch for `chunk`; called once, on the worker thread.
+    fn make_scratch(&self, chunk: Range<usize>) -> Self::Scratch;
+
+    /// Coordinator hook before phase A (workers are parked at W1).
+    fn prepare_phase_a(&self, g: &Graph, state: &PartitionState, step: u32) -> Self::PhaseA;
+
+    /// Coordinator hook between the phases (workers parked at W2b);
+    /// sees the step's complete migration demand.
+    fn prepare_phase_b(
+        &self,
+        g: &Graph,
+        state: &PartitionState,
+        demand: &DemandTracker,
+        step: u32,
+    ) -> Self::PhaseB;
+
+    /// Phase A over the worker's chunk: action selection / candidate
+    /// registration / demand accounting (§IV-D.1–2).
+    fn phase_a(
+        &self,
+        ctx: &StepCtx<'_>,
+        frozen: &Self::PhaseA,
+        scratch: &mut Self::Scratch,
+        chunk: Range<usize>,
+        rng: &mut Rng,
+    ) -> StepStats;
+
+    /// Phase B over the worker's chunk: score / migrate / learn
+    /// (§IV-D.3–7).
+    fn phase_b(
+        &self,
+        ctx: &StepCtx<'_>,
+        frozen: &Self::PhaseB,
+        scratch: &mut Self::Scratch,
+        chunk: Range<usize>,
+        rng: &mut Rng,
+    ) -> StepStats;
+}
+
+/// Build the chunk layout `cfg` asks for.
+pub fn chunks_for(g: &Graph, cfg: &RevolverConfig) -> Chunks {
+    let n = g.num_vertices();
+    match cfg.schedule {
+        Schedule::Vertex => Chunks::new(n, cfg.threads),
+        // 1 + deg: fixed per-vertex cost plus the CSR-bound edge work.
+        Schedule::Degree => {
+            Chunks::by_weight(n, cfg.threads, |v| 1 + g.out_degree(v as VertexId) as u64)
+        }
+    }
+}
+
+/// Run `program` over `g` to completion: max_steps, or
+/// convergence-driven halt (§IV-D.9), whichever first.
+pub fn run<P: VertexProgram>(g: &Graph, cfg: &RevolverConfig, program: &P) -> PartitionOutput {
+    let sw = Stopwatch::start();
+    let k = cfg.parts;
+    let n = g.num_vertices();
+    let sync = program.execution() == ExecutionModel::Synchronous;
+
+    let state = PartitionState::new(g, k, cfg.epsilon, InitialAssignment::Random(cfg.seed));
+    let chunks = chunks_for(g, cfg);
+    let t = chunks.len();
+    let base_rng = Rng::new(cfg.seed ^ program.rng_salt());
+
+    let published: Vec<AtomicU32> = (0..n)
+        .map(|v| AtomicU32::new(program.init_published(v as VertexId, &state)))
+        .collect();
+    let demand = DemandTracker::new(k);
+
+    let barrier = Barrier::new(t + 1);
+    let stop = AtomicBool::new(false);
+    // Coordinator → worker hand-off slots, re-published every step.
+    let snap_slot: Mutex<Arc<StepSnapshots>> = Mutex::new(Arc::new(StepSnapshots::default()));
+    let a_slot: Mutex<Option<Arc<P::PhaseA>>> = Mutex::new(None);
+    let b_slot: Mutex<Option<Arc<P::PhaseB>>> = Mutex::new(None);
+    // Worker → coordinator aggregates (one message per worker per step).
+    let (stats_tx, stats_rx) = mpsc::channel::<(usize, StepStats)>();
+
+    let mut detector = ConvergenceDetector::new(cfg.halt_theta, cfg.halt_window);
+    let mut trace = RunTrace::default();
+    let mut executed_steps: u32 = 0;
+
+    std::thread::scope(|scope| {
+        // ── Workers ──
+        for c in 0..t {
+            let range = chunks.range(c);
+            let (state, demand, published) = (&state, &demand, &published);
+            let (barrier, stop) = (&barrier, &stop);
+            let (snap_slot, a_slot, b_slot) = (&snap_slot, &a_slot, &b_slot);
+            let stats_tx = stats_tx.clone();
+            let base_rng = base_rng.clone();
+            scope.spawn(move || {
+                let mut scratch = program.make_scratch(range.clone());
+                let mut step: u64 = 0;
+                loop {
+                    barrier.wait(); // W1: step start (coordinator prepared)
+                    if stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let snap = snap_slot.lock().unwrap().clone();
+                    let frozen_a =
+                        a_slot.lock().unwrap().clone().expect("phase-A data published");
+                    let ctx = StepCtx {
+                        graph: g,
+                        state,
+                        demand,
+                        step: step as u32,
+                        published,
+                        snap: &snap,
+                        sync,
+                    };
+                    let mut rng = base_rng.fork(step * 2 * t as u64 + c as u64);
+                    let stats_a =
+                        program.phase_a(&ctx, &frozen_a, &mut scratch, range.clone(), &mut rng);
+                    barrier.wait(); // W2: all demand registered
+                    barrier.wait(); // W2b: coordinator froze phase-B data
+                    let frozen_b =
+                        b_slot.lock().unwrap().clone().expect("phase-B data published");
+                    let mut rng = base_rng.fork((step * 2 + 1) * t as u64 + c as u64);
+                    let stats_b =
+                        program.phase_b(&ctx, &frozen_b, &mut scratch, range.clone(), &mut rng);
+                    stats_tx
+                        .send((c, stats_a.merged(stats_b)))
+                        .expect("coordinator alive");
+                    barrier.wait(); // W3: step done; coordinator aggregates
+                    step += 1;
+                }
+            });
+        }
+        drop(stats_tx); // workers hold their own clones
+
+        // ── Coordinator ──
+        for step in 0..cfg.max_steps {
+            executed_steps = step + 1;
+            demand.reset();
+            if sync {
+                *snap_slot.lock().unwrap() = Arc::new(StepSnapshots {
+                    labels: state.labels_snapshot(),
+                    published: published.iter().map(|p| p.load(Ordering::Relaxed)).collect(),
+                });
+            }
+            *a_slot.lock().unwrap() = Some(Arc::new(program.prepare_phase_a(g, &state, step)));
+            barrier.wait(); // W1
+            barrier.wait(); // W2
+            *b_slot.lock().unwrap() =
+                Some(Arc::new(program.prepare_phase_b(g, &state, &demand, step)));
+            barrier.wait(); // W2b
+            barrier.wait(); // W3
+
+            // Deterministic reduction: fill per-worker slots, then fold
+            // in chunk order (f64 addition order is fixed run-to-run).
+            let mut parts = vec![StepStats::default(); t];
+            for _ in 0..t {
+                let (c, s) = stats_rx.recv().expect("worker alive");
+                parts[c] = s;
+            }
+            let totals = parts
+                .into_iter()
+                .fold(StepStats::default(), StepStats::merged);
+            let mean_score = totals.score_sum / n as f64;
+
+            if cfg.trace_every > 0 && step % cfg.trace_every == 0 {
+                let labels = state.labels_snapshot();
+                trace.push(TracePoint {
+                    step,
+                    local_edges: quality::local_edges(g, &labels),
+                    max_normalized_load: quality::max_normalized_load(g, &labels, k),
+                    mean_score,
+                    migrations: totals.migrations,
+                });
+            }
+
+            if detector.observe(mean_score) {
+                trace.converged_at = Some(step);
+                break;
+            }
+        }
+        stop.store(true, Ordering::Release);
+        barrier.wait(); // release workers into the stop check
+    });
+
+    let labels = state.labels_snapshot();
+    debug_assert!(state.check_load_invariant().is_ok());
+    if trace.points.is_empty() || cfg.trace_every == 0 {
+        let q = quality::evaluate(g, &labels, k);
+        trace.push(TracePoint {
+            step: executed_steps.max(1) - 1,
+            local_edges: q.local_edges,
+            max_normalized_load: q.max_normalized_load,
+            mean_score: 0.0,
+            migrations: 0,
+        });
+    }
+    trace.wall_time_s = sw.elapsed_s();
+    PartitionOutput { labels, trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use std::sync::atomic::AtomicUsize;
+
+    fn ring_graph(n: usize) -> Graph {
+        let mut b = GraphBuilder::new(n);
+        for v in 0..n as u32 {
+            b.edge(v, (v + 1) % n as u32);
+        }
+        b.build()
+    }
+
+    fn cfg(n_threads: usize, steps: u32) -> RevolverConfig {
+        RevolverConfig {
+            parts: 4,
+            threads: n_threads,
+            max_steps: steps,
+            halt_window: u32::MAX,
+            seed: 5,
+            ..Default::default()
+        }
+    }
+
+    /// Counts phase visits; publishes `step + 1` in phase A and (in sync
+    /// mode) asserts cross-chunk reads still see the frozen value.
+    struct ProbeProgram {
+        execution: ExecutionModel,
+        a_visits: AtomicUsize,
+        b_visits: AtomicUsize,
+        n: usize,
+    }
+
+    impl ProbeProgram {
+        fn new(execution: ExecutionModel, n: usize) -> Self {
+            ProbeProgram {
+                execution,
+                a_visits: AtomicUsize::new(0),
+                b_visits: AtomicUsize::new(0),
+                n,
+            }
+        }
+    }
+
+    impl VertexProgram for ProbeProgram {
+        type Scratch = ();
+        type PhaseA = u32; // the step, to cross-check ctx.step
+        type PhaseB = u32;
+
+        fn execution(&self) -> ExecutionModel {
+            self.execution
+        }
+        fn rng_salt(&self) -> u64 {
+            0xBEEF
+        }
+        fn init_published(&self, _v: VertexId, _state: &PartitionState) -> u32 {
+            0
+        }
+        fn make_scratch(&self, _chunk: Range<usize>) {}
+        fn prepare_phase_a(&self, _g: &Graph, _state: &PartitionState, step: u32) -> u32 {
+            step
+        }
+        fn prepare_phase_b(
+            &self,
+            _g: &Graph,
+            _state: &PartitionState,
+            _demand: &DemandTracker,
+            step: u32,
+        ) -> u32 {
+            step
+        }
+
+        fn phase_a(
+            &self,
+            ctx: &StepCtx<'_>,
+            frozen: &u32,
+            _scratch: &mut (),
+            chunk: Range<usize>,
+            _rng: &mut Rng,
+        ) -> StepStats {
+            assert_eq!(*frozen, ctx.step);
+            for v in chunk {
+                self.a_visits.fetch_add(1, Ordering::Relaxed);
+                ctx.publish(v as VertexId, ctx.step + 1);
+            }
+            StepStats::default()
+        }
+
+        fn phase_b(
+            &self,
+            ctx: &StepCtx<'_>,
+            frozen: &u32,
+            _scratch: &mut (),
+            chunk: Range<usize>,
+            _rng: &mut Rng,
+        ) -> StepStats {
+            assert_eq!(*frozen, ctx.step);
+            let mut visited = 0u64;
+            for v in chunk.clone() {
+                self.b_visits.fetch_add(1, Ordering::Relaxed);
+                // Reads of vertices *outside* the own chunk exercise the
+                // snapshot machinery: in sync mode every read must see
+                // the value frozen at step start — i.e. last step's
+                // publish (`step`), not this step's (`step + 1`).
+                let other = (v + chunk.len()) % self.n;
+                if self.execution == ExecutionModel::Synchronous {
+                    assert_eq!(
+                        ctx.published(other as VertexId),
+                        ctx.step,
+                        "sync read must be frozen"
+                    );
+                }
+                visited += 1;
+            }
+            StepStats { score_sum: visited as f64, migrations: 0 }
+        }
+    }
+
+    #[test]
+    fn engine_visits_every_vertex_each_phase() {
+        let g = ring_graph(103);
+        let p = ProbeProgram::new(ExecutionModel::Asynchronous, 103);
+        let out = run(&g, &cfg(3, 4), &p);
+        assert_eq!(p.a_visits.load(Ordering::Relaxed), 4 * 103);
+        assert_eq!(p.b_visits.load(Ordering::Relaxed), 4 * 103);
+        assert_eq!(out.labels.len(), 103);
+        assert_eq!(out.trace.steps(), 4);
+    }
+
+    #[test]
+    fn sync_mode_freezes_published_reads() {
+        let g = ring_graph(64);
+        let p = ProbeProgram::new(ExecutionModel::Synchronous, 64);
+        // The assertions live inside phase_b; 2 workers force real
+        // cross-chunk interleavings.
+        run(&g, &cfg(2, 5), &p);
+        assert_eq!(p.b_visits.load(Ordering::Relaxed), 5 * 64);
+    }
+
+    #[test]
+    fn degree_schedule_visits_every_vertex() {
+        let g = ring_graph(97);
+        let p = ProbeProgram::new(ExecutionModel::Asynchronous, 97);
+        let mut c = cfg(4, 2);
+        c.schedule = Schedule::Degree;
+        run(&g, &c, &p);
+        assert_eq!(p.a_visits.load(Ordering::Relaxed), 2 * 97);
+        assert_eq!(p.b_visits.load(Ordering::Relaxed), 2 * 97);
+    }
+
+    #[test]
+    fn single_worker_runs_all_chunks_inline() {
+        let g = ring_graph(50);
+        let p = ProbeProgram::new(ExecutionModel::Asynchronous, 50);
+        let out = run(&g, &cfg(1, 3), &p);
+        assert_eq!(p.a_visits.load(Ordering::Relaxed), 3 * 50);
+        assert!(out.labels.iter().all(|&l| l < 4));
+    }
+}

@@ -6,19 +6,32 @@
 //! partitioner where every vertex owns a **weighted learning automaton**
 //! trained by a **normalized label-propagation** objective.
 //!
-//! ## Architecture (three layers)
+//! ## Architecture (four layers)
 //!
-//! * **L3 (this crate)** — the coordinator: graph substrate, partition
-//!   state, the four partitioners (Revolver / Spinner / Hash / Range),
-//!   the asynchronous chunked thread engine, metrics, config and CLI.
+//! * **L4 — algorithms** ([`partitioners`]) — the four partitioners
+//!   (Revolver / Spinner / Hash / Range). The iterative ones are pure
+//!   [`engine::VertexProgram`]s: per-vertex math plus the per-step data
+//!   they need frozen, and nothing else.
+//! * **L3 — execution engine** ([`engine`], [`coordinator`],
+//!   [`partition`]) — the shared superstep runtime: persistent workers
+//!   over contiguous vertex chunks (vertex- or degree-balanced, see
+//!   [`config::Schedule`]), the four-barrier step protocol, the
+//!   async/sync snapshot machinery, per-step aggregate reduction, trace
+//!   recording and convergence-driven halting — plus the graph
+//!   substrate, shared partition state, metrics, config and CLI.
 //! * **L2 (python/compile/model.py)** — the dense per-batch numeric step
 //!   (normalized LP scores, signal construction, weighted-LA update) as
 //!   a JAX computation, AOT-lowered to HLO text.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the LA update
 //!   (eqs. 8–9) and LP scoring (eqs. 10–12).
 //!
+//! New partitioners implement [`engine::VertexProgram`] and inherit the
+//! thread pool, scheduling, snapshots and halting for free — no thread
+//! plumbing is ever written in an algorithm module (DESIGN.md §Engine).
+//!
 //! The [`runtime`] module loads the AOT artifacts via PJRT (the `xla`
-//! crate) so Revolver's probability updates can run through the compiled
+//! crate, gated behind the `xla` cargo feature; stubbed otherwise) so
+//! Revolver's probability updates can run through the compiled
 //! XLA path (`--engine xla`); the default pure-Rust path (`--engine
 //! native`) is asserted numerically equivalent in integration tests.
 //! Python never runs on the request path.
@@ -40,6 +53,7 @@
 
 pub mod config;
 pub mod coordinator;
+pub mod engine;
 pub mod graph;
 pub mod la;
 pub mod lp;

@@ -59,6 +59,7 @@ const USAGE: &str = "usage: revolver <partition|sweep|convergence|stats|generate
     --parts k             number of partitions (default 8)
     --seed S              RNG seed (default 42)
     --threads T           worker threads
+    --schedule <vertex|degree>  chunk layout (degree balances by out-degree)
     --config file.toml    load RevolverConfig from file
   partition:  --algorithm <revolver|spinner|hash|range> --engine <native|xla>
   sweep:      --graphs a,b,c --algorithms a,b --parts 2,4,8 --runs R --out dir
@@ -82,6 +83,7 @@ fn config_from(args: &mut Args) -> Result<RevolverConfig> {
     cfg.alpha = args.get_or("alpha", cfg.alpha)?;
     cfg.beta = args.get_or("beta", cfg.beta)?;
     cfg.threads = args.get_or("threads", cfg.threads)?;
+    cfg.schedule = args.get_or("schedule", cfg.schedule)?;
     cfg.seed = args.get_or("seed", cfg.seed)?;
     cfg.trace_every = args.get_or("trace-every", cfg.trace_every)?;
     if let Some(engine) = args.get("engine") {

@@ -21,12 +21,11 @@
 //! §V-H.2). **Synchronous** mode (ablation E4) freezes label/λ/load
 //! snapshots per step, Giraph-style.
 //!
-//! Threading: `threads` persistent workers (one per contiguous vertex
-//! chunk, the paper's |V|/n layout) synchronized by a barrier protocol —
-//! three barriers per step (step-start, post-action/demand, step-end).
-//! Persistent workers matter for two reasons: no thread-spawn cost in
-//! the 290-step loop, and the PJRT executable handles (`--engine xla`)
-//! are `!Send`, so each worker constructs and owns its own engine.
+//! Execution is delegated to [`crate::engine`]: steps 1–2 are the
+//! engine's phase A, steps 3–7 its phase B, and λ(v) rides the engine's
+//! per-vertex *published* channel (so the sync-mode freeze applies to it
+//! automatically). This module only contains the per-vertex math; all
+//! thread orchestration, snapshotting and halting live in the engine.
 //!
 //! Eq. (13) note: the printed equation mixes λ(v)/λ(u) and ψ indices
 //! inconsistently; we implement the reading consistent with §IV-C step 4
@@ -36,23 +35,19 @@
 //! action agrees, else 1/Σŵ while λ(u) has migration headroom. DESIGN.md
 //! §Fidelity-notes (F5–F7) records this and the other disambiguations.
 
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
-use std::sync::{Arc, Barrier, Mutex};
+use std::ops::Range;
 
 use super::{PartitionOutput, Partitioner};
 use crate::config::{Engine, ExecutionModel, RevolverConfig};
-use crate::coordinator::{Chunks, ConvergenceDetector};
+use crate::engine::{self, StepCtx, StepStats, VertexProgram};
 use crate::graph::Graph;
 use crate::la::signal::build_signals_into;
 use crate::la::weighted::WeightedLa;
 use crate::la::{roulette, Signal};
 use crate::lp::{neighbor_histogram, normalized as nlp};
-use crate::metrics::quality;
-use crate::metrics::trace::{RunTrace, TracePoint};
-use crate::partition::{DemandTracker, InitialAssignment, PartitionState};
+use crate::partition::{DemandTracker, PartitionState};
 use crate::runtime::XlaStepEngine;
 use crate::util::rng::Rng;
-use crate::util::Stopwatch;
 use crate::VertexId;
 
 /// How many vertices share one load/π snapshot in the scoring loop (and
@@ -80,6 +75,10 @@ impl Revolver {
 struct ChunkState {
     /// Flat (chunk_len × k) probability rows.
     probs: Vec<f32>,
+    /// The action each of the chunk's LAs selected this step (phase A →
+    /// phase B hand-off; only ever read for own vertices, so it lives in
+    /// scratch rather than a shared array).
+    selected: Vec<u32>,
     start: usize,
     k: usize,
     // Scratch (k-sized).
@@ -97,7 +96,7 @@ struct ChunkState {
 }
 
 impl ChunkState {
-    fn new(range: std::ops::Range<usize>, k: usize) -> Self {
+    fn new(range: Range<usize>, k: usize) -> Self {
         let len = range.len();
         let mut probs = vec![0.0f32; len * k];
         for row in probs.chunks_mut(k) {
@@ -105,6 +104,7 @@ impl ChunkState {
         }
         ChunkState {
             probs,
+            selected: vec![0; len],
             start: range.start,
             k,
             hist: vec![0.0; k],
@@ -119,18 +119,136 @@ impl ChunkState {
     }
 
     #[inline]
-    fn row_range(&self, v: usize) -> std::ops::Range<usize> {
+    fn row_range(&self, v: usize) -> Range<usize> {
         let i = (v - self.start) * self.k;
         i..i + self.k
     }
+
+    #[inline]
+    fn selected_of(&self, v: usize) -> u32 {
+        self.selected[v - self.start]
+    }
 }
 
-/// Per-step frozen snapshots for the synchronous execution model
-/// (empty vectors in asynchronous mode).
-#[derive(Default)]
-struct StepSnapshots {
-    labels: Vec<u32>,
-    lambda: Vec<u32>,
+/// Revolver as a [`VertexProgram`]: phase A draws actions and registers
+/// demand, phase B scores/migrates/learns (natively or through the XLA
+/// artifacts).
+struct RevolverProgram<'a> {
+    cfg: &'a RevolverConfig,
+}
+
+impl VertexProgram for RevolverProgram<'_> {
+    type Scratch = (ChunkState, Option<XlaStepEngine>);
+    type PhaseA = ();
+    type PhaseB = ();
+
+    fn execution(&self) -> ExecutionModel {
+        self.cfg.execution
+    }
+
+    fn rng_salt(&self) -> u64 {
+        0x5245564F // "REVO"
+    }
+
+    fn init_published(&self, v: VertexId, state: &PartitionState) -> u32 {
+        // λ(v) starts at the initial label.
+        state.label(v)
+    }
+
+    fn make_scratch(&self, chunk: Range<usize>) -> Self::Scratch {
+        // PJRT handles are !Send: construct inside the worker.
+        let eng = match self.cfg.engine {
+            Engine::Xla => Some(
+                XlaStepEngine::load(
+                    &self.cfg.artifacts_dir,
+                    BATCH,
+                    self.cfg.parts,
+                    self.cfg.alpha,
+                    self.cfg.beta,
+                )
+                .expect("failed to load XLA artifacts (run `make artifacts`)"),
+            ),
+            Engine::Native => None,
+        };
+        (ChunkState::new(chunk, self.cfg.parts), eng)
+    }
+
+    fn prepare_phase_a(&self, _g: &Graph, _state: &PartitionState, _step: u32) {}
+
+    fn prepare_phase_b(
+        &self,
+        _g: &Graph,
+        _state: &PartitionState,
+        _demand: &DemandTracker,
+        _step: u32,
+    ) {
+    }
+
+    fn phase_a(
+        &self,
+        ctx: &StepCtx<'_>,
+        _frozen: &(),
+        scratch: &mut Self::Scratch,
+        chunk: Range<usize>,
+        rng: &mut Rng,
+    ) -> StepStats {
+        let cs = &mut scratch.0;
+        // ── Action selection + demand (§IV-D.1/2) ──
+        for v in chunk {
+            let row = &cs.probs[cs.row_range(v)];
+            let a = roulette::spin(row, rng) as u32;
+            cs.selected[v - cs.start] = a;
+            if a != ctx.state.label(v as VertexId) {
+                ctx.demand.add(a as usize, ctx.graph.out_degree(v as VertexId));
+            }
+        }
+        StepStats::default()
+    }
+
+    fn phase_b(
+        &self,
+        ctx: &StepCtx<'_>,
+        _frozen: &(),
+        scratch: &mut Self::Scratch,
+        chunk: Range<usize>,
+        rng: &mut Rng,
+    ) -> StepStats {
+        let (cs, eng) = scratch;
+        let k = cs.k;
+        let mut stats = StepStats::default();
+        let mut batch_start = chunk.start;
+        while batch_start < chunk.end {
+            let batch_end = (batch_start + BATCH).min(chunk.end);
+            // One load/π snapshot per batch (async staleness tolerance;
+            // exactly the artifact's granularity).
+            ctx.state.loads_into(&mut cs.loads);
+            nlp::penalty_into(&cs.loads, ctx.state.system_capacity() as f32, &mut cs.pi);
+            let cap = ctx.state.capacity() as f32;
+            for l in 0..k {
+                cs.headroom[l] = ctx.demand.get(l) <= 0 || cs.loads[l] < cap;
+            }
+            match eng.as_mut() {
+                Some(eng) => {
+                    stats.score_sum += xla_batch(
+                        ctx,
+                        cs,
+                        eng,
+                        batch_start..batch_end,
+                        rng,
+                        &mut stats.migrations,
+                    );
+                }
+                None => {
+                    for v in batch_start..batch_end {
+                        stats.score_sum +=
+                            native_vertex(ctx, cs, v, rng, &mut stats.migrations, self.cfg);
+                    }
+                }
+            }
+            batch_start = batch_end;
+        }
+        stats
+    }
 }
 
 impl Partitioner for Revolver {
@@ -139,268 +257,48 @@ impl Partitioner for Revolver {
     }
 
     fn partition(&self, g: &Graph) -> PartitionOutput {
-        let sw = Stopwatch::start();
-        let cfg = &self.cfg;
-        let k = cfg.parts;
-        let n = g.num_vertices();
-        let sync = cfg.execution == ExecutionModel::Synchronous;
-
-        let state =
-            PartitionState::new(g, k, cfg.epsilon, InitialAssignment::Random(cfg.seed));
-        let chunks = Chunks::new(n, cfg.threads);
-        let t = chunks.len();
-        let base_rng = Rng::new(cfg.seed ^ 0x5245564F); // "REVO"
-
-        // λ(v): the argmax-score label each vertex publishes (§IV-D.3),
-        // initialized to the starting labels.
-        let lambda: Vec<AtomicU32> =
-            (0..n).map(|v| AtomicU32::new(state.label(v as u32))).collect();
-        // The action each LA selected this step.
-        let selected: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
-        let demand = DemandTracker::new(k);
-
         // Probe the XLA engine on the main thread first: a worker panic
         // behind the barrier protocol would deadlock the coordinator, so
         // surface configuration errors (missing artifacts, wrong k,
         // mismatched alpha/beta) eagerly and cleanly here.
-        if cfg.engine == Engine::Xla {
-            XlaStepEngine::load(&cfg.artifacts_dir, BATCH, k, cfg.alpha, cfg.beta)
-                .expect("failed to load XLA artifacts (run `make artifacts`)");
+        if self.cfg.engine == Engine::Xla {
+            XlaStepEngine::load(
+                &self.cfg.artifacts_dir,
+                BATCH,
+                self.cfg.parts,
+                self.cfg.alpha,
+                self.cfg.beta,
+            )
+            .expect("failed to load XLA artifacts (run `make artifacts`)");
         }
-
-        let barrier = Barrier::new(t + 1);
-        let stop = AtomicBool::new(false);
-        let snapshots: Mutex<Arc<StepSnapshots>> =
-            Mutex::new(Arc::new(StepSnapshots::default()));
-        let score_parts: Vec<AtomicU64> = (0..t).map(|_| AtomicU64::new(0)).collect();
-        let migration_parts: Vec<AtomicU64> = (0..t).map(|_| AtomicU64::new(0)).collect();
-
-        let mut detector = ConvergenceDetector::new(cfg.halt_theta, cfg.halt_window);
-        let mut trace = RunTrace::default();
-        let mut executed_steps: u32 = 0;
-
-        crossbeam_utils::thread::scope(|scope| {
-            // ── Workers ──
-            for c in 0..t {
-                let range = chunks.range(c);
-                let (g, state, demand, lambda, selected) =
-                    (&g, &state, &demand, &lambda, &selected);
-                let (barrier, stop, snapshots) = (&barrier, &stop, &snapshots);
-                let (score_parts, migration_parts) = (&score_parts, &migration_parts);
-                let base_rng = base_rng.clone();
-                scope.spawn(move |_| {
-                    let mut cs = ChunkState::new(range.clone(), k);
-                    // PJRT handles are !Send: construct inside the worker.
-                    let mut eng: Option<XlaStepEngine> = match cfg.engine {
-                        Engine::Xla => Some(
-                            XlaStepEngine::load(
-                                &cfg.artifacts_dir,
-                                BATCH,
-                                k,
-                                cfg.alpha,
-                                cfg.beta,
-                            )
-                            .expect("failed to load XLA artifacts (run `make artifacts`)"),
-                        ),
-                        Engine::Native => None,
-                    };
-                    let mut step: u64 = 0;
-                    loop {
-                        barrier.wait(); // W1: step start (main prepared)
-                        if stop.load(Ordering::Acquire) {
-                            break;
-                        }
-                        let snap = snapshots.lock().unwrap().clone();
-
-                        // ── Phase A: action selection + demand (§IV-D.1/2) ──
-                        let mut rng = base_rng.fork(step * 2 * t as u64 + c as u64);
-                        for v in range.clone() {
-                            let row = &cs.probs[cs.row_range(v)];
-                            let a = roulette::spin(row, &mut rng) as u32;
-                            selected[v].store(a, Ordering::Relaxed);
-                            if a != state.label(v as VertexId) {
-                                demand.add(a as usize, g.out_degree(v as VertexId));
-                            }
-                        }
-                        barrier.wait(); // W2: all demand registered
-
-                        // ── Phase B: score, λ, migrate, learn (§IV-D.3–7) ──
-                        let mut rng =
-                            base_rng.fork((step * 2 + 1) * t as u64 + c as u64);
-                        let mut score_sum = 0.0f64;
-                        let mut migrations = 0u64;
-                        let mut batch_start = range.start;
-                        while batch_start < range.end {
-                            let batch_end = (batch_start + BATCH).min(range.end);
-                            // One load/π snapshot per batch (async
-                            // staleness tolerance; exactly the artifact's
-                            // granularity).
-                            state.loads_into(&mut cs.loads);
-                            nlp::penalty_into(
-                                &cs.loads,
-                                state.system_capacity() as f32,
-                                &mut cs.pi,
-                            );
-                            let cap = state.capacity() as f32;
-                            for l in 0..k {
-                                cs.headroom[l] =
-                                    demand.get(l) <= 0 || cs.loads[l] < cap;
-                            }
-                            match eng.as_mut() {
-                                Some(eng) => {
-                                    score_sum += xla_batch(
-                                        g,
-                                        &mut cs,
-                                        eng,
-                                        batch_start..batch_end,
-                                        state,
-                                        demand,
-                                        lambda,
-                                        selected,
-                                        &snap,
-                                        sync,
-                                        &mut rng,
-                                        &mut migrations,
-                                        cfg,
-                                    );
-                                }
-                                None => {
-                                    for v in batch_start..batch_end {
-                                        score_sum += native_vertex(
-                                            g,
-                                            &mut cs,
-                                            v,
-                                            state,
-                                            demand,
-                                            lambda,
-                                            selected,
-                                            &snap,
-                                            sync,
-                                            &mut rng,
-                                            &mut migrations,
-                                            cfg,
-                                        );
-                                    }
-                                }
-                            }
-                            batch_start = batch_end;
-                        }
-                        score_parts[c].store(score_sum.to_bits(), Ordering::Relaxed);
-                        migration_parts[c].store(migrations, Ordering::Relaxed);
-                        barrier.wait(); // W3: step done; main aggregates
-                        step += 1;
-                    }
-                });
-            }
-
-            // ── Coordinator (main thread) ──
-            let executed_steps = &mut executed_steps;
-            for step in 0..cfg.max_steps {
-                *executed_steps = step + 1;
-                demand.reset();
-                if sync {
-                    *snapshots.lock().unwrap() = Arc::new(StepSnapshots {
-                        labels: state.labels_snapshot(),
-                        lambda: lambda.iter().map(|l| l.load(Ordering::Relaxed)).collect(),
-                    });
-                }
-                barrier.wait(); // W1
-                barrier.wait(); // W2
-                barrier.wait(); // W3
-
-                let mean_score = score_parts
-                    .iter()
-                    .map(|s| f64::from_bits(s.load(Ordering::Relaxed)))
-                    .sum::<f64>()
-                    / n as f64;
-                let migrations: u64 =
-                    migration_parts.iter().map(|m| m.load(Ordering::Relaxed)).sum();
-
-                if cfg.trace_every > 0 && step % cfg.trace_every == 0 {
-                    let labels = state.labels_snapshot();
-                    trace.push(TracePoint {
-                        step,
-                        local_edges: quality::local_edges(g, &labels),
-                        max_normalized_load: quality::max_normalized_load(g, &labels, k),
-                        mean_score,
-                        migrations,
-                    });
-                }
-
-                if detector.observe(mean_score) {
-                    trace.converged_at = Some(step);
-                    break;
-                }
-            }
-            stop.store(true, Ordering::Release);
-            barrier.wait(); // release workers into the stop check
-        })
-        .expect("revolver worker panicked");
-
-        let labels = state.labels_snapshot();
-        debug_assert!(state.check_load_invariant().is_ok());
-        if trace.points.is_empty() || cfg.trace_every == 0 {
-            let q = quality::evaluate(g, &labels, k);
-            trace.push(TracePoint {
-                step: executed_steps.max(1) - 1,
-                local_edges: q.local_edges,
-                max_normalized_load: q.max_normalized_load,
-                mean_score: 0.0,
-                migrations: 0,
-            });
-        }
-        trace.wall_time_s = sw.elapsed_s();
-        PartitionOutput { labels, trace }
-    }
-}
-
-#[inline]
-fn read_label(state: &PartitionState, snap: &StepSnapshots, sync: bool, u: u32) -> u32 {
-    if sync {
-        snap.labels[u as usize]
-    } else {
-        state.label(u)
-    }
-}
-
-#[inline]
-fn read_lambda(lambda: &[AtomicU32], snap: &StepSnapshots, sync: bool, u: u32) -> u32 {
-    if sync {
-        snap.lambda[u as usize]
-    } else {
-        lambda[u as usize].load(Ordering::Relaxed)
+        engine::run(g, &self.cfg, &RevolverProgram { cfg: &self.cfg })
     }
 }
 
 /// Native per-vertex phase-B body. Returns the vertex's best score
 /// (its contribution to the convergence signal S).
-#[allow(clippy::too_many_arguments)]
 #[inline]
 fn native_vertex(
-    g: &Graph,
+    ctx: &StepCtx<'_>,
     cs: &mut ChunkState,
     v: usize,
-    state: &PartitionState,
-    demand: &DemandTracker,
-    lambda: &[AtomicU32],
-    selected: &[AtomicU32],
-    snap: &StepSnapshots,
-    sync: bool,
     rng: &mut Rng,
     migrations: &mut u64,
     cfg: &RevolverConfig,
 ) -> f64 {
     let vid = v as VertexId;
+    let g = ctx.graph;
+    let state = ctx.state;
 
     // 3. Normalized LP scores + λ(v) (eqs. 10-12).
     let wsum = neighbor_histogram(
         g.neighbors(vid),
         g.neighbor_weights(vid),
-        |u| read_label(state, snap, sync, u),
+        |u| ctx.label(u),
         &mut cs.hist,
     );
     let best = nlp::score_into(&cs.hist, wsum, &cs.pi, &mut cs.scores);
-    lambda[v].store(best as u32, Ordering::Relaxed);
+    ctx.publish(vid, best as u32);
 
     // 4. Migration (§IV-D.4): move to the sampled action when it beats
     // the current partition's score (the Spinner-candidate analogue —
@@ -408,13 +306,13 @@ fn native_vertex(
     // capacity gate admits it. Vertices sitting in an *over-capacity*
     // partition may leave unconditionally — draining b(l) > C back
     // under the eq. (1) bound takes precedence over locality.
-    let action = selected[v].load(Ordering::Relaxed);
+    let action = cs.selected_of(v);
     let current = state.label(vid);
     if action != current
         && (cs.scores[action as usize] >= cs.scores[current as usize]
             || state.remaining(current as usize) < 0.0)
     {
-        let p = demand.migration_probability(state, action as usize);
+        let p = ctx.demand.migration_probability(state, action as usize);
         if p > 0.0 && rng.next_f64() < p {
             state.migrate(vid, action, g.out_degree(vid));
             *migrations += 1;
@@ -435,7 +333,7 @@ fn native_vertex(
     cs.raw_w.copy_from_slice(&cs.scores);
     let wsum_inv = if wsum > 1e-12 { 1.0 / wsum } else { 0.0 };
     for (&u, &w_uv) in g.neighbors(vid).iter().zip(g.neighbor_weights(vid)) {
-        let lu = read_lambda(lambda, snap, sync, u) as usize;
+        let lu = ctx.published(u) as usize;
         if lu == action as usize {
             cs.raw_w[lu] += w_uv * wsum_inv;
         } else if cs.headroom[lu] {
@@ -492,26 +390,19 @@ fn classic_update_row(row: &mut [f32], i: usize, sig: Signal, alpha: f32, beta: 
 /// artifact, migration host-side, LA updates through the `la_update`
 /// artifact. Numerically equivalent to the native path (asserted in
 /// integration tests).
-#[allow(clippy::too_many_arguments)]
 fn xla_batch(
-    g: &Graph,
+    ctx: &StepCtx<'_>,
     cs: &mut ChunkState,
     eng: &mut XlaStepEngine,
-    range: std::ops::Range<usize>,
-    state: &PartitionState,
-    demand: &DemandTracker,
-    lambda: &[AtomicU32],
-    selected: &[AtomicU32],
-    snap: &StepSnapshots,
-    sync: bool,
+    range: Range<usize>,
     rng: &mut Rng,
     migrations: &mut u64,
-    cfg: &RevolverConfig,
 ) -> f64 {
     let k = cs.k;
     let len = range.len();
     debug_assert!(len <= BATCH);
-    let _ = cfg;
+    let g = ctx.graph;
+    let state = ctx.state;
 
     // Gather histograms host-side (irregular CSR work stays on L3).
     let mut hist = vec![0.0f32; BATCH * k];
@@ -521,7 +412,7 @@ fn xla_batch(
         wsum[i] = neighbor_histogram(
             g.neighbors(vid),
             g.neighbor_weights(vid),
-            |u| read_label(state, snap, sync, u),
+            |u| ctx.label(u),
             &mut hist[i * k..(i + 1) * k],
         );
     }
@@ -550,16 +441,15 @@ fn xla_batch(
                 best = l;
             }
         }
-        lambda[v].store(best as u32, Ordering::Relaxed);
-        let _ = best_s;
+        ctx.publish(vid, best as u32);
 
-        let action = selected[v].load(Ordering::Relaxed);
+        let action = cs.selected_of(v);
         let current = state.label(vid);
         if action != current
             && (srow[action as usize] >= srow[current as usize]
                 || state.remaining(current as usize) < 0.0)
         {
-            let p = demand.migration_probability(state, action as usize);
+            let p = ctx.demand.migration_probability(state, action as usize);
             if p > 0.0 && rng.next_f64() < p {
                 state.migrate(vid, action, g.out_degree(vid));
                 *migrations += 1;
@@ -575,7 +465,7 @@ fn xla_batch(
         wrow.copy_from_slice(srow);
         let wsum_inv = if wsum[i] > 1e-12 { 1.0 / wsum[i] } else { 0.0 };
         for (&u, &w_uv) in g.neighbors(vid).iter().zip(g.neighbor_weights(vid)) {
-            let lu = read_lambda(lambda, snap, sync, u) as usize;
+            let lu = ctx.published(u) as usize;
             if lu == action as usize {
                 wrow[lu] += w_uv * wsum_inv;
             } else if cs.headroom[lu] {
@@ -602,7 +492,9 @@ fn xla_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Schedule;
     use crate::graph::gen::{generate_dataset, Dataset};
+    use crate::metrics::quality;
 
     fn small_cfg(k: usize) -> RevolverConfig {
         RevolverConfig {
@@ -652,6 +544,32 @@ mod tests {
         let a = Revolver::new(cfg.clone()).partition(&g);
         let b = Revolver::new(cfg).partition(&g);
         assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn schedule_is_bitwise_irrelevant_at_one_thread() {
+        // With a single worker both schedules degenerate to the same
+        // 0..n chunk, so results must be bit-identical.
+        let g = generate_dataset(Dataset::Lj, 512, 9).unwrap();
+        let mut cfg = small_cfg(4);
+        cfg.threads = 1;
+        cfg.max_steps = 15;
+        let vertex = Revolver::new(cfg.clone()).partition(&g);
+        cfg.schedule = Schedule::Degree;
+        let degree = Revolver::new(cfg).partition(&g);
+        assert_eq!(vertex.labels, degree.labels);
+    }
+
+    #[test]
+    fn degree_schedule_multithreaded_valid_and_balanced() {
+        let g = generate_dataset(Dataset::Lj, 2048, 5).unwrap();
+        let mut cfg = small_cfg(8);
+        cfg.threads = 4;
+        cfg.schedule = Schedule::Degree;
+        let out = Revolver::new(cfg).partition(&g);
+        assert!(out.labels.iter().all(|&l| l < 8));
+        let mnl = quality::max_normalized_load(&g, &out.labels, 8);
+        assert!(mnl < 1.15, "mnl={mnl}");
     }
 
     #[test]

@@ -2,19 +2,26 @@
 //! (§III-A, eqs. 3–5), reimplemented faithfully: per-step frozen label
 //! snapshots (BSP), candidate = argmax of the *unnormalized* score,
 //! probabilistic migration gated on remaining capacity over demand.
+//!
+//! Runs on [`crate::engine`] as a [`VertexProgram`]: scoring/demand is
+//! phase A, probabilistic migration is phase B, and Spinner's two frozen
+//! per-step quantities map onto the engine's coordinator hooks — the
+//! penalty vector π̂ is frozen before phase A, the migration
+//! probabilities after the demand phase. The program always reports
+//! [`ExecutionModel::Synchronous`], so the engine's label snapshots give
+//! the BSP read semantics regardless of the configured execution model
+//! (Spinner has no asynchronous variant in the paper).
 
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::ops::Range;
 
 use super::{PartitionOutput, Partitioner};
-use crate::config::RevolverConfig;
-use crate::coordinator::{run_chunked, Chunks, ConvergenceDetector};
+use crate::config::{ExecutionModel, RevolverConfig};
+use crate::engine::{self, StepCtx, StepStats, VertexProgram};
 use crate::graph::Graph;
 use crate::lp::{neighbor_histogram, spinner as sp};
-use crate::metrics::quality;
-use crate::metrics::trace::{RunTrace, TracePoint};
-use crate::partition::{DemandTracker, InitialAssignment, PartitionState};
+use crate::partition::{DemandTracker, PartitionState};
 use crate::util::rng::Rng;
-use crate::util::Stopwatch;
+use crate::VertexId;
 
 /// Sentinel meaning "no migration wanted this step".
 const STAY: u32 = u32::MAX;
@@ -30,134 +37,133 @@ impl Spinner {
     }
 }
 
+/// Per-worker scratch: k-sized scoring buffers plus the chunk's
+/// candidate partitions (phase A → phase B hand-off).
+struct SpinnerScratch {
+    hist: Vec<f32>,
+    scores: Vec<f32>,
+    candidates: Vec<u32>,
+    start: usize,
+}
+
+struct SpinnerProgram<'a> {
+    cfg: &'a RevolverConfig,
+}
+
+impl VertexProgram for SpinnerProgram<'_> {
+    type Scratch = SpinnerScratch;
+    /// π̂(l) = b(l)/C, frozen from the loads at step start (eq. 5).
+    type PhaseA = Vec<f32>;
+    /// Migration probabilities min(1, r(l)/m(l)), frozen after the
+    /// demand phase — this is Spinner's synchronous model.
+    type PhaseB = Vec<f64>;
+
+    fn execution(&self) -> ExecutionModel {
+        ExecutionModel::Synchronous
+    }
+
+    fn rng_salt(&self) -> u64 {
+        0x5350494E // "SPIN"
+    }
+
+    fn init_published(&self, v: VertexId, state: &PartitionState) -> u32 {
+        // Spinner never reads the published channel; keep it at the
+        // label so the engine's snapshots stay meaningful.
+        state.label(v)
+    }
+
+    fn make_scratch(&self, chunk: Range<usize>) -> SpinnerScratch {
+        let k = self.cfg.parts;
+        SpinnerScratch {
+            hist: vec![0.0; k],
+            scores: vec![0.0; k],
+            candidates: vec![STAY; chunk.len()],
+            start: chunk.start,
+        }
+    }
+
+    fn prepare_phase_a(&self, _g: &Graph, state: &PartitionState, _step: u32) -> Vec<f32> {
+        let k = self.cfg.parts;
+        let mut loads = vec![0.0f32; k];
+        state.loads_into(&mut loads);
+        let mut pi_hat = vec![0.0f32; k];
+        sp::penalty_into(&loads, state.capacity() as f32, &mut pi_hat);
+        pi_hat
+    }
+
+    fn prepare_phase_b(
+        &self,
+        _g: &Graph,
+        state: &PartitionState,
+        demand: &DemandTracker,
+        _step: u32,
+    ) -> Vec<f64> {
+        (0..self.cfg.parts).map(|l| demand.migration_probability(state, l)).collect()
+    }
+
+    fn phase_a(
+        &self,
+        ctx: &StepCtx<'_>,
+        pi_hat: &Vec<f32>,
+        s: &mut SpinnerScratch,
+        chunk: Range<usize>,
+        _rng: &mut Rng,
+    ) -> StepStats {
+        // Score every vertex against the frozen snapshot; register
+        // candidates and demand.
+        let mut score_sum = 0.0f64;
+        for v in chunk {
+            let vid = v as VertexId;
+            let wsum = neighbor_histogram(
+                ctx.graph.neighbors(vid),
+                ctx.graph.neighbor_weights(vid),
+                |u| ctx.label(u),
+                &mut s.hist,
+            );
+            let best = sp::score_into(&s.hist, wsum, pi_hat, &mut s.scores);
+            let current = ctx.label(vid) as usize;
+            score_sum += s.scores[current] as f64;
+            s.candidates[v - s.start] = if best != current {
+                ctx.demand.add(best, ctx.graph.out_degree(vid));
+                best as u32
+            } else {
+                STAY
+            };
+        }
+        StepStats { score_sum, migrations: 0 }
+    }
+
+    fn phase_b(
+        &self,
+        ctx: &StepCtx<'_>,
+        mig_prob: &Vec<f64>,
+        s: &mut SpinnerScratch,
+        chunk: Range<usize>,
+        rng: &mut Rng,
+    ) -> StepStats {
+        // Probabilistic migrations against the frozen probabilities.
+        let mut migrations = 0u64;
+        for v in chunk {
+            let cand = s.candidates[v - s.start];
+            if cand == STAY {
+                continue;
+            }
+            if rng.next_f64() < mig_prob[cand as usize] {
+                ctx.state.migrate(v as VertexId, cand, ctx.graph.out_degree(v as VertexId));
+                migrations += 1;
+            }
+        }
+        StepStats { score_sum: 0.0, migrations }
+    }
+}
+
 impl Partitioner for Spinner {
     fn name(&self) -> &'static str {
         "spinner"
     }
 
     fn partition(&self, g: &Graph) -> PartitionOutput {
-        let sw = Stopwatch::start();
-        let cfg = &self.cfg;
-        let k = cfg.parts;
-        let n = g.num_vertices();
-        let state = PartitionState::new(g, k, cfg.epsilon, InitialAssignment::Random(cfg.seed));
-        let chunks = Chunks::new(n, cfg.threads);
-        let base_rng = Rng::new(cfg.seed ^ 0x5350494E); // "SPIN"
-
-        // Per-vertex candidate partition for this step (STAY = none).
-        let candidates: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(STAY)).collect();
-        let demand = DemandTracker::new(k);
-
-        let mut detector = ConvergenceDetector::new(cfg.halt_theta, cfg.halt_window);
-        let mut trace = RunTrace::default();
-        let mut executed_steps: u32 = 0;
-
-        // Per-chunk partial score sums (f64 bits in atomics; one writer
-        // per slot).
-        let score_parts: Vec<AtomicU64> = (0..chunks.len()).map(|_| AtomicU64::new(0)).collect();
-        let migration_count = AtomicU64::new(0);
-
-        for step in 0..cfg.max_steps {
-            executed_steps = step + 1;
-            demand.reset();
-            // BSP: freeze the label snapshot and the load-derived
-            // penalty for the whole step.
-            let snapshot = state.labels_snapshot();
-            let mut loads = vec![0.0f32; k];
-            state.loads_into(&mut loads);
-            let mut pi_hat = vec![0.0f32; k];
-            sp::penalty_into(&loads, state.capacity() as f32, &mut pi_hat);
-
-            // Phase 1: score every vertex against the snapshot; register
-            // candidates and demand.
-            run_chunked(&chunks, |c, range| {
-                let mut hist = vec![0.0f32; k];
-                let mut scores = vec![0.0f32; k];
-                let mut score_sum = 0.0f64;
-                for v in range {
-                    let vid = v as u32;
-                    let wsum = neighbor_histogram(
-                        g.neighbors(vid),
-                        g.neighbor_weights(vid),
-                        |u| snapshot[u as usize],
-                        &mut hist,
-                    );
-                    let best = sp::score_into(&hist, wsum, &pi_hat, &mut scores);
-                    let current = snapshot[v] as usize;
-                    score_sum += scores[current] as f64;
-                    if best != current {
-                        candidates[v].store(best as u32, Ordering::Relaxed);
-                        demand.add(best, g.out_degree(vid));
-                    } else {
-                        candidates[v].store(STAY, Ordering::Relaxed);
-                    }
-                }
-                score_parts[c].store(score_sum.to_bits(), Ordering::Relaxed);
-            });
-
-            // Migration probabilities frozen after the demand phase
-            // (this is Spinner's synchronous model).
-            let mig_prob: Vec<f64> =
-                (0..k).map(|l| demand.migration_probability(&state, l)).collect();
-
-            // Phase 2: probabilistic migrations.
-            migration_count.store(0, Ordering::Relaxed);
-            run_chunked(&chunks, |c, range| {
-                let mut rng = base_rng.fork(step as u64 * chunks.len() as u64 + c as u64);
-                let mut local_migrations = 0u64;
-                for v in range {
-                    let cand = candidates[v].load(Ordering::Relaxed);
-                    if cand == STAY {
-                        continue;
-                    }
-                    if rng.next_f64() < mig_prob[cand as usize] {
-                        state.migrate(v as u32, cand, g.out_degree(v as u32));
-                        local_migrations += 1;
-                    }
-                }
-                migration_count.fetch_add(local_migrations, Ordering::Relaxed);
-            });
-
-            // Convergence bookkeeping.
-            let mean_score = score_parts
-                .iter()
-                .map(|s| f64::from_bits(s.load(Ordering::Relaxed)))
-                .sum::<f64>()
-                / n as f64;
-            let migrations = migration_count.load(Ordering::Relaxed);
-
-            let trace_now = cfg.trace_every > 0 && step % cfg.trace_every == 0;
-            if trace_now {
-                let labels = state.labels_snapshot();
-                trace.push(TracePoint {
-                    step,
-                    local_edges: quality::local_edges(g, &labels),
-                    max_normalized_load: quality::max_normalized_load(g, &labels, k),
-                    mean_score,
-                    migrations,
-                });
-            }
-
-            if detector.observe(mean_score) {
-                trace.converged_at = Some(step);
-                break;
-            }
-        }
-
-        let labels = state.labels_snapshot();
-        debug_assert!(state.check_load_invariant().is_ok());
-        if trace.points.is_empty() || cfg.trace_every == 0 {
-            let q = quality::evaluate(g, &labels, k);
-            trace.push(TracePoint {
-                step: executed_steps.max(1) - 1,
-                local_edges: q.local_edges,
-                max_normalized_load: q.max_normalized_load,
-                mean_score: 0.0,
-                migrations: 0,
-            });
-        }
-        trace.wall_time_s = sw.elapsed_s();
-        PartitionOutput { labels, trace }
+        engine::run(g, &self.cfg, &SpinnerProgram { cfg: &self.cfg })
     }
 }
 
@@ -165,6 +171,7 @@ impl Partitioner for Spinner {
 mod tests {
     use super::*;
     use crate::graph::gen::{generate_dataset, Dataset};
+    use crate::metrics::quality;
 
     fn small_cfg(k: usize) -> RevolverConfig {
         RevolverConfig {
@@ -204,6 +211,25 @@ mod tests {
         let a = Spinner::new(cfg.clone()).partition(&g);
         let b = Spinner::new(cfg).partition(&g);
         assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn bsp_multithreaded_matches_single_thread_quality() {
+        // Spinner is fully synchronous — phase A reads only frozen
+        // snapshots and phase B flips coins against frozen
+        // probabilities — so thread count changes only the per-chunk RNG
+        // streams, never the dynamics. Quality must be stable across
+        // thread counts (labels differ because the coin-flip streams are
+        // chunk-indexed).
+        let g = generate_dataset(Dataset::So, 1024, 4).unwrap();
+        let mut cfg = small_cfg(4);
+        cfg.threads = 1;
+        let a = Spinner::new(cfg.clone()).partition(&g);
+        cfg.threads = 4;
+        let b = Spinner::new(cfg).partition(&g);
+        let qa = quality::evaluate(&g, &a.labels, 4);
+        let qb = quality::evaluate(&g, &b.labels, 4);
+        assert!((qa.local_edges - qb.local_edges).abs() < 0.1, "{qa:?} vs {qb:?}");
     }
 
     #[test]

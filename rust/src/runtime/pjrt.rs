@@ -1,0 +1,176 @@
+//! Real PJRT backend (requires the `xla` binding crate; compiled only
+//! under the `xla` cargo feature — see the module docs in
+//! [`super`]). Enabling the feature additionally requires adding the
+//! `xla` crate to `[dependencies]`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::manifest::{Manifest, ManifestEntry};
+
+/// A compiled artifact plus its expected I/O shapes.
+pub struct CompiledEntry {
+    pub entry: ManifestEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT client wrapper holding compiled executables for one artifacts
+/// directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read `manifest.json` from `dir`.
+    pub fn open<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .with_context(|| format!("load manifest from {dir:?} (run `make artifacts`)"))?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client, dir, manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile the artifact named `name`.
+    pub fn compile(&self, name: &str) -> Result<CompiledEntry> {
+        let entry = self
+            .manifest
+            .find(name)
+            .with_context(|| {
+                format!(
+                    "artifact {name:?} not in manifest (available: {:?})",
+                    self.manifest.names()
+                )
+            })?
+            .clone();
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
+        Ok(CompiledEntry { entry, exe })
+    }
+}
+
+impl CompiledEntry {
+    /// Execute with f32 tensor inputs (shapes per the manifest entry);
+    /// returns the flattened f32 outputs, one `Vec` per output, in
+    /// manifest order.
+    ///
+    /// The AOT pipeline lowers with `return_tuple=True`, so the result
+    /// is always a tuple literal, even for single outputs.
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            inputs.len() == self.entry.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            self.entry.name,
+            self.entry.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, spec) in inputs.iter().zip(self.entry.inputs.iter()) {
+            let expect: usize = spec.shape.iter().product::<usize>().max(1);
+            anyhow::ensure!(
+                data.len() == expect,
+                "{}: input {} expected {} elements ({:?}), got {}",
+                self.entry.name,
+                spec.name,
+                expect,
+                spec.shape,
+                data.len()
+            );
+            let lit = if spec.shape.is_empty() {
+                xla::Literal::scalar(data[0])
+            } else {
+                let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.entry.outputs.len(),
+            "{}: expected {} outputs, got {}",
+            self.entry.name,
+            self.entry.outputs.len(),
+            parts.len()
+        );
+        parts.into_iter().map(|l| Ok(l.to_vec::<f32>()?)).collect()
+    }
+}
+
+/// The engine Revolver's `--engine xla` path drives: batched normalized
+/// LP scoring and batched weighted-LA updates through the compiled
+/// artifacts (one `score_b{B}_k{k}` + one `la_update_b{B}_k{k}` pair).
+pub struct XlaStepEngine {
+    batch: usize,
+    k: usize,
+    score: CompiledEntry,
+    la_update: CompiledEntry,
+}
+
+impl XlaStepEngine {
+    /// Load the engine for a given (batch, k). `alpha`/`beta` must match
+    /// the values baked at lowering time (checked against the manifest).
+    pub fn load<P: AsRef<Path>>(
+        dir: P,
+        batch: usize,
+        k: usize,
+        alpha: f32,
+        beta: f32,
+    ) -> Result<Self> {
+        let rt = Runtime::open(dir)?;
+        let m = rt.manifest();
+        // f32->f64 widening tolerance: 0.1f32 as f64 != 0.1.
+        anyhow::ensure!(
+            (m.alpha - alpha as f64).abs() < 1e-6 && (m.beta - beta as f64).abs() < 1e-6,
+            "artifacts were lowered with alpha={}, beta={}; config wants alpha={alpha}, beta={beta} — regenerate with `make artifacts`",
+            m.alpha,
+            m.beta
+        );
+        let score = rt.compile(&format!("score_b{batch}_k{k}"))?;
+        let la_update = rt.compile(&format!("la_update_b{batch}_k{k}"))?;
+        Ok(XlaStepEngine { batch, k, score, la_update })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Batched normalized LP scores: `hist` is (B·k), `wsum` (B),
+    /// `loads` (k); returns (B·k) scores.
+    pub fn score(
+        &mut self,
+        hist: &[f32],
+        wsum: &[f32],
+        loads: &[f32],
+        capacity: f32,
+    ) -> Result<Vec<f32>> {
+        let cap = [capacity];
+        let outs = self.score.run_f32(&[hist, wsum, loads, &cap])?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+
+    /// Batched signal construction + weighted-LA update: `probs` and
+    /// `raw_w` are (B·k); returns the updated (B·k) probabilities.
+    pub fn la_update(&mut self, probs: &[f32], raw_w: &[f32]) -> Result<Vec<f32>> {
+        let outs = self.la_update.run_f32(&[probs, raw_w])?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+}

@@ -1,0 +1,111 @@
+//! Default backend when the crate is built without the `xla` feature:
+//! same public surface as the real backend (`runtime/pjrt.rs`), but
+//! every entry point errors with a pointer at the feature flag.
+//! `Runtime::open` still *reads* the manifest first, so a missing
+//! artifacts directory reports the same manifest error as the real
+//! backend before the unavailability error takes over.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{Manifest, ManifestEntry};
+
+const UNAVAILABLE: &str = "PJRT backend unavailable: revolver was built without the `xla` \
+     cargo feature (the offline crate set does not ship the `xla` binding crate); \
+     use `--engine native`, or rebuild with `--features xla` in an environment that has it";
+
+/// A compiled artifact plus its expected I/O shapes (stub: never
+/// constructed — compilation always fails first).
+pub struct CompiledEntry {
+    pub entry: ManifestEntry,
+}
+
+/// Manifest-only stand-in for the PJRT client wrapper.
+pub struct Runtime {
+    manifest: Manifest,
+}
+
+impl Runtime {
+    /// Read `manifest.json` from `dir`, then report the backend as
+    /// unavailable (keeping the same error texture as the real
+    /// backend's open path: missing manifest ⇒ manifest error).
+    pub fn open<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .with_context(|| format!("load manifest from {dir:?} (run `make artifacts`)"))?;
+        let _ = Runtime { manifest };
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        "unavailable (built without the `xla` feature)".to_string()
+    }
+
+    /// Load + compile the artifact named `name`.
+    pub fn compile(&self, name: &str) -> Result<CompiledEntry> {
+        let _ = name;
+        bail!(UNAVAILABLE)
+    }
+}
+
+impl CompiledEntry {
+    /// Execute with f32 tensor inputs — always an error in the stub.
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let _ = inputs;
+        bail!(UNAVAILABLE)
+    }
+}
+
+/// Stand-in for the batched scoring/LA-update engine behind
+/// `--engine xla`.
+pub struct XlaStepEngine {
+    batch: usize,
+    k: usize,
+}
+
+impl XlaStepEngine {
+    pub fn load<P: AsRef<Path>>(
+        dir: P,
+        batch: usize,
+        k: usize,
+        _alpha: f32,
+        _beta: f32,
+    ) -> Result<Self> {
+        // Surface the most actionable error: a missing manifest means
+        // the artifacts were never built, which the caller must fix
+        // first either way.
+        Runtime::open(dir)?;
+        let _ = XlaStepEngine { batch, k };
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Batched normalized LP scores — always an error in the stub.
+    pub fn score(
+        &mut self,
+        _hist: &[f32],
+        _wsum: &[f32],
+        _loads: &[f32],
+        _capacity: f32,
+    ) -> Result<Vec<f32>> {
+        bail!(UNAVAILABLE)
+    }
+
+    /// Batched weighted-LA update — always an error in the stub.
+    pub fn la_update(&mut self, _probs: &[f32], _raw_w: &[f32]) -> Result<Vec<f32>> {
+        bail!(UNAVAILABLE)
+    }
+}

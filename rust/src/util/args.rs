@@ -15,15 +15,26 @@ pub struct Args {
     consumed: std::collections::BTreeSet<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ArgError {
-    #[error("flag --{0} expects a value")]
     MissingValue(String),
-    #[error("flag --{0}: cannot parse {1:?}: {2}")]
     BadValue(String, String, String),
-    #[error("unknown flags: {0:?}")]
     Unknown(Vec<String>),
 }
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArgError::MissingValue(flag) => write!(f, "flag --{flag} expects a value"),
+            ArgError::BadValue(flag, value, err) => {
+                write!(f, "flag --{flag}: cannot parse {value:?}: {err}")
+            }
+            ArgError::Unknown(flags) => write!(f, "unknown flags: {flags:?}"),
+        }
+    }
+}
+
+impl std::error::Error for ArgError {}
 
 impl Args {
     /// Parse from an iterator of arguments (without argv[0]).

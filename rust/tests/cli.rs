@@ -189,6 +189,39 @@ fn config_file_drives_run() {
 }
 
 #[test]
+fn schedule_flag_accepted_and_validated() {
+    let (ok, stdout, _) = run(&[
+        "partition",
+        "--graph",
+        "lj",
+        "--vertices",
+        "512",
+        "--parts",
+        "4",
+        "--steps",
+        "5",
+        "--threads",
+        "2",
+        "--schedule",
+        "degree",
+    ]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("local edges:"));
+
+    let (ok, _, stderr) = run(&[
+        "partition",
+        "--graph",
+        "so",
+        "--vertices",
+        "256",
+        "--schedule",
+        "zigzag",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown schedule"), "{stderr}");
+}
+
+#[test]
 fn bad_dataset_name_fails_with_hint() {
     let (ok, _, stderr) = run(&["partition", "--graph", "nonexistent_ds"]);
     assert!(!ok);

@@ -1,0 +1,171 @@
+//! Engine ↔ seed parity: porting Revolver onto the shared execution
+//! engine must not change its numerics. This test transcribes the
+//! pre-engine (seed) single-threaded step loop — same RNG forks, same
+//! batch granularity, same operation order — and asserts the engine
+//! produces **bit-identical** labels for `threads = 1`.
+//!
+//! If this test fails after an engine change, the engine altered
+//! execution semantics (RNG stream assignment, phase ordering, batch
+//! snapshot granularity, or convergence accounting) — not just
+//! performance.
+
+use revolver::config::RevolverConfig;
+use revolver::coordinator::ConvergenceDetector;
+use revolver::graph::gen::{generate_dataset, Dataset};
+use revolver::graph::Graph;
+use revolver::la::signal::build_signals_into;
+use revolver::la::weighted::WeightedLa;
+use revolver::la::{roulette, Signal};
+use revolver::lp::{neighbor_histogram, normalized as nlp};
+use revolver::partition::{DemandTracker, InitialAssignment, PartitionState};
+use revolver::partitioners::revolver::{Revolver, BATCH};
+use revolver::partitioners::Partitioner;
+use revolver::util::rng::Rng;
+
+/// The seed implementation's single-threaded asynchronous step loop,
+/// written sequentially (no threads, no barriers): one worker, chunk =
+/// 0..n, RNG forks `2·step` (phase A) and `2·step + 1` (phase B).
+fn seed_reference(g: &Graph, cfg: &RevolverConfig) -> Vec<u32> {
+    assert_eq!(cfg.threads, 1);
+    let k = cfg.parts;
+    let n = g.num_vertices();
+    let state = PartitionState::new(g, k, cfg.epsilon, InitialAssignment::Random(cfg.seed));
+    let demand = DemandTracker::new(k);
+    let base_rng = Rng::new(cfg.seed ^ 0x5245564F); // "REVO"
+
+    // λ(v), initialized to the starting labels.
+    let mut lambda: Vec<u32> = (0..n).map(|v| state.label(v as u32)).collect();
+    let mut selected: Vec<u32> = vec![0; n];
+    let mut probs = vec![0.0f32; n * k];
+    for row in probs.chunks_mut(k) {
+        WeightedLa::init(row);
+    }
+
+    // k-sized scratch.
+    let mut hist = vec![0.0f32; k];
+    let mut scores = vec![0.0f32; k];
+    let mut pi = vec![0.0f32; k];
+    let mut raw_w = vec![0.0f32; k];
+    let mut w_norm = vec![0.0f32; k];
+    let mut signals = vec![Signal::Penalty; k];
+    let mut loads = vec![0.0f32; k];
+    let mut headroom = vec![true; k];
+
+    let mut detector = ConvergenceDetector::new(cfg.halt_theta, cfg.halt_window);
+    for step in 0..cfg.max_steps as u64 {
+        demand.reset();
+
+        // ── Phase A: action selection + demand ──
+        let mut rng = base_rng.fork(step * 2);
+        for v in 0..n {
+            let a = roulette::spin(&probs[v * k..(v + 1) * k], &mut rng) as u32;
+            selected[v] = a;
+            if a != state.label(v as u32) {
+                demand.add(a as usize, g.out_degree(v as u32));
+            }
+        }
+
+        // ── Phase B: score, λ, migrate, learn ──
+        let mut rng = base_rng.fork(step * 2 + 1);
+        let mut score_sum = 0.0f64;
+        let mut batch_start = 0usize;
+        while batch_start < n {
+            let batch_end = (batch_start + BATCH).min(n);
+            state.loads_into(&mut loads);
+            nlp::penalty_into(&loads, state.system_capacity() as f32, &mut pi);
+            let cap = state.capacity() as f32;
+            for l in 0..k {
+                headroom[l] = demand.get(l) <= 0 || loads[l] < cap;
+            }
+            for v in batch_start..batch_end {
+                let vid = v as u32;
+                let wsum = neighbor_histogram(
+                    g.neighbors(vid),
+                    g.neighbor_weights(vid),
+                    |u| state.label(u),
+                    &mut hist,
+                );
+                let best = nlp::score_into(&hist, wsum, &pi, &mut scores);
+                lambda[v] = best as u32;
+
+                let action = selected[v];
+                let current = state.label(vid);
+                if action != current
+                    && (scores[action as usize] >= scores[current as usize]
+                        || state.remaining(current as usize) < 0.0)
+                {
+                    let p = demand.migration_probability(&state, action as usize);
+                    if p > 0.0 && rng.next_f64() < p {
+                        state.migrate(vid, action, g.out_degree(vid));
+                    }
+                }
+                score_sum += scores[state.label(vid) as usize] as f64;
+
+                raw_w.copy_from_slice(&scores);
+                let wsum_inv = if wsum > 1e-12 { 1.0 / wsum } else { 0.0 };
+                for (&u, &w_uv) in g.neighbors(vid).iter().zip(g.neighbor_weights(vid)) {
+                    let lu = lambda[u as usize] as usize;
+                    if lu == action as usize {
+                        raw_w[lu] += w_uv * wsum_inv;
+                    } else if headroom[lu] {
+                        raw_w[lu] += wsum_inv;
+                    }
+                }
+                build_signals_into(&raw_w, &mut w_norm, &mut signals);
+                WeightedLa::update(
+                    &mut probs[v * k..(v + 1) * k],
+                    &w_norm,
+                    &signals,
+                    cfg.alpha,
+                    cfg.beta,
+                );
+            }
+            batch_start = batch_end;
+        }
+
+        if detector.observe(score_sum / n as f64) {
+            break;
+        }
+    }
+    state.labels_snapshot()
+}
+
+fn parity_cfg(k: usize, steps: u32, seed: u64) -> RevolverConfig {
+    RevolverConfig {
+        parts: k,
+        max_steps: steps,
+        threads: 1,
+        seed,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn revolver_on_engine_bit_identical_to_seed_single_thread() {
+    for (ds, n, seed) in [
+        (Dataset::Wiki, 512, 11u64),
+        (Dataset::Lj, 1024, 42),
+        (Dataset::So, 512, 7),
+    ] {
+        let g = generate_dataset(ds, n, 4).unwrap();
+        let cfg = parity_cfg(4, 20, seed);
+        let engine_labels = Revolver::new(cfg.clone()).partition(&g).labels;
+        let seed_labels = seed_reference(&g, &cfg);
+        assert_eq!(
+            engine_labels,
+            seed_labels,
+            "engine diverged from seed semantics on {}",
+            ds.name()
+        );
+    }
+}
+
+#[test]
+fn parity_holds_with_convergence_halting() {
+    // Long budget + default halting: both must halt at the same step.
+    let g = generate_dataset(Dataset::Lj, 1024, 9).unwrap();
+    let cfg = parity_cfg(8, 290, 3);
+    let engine_labels = Revolver::new(cfg.clone()).partition(&g).labels;
+    let seed_labels = seed_reference(&g, &cfg);
+    assert_eq!(engine_labels, seed_labels);
+}
