@@ -43,7 +43,11 @@ fn main() {
                     le += q.local_edges / 3.0;
                     mnl += q.max_normalized_load / 3.0;
                 }
-                res.push(quality::Quality { local_edges: le, max_normalized_load: mnl });
+                res.push(quality::Quality {
+                    local_edges: le,
+                    max_normalized_load: mnl,
+                    max_normalized_edge_load: 0.0, // unused by this ablation
+                });
             }
             let win = res[0].max_normalized_load <= res[1].max_normalized_load + 0.02;
             wins += win as u32;

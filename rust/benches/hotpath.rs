@@ -11,7 +11,8 @@ use revolver::la::signal::build_signals_into;
 use revolver::la::weighted::WeightedLa;
 use revolver::la::Signal;
 use revolver::lp::{neighbor_histogram, normalized};
-use revolver::partitioners::{revolver::Revolver, spinner::Spinner, Partitioner};
+use revolver::metrics::quality;
+use revolver::partitioners::{by_name, revolver::Revolver, spinner::Spinner, Partitioner};
 use revolver::util::bench::{bench, full_scale};
 use revolver::util::json::Json;
 use revolver::util::rng::Rng;
@@ -160,5 +161,50 @@ fn main() {
             ));
         }
     }
+    // Streaming partitioners: one-pass (ldg/fennel) and restreaming
+    // throughput + quality vs the hash floor on power-law R-MAT graphs
+    // across scales. Streaming is the cheap-baseline family the paper
+    // compares against; the JSON rows feed the BENCH trajectory.
+    let k8 = 8usize;
+    let exps: &[u32] = if full_scale() { &[14, 16, 18] } else { &[14] };
+    for &e in exps {
+        let n = 1usize << e;
+        let sg = rmat::rmat(n, 16 * n, 0.57, 0.19, 0.19, 11);
+        println!(
+            "\n=== streaming: ldg / fennel / restream vs hash (R-MAT |V|={} |E|={}, k={k8}) ===\n",
+            sg.num_vertices(),
+            sg.num_edges()
+        );
+        for algo in ["ldg", "fennel", "restream", "hash"] {
+            let cfg = RevolverConfig { parts: k8, seed: 3, ..Default::default() };
+            let p = by_name(algo, cfg).unwrap();
+            let labels = p.partition(&sg).labels;
+            let q = quality::evaluate(&sg, &labels, k8);
+            let r = bench(&format!("{algo:>8} 2^{e}"), 1, 3, || p.partition(&sg).labels.len());
+            println!(
+                "{r}   ({:.1}M edges/s, local={:.4}, mnl={:.3})",
+                r.throughput(sg.num_edges() as u64) / 1e6,
+                q.local_edges,
+                q.max_normalized_load
+            );
+            rows.push(Json::Obj(
+                [
+                    ("bench".to_string(), Json::Str("stream_rmat".to_string())),
+                    ("algorithm".to_string(), Json::Str(algo.to_string())),
+                    ("parts".to_string(), Json::Num(k8 as f64)),
+                    ("vertices".to_string(), Json::Num(sg.num_vertices() as f64)),
+                    ("edges".to_string(), Json::Num(sg.num_edges() as f64)),
+                    ("median_ns".to_string(), Json::Num(r.median_ns)),
+                    ("mean_ns".to_string(), Json::Num(r.mean_ns)),
+                    ("min_ns".to_string(), Json::Num(r.min_ns)),
+                    ("local_edges".to_string(), Json::Num(q.local_edges)),
+                    ("max_normalized_load".to_string(), Json::Num(q.max_normalized_load)),
+                ]
+                .into_iter()
+                .collect(),
+            ));
+        }
+    }
+
     println!("\nBENCH_JSON {}", Json::Arr(rows).to_string());
 }

@@ -66,6 +66,93 @@ impl std::str::FromStr for Schedule {
     }
 }
 
+/// Streaming algorithm family (L4 `stream` subsystem): one-pass linear
+/// deterministic greedy, one-pass Fennel, or prioritized restreaming.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamAlgo {
+    /// Linear deterministic greedy (Stanton & Kliot, KDD'12).
+    Ldg,
+    /// Degree-penalized greedy (Tsourakakis et al., WSDM'14).
+    Fennel,
+    /// N prioritized restreaming passes over the Fennel objective
+    /// (Awadelkarim & Ugander, KDD'20).
+    Restream,
+}
+
+impl StreamAlgo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StreamAlgo::Ldg => "ldg",
+            StreamAlgo::Fennel => "fennel",
+            StreamAlgo::Restream => "restream",
+        }
+    }
+}
+
+impl std::str::FromStr for StreamAlgo {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_lowercase().as_str() {
+            "ldg" => Ok(StreamAlgo::Ldg),
+            "fennel" => Ok(StreamAlgo::Fennel),
+            "restream" => Ok(StreamAlgo::Restream),
+            other => bail!("unknown stream algorithm {other:?} (expected ldg|fennel|restream)"),
+        }
+    }
+}
+
+/// Order in which a streaming pass visits vertices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StreamOrder {
+    /// Vertex-id order (the order edge-list files are written in).
+    #[default]
+    Natural,
+    /// Uniform random permutation (seeded from the run seed).
+    Shuffled,
+    /// Breadth-first from vertex 0, restarting at the next unvisited
+    /// vertex per component — neighbours arrive near each other.
+    Bfs,
+}
+
+impl std::str::FromStr for StreamOrder {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_lowercase().as_str() {
+            "natural" => Ok(StreamOrder::Natural),
+            "shuffled" | "random" => Ok(StreamOrder::Shuffled),
+            "bfs" => Ok(StreamOrder::Bfs),
+            other => bail!("unknown stream order {other:?} (expected natural|shuffled|bfs)"),
+        }
+    }
+}
+
+/// Initial assignment policy for the iterative partitioners
+/// (Revolver / Spinner).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Init {
+    /// Uniform-random labels, uniform LA probabilities (the paper).
+    #[default]
+    Random,
+    /// Warm start: labels from a streaming pass; Revolver additionally
+    /// biases each vertex's LA probability row toward the streamed
+    /// label.
+    Stream(StreamAlgo),
+}
+
+impl std::str::FromStr for Init {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        let low = s.to_lowercase();
+        if low == "random" {
+            return Ok(Init::Random);
+        }
+        match low.strip_prefix("stream:") {
+            Some(algo) => Ok(Init::Stream(algo.parse()?)),
+            None => bail!("unknown init {s:?} (expected random|stream:<ldg|fennel|restream>)"),
+        }
+    }
+}
+
 /// All knobs of a Revolver/Spinner run. Defaults are the paper's §V-F
 /// settings.
 #[derive(Debug, Clone)]
@@ -102,6 +189,17 @@ pub struct RevolverConfig {
     /// (0 = only the final point; 1 = Figure-4 style per-step traces).
     /// Tracing costs an O(|E|) metrics pass per sampled step.
     pub trace_every: u32,
+    /// Initial assignment: uniform random (paper) or a streaming
+    /// warm start (`--init stream:<algo>`).
+    pub init: Init,
+    /// Vertex visit order of streaming passes.
+    pub stream_order: StreamOrder,
+    /// Fennel's load exponent γ (its paper recommends 1.5).
+    pub fennel_gamma: f64,
+    /// Number of streaming passes for the `restream` partitioner
+    /// (pass 1 streams in `stream_order`, later passes in priority
+    /// order reusing the previous assignment).
+    pub restream_passes: u32,
 }
 
 impl Default for RevolverConfig {
@@ -122,6 +220,10 @@ impl Default for RevolverConfig {
             artifacts_dir: "artifacts".to_string(),
             classic_la: false,
             trace_every: 0,
+            init: Init::Random,
+            stream_order: StreamOrder::Natural,
+            fennel_gamma: 1.5,
+            restream_passes: 3,
         }
     }
 }
@@ -152,6 +254,12 @@ impl RevolverConfig {
             self.beta
         );
         anyhow::ensure!(self.threads >= 1, "threads must be >= 1");
+        anyhow::ensure!(
+            self.fennel_gamma > 1.0,
+            "fennel_gamma must be > 1 (superlinear load cost), got {}",
+            self.fennel_gamma
+        );
+        anyhow::ensure!(self.restream_passes >= 1, "restream_passes must be >= 1");
         Ok(())
     }
 
@@ -192,6 +300,12 @@ impl RevolverConfig {
                 "artifacts_dir" => cfg.artifacts_dir = value.clone(),
                 "classic_la" => cfg.classic_la = value.parse().context("classic_la")?,
                 "trace_every" => cfg.trace_every = value.parse().context("trace_every")?,
+                "init" => cfg.init = value.parse()?,
+                "stream_order" => cfg.stream_order = value.parse()?,
+                "fennel_gamma" => cfg.fennel_gamma = value.parse().context("fennel_gamma")?,
+                "restream_passes" => {
+                    cfg.restream_passes = value.parse().context("restream_passes")?
+                }
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -317,6 +431,41 @@ mod tests {
         assert_eq!(c.schedule, Schedule::Degree);
         let c = RevolverConfig::from_toml_str("[revolver]\nschedule = \"vertex\"\n").unwrap();
         assert_eq!(c.schedule, Schedule::Vertex);
+    }
+
+    #[test]
+    fn init_parse() {
+        assert_eq!("random".parse::<Init>().unwrap(), Init::Random);
+        assert_eq!(
+            "stream:fennel".parse::<Init>().unwrap(),
+            Init::Stream(StreamAlgo::Fennel)
+        );
+        assert_eq!("STREAM:LDG".parse::<Init>().unwrap(), Init::Stream(StreamAlgo::Ldg));
+        assert!("stream:metis".parse::<Init>().is_err());
+        assert!("warm".parse::<Init>().is_err());
+    }
+
+    #[test]
+    fn stream_knobs_from_toml() {
+        let c = RevolverConfig::from_toml_str(
+            "init = \"stream:restream\"\nstream_order = \"bfs\"\nfennel_gamma = 2.0\nrestream_passes = 5\n",
+        )
+        .unwrap();
+        assert_eq!(c.init, Init::Stream(StreamAlgo::Restream));
+        assert_eq!(c.stream_order, StreamOrder::Bfs);
+        assert!((c.fennel_gamma - 2.0).abs() < 1e-12);
+        assert_eq!(c.restream_passes, 5);
+    }
+
+    #[test]
+    fn stream_defaults_and_validation() {
+        let c = RevolverConfig::default();
+        assert_eq!(c.init, Init::Random);
+        assert_eq!(c.stream_order, StreamOrder::Natural);
+        assert!((c.fennel_gamma - 1.5).abs() < 1e-12);
+        assert_eq!(c.restream_passes, 3);
+        assert!(RevolverConfig::from_toml_str("fennel_gamma = 1.0\n").is_err());
+        assert!(RevolverConfig::from_toml_str("restream_passes = 0\n").is_err());
     }
 
     #[test]

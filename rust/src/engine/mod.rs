@@ -52,7 +52,7 @@ use std::ops::Range;
 use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::{mpsc, Arc, Barrier, Mutex};
 
-use crate::config::{ExecutionModel, RevolverConfig, Schedule};
+use crate::config::{ExecutionModel, Init, RevolverConfig, Schedule};
 use crate::coordinator::{Chunks, ConvergenceDetector};
 use crate::graph::Graph;
 use crate::metrics::quality;
@@ -214,15 +214,41 @@ pub fn chunks_for(g: &Graph, cfg: &RevolverConfig) -> Chunks {
     }
 }
 
+/// The initial assignment `cfg` asks for: uniform random (the paper),
+/// or labels from a streaming pass (`--init stream:<algo>` — the
+/// warm-start bridge into [`crate::stream`]).
+pub fn initial_assignment(g: &Graph, cfg: &RevolverConfig) -> InitialAssignment {
+    match cfg.init {
+        Init::Random => InitialAssignment::Random(cfg.seed),
+        Init::Stream(algo) => {
+            InitialAssignment::Given(crate::stream::stream_labels(g, algo, cfg))
+        }
+    }
+}
+
 /// Run `program` over `g` to completion: max_steps, or
-/// convergence-driven halt (§IV-D.9), whichever first.
+/// convergence-driven halt (§IV-D.9), whichever first. The initial
+/// assignment comes from `cfg.init` (see [`initial_assignment`]).
 pub fn run<P: VertexProgram>(g: &Graph, cfg: &RevolverConfig, program: &P) -> PartitionOutput {
+    let init = initial_assignment(g, cfg);
+    run_with_init(g, cfg, program, init)
+}
+
+/// [`run`] with an explicit initial assignment — callers that also
+/// need the labels themselves (Revolver seeds its LA rows from them)
+/// compute the assignment once and pass it through.
+pub fn run_with_init<P: VertexProgram>(
+    g: &Graph,
+    cfg: &RevolverConfig,
+    program: &P,
+    init: InitialAssignment,
+) -> PartitionOutput {
     let sw = Stopwatch::start();
     let k = cfg.parts;
     let n = g.num_vertices();
     let sync = program.execution() == ExecutionModel::Synchronous;
 
-    let state = PartitionState::new(g, k, cfg.epsilon, InitialAssignment::Random(cfg.seed));
+    let state = PartitionState::new(g, k, cfg.epsilon, init);
     let chunks = chunks_for(g, cfg);
     let t = chunks.len();
     let base_rng = Rng::new(cfg.seed ^ program.rng_salt());
@@ -509,6 +535,20 @@ mod tests {
         run(&g, &c, &p);
         assert_eq!(p.a_visits.load(Ordering::Relaxed), 2 * 97);
         assert_eq!(p.b_visits.load(Ordering::Relaxed), 2 * 97);
+    }
+
+    #[test]
+    fn stream_init_seeds_labels() {
+        use crate::config::{Init, StreamAlgo};
+        let g = ring_graph(64);
+        let p = ProbeProgram::new(ExecutionModel::Asynchronous, 64);
+        let mut c = cfg(2, 2);
+        c.init = Init::Stream(StreamAlgo::Fennel);
+        let out = run(&g, &c, &p);
+        // ProbeProgram never migrates, so the output labels are exactly
+        // the streaming warm start.
+        let expect = crate::stream::stream_labels(&g, StreamAlgo::Fennel, &c);
+        assert_eq!(out.labels, expect);
     }
 
     #[test]

@@ -27,31 +27,55 @@ pub fn load_edge_list<P: AsRef<Path>>(path: P) -> Result<Graph> {
     read_edge_list(BufReader::new(f))
 }
 
+/// Parse one `src<ws>dst` edge-list line. `Ok(None)` for comment /
+/// blank lines. Shared by [`read_edge_list`] and the streaming file
+/// reader ([`crate::stream::FileEdgeStream`]).
+pub(crate) fn parse_edge_line(line: &str, lineno: usize) -> Result<Option<(u64, u64)>> {
+    let t = line.trim();
+    if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+        return Ok(None);
+    }
+    let mut it = t.split_whitespace();
+    let (a, b) = match (it.next(), it.next()) {
+        (Some(a), Some(b)) => (a, b),
+        _ => bail!("line {lineno}: expected `src dst`, got {t:?}"),
+    };
+    let a: u64 = a.parse().with_context(|| format!("line {lineno}: bad src"))?;
+    let b: u64 = b.parse().with_context(|| format!("line {lineno}: bad dst"))?;
+    Ok(Some((a, b)))
+}
+
+/// Densify an arbitrary raw id to 0..n in first-appearance order.
+#[inline]
+pub(crate) fn densify(
+    raw: u64,
+    ids: &mut std::collections::HashMap<u64, VertexId>,
+) -> VertexId {
+    let next = ids.len() as VertexId;
+    *ids.entry(raw).or_insert(next)
+}
+
 /// Parse an edge list from any reader (unit-testable without files).
-pub fn read_edge_list<R: BufRead>(r: R) -> Result<Graph> {
+///
+/// Lines are read into one reusable buffer (`read_line`) and parsed in
+/// place — the per-line `String` allocation `r.lines()` would make is
+/// measurable on multi-million-edge lists.
+pub fn read_edge_list<R: BufRead>(mut r: R) -> Result<Graph> {
     let mut ids: std::collections::HashMap<u64, VertexId> = std::collections::HashMap::new();
     let mut edges: Vec<(VertexId, VertexId)> = Vec::new();
-    let densify = |raw: u64, ids: &mut std::collections::HashMap<u64, VertexId>| {
-        let next = ids.len() as VertexId;
-        *ids.entry(raw).or_insert(next)
-    };
-
-    for (lineno, line) in r.lines().enumerate() {
-        let line = line?;
-        let t = line.trim();
-        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
-            continue;
+    let mut line = String::new();
+    let mut lineno = 0usize;
+    loop {
+        line.clear();
+        if r.read_line(&mut line)? == 0 {
+            break;
         }
-        let mut it = t.split_whitespace();
-        let (a, b) = match (it.next(), it.next()) {
-            (Some(a), Some(b)) => (a, b),
-            _ => bail!("line {}: expected `src dst`, got {:?}", lineno + 1, t),
-        };
-        let a: u64 = a.parse().with_context(|| format!("line {}: bad src", lineno + 1))?;
-        let b: u64 = b.parse().with_context(|| format!("line {}: bad dst", lineno + 1))?;
-        let s = densify(a, &mut ids);
-        let d = densify(b, &mut ids);
-        edges.push((s, d));
+        lineno += 1;
+        if let Some((a, b)) = parse_edge_line(&line, lineno)? {
+            let s = densify(a, &mut ids);
+            let d = densify(b, &mut ids);
+            edges.push((s, d));
+        }
     }
     if ids.is_empty() {
         bail!("edge list contains no edges");
@@ -163,6 +187,75 @@ mod tests {
         assert!(read_edge_list(Cursor::new("0\n")).is_err());
         assert!(read_edge_list(Cursor::new("a b\n")).is_err());
         assert!(read_edge_list(Cursor::new("")).is_err());
+    }
+
+    #[test]
+    fn malformed_line_reports_line_number() {
+        // Line 1 comment, line 2 valid, line 3 truncated.
+        let err = read_edge_list(Cursor::new("# c\n0 1\n7\n")).unwrap_err();
+        assert!(format!("{err:#}").contains("line 3"), "{err:#}");
+        // Bad src on line 2 (comments still count toward line numbers).
+        let err = read_edge_list(Cursor::new("% c\nx 1\n")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 2") && msg.contains("bad src"), "{msg}");
+        // Bad dst.
+        let err = read_edge_list(Cursor::new("0 y\n")).unwrap_err();
+        assert!(format!("{err:#}").contains("bad dst"), "{err:#}");
+    }
+
+    #[test]
+    fn comments_blank_lines_and_crlf() {
+        let txt = "# header\n\n   \n0 1\r\n% mid comment\n1 2\r\n\n2 0\n";
+        let g = read_edge_list(Cursor::new(txt)).unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 3);
+    }
+
+    #[test]
+    fn binary_roundtrip_property() {
+        // Property-style: across seeds and sizes (including isolated
+        // vertices and duplicate raw edges), save→load preserves the
+        // exact edge set and vertex count.
+        use crate::util::rng::Rng;
+        let dir = std::env::temp_dir().join("revolver_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        for seed in [1u64, 7, 1234] {
+            for n in [2usize, 17, 301] {
+                let mut rng = Rng::new(seed);
+                // n+3 vertices but edges only among the first n: the
+                // last 3 stay isolated.
+                let mut b = crate::graph::GraphBuilder::new(n + 3);
+                for _ in 0..(n * 8) {
+                    b.edge(rng.below(n as u64) as u32, rng.below(n as u64) as u32);
+                }
+                let g = b.build();
+                let p = dir.join(format!("prop_{seed}_{n}.bin"));
+                save_binary(&g, &p).unwrap();
+                let g2 = load_binary(&p).unwrap();
+                assert_eq!(g2.num_vertices(), g.num_vertices(), "seed={seed} n={n}");
+                assert_eq!(
+                    g.edges().collect::<Vec<_>>(),
+                    g2.edges().collect::<Vec<_>>(),
+                    "seed={seed} n={n}"
+                );
+                g2.validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn binary_rejects_wrong_version() {
+        let dir = std::env::temp_dir().join("revolver_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("badver.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&99u32.to_le_bytes());
+        bytes.extend_from_slice(&1u64.to_le_bytes());
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load_binary(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
     }
 
     #[test]

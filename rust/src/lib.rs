@@ -8,10 +8,18 @@
 //!
 //! ## Architecture (four layers)
 //!
-//! * **L4 — algorithms** ([`partitioners`]) — the four partitioners
-//!   (Revolver / Spinner / Hash / Range). The iterative ones are pure
-//!   [`engine::VertexProgram`]s: per-vertex math plus the per-step data
-//!   they need frozen, and nothing else.
+//! * **L4 — algorithms** ([`partitioners`], [`stream`]) — two algorithm
+//!   families behind one [`partitioners::Partitioner`] trait:
+//!   - *Iterative* (Revolver / Spinner): pure
+//!     [`engine::VertexProgram`]s — per-vertex math plus the per-step
+//!     data they need frozen, and nothing else.
+//!   - *Streaming* ([`stream`]): one-pass LDG and Fennel, and
+//!     prioritized restreaming — each vertex is placed once, in stream
+//!     order, from O(k) decision state. Streams come from the CSR in
+//!     pluggable orders ([`config::StreamOrder`]) or straight off an
+//!     edge-list file without materializing CSR
+//!     ([`stream::FileEdgeStream`]).
+//!   Hash / Range round out the trivial baselines.
 //! * **L3 — execution engine** ([`engine`], [`coordinator`],
 //!   [`partition`]) — the shared superstep runtime: persistent workers
 //!   over contiguous vertex chunks (vertex- or degree-balanced, see
@@ -25,9 +33,22 @@
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the LA update
 //!   (eqs. 8–9) and LP scoring (eqs. 10–12).
 //!
-//! New partitioners implement [`engine::VertexProgram`] and inherit the
-//! thread pool, scheduling, snapshots and halting for free — no thread
-//! plumbing is ever written in an algorithm module (DESIGN.md §Engine).
+//! New iterative partitioners implement [`engine::VertexProgram`] and
+//! inherit the thread pool, scheduling, snapshots and halting for free —
+//! no thread plumbing is ever written in an algorithm module (DESIGN.md
+//! §Engine). New streaming objectives slot into
+//! [`stream::Objective`]'s scoring and inherit both stream adapters.
+//!
+//! ## Warm start (streaming → iterative)
+//!
+//! `--init stream:<ldg|fennel|restream>` ([`config::Init`]) chains the
+//! two families: [`engine::initial_assignment`] runs the streaming pass
+//! and seeds the shared label state from it, Spinner then iterates from
+//! those labels, and Revolver additionally biases every vertex's LA
+//! probability row toward its streamed label — replacing the
+//! uniform-random start so the automata refine an already-good cut
+//! instead of rediscovering it (fewer steps to the §IV-D.9 halting
+//! threshold).
 //!
 //! The [`runtime`] module loads the AOT artifacts via PJRT (the `xla`
 //! crate, gated behind the `xla` cargo feature; stubbed otherwise) so
@@ -40,15 +61,36 @@
 //!
 //! ```no_run
 //! use revolver::graph::gen::{Dataset, generate_dataset};
-//! use revolver::partitioners::{Partitioner, revolver::Revolver};
-//! use revolver::config::RevolverConfig;
+//! use revolver::partitioners::{by_name, Partitioner, revolver::Revolver};
+//! use revolver::config::{Init, RevolverConfig, StreamAlgo};
 //! use revolver::metrics::quality;
 //!
 //! let graph = generate_dataset(Dataset::Lj, 1 << 14, 7).unwrap();
 //! let cfg = RevolverConfig { parts: 8, ..Default::default() };
-//! let out = Revolver::new(cfg).partition(&graph);
+//! let out = Revolver::new(cfg.clone()).partition(&graph);
 //! println!("local edges = {:.3}", quality::local_edges(&graph, &out.labels));
 //! println!("max norm load = {:.3}", quality::max_normalized_load(&graph, &out.labels, 8));
+//!
+//! // Streaming baseline: one Fennel pass over the same graph...
+//! let fast = by_name("fennel", cfg.clone()).unwrap().partition(&graph);
+//! println!("fennel local edges = {:.3}", quality::local_edges(&graph, &fast.labels));
+//!
+//! // ...or as a warm start for Revolver (`--init stream:fennel` on
+//! // the CLI): same quality, far fewer steps to converge.
+//! let warm_cfg = RevolverConfig {
+//!     init: Init::Stream(StreamAlgo::Fennel),
+//!     ..cfg
+//! };
+//! let warm = Revolver::new(warm_cfg).partition(&graph);
+//! println!("steps: cold {} vs warm {}", out.trace.steps(), warm.trace.steps());
+//!
+//! // Huge edge-list files partition without ever building CSR:
+//! let res = revolver::stream::partition_edge_list_file(
+//!     "data/edges.txt",
+//!     &RevolverConfig::default(),
+//!     StreamAlgo::Ldg,
+//! ).unwrap();
+//! println!("streamed {} edges into {} parts", res.edges, 8);
 //! ```
 
 pub mod config;
@@ -61,6 +103,7 @@ pub mod metrics;
 pub mod partition;
 pub mod partitioners;
 pub mod runtime;
+pub mod stream;
 pub mod util;
 
 /// Vertex id type. Graphs in the paper reach 23.9M vertices; `u32` covers

@@ -4,20 +4,23 @@
 //!   partition    run one algorithm on one graph, print quality metrics
 //!   sweep        Figure-3 grid: graphs × algorithms × partition counts
 //!   convergence  Figure-4 per-step traces (Revolver vs Spinner)
+//!   stream       partition an edge-list file without building CSR
 //!   stats        Table-I statistics for the surrogate datasets
 //!   generate     materialize a surrogate dataset to disk
 //!   info         toolchain / artifact diagnostics
 //!
 //! Examples:
 //!   revolver partition --graph lj --vertices 16384 --algorithm revolver --parts 8
-//!   revolver sweep --graphs lj,so --parts 2,4,8 --runs 3 --out results
+//!   revolver partition --graph lj --algorithm revolver --init stream:fennel
+//!   revolver sweep --graphs lj,so --algorithms revolver,fennel,ldg --parts 2,4,8
 //!   revolver convergence --graph lj --parts 32 --vertices 16384
+//!   revolver stream --file edges.txt --algorithm ldg --parts 8 --evaluate
 //!   revolver stats --all
 //!   revolver partition --graph lj --engine xla --parts 8
 
 use anyhow::{bail, Context, Result};
 
-use revolver::config::{Engine, ExecutionModel, RevolverConfig};
+use revolver::config::{ExecutionModel, RevolverConfig, StreamAlgo};
 use revolver::graph::gen::{generate_dataset, Dataset};
 use revolver::graph::{io, stats, Graph};
 use revolver::metrics::quality;
@@ -39,6 +42,7 @@ fn run() -> Result<()> {
         Some("partition") => cmd_partition(args),
         Some("sweep") => cmd_sweep(args),
         Some("convergence") => cmd_convergence(args),
+        Some("stream") => cmd_stream(args),
         Some("stats") => cmd_stats(args),
         Some("generate") => cmd_generate(args),
         Some("info") => cmd_info(args),
@@ -52,7 +56,8 @@ fn run() -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: revolver <partition|sweep|convergence|stats|generate|info> [flags]
+const USAGE: &str =
+    "usage: revolver <partition|sweep|convergence|stream|stats|generate|info> [flags]
   common flags:
     --graph <wiki|uk|usa|so|lj|en|ok|hlwd|eu|path/to/edges.txt>
     --vertices N          surrogate scale (default 16384)
@@ -60,10 +65,17 @@ const USAGE: &str = "usage: revolver <partition|sweep|convergence|stats|generate
     --seed S              RNG seed (default 42)
     --threads T           worker threads
     --schedule <vertex|degree>  chunk layout (degree balances by out-degree)
+    --init <random|stream:<ldg|fennel|restream>>  warm-start policy
+    --stream-order <natural|shuffled|bfs>  streaming visit order
+    --fennel-gamma G      Fennel load exponent (default 1.5)
+    --restream-passes N   restreaming passes (default 3)
     --config file.toml    load RevolverConfig from file
-  partition:  --algorithm <revolver|spinner|hash|range> --engine <native|xla>
+  partition:  --algorithm <revolver|spinner|hash|range|ldg|fennel|restream>
+              --engine <native|xla>
   sweep:      --graphs a,b,c --algorithms a,b --parts 2,4,8 --runs R --out dir
   convergence: --parts k --steps N --out dir
+  stream:     --file edges.txt --algorithm <ldg|fennel|restream>
+              [--evaluate] [--out labels.txt]   (CSR is never built)
   stats:      --all | --graph g
   generate:   --graph g --out file [--format txt|bin]";
 
@@ -86,6 +98,12 @@ fn config_from(args: &mut Args) -> Result<RevolverConfig> {
     cfg.schedule = args.get_or("schedule", cfg.schedule)?;
     cfg.seed = args.get_or("seed", cfg.seed)?;
     cfg.trace_every = args.get_or("trace-every", cfg.trace_every)?;
+    if let Some(init) = args.get("init") {
+        cfg.init = init.parse()?;
+    }
+    cfg.stream_order = args.get_or("stream-order", cfg.stream_order)?;
+    cfg.fennel_gamma = args.get_or("fennel-gamma", cfg.fennel_gamma)?;
+    cfg.restream_passes = args.get_or("restream-passes", cfg.restream_passes)?;
     if let Some(engine) = args.get("engine") {
         cfg.engine = engine.parse()?;
     }
@@ -154,7 +172,68 @@ fn cmd_partition(mut args: Args) -> Result<()> {
     println!("local edges:         {:.4}", q.local_edges);
     println!("edge cuts:           {:.4}", 1.0 - q.local_edges);
     println!("max normalized load: {:.4}", q.max_normalized_load);
+    println!("max norm edge load:  {:.4}", q.max_normalized_edge_load);
     println!("wall time:           {:.2}s", sw.elapsed_s());
+    Ok(())
+}
+
+/// Partition an edge-list file straight off disk (no CSR): the
+/// streaming subsystem's chunked reader feeds one LDG/Fennel pass (or
+/// N restreaming passes). `--evaluate` additionally loads the graph
+/// afterwards to report cut quality; `--out` writes one label per
+/// dense vertex id.
+fn cmd_stream(mut args: Args) -> Result<()> {
+    let file = args
+        .get("file")
+        .filter(|f| !f.is_empty())
+        .context("stream requires --file <edges.txt>")?;
+    let algorithm = args.get("algorithm").unwrap_or_else(|| "fennel".to_string());
+    let evaluate = args.get_bool("evaluate");
+    let out = args.get("out");
+    let cfg = config_from(&mut args)?;
+    args.finish()?;
+    let algo: StreamAlgo = algorithm.parse()?;
+
+    let sw = Stopwatch::start();
+    let res = revolver::stream::partition_edge_list_file(&file, &cfg, algo)?;
+    let elapsed = sw.elapsed_s();
+    let k = cfg.parts;
+    let max_load = res.loads.iter().cloned().fold(0.0f64, f64::max);
+    let expected = res.edges as f64 / k as f64;
+    println!("file:                {file}");
+    println!("algorithm:           {}", algo.name());
+    println!("partitions:          {k}");
+    println!("vertices:            {}", with_commas(res.vertices as u64));
+    println!("edges streamed:      {}", with_commas(res.edges));
+    println!(
+        "max normalized load: {:.4}",
+        if expected > 0.0 { max_load / expected } else { 0.0 }
+    );
+    println!("wall time:           {elapsed:.2}s");
+    println!(
+        "throughput:          {:.2}M edges/s",
+        res.edges as f64 / elapsed.max(1e-9) / 1e6
+    );
+
+    if let Some(out) = out.filter(|o| !o.is_empty()) {
+        use std::fmt::Write as _;
+        let mut text = String::with_capacity(res.labels.len() * 4);
+        for &l in &res.labels {
+            let _ = writeln!(text, "{l}");
+        }
+        std::fs::write(&out, text)?;
+        println!("labels:              {out} (one per dense vertex id)");
+    }
+
+    if evaluate {
+        // The loader densifies ids in the same first-appearance order
+        // as the stream, so the labels line up with this CSR.
+        let g = io::load_edge_list(&file)?;
+        let q = quality::evaluate(&g, &res.labels, k);
+        println!("local edges:         {:.4}", q.local_edges);
+        println!("edge cuts:           {:.4}", 1.0 - q.local_edges);
+        println!("max norm edge load:  {:.4}", q.max_normalized_edge_load);
+    }
     Ok(())
 }
 

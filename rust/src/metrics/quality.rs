@@ -1,4 +1,6 @@
-//! The paper's two quality metrics (§V-E).
+//! The paper's two quality metrics (§V-E), plus the edge-balance
+//! metric of the streaming literature (LDG/Fennel/restreaming balance
+//! total incident-edge work, not just out-edge mass).
 
 use crate::graph::Graph;
 use crate::Label;
@@ -48,17 +50,72 @@ pub fn max_normalized_load(g: &Graph, labels: &[Label], k: usize) -> f64 {
     }
 }
 
-/// Both metrics in one pass-friendly bundle.
+/// Per-partition *incident-edge* loads: Σ_{v∈l} |N(v)| over the
+/// undirected adjacency. Unlike [`partition_loads`] (out-edges only,
+/// the paper's b(l)), this counts the total edge work a partition
+/// hosts — in- and out-edges — which is what the streaming literature
+/// balances. An edge whose endpoints sit in different partitions is
+/// charged to both.
+pub fn partition_edge_loads(g: &Graph, labels: &[Label], k: usize) -> Vec<u64> {
+    let mut loads = vec![0u64; k];
+    for v in 0..g.num_vertices() {
+        let l = labels[v] as usize;
+        debug_assert!(l < k, "label {l} out of range {k}");
+        loads[l] += g.und_degree(v as u32) as u64;
+    }
+    loads
+}
+
+/// *Max normalized edge load*: max_l of [`partition_edge_loads`] over
+/// its balanced share `Σ_v |N(v)| / k`. 1.0 is perfect edge balance.
+pub fn max_normalized_edge_load(g: &Graph, labels: &[Label], k: usize) -> f64 {
+    let loads = partition_edge_loads(g, labels, k);
+    let total: u64 = loads.iter().sum();
+    let max = loads.iter().copied().max().unwrap_or(0) as f64;
+    let expected = total as f64 / k as f64;
+    if expected > 0.0 {
+        max / expected
+    } else {
+        0.0
+    }
+}
+
+/// Per-partition vertex counts — the balance target of classic LDG.
+pub fn partition_vertex_counts(labels: &[Label], k: usize) -> Vec<u64> {
+    let mut counts = vec![0u64; k];
+    for &l in labels {
+        debug_assert!((l as usize) < k, "label {l} out of range {k}");
+        counts[l as usize] += 1;
+    }
+    counts
+}
+
+/// *Max normalized vertex load*: max partition vertex count over |V|/k.
+pub fn max_normalized_vertex_load(labels: &[Label], k: usize) -> f64 {
+    let counts = partition_vertex_counts(labels, k);
+    let max = counts.iter().copied().max().unwrap_or(0) as f64;
+    let expected = labels.len() as f64 / k as f64;
+    if expected > 0.0 {
+        max / expected
+    } else {
+        0.0
+    }
+}
+
+/// All metrics in one pass-friendly bundle.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Quality {
     pub local_edges: f64,
     pub max_normalized_load: f64,
+    /// Incident-edge (in+out) balance — see [`max_normalized_edge_load`].
+    pub max_normalized_edge_load: f64,
 }
 
 pub fn evaluate(g: &Graph, labels: &[Label], k: usize) -> Quality {
     Quality {
         local_edges: local_edges(g, labels),
         max_normalized_load: max_normalized_load(g, labels, k),
+        max_normalized_edge_load: max_normalized_edge_load(g, labels, k),
     }
 }
 
@@ -122,11 +179,44 @@ mod tests {
     }
 
     #[test]
-    fn evaluate_bundles_both() {
+    fn evaluate_bundles_all() {
         let g = two_cliques();
         let labels = vec![0, 0, 0, 1, 1, 1];
         let q = evaluate(&g, &labels, 2);
         assert_eq!(q.local_edges, local_edges(&g, &labels));
         assert_eq!(q.max_normalized_load, max_normalized_load(&g, &labels, 2));
+        assert_eq!(
+            q.max_normalized_edge_load,
+            max_normalized_edge_load(&g, &labels, 2)
+        );
+    }
+
+    #[test]
+    fn edge_loads_count_incident_edges() {
+        let g = two_cliques();
+        let labels = vec![0, 0, 0, 1, 1, 1];
+        let loads = partition_edge_loads(&g, &labels, 2);
+        // Each clique holds 3 internal edges (6 endpoint-incidences) and
+        // one end of the bridge: 7 incidences per side, Σ = 2|E| = 14.
+        assert_eq!(loads, vec![7, 7]);
+        assert!((max_normalized_edge_load(&g, &labels, 2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn edge_load_degenerate_all_in_one() {
+        let g = two_cliques();
+        let labels = vec![0; 6];
+        // Everything in partition 0 of 2: max = 14, expected = 7 => 2.0.
+        assert!((max_normalized_edge_load(&g, &labels, 2) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn vertex_balance() {
+        let labels = vec![0, 0, 0, 1, 1, 1];
+        assert_eq!(partition_vertex_counts(&labels, 2), vec![3, 3]);
+        assert!((max_normalized_vertex_load(&labels, 2) - 1.0).abs() < 1e-12);
+        let skew = vec![0, 0, 0, 0, 1, 1];
+        // max(4,2) / 3 = 4/3.
+        assert!((max_normalized_vertex_load(&skew, 2) - 4.0 / 3.0).abs() < 1e-12);
     }
 }

@@ -11,7 +11,7 @@ pub mod state;
 pub use state::{DemandTracker, PartitionState};
 
 /// Initial assignment policies for partition state.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum InitialAssignment {
     /// `v mod k` — what Hash partitioning produces; Revolver and Spinner
     /// both start from a random-ish balanced assignment.
@@ -20,4 +20,8 @@ pub enum InitialAssignment {
     Range,
     /// Uniform random.
     Random(u64),
+    /// Explicit per-vertex labels — the streaming warm-start path
+    /// ([`crate::config::Init::Stream`]). Must supply one label `< k`
+    /// per vertex.
+    Given(Vec<crate::Label>),
 }

@@ -44,6 +44,16 @@ impl PartitionState {
                 let mut rng = Rng::new(seed);
                 (0..n).map(|_| AtomicU32::new(rng.below(k as u64) as u32)).collect()
             }
+            InitialAssignment::Given(init_labels) => {
+                assert_eq!(init_labels.len(), n, "Given labels must cover every vertex");
+                init_labels
+                    .into_iter()
+                    .map(|l| {
+                        assert!((l as usize) < k, "Given label {l} out of range for k={k}");
+                        AtomicU32::new(l)
+                    })
+                    .collect()
+            }
         };
 
         let loads: Vec<AtomicI64> = (0..k).map(|_| AtomicI64::new(0)).collect();
@@ -239,6 +249,24 @@ mod tests {
             assert!(a.label(v) < 3);
             assert_eq!(a.label(v), b.label(v));
         }
+    }
+
+    #[test]
+    fn given_init_uses_supplied_labels() {
+        let g = path_graph(10);
+        let labels = vec![1, 0, 1, 0, 1, 0, 1, 0, 1, 0];
+        let st = PartitionState::new(&g, 2, 0.05, InitialAssignment::Given(labels.clone()));
+        for (v, &l) in labels.iter().enumerate() {
+            assert_eq!(st.label(v as u32), l);
+        }
+        st.check_load_invariant().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn given_init_rejects_bad_label() {
+        let g = path_graph(3);
+        PartitionState::new(&g, 2, 0.05, InitialAssignment::Given(vec![0, 5, 1]));
     }
 
     #[test]

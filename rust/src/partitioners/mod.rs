@@ -1,5 +1,7 @@
-//! The four partitioning algorithms the paper evaluates (§V-D):
-//! Revolver (this paper), Spinner (LP baseline), Hash, and Range.
+//! The partitioning algorithms: the four the paper evaluates (§V-D) —
+//! Revolver (this paper), Spinner (LP baseline), Hash, and Range —
+//! plus the streaming family ([`crate::stream`]): LDG, Fennel, and
+//! prioritized restreaming.
 
 pub mod hash;
 pub mod range;
@@ -39,8 +41,12 @@ pub fn by_name(
         "spinner" => Ok(Box::new(spinner::Spinner::new(cfg))),
         "hash" => Ok(Box::new(hash::HashPartitioner::new(cfg.parts))),
         "range" => Ok(Box::new(range::RangePartitioner::new(cfg.parts))),
+        "ldg" => Ok(Box::new(crate::stream::Ldg::new(cfg))),
+        "fennel" => Ok(Box::new(crate::stream::Fennel::new(cfg))),
+        "restream" => Ok(Box::new(crate::stream::Restream::new(cfg))),
         other => anyhow::bail!(
-            "unknown partitioner {other:?} (expected revolver|spinner|hash|range)"
+            "unknown partitioner {other:?} \
+             (expected revolver|spinner|hash|range|ldg|fennel|restream)"
         ),
     }
 }
@@ -53,7 +59,9 @@ mod tests {
     #[test]
     fn by_name_constructs_all() {
         let cfg = RevolverConfig { parts: 4, ..Default::default() };
-        for name in ["revolver", "spinner", "hash", "range", "HASH"] {
+        for name in
+            ["revolver", "spinner", "hash", "range", "ldg", "fennel", "restream", "HASH"]
+        {
             let p = by_name(name, cfg.clone()).unwrap();
             assert!(!p.name().is_empty());
         }

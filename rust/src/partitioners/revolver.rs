@@ -45,7 +45,7 @@ use crate::la::signal::build_signals_into;
 use crate::la::weighted::WeightedLa;
 use crate::la::{roulette, Signal};
 use crate::lp::{neighbor_histogram, normalized as nlp};
-use crate::partition::{DemandTracker, PartitionState};
+use crate::partition::{DemandTracker, InitialAssignment, PartitionState};
 use crate::runtime::XlaStepEngine;
 use crate::util::rng::Rng;
 use crate::VertexId;
@@ -95,12 +95,38 @@ struct ChunkState {
     headroom: Vec<bool>,
 }
 
+/// Warm-start mass on the streamed label: the row starts at
+/// `1/k + WARM_BIAS·(1 − 1/k)` there — i.e. halfway between uniform
+/// and deterministic — and the remainder spreads evenly, so the LA
+/// keeps exploring but no longer burns steps rediscovering the
+/// streaming pass's structure.
+const WARM_BIAS: f32 = 0.5;
+
+/// Initialize one LA probability row biased toward `warm`.
+/// `hot = 0.5·(k+1)/k`, `cold = 0.5/k`; `hot + (k−1)·cold = 1`.
+fn init_warm_row(row: &mut [f32], warm: usize) {
+    let k = row.len() as f32;
+    let hot = 1.0 / k + WARM_BIAS * (1.0 - 1.0 / k);
+    let cold = (1.0 - hot) / (k - 1.0);
+    row.fill(cold);
+    row[warm] = hot;
+}
+
 impl ChunkState {
-    fn new(range: Range<usize>, k: usize) -> Self {
+    fn new(range: Range<usize>, k: usize, warm: Option<&[crate::Label]>) -> Self {
         let len = range.len();
         let mut probs = vec![0.0f32; len * k];
-        for row in probs.chunks_mut(k) {
-            WeightedLa::init(row);
+        match warm {
+            None => {
+                for row in probs.chunks_mut(k) {
+                    WeightedLa::init(row);
+                }
+            }
+            Some(labels) => {
+                for (i, row) in probs.chunks_mut(k).enumerate() {
+                    init_warm_row(row, labels[range.start + i] as usize);
+                }
+            }
         }
         ChunkState {
             probs,
@@ -135,6 +161,10 @@ impl ChunkState {
 /// artifacts).
 struct RevolverProgram<'a> {
     cfg: &'a RevolverConfig,
+    /// Streaming warm-start labels (`--init stream:<algo>`): each
+    /// vertex's LA row starts biased toward its label instead of
+    /// uniform. `None` = uniform random init (the paper).
+    warm: Option<Vec<crate::Label>>,
 }
 
 impl VertexProgram for RevolverProgram<'_> {
@@ -170,7 +200,7 @@ impl VertexProgram for RevolverProgram<'_> {
             ),
             Engine::Native => None,
         };
-        (ChunkState::new(chunk, self.cfg.parts), eng)
+        (ChunkState::new(chunk, self.cfg.parts, self.warm.as_deref()), eng)
     }
 
     fn prepare_phase_a(&self, _g: &Graph, _state: &PartitionState, _step: u32) {}
@@ -271,7 +301,15 @@ impl Partitioner for Revolver {
             )
             .expect("failed to load XLA artifacts (run `make artifacts`)");
         }
-        engine::run(g, &self.cfg, &RevolverProgram { cfg: &self.cfg })
+        // Compute the initial assignment once: the engine seeds the
+        // shared labels from it, and (for a streaming warm start) the
+        // program biases each LA row toward its vertex's label.
+        let init = engine::initial_assignment(g, &self.cfg);
+        let warm = match &init {
+            InitialAssignment::Given(labels) => Some(labels.clone()),
+            _ => None,
+        };
+        engine::run_with_init(g, &self.cfg, &RevolverProgram { cfg: &self.cfg, warm }, init)
     }
 }
 
@@ -591,6 +629,27 @@ mod tests {
         let out = Revolver::new(cfg).partition(&g);
         assert!(out.labels.iter().all(|&l| l < 4));
     }
+
+    #[test]
+    fn warm_row_is_normalized_and_biased() {
+        for k in [2usize, 8, 32] {
+            let mut row = vec![0.0f32; k];
+            init_warm_row(&mut row, k / 2);
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "k={k} sum={sum}");
+            let uniform = 1.0 / k as f32;
+            assert!(row[k / 2] > uniform, "k={k}");
+            for (i, &p) in row.iter().enumerate() {
+                if i != k / 2 {
+                    assert!(p > 0.0 && p < uniform, "k={k} i={i} p={p}");
+                }
+            }
+        }
+    }
+
+    // The warm-vs-cold convergence assertion (stream:fennel init
+    // reaches the halting threshold in <= the steps of random init)
+    // lives in tests/integration.rs at acceptance scale.
 
     #[test]
     fn trace_enabled_records_improvement() {

@@ -1,0 +1,299 @@
+//! The streaming partitioners as [`Partitioner`]s, the warm-start
+//! bridge ([`stream_labels`]), and the CSR-free file entry point.
+
+use anyhow::Result;
+
+use crate::config::{RevolverConfig, StreamAlgo};
+use crate::graph::Graph;
+use crate::metrics::quality;
+use crate::metrics::trace::RunTrace;
+use crate::partitioners::{PartitionOutput, Partitioner};
+use crate::Label;
+
+use super::edge_stream::{CsrEdgeStream, EdgeStream, FileEdgeStream};
+use super::pass::{run_pass, Objective, StreamState};
+
+/// One-pass linear deterministic greedy.
+pub struct Ldg {
+    cfg: RevolverConfig,
+}
+
+impl Ldg {
+    pub fn new(cfg: RevolverConfig) -> Self {
+        cfg.validate().expect("invalid config");
+        Ldg { cfg }
+    }
+}
+
+impl Partitioner for Ldg {
+    fn name(&self) -> &'static str {
+        "ldg"
+    }
+
+    fn partition(&self, g: &Graph) -> PartitionOutput {
+        PartitionOutput {
+            labels: one_pass_labels(g, &self.cfg, Objective::Ldg),
+            trace: RunTrace::default(),
+        }
+    }
+}
+
+/// One-pass Fennel (γ from `fennel_gamma`).
+pub struct Fennel {
+    cfg: RevolverConfig,
+}
+
+impl Fennel {
+    pub fn new(cfg: RevolverConfig) -> Self {
+        cfg.validate().expect("invalid config");
+        Fennel { cfg }
+    }
+}
+
+impl Partitioner for Fennel {
+    fn name(&self) -> &'static str {
+        "fennel"
+    }
+
+    fn partition(&self, g: &Graph) -> PartitionOutput {
+        let obj = Objective::Fennel { gamma: self.cfg.fennel_gamma };
+        PartitionOutput {
+            labels: one_pass_labels(g, &self.cfg, obj),
+            trace: RunTrace::default(),
+        }
+    }
+}
+
+/// Prioritized restreaming: `restream_passes` Fennel passes, the first
+/// in the configured stream order, later ones in descending-degree
+/// priority order re-placing every vertex against the full previous
+/// assignment. Keeps the best pass by local edges, so more passes are
+/// never worse than fewer. (Both guarantees are properties of this
+/// CSR-backed path — the CSR can be replayed in priority order and
+/// scored between passes; the file entry point
+/// [`partition_edge_list_file`] restreams in file order and returns
+/// the final pass, see its docs.)
+pub struct Restream {
+    cfg: RevolverConfig,
+}
+
+impl Restream {
+    pub fn new(cfg: RevolverConfig) -> Self {
+        cfg.validate().expect("invalid config");
+        Restream { cfg }
+    }
+}
+
+impl Partitioner for Restream {
+    fn name(&self) -> &'static str {
+        "restream"
+    }
+
+    fn partition(&self, g: &Graph) -> PartitionOutput {
+        PartitionOutput { labels: restream_labels(g, &self.cfg), trace: RunTrace::default() }
+    }
+}
+
+fn one_pass_labels(g: &Graph, cfg: &RevolverConfig, obj: Objective) -> Vec<Label> {
+    let mut stream = CsrEdgeStream::new(g, cfg.stream_order, cfg.seed);
+    let mut state =
+        StreamState::new(g.num_vertices(), cfg.parts, cfg.epsilon, Some(g.num_edges() as u64));
+    run_pass(&mut stream, &mut state, obj, false).expect("CSR streams cannot fail");
+    state.finish(g.num_vertices())
+}
+
+fn restream_labels(g: &Graph, cfg: &RevolverConfig) -> Vec<Label> {
+    let obj = Objective::Fennel { gamma: cfg.fennel_gamma };
+    let n = g.num_vertices();
+    let mut state = StreamState::new(n, cfg.parts, cfg.epsilon, Some(g.num_edges() as u64));
+
+    let mut stream = CsrEdgeStream::new(g, cfg.stream_order, cfg.seed);
+    run_pass(&mut stream, &mut state, obj, false).expect("CSR streams cannot fail");
+    let mut best = state.finish(n);
+    let mut best_le = quality::local_edges(g, &best);
+
+    let mut priority = CsrEdgeStream::with_order(g, CsrEdgeStream::degree_descending(g));
+    for _ in 1..cfg.restream_passes {
+        run_pass(&mut priority, &mut state, obj, true).expect("CSR streams cannot fail");
+        priority.reset().expect("CSR streams cannot fail");
+        let labels = state.finish(n);
+        let le = quality::local_edges(g, &labels);
+        if le >= best_le {
+            best_le = le;
+            best = labels;
+        }
+    }
+    best
+}
+
+/// Labels from a streaming pass over `g` — the warm-start source for
+/// `--init stream:<algo>` (engine + Revolver LA seeding).
+pub fn stream_labels(g: &Graph, algo: StreamAlgo, cfg: &RevolverConfig) -> Vec<Label> {
+    match algo {
+        StreamAlgo::Ldg => one_pass_labels(g, cfg, Objective::Ldg),
+        StreamAlgo::Fennel => {
+            one_pass_labels(g, cfg, Objective::Fennel { gamma: cfg.fennel_gamma })
+        }
+        StreamAlgo::Restream => restream_labels(g, cfg),
+    }
+}
+
+/// Result of partitioning an edge-list file without building CSR.
+pub struct FileStreamResult {
+    /// One label per dense vertex id (first-appearance order — the
+    /// same densification [`crate::graph::io::read_edge_list`] uses).
+    pub labels: Vec<Label>,
+    pub vertices: usize,
+    pub edges: u64,
+    /// Final per-partition out-edge loads.
+    pub loads: Vec<f64>,
+}
+
+/// Partition an edge-list file straight off disk: one chunked pass for
+/// `ldg`/`fennel` (capacities adapt as |E| is discovered), plus
+/// re-stream passes over the file for `restream`. The CSR is never
+/// materialized — which also bounds what file-mode restreaming can
+/// promise: passes replay in *file* order (a file cannot be reordered
+/// by priority), and with no adjacency to score passes against, the
+/// *final* pass's labels are returned rather than the best pass. The
+/// monotone best-pass guarantee belongs to the CSR-backed
+/// [`Restream`] partitioner.
+pub fn partition_edge_list_file<P: AsRef<std::path::Path>>(
+    path: P,
+    cfg: &RevolverConfig,
+    algo: StreamAlgo,
+) -> Result<FileStreamResult> {
+    cfg.validate()?;
+    let obj = match algo {
+        StreamAlgo::Ldg => Objective::Ldg,
+        StreamAlgo::Fennel | StreamAlgo::Restream => {
+            Objective::Fennel { gamma: cfg.fennel_gamma }
+        }
+    };
+    let mut stream = FileEdgeStream::open(path)?;
+    let mut state = StreamState::new(1024, cfg.parts, cfg.epsilon, None);
+    run_pass(&mut stream, &mut state, obj, false)?;
+    anyhow::ensure!(stream.num_vertices() > 0, "edge list contains no edges");
+    if algo == StreamAlgo::Restream {
+        for _ in 1..cfg.restream_passes {
+            stream.reset()?;
+            state.set_known_edges(stream.num_edges());
+            run_pass(&mut stream, &mut state, obj, true)?;
+        }
+    }
+    let vertices = stream.num_vertices();
+    let labels = state.finish(vertices);
+    Ok(FileStreamResult {
+        labels,
+        vertices,
+        edges: state.streamed_edges(),
+        loads: state.loads().to_vec(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::rmat;
+    use crate::metrics::quality;
+    use crate::partitioners::hash::HashPartitioner;
+
+    fn cfg(k: usize) -> RevolverConfig {
+        RevolverConfig { parts: k, seed: 11, ..Default::default() }
+    }
+
+    fn test_graph() -> Graph {
+        rmat::rmat(1 << 11, 16 << 11, 0.57, 0.19, 0.19, 5)
+    }
+
+    #[test]
+    fn ldg_and_fennel_beat_hash() {
+        let g = test_graph();
+        let k = 8;
+        let hash_le =
+            quality::local_edges(&g, &HashPartitioner::new(k).partition(&g).labels);
+        let ps: Vec<Box<dyn Partitioner>> =
+            vec![Box::new(Ldg::new(cfg(k))), Box::new(Fennel::new(cfg(k)))];
+        for p in &ps {
+            let out = p.partition(&g);
+            assert_eq!(out.labels.len(), g.num_vertices());
+            let q = quality::evaluate(&g, &out.labels, k);
+            assert!(
+                q.local_edges > hash_le,
+                "{}: {} vs hash {}",
+                p.name(),
+                q.local_edges,
+                hash_le
+            );
+            assert!(q.max_normalized_load <= 1.1, "{}: {}", p.name(), q.max_normalized_load);
+        }
+    }
+
+    #[test]
+    fn streaming_is_deterministic() {
+        let g = test_graph();
+        for algo in [StreamAlgo::Ldg, StreamAlgo::Fennel, StreamAlgo::Restream] {
+            let a = stream_labels(&g, algo, &cfg(4));
+            let b = stream_labels(&g, algo, &cfg(4));
+            assert_eq!(a, b, "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn stream_orders_all_valid() {
+        use crate::config::StreamOrder;
+        let g = test_graph();
+        for order in [StreamOrder::Natural, StreamOrder::Shuffled, StreamOrder::Bfs] {
+            let mut c = cfg(4);
+            c.stream_order = order;
+            let out = Ldg::new(c).partition(&g);
+            assert!(out.labels.iter().all(|&l| l < 4), "{order:?}");
+            let mnl = quality::max_normalized_load(&g, &out.labels, 4);
+            // Natural order streams R-MAT's hubs first, so the gate
+            // holds the ε envelope exactly; a shuffled order can land a
+            // hub after every partition is full, overflowing by up to
+            // one hub's degree — allow that headroom here.
+            let bound = if order == StreamOrder::Natural { 1.1 } else { 1.35 };
+            assert!(mnl <= bound, "{order:?}: {mnl}");
+        }
+    }
+
+    // Restream monotonicity (3 passes >= pass 1) is asserted at
+    // acceptance scale in tests/integration.rs, not duplicated here.
+
+    #[test]
+    fn file_partition_matches_csr_densification() {
+        let g = test_graph();
+        let dir = std::env::temp_dir().join("revolver_stream_algos");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("rmat.txt");
+        crate::graph::io::save_edge_list(&g, &p).unwrap();
+        // The stream and the loader densify raw ids identically
+        // (first-appearance order), so file-stream labels line up with
+        // a CSR loaded from the same file — that's the graph to
+        // evaluate against.
+        let g2 = crate::graph::io::load_edge_list(&p).unwrap();
+
+        for algo in [StreamAlgo::Ldg, StreamAlgo::Fennel, StreamAlgo::Restream] {
+            let res = partition_edge_list_file(&p, &cfg(4), algo).unwrap();
+            assert_eq!(res.vertices, g2.num_vertices(), "{algo:?}");
+            assert_eq!(res.edges, g2.num_edges() as u64, "{algo:?}");
+            assert!(res.labels.iter().all(|&l| l < 4));
+            // The file path must beat hash on locality too.
+            let hash_le =
+                quality::local_edges(&g2, &HashPartitioner::new(4).partition(&g2).labels);
+            let le = quality::local_edges(&g2, &res.labels);
+            assert!(le > hash_le, "{algo:?}: {le} vs {hash_le}");
+        }
+    }
+
+    #[test]
+    fn file_partition_missing_file_errors() {
+        assert!(partition_edge_list_file(
+            "/nonexistent/edges.txt",
+            &cfg(4),
+            StreamAlgo::Ldg
+        )
+        .is_err());
+    }
+}

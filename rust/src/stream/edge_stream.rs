@@ -1,0 +1,368 @@
+//! Sources a streaming pass consumes: vertex groups from CSR (any
+//! order) or directly from edge-list files (chunked, CSR never built).
+
+use std::collections::{HashMap, VecDeque};
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::StreamOrder;
+use crate::graph::io::{densify, parse_edge_line};
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+use crate::VertexId;
+
+/// One unit of a streaming pass: a vertex and its group's out-edge
+/// count. The group's visible neighbours are written into the caller's
+/// buffer by [`EdgeStream::next_group`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamGroup {
+    pub v: VertexId,
+    /// Out-edges carried by this group — the vertex's contribution to
+    /// partition load (exact for CSR; per-run for file streams).
+    pub out_degree: u32,
+}
+
+/// A graph presented as a stream of vertex groups.
+pub trait EdgeStream {
+    /// Best-known vertex count: exact for CSR, ids-seen-so-far for
+    /// file streams (final once a pass completed).
+    fn num_vertices(&self) -> usize;
+
+    /// Directed edge count if known *before* streaming — enables exact
+    /// capacities. File streams learn it during their first pass.
+    fn num_edges(&self) -> Option<u64>;
+
+    /// Produce the next group: fills `nbrs` with the group's visible
+    /// neighbours and returns its vertex, or `None` at end of pass.
+    fn next_group(&mut self, nbrs: &mut Vec<VertexId>) -> Result<Option<StreamGroup>>;
+
+    /// Rewind for another pass (dense ids stay stable).
+    fn reset(&mut self) -> Result<()>;
+
+    /// `true` when every vertex appears as at most one group per pass
+    /// (CSR streams, by construction) — lets the pass driver skip its
+    /// duplicate-group bookkeeping. Unsorted files may split a
+    /// vertex's edges across runs, so the default is `false`.
+    fn exactly_once_per_pass(&self) -> bool {
+        false
+    }
+}
+
+/// Stream adapter over an in-memory CSR graph. Every vertex appears
+/// exactly once per pass, with its full undirected neighbourhood.
+pub struct CsrEdgeStream<'a> {
+    g: &'a Graph,
+    order: Vec<VertexId>,
+    pos: usize,
+}
+
+impl<'a> CsrEdgeStream<'a> {
+    /// Stream `g` in one of the pluggable orders.
+    pub fn new(g: &'a Graph, order: StreamOrder, seed: u64) -> Self {
+        let n = g.num_vertices();
+        let order = match order {
+            StreamOrder::Natural => (0..n as VertexId).collect(),
+            StreamOrder::Shuffled => {
+                let mut v: Vec<VertexId> = (0..n as VertexId).collect();
+                // Salted so the stream permutation is independent of
+                // the partitioners' other seed-derived streams.
+                Rng::new(seed ^ 0x5354524D /* "STRM" */).shuffle(&mut v);
+                v
+            }
+            StreamOrder::Bfs => bfs_order(g),
+        };
+        Self::with_order(g, order)
+    }
+
+    /// Stream `g` in an explicit order (must be a permutation of
+    /// `0..n` for full coverage; the restreaming priority path).
+    pub fn with_order(g: &'a Graph, order: Vec<VertexId>) -> Self {
+        CsrEdgeStream { g, order, pos: 0 }
+    }
+
+    /// Vertices by descending undirected degree (stable by id) — the
+    /// priority order of prioritized restreaming.
+    pub fn degree_descending(g: &Graph) -> Vec<VertexId> {
+        let mut order: Vec<VertexId> = (0..g.num_vertices() as VertexId).collect();
+        order.sort_by_key(|&v| (std::cmp::Reverse(g.und_degree(v)), v));
+        order
+    }
+}
+
+impl EdgeStream for CsrEdgeStream<'_> {
+    fn num_vertices(&self) -> usize {
+        self.g.num_vertices()
+    }
+
+    fn num_edges(&self) -> Option<u64> {
+        Some(self.g.num_edges() as u64)
+    }
+
+    fn next_group(&mut self, nbrs: &mut Vec<VertexId>) -> Result<Option<StreamGroup>> {
+        let Some(&v) = self.order.get(self.pos) else {
+            return Ok(None);
+        };
+        self.pos += 1;
+        nbrs.clear();
+        nbrs.extend_from_slice(self.g.neighbors(v));
+        Ok(Some(StreamGroup { v, out_degree: self.g.out_degree(v) }))
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.pos = 0;
+        Ok(())
+    }
+
+    fn exactly_once_per_pass(&self) -> bool {
+        true
+    }
+}
+
+/// BFS from vertex 0, restarting at the next unvisited vertex per
+/// component, over the undirected adjacency.
+fn bfs_order(g: &Graph) -> Vec<VertexId> {
+    let n = g.num_vertices();
+    let mut seen = vec![false; n];
+    let mut order = Vec::with_capacity(n);
+    let mut queue = VecDeque::new();
+    for start in 0..n {
+        if seen[start] {
+            continue;
+        }
+        seen[start] = true;
+        queue.push_back(start as VertexId);
+        while let Some(v) = queue.pop_front() {
+            order.push(v);
+            for &u in g.neighbors(v) {
+                if !seen[u as usize] {
+                    seen[u as usize] = true;
+                    queue.push_back(u);
+                }
+            }
+        }
+    }
+    order
+}
+
+/// Stream adapter over an edge-list text file: chunked reads through
+/// one reusable line buffer, no CSR. A group is a maximal run of
+/// consecutive lines sharing a source (exact adjacency for
+/// source-sorted files; a best-effort split otherwise — the pass layer
+/// folds extra runs of an already-placed vertex into its load). Raw
+/// ids are densified to `0..n` in first-appearance order and
+/// self-loops are skipped after densification — identical to
+/// [`crate::graph::io::read_edge_list`] + `GraphBuilder`, so labels
+/// line up with a CSR later loaded from the same file. One divergence
+/// remains: duplicate edge lines are charged to loads again (the
+/// loader dedups them); exact for the simple-graph dumps this format
+/// is used for.
+pub struct FileEdgeStream {
+    path: PathBuf,
+    reader: BufReader<File>,
+    ids: HashMap<u64, VertexId>,
+    line: String,
+    lineno: usize,
+    /// First edge of the next group (read-ahead past a run boundary).
+    pending: Option<(VertexId, VertexId)>,
+    edges_this_pass: u64,
+    known_edges: Option<u64>,
+}
+
+impl FileEdgeStream {
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let f = File::open(&path).with_context(|| format!("open {path:?}"))?;
+        Ok(FileEdgeStream {
+            path,
+            reader: BufReader::new(f),
+            ids: HashMap::new(),
+            line: String::new(),
+            lineno: 0,
+            pending: None,
+            edges_this_pass: 0,
+            known_edges: None,
+        })
+    }
+
+    fn next_edge(&mut self) -> Result<Option<(VertexId, VertexId)>> {
+        loop {
+            self.line.clear();
+            if self.reader.read_line(&mut self.line)? == 0 {
+                // Pass complete: the edge count is now exact.
+                self.known_edges = Some(self.edges_this_pass);
+                return Ok(None);
+            }
+            self.lineno += 1;
+            if let Some((a, b)) = parse_edge_line(&self.line, self.lineno)? {
+                // Densify before the self-loop check so a vertex that
+                // only ever self-loops still gets an id — exactly what
+                // `read_edge_list` + `GraphBuilder` (which drops the
+                // loop edge but keeps the vertex) produce.
+                let s = densify(a, &mut self.ids);
+                let d = densify(b, &mut self.ids);
+                if s == d {
+                    continue;
+                }
+                self.edges_this_pass += 1;
+                return Ok(Some((s, d)));
+            }
+        }
+    }
+}
+
+impl EdgeStream for FileEdgeStream {
+    fn num_vertices(&self) -> usize {
+        self.ids.len()
+    }
+
+    fn num_edges(&self) -> Option<u64> {
+        self.known_edges
+    }
+
+    fn next_group(&mut self, nbrs: &mut Vec<VertexId>) -> Result<Option<StreamGroup>> {
+        let (src, first_dst) = match self.pending.take() {
+            Some(e) => e,
+            None => match self.next_edge()? {
+                Some(e) => e,
+                None => return Ok(None),
+            },
+        };
+        nbrs.clear();
+        nbrs.push(first_dst);
+        let mut out_degree = 1u32;
+        loop {
+            match self.next_edge()? {
+                Some((s, d)) if s == src => {
+                    nbrs.push(d);
+                    out_degree += 1;
+                }
+                Some(e) => {
+                    self.pending = Some(e);
+                    break;
+                }
+                None => break,
+            }
+        }
+        Ok(Some(StreamGroup { v: src, out_degree }))
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        let f = File::open(&self.path).with_context(|| format!("open {:?}", self.path))?;
+        self.reader = BufReader::new(f);
+        self.lineno = 0;
+        self.pending = None;
+        self.known_edges = self.known_edges.or(Some(self.edges_this_pass));
+        self.edges_this_pass = 0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn diamond() -> Graph {
+        // 0->1, 0->2, 1->3, 2->3 plus back-edge 3->0.
+        GraphBuilder::new(4)
+            .edges(&[(0, 1), (0, 2), (1, 3), (2, 3), (3, 0)])
+            .build()
+    }
+
+    fn drain<S: EdgeStream>(s: &mut S) -> Vec<(VertexId, u32, Vec<VertexId>)> {
+        let mut nbrs = Vec::new();
+        let mut out = Vec::new();
+        while let Some(gp) = s.next_group(&mut nbrs).unwrap() {
+            out.push((gp.v, gp.out_degree, nbrs.clone()));
+        }
+        out
+    }
+
+    #[test]
+    fn csr_natural_covers_all_vertices_in_order() {
+        let g = diamond();
+        let mut s = CsrEdgeStream::new(&g, StreamOrder::Natural, 1);
+        assert_eq!(s.num_edges(), Some(5));
+        let groups = drain(&mut s);
+        assert_eq!(groups.iter().map(|g| g.0).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        // Out-degrees from the forward CSR, neighbours undirected.
+        assert_eq!(groups[0].1, 2);
+        assert_eq!(groups[0].2, vec![1, 2, 3]);
+        assert_eq!(groups[3].1, 1);
+        assert_eq!(groups[3].2, vec![0, 1, 2]);
+        // Reset replays identically.
+        s.reset().unwrap();
+        assert_eq!(drain(&mut s), groups);
+    }
+
+    #[test]
+    fn csr_orders_are_permutations() {
+        let g = diamond();
+        for order in [StreamOrder::Natural, StreamOrder::Shuffled, StreamOrder::Bfs] {
+            let mut s = CsrEdgeStream::new(&g, order, 7);
+            let mut vs: Vec<VertexId> = drain(&mut s).iter().map(|g| g.0).collect();
+            vs.sort_unstable();
+            assert_eq!(vs, vec![0, 1, 2, 3], "{order:?}");
+        }
+    }
+
+    #[test]
+    fn bfs_order_visits_neighbors_before_strangers() {
+        // Two components: 0-1-2 path and isolated 3, 4-5 edge.
+        let g = GraphBuilder::new(6).edges(&[(0, 1), (1, 2), (4, 5)]).build();
+        let order = bfs_order(&g);
+        assert_eq!(order, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn degree_descending_priority() {
+        let g = diamond(); // und degrees: 0:3, 1:2, 2:2, 3:3
+        let order = CsrEdgeStream::degree_descending(&g);
+        assert_eq!(order, vec![0, 3, 1, 2]);
+    }
+
+    #[test]
+    fn file_stream_groups_runs_and_learns_counts() {
+        let dir = std::env::temp_dir().join("revolver_stream_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("grouped.txt");
+        // Includes a self-loop (`40 40`): its vertex must get a dense
+        // id (like the CSR loader) but no edge, load, or group.
+        std::fs::write(&p, "# c\n10 20\n10 30\n20 30\n\n30 10\n40 40\n").unwrap();
+        let mut s = FileEdgeStream::open(&p).unwrap();
+        assert_eq!(s.num_edges(), None, "edge count unknown before a pass");
+        let groups = drain(&mut s);
+        // Dense ids in first appearance order: 10->0, 20->1, 30->2, 40->3.
+        assert_eq!(
+            groups,
+            vec![(0, 2, vec![1, 2]), (1, 1, vec![2]), (2, 1, vec![0])]
+        );
+        assert_eq!(s.num_edges(), Some(4));
+        assert_eq!(s.num_vertices(), 4);
+        // Second pass: same dense ids, counts already known.
+        s.reset().unwrap();
+        assert_eq!(s.num_edges(), Some(4));
+        assert_eq!(drain(&mut s), groups);
+    }
+
+    #[test]
+    fn file_stream_propagates_parse_errors() {
+        let dir = std::env::temp_dir().join("revolver_stream_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.txt");
+        std::fs::write(&p, "0 1\nbogus\n").unwrap();
+        let mut s = FileEdgeStream::open(&p).unwrap();
+        let mut nbrs = Vec::new();
+        let err = loop {
+            match s.next_group(&mut nbrs) {
+                Ok(Some(_)) => continue,
+                Ok(None) => panic!("expected a parse error"),
+                Err(e) => break e,
+            }
+        };
+        assert!(format!("{err:#}").contains("line 2"), "{err:#}");
+    }
+}

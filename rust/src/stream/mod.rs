@@ -1,0 +1,59 @@
+//! Streaming partitioning (L4): one-pass and multi-pass algorithms
+//! that assign each vertex once, in stream order, from O(k) state —
+//! the strongest cheap baselines the paper compares against, and the
+//! warm-start source for the iterative partitioners.
+//!
+//! ## Model
+//!
+//! An [`EdgeStream`] yields the graph one *vertex group* at a time: a
+//! vertex id, the neighbours visible in its group, and the group's
+//! out-edge count (the load unit the rest of the system balances).
+//! Two adapters exist:
+//!
+//! * [`CsrEdgeStream`] — over an in-memory [`crate::graph::Graph`], in
+//!   a pluggable [`crate::config::StreamOrder`] (natural, shuffled,
+//!   BFS) or any explicit order (the prioritized-restreaming path).
+//!   Groups carry the full undirected neighbourhood.
+//! * [`FileEdgeStream`] — directly over an edge-list text file through
+//!   a chunked reader with one reusable line buffer, so huge graphs
+//!   are partitioned without ever materializing CSR. Groups are runs
+//!   of consecutive same-source lines (exact for the sorted files
+//!   SNAP-style dumps are); capacities adapt as the edge count is
+//!   discovered, and `reset()` enables multi-pass restreaming with
+//!   stable dense ids.
+//!
+//! ## Algorithms
+//!
+//! [`run_pass`] drives one pass of a greedy [`Objective`] over a
+//! [`StreamState`]:
+//!
+//! * **LDG** (Stanton & Kliot): `|N(v) ∩ P_l| · (1 − b(l)/C)`.
+//! * **Fennel** (Tsourakakis et al.): `|N(v) ∩ P_l| − α·((b(l)+d)^γ −
+//!   b(l)^γ)` with `α = (k/|E|)^{γ−1}`, the marginal cost of the
+//!   superlinear load term, in the out-edge load units of
+//!   [`crate::metrics::quality::max_normalized_load`].
+//!
+//! Both are capacity-gated at `C = (1+ε)|E|/k` — a full partition is
+//! only eligible when every partition is full — so streaming output
+//! satisfies the same eq. (1) balance bound the iterative partitioners
+//! target. [`Restream`] runs N passes: pass 1 in the configured order,
+//! later passes in descending-degree *priority* order re-placing each
+//! vertex against the full previous assignment (Awadelkarim & Ugander,
+//! arXiv:2007.03131), keeping the best pass by local edges.
+//!
+//! ## Warm start
+//!
+//! [`stream_labels`] is the bridge the engine calls for
+//! `--init stream:<algo>`: Spinner starts from the streamed labels,
+//! and Revolver additionally biases each vertex's LA probability row
+//! toward its streamed label (see `partitioners/revolver.rs`).
+
+pub mod algos;
+pub mod edge_stream;
+pub mod pass;
+
+pub use algos::{
+    partition_edge_list_file, stream_labels, Fennel, FileStreamResult, Ldg, Restream,
+};
+pub use edge_stream::{CsrEdgeStream, EdgeStream, FileEdgeStream, StreamGroup};
+pub use pass::{run_pass, Objective, StreamState, UNASSIGNED};

@@ -59,7 +59,7 @@ fn partition_runs_and_reports_metrics() {
 
 #[test]
 fn partition_each_algorithm() {
-    for algo in ["revolver", "spinner", "hash", "range"] {
+    for algo in ["revolver", "spinner", "hash", "range", "ldg", "fennel", "restream"] {
         let (ok, stdout, stderr) = run(&[
             "partition",
             "--graph",
@@ -219,6 +219,87 @@ fn schedule_flag_accepted_and_validated() {
     ]);
     assert!(!ok);
     assert!(stderr.contains("unknown schedule"), "{stderr}");
+}
+
+#[test]
+fn partition_reports_edge_balance_metric() {
+    let (ok, stdout, _) = run(&[
+        "partition", "--graph", "so", "--vertices", "256", "--parts", "4", "--steps", "3",
+    ]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("max norm edge load:"), "{stdout}");
+}
+
+#[test]
+fn partition_with_stream_warmstart_flag() {
+    let (ok, stdout, stderr) = run(&[
+        "partition",
+        "--graph",
+        "lj",
+        "--vertices",
+        "512",
+        "--parts",
+        "4",
+        "--steps",
+        "5",
+        "--threads",
+        "1",
+        "--init",
+        "stream:fennel",
+        "--stream-order",
+        "bfs",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("local edges:"));
+
+    let (ok, _, stderr) =
+        run(&["partition", "--graph", "so", "--vertices", "256", "--init", "warm"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown init"), "{stderr}");
+}
+
+#[test]
+fn stream_subcommand_partitions_file_without_csr() {
+    let dir = std::env::temp_dir().join("revolver_cli_stream");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("g.txt");
+    let (ok, stdout, _) = run(&[
+        "generate",
+        "--graph",
+        "lj",
+        "--vertices",
+        "512",
+        "--format",
+        "txt",
+        "--out",
+        path.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stdout}");
+
+    let labels = dir.join("labels.txt");
+    let (ok, stdout, stderr) = run(&[
+        "stream",
+        "--file",
+        path.to_str().unwrap(),
+        "--algorithm",
+        "ldg",
+        "--parts",
+        "4",
+        "--evaluate",
+        "--out",
+        labels.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("edges streamed:"), "{stdout}");
+    assert!(stdout.contains("local edges:"), "{stdout}");
+    let written = std::fs::read_to_string(&labels).unwrap();
+    assert!(written.lines().count() > 0);
+    assert!(written.lines().all(|l| l.parse::<u32>().map(|v| v < 4).unwrap_or(false)));
+
+    // Missing --file is a clean error.
+    let (ok, _, stderr) = run(&["stream", "--algorithm", "ldg"]);
+    assert!(!ok);
+    assert!(stderr.contains("--file"), "{stderr}");
 }
 
 #[test]

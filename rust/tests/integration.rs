@@ -1,9 +1,10 @@
 //! Cross-module integration tests: generators → partitioners → metrics,
-//! config plumbing, and I/O round-trips through the full pipeline.
+//! config plumbing, streaming/warm-start paths, and I/O round-trips
+//! through the full pipeline.
 
-use revolver::config::{ExecutionModel, RevolverConfig};
-use revolver::graph::gen::{generate_dataset, Dataset};
-use revolver::graph::{io, stats};
+use revolver::config::{ExecutionModel, Init, RevolverConfig, StreamAlgo};
+use revolver::graph::gen::{generate_dataset, rmat, Dataset};
+use revolver::graph::{io, stats, Graph};
 use revolver::metrics::quality;
 use revolver::partitioners::by_name;
 
@@ -16,7 +17,7 @@ fn all_algorithms_all_datasets_smoke() {
     // Every partitioner must produce valid output on every dataset class.
     for ds in Dataset::ALL {
         let g = generate_dataset(ds, 256, 1).unwrap();
-        for algo in ["revolver", "spinner", "hash", "range"] {
+        for algo in ["revolver", "spinner", "hash", "range", "ldg", "fennel", "restream"] {
             let out = by_name(algo, cfg(4, 10)).unwrap().partition(&g);
             assert_eq!(out.labels.len(), g.num_vertices(), "{algo}/{}", ds.name());
             assert!(out.labels.iter().all(|&l| l < 4), "{algo}/{}", ds.name());
@@ -25,6 +26,86 @@ fn all_algorithms_all_datasets_smoke() {
             assert!(q.max_normalized_load >= 1.0 - 1e-9);
         }
     }
+}
+
+/// The R-MAT surrogate the streaming acceptance criteria run on (k=8).
+fn rmat_surrogate() -> Graph {
+    let n = 1 << 13;
+    rmat::rmat(n, 16 * n, 0.57, 0.19, 0.19, 5)
+}
+
+#[test]
+fn streaming_beats_hash_within_balance_envelope() {
+    let g = rmat_surrogate();
+    let k = 8;
+    let hash_le =
+        quality::local_edges(&g, &by_name("hash", cfg(k, 1)).unwrap().partition(&g).labels);
+    for algo in ["ldg", "fennel"] {
+        let out = by_name(algo, cfg(k, 1)).unwrap().partition(&g);
+        let q = quality::evaluate(&g, &out.labels, k);
+        assert!(
+            q.local_edges > hash_le,
+            "{algo} local edges {} must beat hash {hash_le}",
+            q.local_edges
+        );
+        assert!(
+            q.max_normalized_load <= 1.1,
+            "{algo} max normalized load {} exceeds 1.1",
+            q.max_normalized_load
+        );
+    }
+}
+
+#[test]
+fn restream_three_passes_no_worse_than_one() {
+    let g = rmat_surrogate();
+    let mut c1 = cfg(8, 1);
+    c1.restream_passes = 1;
+    let mut c3 = cfg(8, 1);
+    c3.restream_passes = 3;
+    let le1 =
+        quality::local_edges(&g, &by_name("restream", c1).unwrap().partition(&g).labels);
+    let le3 =
+        quality::local_edges(&g, &by_name("restream", c3).unwrap().partition(&g).labels);
+    assert!(le3 >= le1, "restream 3 passes ({le3}) must be no worse than pass 1 ({le1})");
+}
+
+#[test]
+fn revolver_stream_warmstart_converges_no_slower() {
+    // Same graph, same seed: `--init stream:fennel` must reach the
+    // §IV-D.9 convergence threshold in no more steps than the paper's
+    // uniform-random start.
+    let g = rmat_surrogate();
+    let mut c = cfg(8, 150);
+    c.threads = 1;
+    let cold = by_name("revolver", c.clone()).unwrap().partition(&g);
+    c.init = Init::Stream(StreamAlgo::Fennel);
+    let warm = by_name("revolver", c).unwrap().partition(&g);
+    assert!(
+        warm.trace.steps() <= cold.trace.steps(),
+        "warm={} cold={}",
+        warm.trace.steps(),
+        cold.trace.steps()
+    );
+    // The warm start is a head start, not a quality trade: it must
+    // still land in the same balance envelope.
+    let q = quality::evaluate(&g, &warm.labels, 8);
+    assert!(q.max_normalized_load < 1.15, "{q:?}");
+}
+
+#[test]
+fn spinner_stream_warmstart_runs_and_keeps_quality() {
+    let g = rmat_surrogate();
+    let mut c = cfg(8, 30);
+    c.init = Init::Stream(StreamAlgo::Ldg);
+    let ldg_le =
+        quality::local_edges(&g, &by_name("ldg", c.clone()).unwrap().partition(&g).labels);
+    let out = by_name("spinner", c).unwrap().partition(&g);
+    assert!(out.labels.iter().all(|&l| l < 8));
+    let warm_le = quality::local_edges(&g, &out.labels);
+    // Spinner iterating from the streamed start must not destroy it:
+    // it only migrates vertices toward higher-scoring partitions.
+    assert!(warm_le > ldg_le - 0.05, "spinner {warm_le} vs its ldg init {ldg_le}");
 }
 
 #[test]
