@@ -46,7 +46,8 @@ fn main() {
                 res.push(quality::Quality {
                     local_edges: le,
                     max_normalized_load: mnl,
-                    max_normalized_edge_load: 0.0, // unused by this ablation
+                    max_normalized_edge_load: 0.0,  // unused by this ablation
+                    mean_communication_volume: 0.0, // unused by this ablation
                 });
             }
             let win = res[0].max_normalized_load <= res[1].max_normalized_load + 0.02;

@@ -206,5 +206,71 @@ fn main() {
         }
     }
 
+    // Multilevel V-cycle vs flat Spinner at the same total superstep
+    // budget, on power-law R-MAT graphs across scales. The V-cycle
+    // spends most of its supersteps on levels a fraction of |V|, so at
+    // equal budget it should dominate on locality while the rebalance
+    // pass pins the ε envelope; the JSON rows feed the BENCH trajectory
+    // alongside stream_rmat.
+    for &e in exps {
+        let n = 1usize << e;
+        let mg = rmat::rmat(n, 16 * n, 0.57, 0.19, 0.19, 11);
+        println!(
+            "\n=== multilevel: V-cycle vs spinner at equal budget (R-MAT |V|={} |E|={}, k={k8}) ===\n",
+            mg.num_vertices(),
+            mg.num_edges()
+        );
+        let ml_cfg = RevolverConfig { parts: k8, seed: 3, ..Default::default() };
+        let ml = by_name("multilevel", ml_cfg).unwrap();
+        let ml_out = ml.partition(&mg);
+        let budget = ml_out.trace.steps().max(1);
+        let q_ml = quality::evaluate(&mg, &ml_out.labels, k8);
+
+        let sp_cfg = RevolverConfig {
+            parts: k8,
+            seed: 3,
+            max_steps: budget,
+            halt_window: u32::MAX,
+            ..Default::default()
+        };
+        let sp = by_name("spinner", sp_cfg).unwrap();
+        let sp_out = sp.partition(&mg);
+        let q_sp = quality::evaluate(&mg, &sp_out.labels, k8);
+
+        for (algo, p, q) in [
+            ("multilevel", &ml, &q_ml),
+            ("spinner", &sp, &q_sp),
+        ] {
+            let r = bench(&format!("{algo:>10} 2^{e} ({budget} supersteps)"), 1, 3, || {
+                p.partition(&mg).labels.len()
+            });
+            println!(
+                "{r}   (local={:.4}, mnl={:.3}, cv={:.3})",
+                q.local_edges, q.max_normalized_load, q.mean_communication_volume
+            );
+            rows.push(Json::Obj(
+                [
+                    ("bench".to_string(), Json::Str("multilevel_rmat".to_string())),
+                    ("algorithm".to_string(), Json::Str(algo.to_string())),
+                    ("parts".to_string(), Json::Num(k8 as f64)),
+                    ("vertices".to_string(), Json::Num(mg.num_vertices() as f64)),
+                    ("edges".to_string(), Json::Num(mg.num_edges() as f64)),
+                    ("supersteps".to_string(), Json::Num(budget as f64)),
+                    ("median_ns".to_string(), Json::Num(r.median_ns)),
+                    ("mean_ns".to_string(), Json::Num(r.mean_ns)),
+                    ("min_ns".to_string(), Json::Num(r.min_ns)),
+                    ("local_edges".to_string(), Json::Num(q.local_edges)),
+                    ("max_normalized_load".to_string(), Json::Num(q.max_normalized_load)),
+                    (
+                        "mean_communication_volume".to_string(),
+                        Json::Num(q.mean_communication_volume),
+                    ),
+                ]
+                .into_iter()
+                .collect(),
+            ));
+        }
+    }
+
     println!("\nBENCH_JSON {}", Json::Arr(rows).to_string());
 }

@@ -200,6 +200,17 @@ pub struct RevolverConfig {
     /// (pass 1 streams in `stream_order`, later passes in priority
     /// order reusing the previous assignment).
     pub restream_passes: u32,
+    /// Multilevel: stop coarsening once the level has at most this many
+    /// vertices (the V-cycle raises it to `2·parts` if smaller, so the
+    /// coarsest graph always has room for k non-empty partitions).
+    pub coarsen_until: usize,
+    /// Multilevel: superstep budget of each per-level refinement pass
+    /// (convergence halting may stop a level earlier).
+    pub refine_steps: u32,
+    /// Multilevel: the registered algorithm that partitions the
+    /// coarsest graph (any [`crate::partitioners::by_name`] entry except
+    /// the multilevel family itself; default the streaming `fennel`).
+    pub coarse_algo: String,
 }
 
 impl Default for RevolverConfig {
@@ -224,6 +235,9 @@ impl Default for RevolverConfig {
             stream_order: StreamOrder::Natural,
             fennel_gamma: 1.5,
             restream_passes: 3,
+            coarsen_until: 256,
+            refine_steps: 10,
+            coarse_algo: "fennel".to_string(),
         }
     }
 }
@@ -260,6 +274,24 @@ impl RevolverConfig {
             self.fennel_gamma
         );
         anyhow::ensure!(self.restream_passes >= 1, "restream_passes must be >= 1");
+        anyhow::ensure!(self.coarsen_until >= 2, "coarsen_until must be >= 2");
+        anyhow::ensure!(self.refine_steps >= 1, "refine_steps must be >= 1");
+        // The coarsest-level algorithm must itself be a registered
+        // non-multilevel partitioner (a multilevel coarse_algo would
+        // recurse forever). The family list lives next to the registry
+        // so a new V-cycle variant cannot dodge this guard.
+        let ca = self.coarse_algo.to_lowercase();
+        anyhow::ensure!(
+            !crate::partitioners::MULTILEVEL_FAMILY.contains(&ca.as_str()),
+            "coarse_algo must not be a multilevel algorithm, got {:?}",
+            self.coarse_algo
+        );
+        anyhow::ensure!(
+            crate::partitioners::REGISTRY.contains(&ca.as_str()),
+            "unknown coarse_algo {:?} (expected one of: {})",
+            self.coarse_algo,
+            crate::partitioners::REGISTRY.join("|")
+        );
         Ok(())
     }
 
@@ -306,6 +338,9 @@ impl RevolverConfig {
                 "restream_passes" => {
                     cfg.restream_passes = value.parse().context("restream_passes")?
                 }
+                "coarsen_until" => cfg.coarsen_until = value.parse().context("coarsen_until")?,
+                "refine_steps" => cfg.refine_steps = value.parse().context("refine_steps")?,
+                "coarse_algo" => cfg.coarse_algo = value.clone(),
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -466,6 +501,29 @@ mod tests {
         assert_eq!(c.restream_passes, 3);
         assert!(RevolverConfig::from_toml_str("fennel_gamma = 1.0\n").is_err());
         assert!(RevolverConfig::from_toml_str("restream_passes = 0\n").is_err());
+    }
+
+    #[test]
+    fn multilevel_knobs_from_toml_and_validation() {
+        let c = RevolverConfig::from_toml_str(
+            "coarsen_until = 64\nrefine_steps = 4\ncoarse_algo = \"ldg\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.coarsen_until, 64);
+        assert_eq!(c.refine_steps, 4);
+        assert_eq!(c.coarse_algo, "ldg");
+
+        let d = RevolverConfig::default();
+        assert_eq!(d.coarsen_until, 256);
+        assert_eq!(d.refine_steps, 10);
+        assert_eq!(d.coarse_algo, "fennel");
+
+        assert!(RevolverConfig::from_toml_str("coarsen_until = 1\n").is_err());
+        assert!(RevolverConfig::from_toml_str("refine_steps = 0\n").is_err());
+        // Unknown and recursive coarse algorithms are rejected eagerly.
+        assert!(RevolverConfig::from_toml_str("coarse_algo = \"metis\"\n").is_err());
+        assert!(RevolverConfig::from_toml_str("coarse_algo = \"multilevel\"\n").is_err());
+        assert!(RevolverConfig::from_toml_str("coarse_algo = \"ml-revolver\"\n").is_err());
     }
 
     #[test]

@@ -236,7 +236,12 @@ pub fn run<P: VertexProgram>(g: &Graph, cfg: &RevolverConfig, program: &P) -> Pa
 
 /// [`run`] with an explicit initial assignment — callers that also
 /// need the labels themselves (Revolver seeds its LA rows from them)
-/// compute the assignment once and pass it through.
+/// compute the assignment once and pass it through. The multilevel
+/// V-cycle ([`crate::multilevel`]) is the other client: each level's
+/// refinement enters here with the projected coarse labels and a
+/// per-level step budget (`cfg.max_steps = refine_steps`), and on
+/// graphs with vertex weights the whole load accounting runs in
+/// coarse-vertex-weight units via [`Graph::load_mass`].
 pub fn run_with_init<P: VertexProgram>(
     g: &Graph,
     cfg: &RevolverConfig,
@@ -270,6 +275,10 @@ pub fn run_with_init<P: VertexProgram>(
     let mut detector = ConvergenceDetector::new(cfg.halt_theta, cfg.halt_window);
     let mut trace = RunTrace::default();
     let mut executed_steps: u32 = 0;
+    // Last step's aggregates, for a truthful terminal trace point when
+    // the sampler did not land on the final step.
+    let mut last_mean_score = 0.0f64;
+    let mut last_migrations = 0u64;
 
     std::thread::scope(|scope| {
         // ── Workers ──
@@ -349,6 +358,8 @@ pub fn run_with_init<P: VertexProgram>(
                 .into_iter()
                 .fold(StepStats::default(), StepStats::merged);
             let mean_score = totals.score_sum / n as f64;
+            last_mean_score = mean_score;
+            last_migrations = totals.migrations;
 
             if cfg.trace_every > 0 && step % cfg.trace_every == 0 {
                 let labels = state.labels_snapshot();
@@ -372,14 +383,21 @@ pub fn run_with_init<P: VertexProgram>(
 
     let labels = state.labels_snapshot();
     debug_assert!(state.check_load_invariant().is_ok());
-    if trace.points.is_empty() || cfg.trace_every == 0 {
-        let q = quality::evaluate(g, &labels, k);
+    // The trace must always end with the final executed step — callers
+    // derive the executed superstep count from it (`RunTrace::steps`,
+    // the multilevel budget accounting). With `trace_every >= 2` the
+    // loop's last sampled point can sit several steps early, so append
+    // the terminal point whenever it is missing, carrying the last
+    // step's real aggregates (only the two quality metrics the point
+    // needs are computed — not the full `evaluate` bundle).
+    let final_step = executed_steps.max(1) - 1;
+    if trace.points.last().map(|p| p.step) != Some(final_step) {
         trace.push(TracePoint {
-            step: executed_steps.max(1) - 1,
-            local_edges: q.local_edges,
-            max_normalized_load: q.max_normalized_load,
-            mean_score: 0.0,
-            migrations: 0,
+            step: final_step,
+            local_edges: quality::local_edges(g, &labels),
+            max_normalized_load: quality::max_normalized_load(g, &labels, k),
+            mean_score: last_mean_score,
+            migrations: last_migrations,
         });
     }
     trace.wall_time_s = sw.elapsed_s();
@@ -549,6 +567,21 @@ mod tests {
         // the streaming warm start.
         let expect = crate::stream::stream_labels(&g, StreamAlgo::Fennel, &c);
         assert_eq!(out.labels, expect);
+    }
+
+    #[test]
+    fn sparse_trace_still_records_final_step() {
+        // trace_every = 2 over 6 steps samples steps 0/2/4; the terminal
+        // point for step 5 must still be appended so steps() reports the
+        // executed superstep count (the multilevel budget accounting
+        // reads it).
+        let g = ring_graph(32);
+        let p = ProbeProgram::new(ExecutionModel::Asynchronous, 32);
+        let mut c = cfg(2, 6);
+        c.trace_every = 2;
+        let out = run(&g, &c, &p);
+        assert_eq!(out.trace.steps(), 6, "sparse tracing must not hide executed steps");
+        assert_eq!(out.trace.points.last().unwrap().step, 5);
     }
 
     #[test]

@@ -1,5 +1,8 @@
 //! Graph construction: edge accumulation -> dedup -> CSR + undirected
-//! weighted adjacency (eq. 4).
+//! weighted adjacency (eq. 4) — plus the *weighted* construction path
+//! ([`WeightedGraphBuilder`]) the multilevel contraction uses, where
+//! parallel edges accumulate weight instead of deduplicating and each
+//! vertex carries an explicit balance weight.
 
 use crate::VertexId;
 use super::csr::Graph;
@@ -65,53 +68,173 @@ impl GraphBuilder {
         self.edges.sort_unstable();
         self.edges.dedup();
 
-        // Forward CSR.
-        let mut fwd_offsets = vec![0u64; n + 1];
-        for &(s, _) in &self.edges {
-            fwd_offsets[s as usize + 1] += 1;
-        }
-        for i in 0..n {
-            fwd_offsets[i + 1] += fwd_offsets[i];
-        }
-        let fwd_targets: Vec<VertexId> = self.edges.iter().map(|&(_, d)| d).collect();
+        // Unit weights through the shared assembly reproduce eq. (4)
+        // exactly: the undirected weight sums both directions, giving
+        // 2.0 for a reciprocal pair and 1.0 for a one-way edge. The
+        // iterator adapter avoids materializing a weighted copy of the
+        // (possibly huge) edge list.
+        assemble_csr(n, self.edges.iter().map(|&(s, d)| (s, d, 1.0)), None, false)
+    }
+}
 
-        // Undirected adjacency with eq.-(4) weights. Build a mirrored
-        // edge list tagged by direction, then merge per (min-endpoint
-        // ordering is irrelevant; we need per-vertex sorted lists).
-        // For each vertex v, the neighbour u gets weight 2.0 iff both
-        // (v,u) and (u,v) exist in the directed graph.
-        let m = self.edges.len();
-        let mut und: Vec<(VertexId, VertexId, bool)> = Vec::with_capacity(2 * m);
-        // tag=true => original direction (v -> u), false => reversed.
-        for &(s, d) in &self.edges {
-            und.push((s, d, true));
-            und.push((d, s, false));
+/// Shared CSR assembly: turn a **sorted, parallel-merged** stream of
+/// directed weighted edges into the forward CSR plus the mirrored
+/// undirected adjacency whose per-pair weight sums both directions.
+/// Both builders end here — [`GraphBuilder`] with deduplicated unit
+/// weights (⇒ the eq.-(4) 1-or-2 values), [`WeightedGraphBuilder`]
+/// with accumulated weights and explicit vertex weights.
+fn assemble_csr<I>(
+    n: usize,
+    merged: I,
+    vertex_weights: Option<Vec<u32>>,
+    weighted: bool,
+) -> Graph
+where
+    I: ExactSizeIterator<Item = (VertexId, VertexId, f32)>,
+{
+    let m = merged.len();
+    // One pass builds the forward counts/targets and the mirrored
+    // undirected list together.
+    let mut fwd_offsets = vec![0u64; n + 1];
+    let mut fwd_targets: Vec<VertexId> = Vec::with_capacity(m);
+    let mut und: Vec<(VertexId, VertexId, f32)> = Vec::with_capacity(2 * m);
+    let mut prev: Option<(VertexId, VertexId)> = None;
+    for (s, d, w) in merged {
+        debug_assert!(
+            match prev {
+                None => true,
+                Some(p) => p < (s, d),
+            },
+            "edges must arrive sorted and parallel-merged"
+        );
+        prev = Some((s, d));
+        fwd_offsets[s as usize + 1] += 1;
+        fwd_targets.push(d);
+        und.push((s, d, w));
+        und.push((d, s, w));
+    }
+    for i in 0..n {
+        fwd_offsets[i + 1] += fwd_offsets[i];
+    }
+
+    // Undirected adjacency: sum the mirrored weights per (v, u) run —
+    // per-vertex neighbour lists come out sorted from the sort below.
+    und.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+
+    let mut und_offsets = vec![0u64; n + 1];
+    let mut und_targets: Vec<VertexId> = Vec::with_capacity(und.len());
+    let mut und_weights: Vec<f32> = Vec::with_capacity(und.len());
+    let mut i = 0;
+    while i < und.len() {
+        let (v, u, mut w) = und[i];
+        let mut j = i + 1;
+        while j < und.len() && und[j].0 == v && und[j].1 == u {
+            w += und[j].2;
+            j += 1;
         }
-        und.sort_unstable_by_key(|&(a, b, _)| (a, b));
+        und_offsets[v as usize + 1] += 1;
+        und_targets.push(u);
+        und_weights.push(w);
+        i = j;
+    }
+    for i in 0..n {
+        und_offsets[i + 1] += und_offsets[i];
+    }
 
-        let mut und_offsets = vec![0u64; n + 1];
-        let mut und_targets: Vec<VertexId> = Vec::with_capacity(und.len());
-        let mut und_weights: Vec<f32> = Vec::with_capacity(und.len());
+    Graph::from_parts(
+        n,
+        fwd_offsets,
+        fwd_targets,
+        und_offsets,
+        und_targets,
+        und_weights,
+        vertex_weights,
+        weighted,
+    )
+}
 
-        let mut i = 0;
-        while i < und.len() {
-            let (v, u, _) = und[i];
-            let mut j = i + 1;
-            let mut both = false;
-            while j < und.len() && und[j].0 == v && und[j].1 == u {
-                both = true; // a (v,u) pair appearing twice means both directions exist
-                j += 1;
+/// Weighted-CSR construction: directed edges carry an explicit weight,
+/// parallel edges are **merged by summing** (not deduplicated), and each
+/// vertex carries a balance weight (default 1).
+///
+/// This is the substrate of multilevel coarsening: contracting a
+/// matching produces parallel edges between cluster pairs whose weights
+/// must accumulate, and a coarse vertex must weigh the number of fine
+/// vertices it stands for. The undirected adjacency sums the weight of
+/// both directions — for unit weights that reduces exactly to eq. (4)'s
+/// ŵ (2 for a reciprocal pair, 1 otherwise).
+pub struct WeightedGraphBuilder {
+    n: usize,
+    edges: Vec<(VertexId, VertexId, f32)>,
+    vertex_weights: Vec<u32>,
+}
+
+impl WeightedGraphBuilder {
+    pub fn new(num_vertices: usize) -> Self {
+        assert!(num_vertices > 0, "graph must have at least one vertex");
+        assert!(
+            num_vertices <= u32::MAX as usize,
+            "VertexId is u32; at most 2^32-1 vertices"
+        );
+        WeightedGraphBuilder {
+            n: num_vertices,
+            edges: Vec::new(),
+            vertex_weights: vec![1; num_vertices],
+        }
+    }
+
+    /// Pre-reserve for `m` edges.
+    pub fn with_capacity(num_vertices: usize, m: usize) -> Self {
+        let mut b = Self::new(num_vertices);
+        b.edges.reserve(m);
+        b
+    }
+
+    /// Add one weighted directed edge. Weights must be finite and
+    /// positive; self-loops are silently dropped (contracting a matched
+    /// pair folds their connecting edge away).
+    #[inline]
+    pub fn edge(&mut self, src: VertexId, dst: VertexId, w: f32) -> &mut Self {
+        assert!((src as usize) < self.n && (dst as usize) < self.n, "edge out of range");
+        assert!(w.is_finite() && w > 0.0, "edge weight must be finite and positive");
+        if src != dst {
+            self.edges.push((src, dst, w));
+        }
+        self
+    }
+
+    /// Set the balance weight of one vertex (default 1).
+    pub fn set_vertex_weight(&mut self, v: VertexId, w: u32) -> &mut Self {
+        assert!((v as usize) < self.n, "vertex out of range");
+        assert!(w >= 1, "vertex weight must be >= 1");
+        self.vertex_weights[v as usize] = w;
+        self
+    }
+
+    /// Replace all vertex weights at once (must cover every vertex).
+    pub fn vertex_weights(mut self, ws: Vec<u32>) -> Self {
+        assert_eq!(ws.len(), self.n, "vertex weights must cover every vertex");
+        assert!(ws.iter().all(|&w| w >= 1), "vertex weights must be >= 1");
+        self.vertex_weights = ws;
+        self
+    }
+
+    /// Finalize into a weighted CSR [`Graph`].
+    pub fn build(mut self) -> Graph {
+        let n = self.n;
+
+        // Merge parallel directed edges by summing weights. Sorting by
+        // (src, dst) gives the forward CSR layout directly.
+        self.edges
+            .sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        let mut merged: Vec<(VertexId, VertexId, f32)> = Vec::with_capacity(self.edges.len());
+        for &(s, d, w) in &self.edges {
+            match merged.last_mut() {
+                Some(last) if last.0 == s && last.1 == d => last.2 += w,
+                _ => merged.push((s, d, w)),
             }
-            und_offsets[v as usize + 1] += 1;
-            und_targets.push(u);
-            und_weights.push(if both { 2.0 } else { 1.0 });
-            i = j;
         }
-        for i in 0..n {
-            und_offsets[i + 1] += und_offsets[i];
-        }
-
-        Graph::from_parts(n, fwd_offsets, fwd_targets, und_offsets, und_targets, und_weights)
+        assemble_csr(n, merged.into_iter(), Some(self.vertex_weights), true)
     }
 }
 
@@ -161,6 +284,66 @@ mod tests {
             .flat_map(|v| g.neighbor_weights(v).iter().copied())
             .sum();
         assert_eq!(total, 2.0 * 1.0 + 2.0 * 2.0);
+    }
+
+    #[test]
+    fn weighted_parallel_edges_accumulate() {
+        let mut b = WeightedGraphBuilder::new(3);
+        b.edge(0, 1, 1.0).edge(0, 1, 2.5).edge(1, 0, 0.5).edge(2, 1, 1.0);
+        let g = b.build();
+        assert!(g.is_weighted());
+        // Directed (0,1) runs merged into one forward edge of weight 3.5.
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.out_neighbors(0), &[1]);
+        // Undirected weight 0-1 = 3.5 + 0.5 (both directions summed).
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.neighbor_weights(0), &[4.0]);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.neighbor_weights(1), &[4.0, 1.0]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn weighted_vertex_weights_drive_mass() {
+        let mut b = WeightedGraphBuilder::new(3).vertex_weights(vec![2, 3, 1]);
+        b.edge(0, 1, 1.0);
+        b.set_vertex_weight(2, 4);
+        let g = b.build();
+        assert!(g.has_vertex_weights());
+        assert_eq!(g.vertex_weight(0), 2);
+        assert_eq!(g.vertex_weight(2), 4);
+        assert_eq!(g.load_mass(0), 2, "mass is the vertex weight, not out-degree");
+        assert_eq!(g.total_load_mass(), 2 + 3 + 4);
+        assert_eq!(g.total_vertex_weight(), 9);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn weighted_unit_graph_matches_eq4() {
+        // Unit weights through the weighted path reproduce eq. (4):
+        // reciprocal pairs sum to 2, one-way edges to 1.
+        let mut b = WeightedGraphBuilder::new(3);
+        b.edge(0, 1, 1.0).edge(1, 0, 1.0).edge(0, 2, 1.0);
+        let g = b.build();
+        assert_eq!(g.neighbor_weights(0), &[2.0, 1.0]);
+        assert_eq!(g.neighbor_weights(1), &[2.0]);
+        assert_eq!(g.neighbor_weights(2), &[1.0]);
+    }
+
+    #[test]
+    fn weighted_self_loops_dropped() {
+        let mut b = WeightedGraphBuilder::new(2);
+        b.edge(0, 0, 5.0).edge(0, 1, 1.0);
+        let g = b.build();
+        assert_eq!(g.num_edges(), 1);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and positive")]
+    fn weighted_rejects_nonpositive_weight() {
+        let mut b = WeightedGraphBuilder::new(2);
+        b.edge(0, 1, 0.0);
     }
 
     #[test]

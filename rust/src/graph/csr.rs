@@ -5,13 +5,15 @@ use crate::VertexId;
 /// A directed graph in CSR form, with a precomputed *undirected* weighted
 /// adjacency for label propagation.
 ///
-/// Invariants (established by [`super::builder::GraphBuilder`], relied on
-/// throughout the hot paths):
+/// Invariants (established by [`super::builder::GraphBuilder`] /
+/// [`super::builder::WeightedGraphBuilder`], relied on throughout the
+/// hot paths):
 /// * `fwd_offsets.len() == n + 1`, `fwd_offsets[n] == fwd_targets.len()`
 /// * `und_offsets.len() == n + 1`, `und_offsets[n] == und_targets.len()`
 /// * neighbour lists are sorted and deduplicated,
-/// * `und_weights[i]` is eq. (4)'s ŵ: 2.0 if both directions exist,
-///   1.0 otherwise,
+/// * for plain graphs `und_weights[i]` is eq. (4)'s ŵ: 2.0 if both
+///   directions exist, 1.0 otherwise; for *weighted* graphs (multilevel
+///   contractions) it is the accumulated positive edge weight,
 /// * no self-loops.
 #[derive(Debug, Clone)]
 pub struct Graph {
@@ -25,11 +27,22 @@ pub struct Graph {
     und_offsets: Vec<u64>,
     /// Undirected CSR targets.
     und_targets: Vec<VertexId>,
-    /// Eq. (4) weights, parallel to `und_targets`.
+    /// Eq. (4) weights (plain) or accumulated contraction weights
+    /// (weighted), parallel to `und_targets`.
     und_weights: Vec<f32>,
+    /// Per-vertex balance weights. `None` for the paper's graphs (every
+    /// vertex weighs its out-degree in the load accounting, §II);
+    /// `Some` for multilevel coarse graphs, where a vertex stands for a
+    /// cluster of fine vertices and balance is enforced in cluster-size
+    /// units (see [`Graph::load_mass`]).
+    vertex_weights: Option<Vec<u32>>,
+    /// General (accumulated) edge weights allowed — relaxes the eq. (4)
+    /// 1-or-2 weight check in [`Graph::validate`].
+    weighted: bool,
 }
 
 impl Graph {
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn from_parts(
         n: usize,
         fwd_offsets: Vec<u64>,
@@ -37,13 +50,27 @@ impl Graph {
         und_offsets: Vec<u64>,
         und_targets: Vec<VertexId>,
         und_weights: Vec<f32>,
+        vertex_weights: Option<Vec<u32>>,
+        weighted: bool,
     ) -> Self {
         debug_assert_eq!(fwd_offsets.len(), n + 1);
         debug_assert_eq!(und_offsets.len(), n + 1);
         debug_assert_eq!(*fwd_offsets.last().unwrap() as usize, fwd_targets.len());
         debug_assert_eq!(*und_offsets.last().unwrap() as usize, und_targets.len());
         debug_assert_eq!(und_targets.len(), und_weights.len());
-        Graph { n, fwd_offsets, fwd_targets, und_offsets, und_targets, und_weights }
+        if let Some(vw) = &vertex_weights {
+            debug_assert_eq!(vw.len(), n);
+        }
+        Graph {
+            n,
+            fwd_offsets,
+            fwd_targets,
+            und_offsets,
+            und_targets,
+            und_weights,
+            vertex_weights,
+            weighted,
+        }
     }
 
     /// Number of vertices |V|.
@@ -93,6 +120,76 @@ impl Graph {
         (self.und_offsets[v + 1] - self.und_offsets[v]) as u32
     }
 
+    /// Total undirected adjacency entries Σ_v |N(v)| — twice the number
+    /// of distinct undirected edges. Exact capacity bound for code that
+    /// re-emits the undirected adjacency (multilevel contraction).
+    #[inline]
+    pub fn num_und_entries(&self) -> usize {
+        self.und_targets.len()
+    }
+
+    /// True when edge weights are general accumulated values (multilevel
+    /// contractions) rather than eq. (4)'s 1-or-2.
+    #[inline]
+    pub fn is_weighted(&self) -> bool {
+        self.weighted
+    }
+
+    /// Balance weight of vertex `v`: 1 unless explicit vertex weights
+    /// were attached (coarse graphs, where it is the cluster size).
+    #[inline]
+    pub fn vertex_weight(&self, v: VertexId) -> u32 {
+        match &self.vertex_weights {
+            Some(w) => w[v as usize],
+            None => 1,
+        }
+    }
+
+    /// True when explicit per-vertex balance weights are attached.
+    #[inline]
+    pub fn has_vertex_weights(&self) -> bool {
+        self.vertex_weights.is_some()
+    }
+
+    /// Σ_v vertex_weight(v) — |V| for plain graphs, the finest-level
+    /// vertex count for a multilevel contraction.
+    pub fn total_vertex_weight(&self) -> u64 {
+        match &self.vertex_weights {
+            Some(w) => w.iter().map(|&x| x as u64).sum(),
+            None => self.n as u64,
+        }
+    }
+
+    /// The per-vertex mass the partition-load accounting b(l) charges:
+    /// out-degree for the paper's graphs (§II counts partition size in
+    /// outgoing edges), the coarse vertex weight when explicit vertex
+    /// weights are attached — so multilevel refinement levels balance in
+    /// coarse-vertex-weight units and cannot silently overload a
+    /// partition that looks small in merged-edge counts.
+    #[inline]
+    pub fn load_mass(&self, v: VertexId) -> u32 {
+        match &self.vertex_weights {
+            Some(w) => w[v as usize],
+            None => self.out_degree(v),
+        }
+    }
+
+    /// Σ_v load_mass(v) — |E| for plain graphs.
+    pub fn total_load_mass(&self) -> u64 {
+        match &self.vertex_weights {
+            Some(w) => w.iter().map(|&x| x as u64).sum(),
+            None => self.num_edges() as u64,
+        }
+    }
+
+    /// Σ over all undirected adjacency entries of ŵ — each undirected
+    /// edge contributes its weight *twice* (once per endpoint). The
+    /// multilevel edge-weight conservation invariant is stated over
+    /// half this value.
+    pub fn total_neighbor_weight(&self) -> f64 {
+        self.und_weights.iter().map(|&w| w as f64).sum()
+    }
+
     /// Iterate all directed edges as (src, dst).
     pub fn edges(&self) -> impl Iterator<Item = (VertexId, VertexId)> + '_ {
         (0..self.n).flat_map(move |v| {
@@ -108,6 +205,7 @@ impl Graph {
             + self.fwd_targets.len() * 4
             + self.und_targets.len() * 4
             + self.und_weights.len() * 4
+            + self.vertex_weights.as_ref().map_or(0, |w| w.len() * 4)
     }
 
     /// Structural self-check (used by tests and the loader).
@@ -129,8 +227,22 @@ impl Graph {
             }
             for (&u, &w) in ns.iter().zip(self.neighbor_weights(v as VertexId)) {
                 anyhow::ensure!((u as usize) < self.n, "und target out of range");
-                anyhow::ensure!(w == 1.0 || w == 2.0, "weight must be 1 or 2, got {w}");
+                if self.weighted {
+                    anyhow::ensure!(
+                        w.is_finite() && w > 0.0,
+                        "weighted graph needs finite positive weights, got {w}"
+                    );
+                } else {
+                    anyhow::ensure!(w == 1.0 || w == 2.0, "weight must be 1 or 2, got {w}");
+                }
             }
+        }
+        if let Some(vw) = &self.vertex_weights {
+            anyhow::ensure!(vw.len() == self.n, "vertex weights must cover every vertex");
+            anyhow::ensure!(
+                vw.iter().all(|&w| w >= 1),
+                "vertex weights must be >= 1 (a coarse vertex covers >= 1 fine vertex)"
+            );
         }
         Ok(())
     }
@@ -188,5 +300,20 @@ mod tests {
     fn memory_accounting_positive() {
         let g = GraphBuilder::new(10).edges(&[(0, 1), (1, 2)]).build();
         assert!(g.memory_bytes() > 0);
+    }
+
+    #[test]
+    fn plain_graph_mass_is_out_degree() {
+        let g = GraphBuilder::new(3).edges(&[(0, 1), (0, 2), (1, 2)]).build();
+        assert!(!g.is_weighted());
+        assert!(!g.has_vertex_weights());
+        for v in 0..3 {
+            assert_eq!(g.vertex_weight(v), 1);
+            assert_eq!(g.load_mass(v), g.out_degree(v));
+        }
+        assert_eq!(g.total_vertex_weight(), 3);
+        assert_eq!(g.total_load_mass(), g.num_edges() as u64);
+        // 3 one-way edges, each counted at both endpoints with ŵ=1.
+        assert_eq!(g.total_neighbor_weight(), 6.0);
     }
 }

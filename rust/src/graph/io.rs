@@ -87,8 +87,22 @@ pub fn read_edge_list<R: BufRead>(mut r: R) -> Result<Graph> {
     Ok(builder.build())
 }
 
+/// Both on-disk formats carry only (src, dst) pairs; silently
+/// flattening a weighted multilevel contraction would reload as a
+/// structurally different graph (eq.-(4) weights, out-degree mass), so
+/// the savers refuse weighted inputs outright.
+fn ensure_plain(g: &Graph) -> Result<()> {
+    anyhow::ensure!(
+        !g.is_weighted() && !g.has_vertex_weights(),
+        "cannot serialize a weighted graph: edge/vertex weights have no \
+         on-disk representation (save the finest-level graph instead)"
+    );
+    Ok(())
+}
+
 /// Write a graph back out as an edge-list text file.
 pub fn save_edge_list<P: AsRef<Path>>(g: &Graph, path: P) -> Result<()> {
+    ensure_plain(g)?;
     let f = File::create(path.as_ref())?;
     let mut w = BufWriter::new(f);
     writeln!(w, "# revolver edge list |V|={} |E|={}", g.num_vertices(), g.num_edges())?;
@@ -103,6 +117,7 @@ const VERSION: u32 = 1;
 
 /// Save in the fast binary format.
 pub fn save_binary<P: AsRef<Path>>(g: &Graph, path: P) -> Result<()> {
+    ensure_plain(g)?;
     let f = File::create(path.as_ref())?;
     let mut w = BufWriter::new(f);
     w.write_all(MAGIC)?;
@@ -158,6 +173,19 @@ pub fn load_binary<P: AsRef<Path>>(path: P) -> Result<Graph> {
 mod tests {
     use super::*;
     use std::io::Cursor;
+
+    #[test]
+    fn weighted_graphs_refuse_to_serialize() {
+        let mut b = crate::graph::WeightedGraphBuilder::new(2);
+        b.edge(0, 1, 3.5);
+        let g = b.build();
+        let dir = std::env::temp_dir().join("revolver_io_weighted");
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = save_edge_list(&g, dir.join("w.txt")).unwrap_err();
+        assert!(err.to_string().contains("weighted"), "{err}");
+        let err = save_binary(&g, dir.join("w.bin")).unwrap_err();
+        assert!(err.to_string().contains("weighted"), "{err}");
+    }
 
     #[test]
     fn parse_simple() {

@@ -19,4 +19,4 @@ pub mod io;
 pub mod stats;
 
 pub use csr::Graph;
-pub use builder::GraphBuilder;
+pub use builder::{GraphBuilder, WeightedGraphBuilder};

@@ -8,8 +8,9 @@
 //!
 //! ## Architecture (four layers)
 //!
-//! * **L4 — algorithms** ([`partitioners`], [`stream`]) — two algorithm
-//!   families behind one [`partitioners::Partitioner`] trait:
+//! * **L4 — algorithms** ([`partitioners`], [`stream`], [`multilevel`])
+//!   — three algorithm families behind one
+//!   [`partitioners::Partitioner`] trait:
 //!   - *Iterative* (Revolver / Spinner): pure
 //!     [`engine::VertexProgram`]s — per-vertex math plus the per-step
 //!     data they need frozen, and nothing else.
@@ -19,6 +20,14 @@
 //!     pluggable orders ([`config::StreamOrder`]) or straight off an
 //!     edge-list file without materializing CSR
 //!     ([`stream::FileEdgeStream`]).
+//!   - *Multilevel* ([`multilevel`]): heavy-edge coarsening down a
+//!     [`multilevel::Hierarchy`] of weighted contractions, coarsest
+//!     level partitioned by any registered algorithm (default Fennel),
+//!     then per-level bounded Spinner/Revolver refinement through
+//!     [`engine::run_with_init`] on the way back up — coarse levels
+//!     balance in cluster-size units via [`graph::Graph::load_mass`],
+//!     and a deterministic rebalance pass pins the ε envelope at every
+//!     level (`multilevel` / `ml-spinner` / `ml-revolver`).
 //!   Hash / Range round out the trivial baselines.
 //! * **L3 — execution engine** ([`engine`], [`coordinator`],
 //!   [`partition`]) — the shared superstep runtime: persistent workers
@@ -75,6 +84,17 @@
 //! let fast = by_name("fennel", cfg.clone()).unwrap().partition(&graph);
 //! println!("fennel local edges = {:.3}", quality::local_edges(&graph, &fast.labels));
 //!
+//! // Multilevel V-cycle (CLI: `partition --algo multilevel`): coarsen,
+//! // partition the coarsest level, refine each level on the way up —
+//! // Metis-class superstep economy with the same vertex programs doing
+//! // the refinement.
+//! let ml = by_name("multilevel", cfg.clone()).unwrap().partition(&graph);
+//! println!(
+//!     "multilevel local edges = {:.3} in {} supersteps",
+//!     quality::local_edges(&graph, &ml.labels),
+//!     ml.trace.steps()
+//! );
+//!
 //! // ...or as a warm start for Revolver (`--init stream:fennel` on
 //! // the CLI): same quality, far fewer steps to converge.
 //! let warm_cfg = RevolverConfig {
@@ -100,6 +120,7 @@ pub mod graph;
 pub mod la;
 pub mod lp;
 pub mod metrics;
+pub mod multilevel;
 pub mod partition;
 pub mod partitioners;
 pub mod runtime;

@@ -12,6 +12,7 @@
 //! Examples:
 //!   revolver partition --graph lj --vertices 16384 --algorithm revolver --parts 8
 //!   revolver partition --graph lj --algorithm revolver --init stream:fennel
+//!   revolver partition --graph lj --algorithm multilevel --parts 8 --evaluate
 //!   revolver sweep --graphs lj,so --algorithms revolver,fennel,ldg --parts 2,4,8
 //!   revolver convergence --graph lj --parts 32 --vertices 16384
 //!   revolver stream --file edges.txt --algorithm ldg --parts 8 --evaluate
@@ -46,17 +47,26 @@ fn run() -> Result<()> {
         Some("stats") => cmd_stats(args),
         Some("generate") => cmd_generate(args),
         Some("info") => cmd_info(args),
-        Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
+        Some(other) => bail!("unknown subcommand {other:?}\n{}", usage()),
         None => {
             // Help path: consume nothing, print usage.
             let _ = args.get_bool("help");
-            println!("{USAGE}");
+            println!("{}", usage());
             Ok(())
         }
     }
 }
 
-const USAGE: &str =
+/// Usage text; the algorithm list comes from the partitioner registry,
+/// so it can never drift from what `by_name` accepts.
+fn usage() -> String {
+    format!(
+        "{USAGE_BODY}\n  partition:  --algorithm <{}>  (--algo works too)\n{USAGE_TAIL}",
+        revolver::partitioners::REGISTRY.join("|")
+    )
+}
+
+const USAGE_BODY: &str =
     "usage: revolver <partition|sweep|convergence|stream|stats|generate|info> [flags]
   common flags:
     --graph <wiki|uk|usa|so|lj|en|ok|hlwd|eu|path/to/edges.txt>
@@ -69,9 +79,13 @@ const USAGE: &str =
     --stream-order <natural|shuffled|bfs>  streaming visit order
     --fennel-gamma G      Fennel load exponent (default 1.5)
     --restream-passes N   restreaming passes (default 3)
-    --config file.toml    load RevolverConfig from file
-  partition:  --algorithm <revolver|spinner|hash|range|ldg|fennel|restream>
-              --engine <native|xla>
+    --coarsen-until N     multilevel: coarsest-level size target (default 256)
+    --refine-steps N      multilevel: per-level refinement superstep budget (default 10)
+    --coarse-algo A       multilevel: coarsest-level algorithm (default fennel)
+    --config file.toml    load RevolverConfig from file";
+
+const USAGE_TAIL: &str =
+    "              --engine <native|xla>  [--evaluate  per-partition load table]
   sweep:      --graphs a,b,c --algorithms a,b --parts 2,4,8 --runs R --out dir
   convergence: --parts k --steps N --out dir
   stream:     --file edges.txt --algorithm <ldg|fennel|restream>
@@ -104,6 +118,11 @@ fn config_from(args: &mut Args) -> Result<RevolverConfig> {
     cfg.stream_order = args.get_or("stream-order", cfg.stream_order)?;
     cfg.fennel_gamma = args.get_or("fennel-gamma", cfg.fennel_gamma)?;
     cfg.restream_passes = args.get_or("restream-passes", cfg.restream_passes)?;
+    cfg.coarsen_until = args.get_or("coarsen-until", cfg.coarsen_until)?;
+    cfg.refine_steps = args.get_or("refine-steps", cfg.refine_steps)?;
+    if let Some(ca) = args.get("coarse-algo") {
+        cfg.coarse_algo = ca;
+    }
     if let Some(engine) = args.get("engine") {
         cfg.engine = engine.parse()?;
     }
@@ -148,7 +167,12 @@ fn load_graph(args: &mut Args) -> Result<(String, Graph)> {
 }
 
 fn cmd_partition(mut args: Args) -> Result<()> {
-    let algorithm = args.get("algorithm").unwrap_or_else(|| "revolver".to_string());
+    // `--algo` is accepted as a short alias of `--algorithm`.
+    let algorithm = args
+        .get("algorithm")
+        .or_else(|| args.get("algo"))
+        .unwrap_or_else(|| "revolver".to_string());
+    let evaluate = args.get_bool("evaluate");
     let (gname, g) = load_graph(&mut args)?;
     let cfg = config_from(&mut args)?;
     args.finish()?;
@@ -173,7 +197,17 @@ fn cmd_partition(mut args: Args) -> Result<()> {
     println!("edge cuts:           {:.4}", 1.0 - q.local_edges);
     println!("max normalized load: {:.4}", q.max_normalized_load);
     println!("max norm edge load:  {:.4}", q.max_normalized_edge_load);
+    println!("comm volume/vertex:  {:.4}", q.mean_communication_volume);
     println!("wall time:           {:.2}s", sw.elapsed_s());
+    if evaluate {
+        // Full per-partition load breakdown (out-edge units).
+        let loads = quality::partition_loads(&g, &out.labels, k);
+        let counts = quality::partition_vertex_counts(&out.labels, k);
+        println!("per-partition loads (out-edges / vertices):");
+        for l in 0..k {
+            println!("  p{l:<3} {:>12} {:>12}", with_commas(loads[l]), with_commas(counts[l]));
+        }
+    }
     Ok(())
 }
 
@@ -233,6 +267,7 @@ fn cmd_stream(mut args: Args) -> Result<()> {
         println!("local edges:         {:.4}", q.local_edges);
         println!("edge cuts:           {:.4}", 1.0 - q.local_edges);
         println!("max norm edge load:  {:.4}", q.max_normalized_edge_load);
+        println!("comm volume/vertex:  {:.4}", q.mean_communication_volume);
     }
     Ok(())
 }

@@ -26,23 +26,28 @@ pub fn edge_cuts(g: &Graph, labels: &[Label]) -> f64 {
     1.0 - local_edges(g, labels)
 }
 
-/// Per-partition loads b(l) in outgoing edges.
+/// Per-partition loads b(l) in [`Graph::load_mass`] units — outgoing
+/// edges on the paper's graphs (§II), cluster sizes on multilevel
+/// contractions: the same units [`crate::partition::PartitionState`]'s
+/// capacity gate and the V-cycle rebalance enforce, so this metric
+/// measures exactly the balance the system promises.
 pub fn partition_loads(g: &Graph, labels: &[Label], k: usize) -> Vec<u64> {
     let mut loads = vec![0u64; k];
     for v in 0..g.num_vertices() {
         let l = labels[v] as usize;
         debug_assert!(l < k, "label {l} out of range {k}");
-        loads[l] += g.out_degree(v as u32) as u64;
+        loads[l] += g.load_mass(v as u32) as u64;
     }
     loads
 }
 
-/// *Max normalized load*: `max_l b(l) / (|E|/k)`. 1.0 is perfect
-/// balance; the paper's ε=0.05 admits up to 1.05.
+/// *Max normalized load*: `max_l b(l) / (Σ mass / k)` — i.e.
+/// `max_l b(l) / (|E|/k)` on plain graphs. 1.0 is perfect balance; the
+/// paper's ε=0.05 admits up to 1.05.
 pub fn max_normalized_load(g: &Graph, labels: &[Label], k: usize) -> f64 {
     let loads = partition_loads(g, labels, k);
     let max = loads.iter().copied().max().unwrap_or(0) as f64;
-    let expected = g.num_edges() as f64 / k as f64;
+    let expected = g.total_load_mass() as f64 / k as f64;
     if expected > 0.0 {
         max / expected
     } else {
@@ -80,6 +85,40 @@ pub fn max_normalized_edge_load(g: &Graph, labels: &[Label], k: usize) -> f64 {
     }
 }
 
+/// *Communication volume*: Σ_v |{ψ(u) : u ∈ N(v)} \ {ψ(v)}| — for every
+/// vertex, the number of *distinct remote partitions* its undirected
+/// neighbourhood touches. This is the replication-factor-style metric of
+/// the distributed-systems literature: each distinct remote partition is
+/// one copy of v's state that must be kept in sync per superstep, so
+/// unlike [`edge_cuts`] a vertex with 50 cut edges into one partition
+/// costs 1, not 50.
+pub fn communication_volume(g: &Graph, labels: &[Label], k: usize) -> u64 {
+    debug_assert_eq!(labels.len(), g.num_vertices());
+    // Stamp array: seen[l] == v means partition l was already counted
+    // for vertex v this pass (u32::MAX never equals a valid vertex id
+    // because |V| < 2^32).
+    let mut seen = vec![u32::MAX; k];
+    let mut total = 0u64;
+    for v in 0..g.num_vertices() {
+        let lv = labels[v];
+        for &u in g.neighbors(v as u32) {
+            let l = labels[u as usize];
+            debug_assert!((l as usize) < k, "label {l} out of range {k}");
+            if l != lv && seen[l as usize] != v as u32 {
+                seen[l as usize] = v as u32;
+                total += 1;
+            }
+        }
+    }
+    total
+}
+
+/// [`communication_volume`] per vertex — the mean number of remote
+/// partition replicas a vertex needs; comparable across graph sizes.
+pub fn mean_communication_volume(g: &Graph, labels: &[Label], k: usize) -> f64 {
+    communication_volume(g, labels, k) as f64 / g.num_vertices().max(1) as f64
+}
+
 /// Per-partition vertex counts — the balance target of classic LDG.
 pub fn partition_vertex_counts(labels: &[Label], k: usize) -> Vec<u64> {
     let mut counts = vec![0u64; k];
@@ -109,6 +148,11 @@ pub struct Quality {
     pub max_normalized_load: f64,
     /// Incident-edge (in+out) balance — see [`max_normalized_edge_load`].
     pub max_normalized_edge_load: f64,
+    /// Mean distinct remote partitions per vertex — see
+    /// [`mean_communication_volume`] (the *total* is the free function
+    /// [`communication_volume`]; the names differ so the units can't be
+    /// confused). 0.0 is a perfect (no-cut) partition.
+    pub mean_communication_volume: f64,
 }
 
 pub fn evaluate(g: &Graph, labels: &[Label], k: usize) -> Quality {
@@ -116,6 +160,7 @@ pub fn evaluate(g: &Graph, labels: &[Label], k: usize) -> Quality {
         local_edges: local_edges(g, labels),
         max_normalized_load: max_normalized_load(g, labels, k),
         max_normalized_edge_load: max_normalized_edge_load(g, labels, k),
+        mean_communication_volume: mean_communication_volume(g, labels, k),
     }
 }
 
@@ -189,6 +234,35 @@ mod tests {
             q.max_normalized_edge_load,
             max_normalized_edge_load(&g, &labels, 2)
         );
+        assert_eq!(q.mean_communication_volume, mean_communication_volume(&g, &labels, 2));
+    }
+
+    #[test]
+    fn communication_volume_counts_distinct_remote_partitions() {
+        let g = two_cliques();
+        // Clique split: only the bridge endpoints (0 and 3) see one
+        // remote partition each.
+        let labels = vec![0, 0, 0, 1, 1, 1];
+        assert_eq!(communication_volume(&g, &labels, 2), 2);
+        assert!((mean_communication_volume(&g, &labels, 2) - 2.0 / 6.0).abs() < 1e-12);
+        // One partition: nothing is remote.
+        assert_eq!(communication_volume(&g, &vec![0; 6], 2), 0);
+    }
+
+    #[test]
+    fn communication_volume_dedups_within_a_partition() {
+        // Star centre with 3 spokes all in one remote partition: many
+        // cut edges, communication volume 1 for the centre + 1 per spoke.
+        let mut b = crate::graph::GraphBuilder::new(4);
+        for s in 1..4u32 {
+            b.edge(0, s);
+        }
+        let g = b.build();
+        let labels = vec![0, 1, 1, 1];
+        assert_eq!(communication_volume(&g, &labels, 2), 4);
+        // Spokes spread across distinct partitions: centre now pays 3.
+        let spread = vec![0, 1, 2, 3];
+        assert_eq!(communication_volume(&g, &spread, 4), 6);
     }
 
     #[test]

@@ -1,0 +1,266 @@
+//! Contraction of a matching into a coarse graph, and the hierarchy
+//! stack built by repeated matching.
+
+use crate::graph::{Graph, WeightedGraphBuilder};
+use crate::VertexId;
+
+use super::matching::heavy_edge_matching;
+
+/// One level of the coarsening hierarchy: a weighted CSR where each
+/// vertex stands for a cluster of fine vertices.
+///
+/// * vertex weight = cluster size (Σ of the fine vertices' weights);
+/// * edge weight = accumulated eq.-(4) mass between the two clusters
+///   (parallel fine edges merged by summing);
+/// * the edge inside a matched pair vanishes (it became intra-cluster).
+///
+/// The inner [`Graph`] carries both, so the coarse level is directly
+/// engine-runnable — refinement balance works in cluster-size units via
+/// [`Graph::load_mass`].
+pub struct CoarseGraph {
+    graph: Graph,
+    total_edge_weight: f64,
+}
+
+impl CoarseGraph {
+    /// The engine-ready weighted graph of this level.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.graph.num_vertices()
+    }
+
+    /// Σ of the accumulated weights over distinct coarse edges (each
+    /// counted once). Conservation invariant versus the finer level:
+    /// `coarse total = fine total − matched-edge weight`.
+    pub fn total_edge_weight(&self) -> f64 {
+        self.total_edge_weight
+    }
+}
+
+/// Contract `mate` (from [`heavy_edge_matching`]) over `g`. Returns the
+/// coarse graph and the fine→coarse vertex map. Coarse ids are assigned
+/// in ascending order of each cluster's smallest fine id, preserving
+/// whatever id locality the fine ordering had.
+pub fn contract(g: &Graph, mate: &[VertexId]) -> (CoarseGraph, Vec<VertexId>) {
+    let n = g.num_vertices();
+    debug_assert_eq!(mate.len(), n);
+
+    let mut map = vec![VertexId::MAX; n];
+    let mut cn: VertexId = 0;
+    for v in 0..n {
+        if map[v] != VertexId::MAX {
+            continue; // second half of a pair whose first half assigned it
+        }
+        map[v] = cn;
+        map[mate[v] as usize] = cn;
+        cn += 1;
+    }
+    let cn = cn as usize;
+
+    let mut cw = vec![0u32; cn];
+    for v in 0..n {
+        let c = map[v] as usize;
+        cw[c] = cw[c]
+            .checked_add(g.vertex_weight(v as VertexId))
+            .expect("coarse cluster weight overflows u32 — the weight-conservation invariant would silently break");
+    }
+
+    // Each undirected fine edge once (u > v); matched-pair edges fold
+    // away, parallel coarse edges accumulate inside the builder. Emit
+    // *both* directions at half weight so the coarse forward CSR is
+    // symmetric — out-degrees then mean "distinct coarse neighbours"
+    // for every vertex (degree-balanced scheduling, BFS stream order),
+    // while the mirrored undirected weights still sum to exactly the
+    // accumulated fine weight (w/2 + w/2; halving is exact in binary).
+    // Exact emission bound: 2 directed entries per undirected pair
+    // (u > v), and pairs = und-entries/2 — so at most `num_und_entries`
+    // pushes, whatever mix of one-way/symmetric edges the level has.
+    let mut b = WeightedGraphBuilder::with_capacity(cn, g.num_und_entries());
+    let mut total = 0.0f64;
+    for v in 0..n {
+        let nbrs = g.neighbors(v as VertexId);
+        let ws = g.neighbor_weights(v as VertexId);
+        for (&u, &w) in nbrs.iter().zip(ws) {
+            if (u as usize) <= v {
+                continue;
+            }
+            let (cv, cu) = (map[v], map[u as usize]);
+            if cv == cu {
+                continue;
+            }
+            b.edge(cv, cu, 0.5 * w);
+            b.edge(cu, cv, 0.5 * w);
+            total += w as f64;
+        }
+    }
+    let graph = b.vertex_weights(cw).build();
+    (CoarseGraph { graph, total_edge_weight: total }, map)
+}
+
+/// The full coarsening stack: `maps[i]` sends a level-`i` vertex to its
+/// level-`i+1` cluster, `graphs[i]` is the level-`i+1` graph (level 0
+/// is the caller's original graph, `graphs.last()` the coarsest).
+pub struct Hierarchy {
+    pub maps: Vec<Vec<VertexId>>,
+    pub graphs: Vec<CoarseGraph>,
+}
+
+/// A level must shed at least 5% of its vertices or coarsening stops —
+/// heavy matchings stall on star-like remainders, and stacking
+/// near-identical levels only burns refinement budget.
+const MIN_SHRINK: f64 = 0.05;
+
+impl Hierarchy {
+    /// Coarsen `g` by repeated heavy-edge matching until a level has at
+    /// most `coarsen_until` vertices or shrinkage stalls. Each level
+    /// derives its matching seed from `seed` + its depth, so the whole
+    /// stack is deterministic.
+    pub fn build(g: &Graph, coarsen_until: usize, seed: u64, max_pair_weight: u64) -> Hierarchy {
+        let mut maps: Vec<Vec<VertexId>> = Vec::new();
+        let mut graphs: Vec<CoarseGraph> = Vec::new();
+        loop {
+            let cur: &Graph = match graphs.last() {
+                Some(c) => c.graph(),
+                None => g,
+            };
+            let n = cur.num_vertices();
+            if n <= coarsen_until {
+                break;
+            }
+            let level = graphs.len() as u64;
+            let mate = heavy_edge_matching(cur, seed.wrapping_add(level), max_pair_weight);
+            // Coarse size = n − matched pairs: check the stall from the
+            // matching alone, before paying for the contraction.
+            let pairs = (0..n).filter(|&v| (mate[v] as usize) > v).count();
+            if ((n - pairs) as f64) > (1.0 - MIN_SHRINK) * n as f64 {
+                break; // stalled
+            }
+            let (cg, map) = contract(cur, &mate);
+            debug_assert_eq!(cg.num_vertices(), n - pairs);
+            maps.push(map);
+            graphs.push(cg);
+        }
+        Hierarchy { maps, graphs }
+    }
+
+    /// Number of coarse levels (0 = the graph was already small enough).
+    pub fn levels(&self) -> usize {
+        self.graphs.len()
+    }
+
+    /// The coarsest level, if any coarsening happened.
+    pub fn coarsest(&self) -> Option<&CoarseGraph> {
+        self.graphs.last()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::multilevel::matching::matched_weight;
+
+    fn ring(n: usize) -> Graph {
+        let mut b = GraphBuilder::new(n);
+        for v in 0..n as u32 {
+            b.edge(v, (v + 1) % n as u32);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn contract_preserves_vertex_weight_total() {
+        let g = ring(32);
+        let mate = heavy_edge_matching(&g, 1, u64::MAX);
+        let (cg, map) = contract(&g, &mate);
+        assert_eq!(map.len(), 32);
+        assert!(map.iter().all(|&c| (c as usize) < cg.num_vertices()));
+        assert_eq!(cg.graph().total_vertex_weight(), 32);
+        cg.graph().validate().unwrap();
+    }
+
+    #[test]
+    fn contract_conserves_edge_weight() {
+        let g = ring(64);
+        let mate = heavy_edge_matching(&g, 2, u64::MAX);
+        let (cg, _) = contract(&g, &mate);
+        let fine_total = g.total_neighbor_weight() / 2.0;
+        let removed = matched_weight(&g, &mate);
+        assert!(
+            (cg.total_edge_weight() - (fine_total - removed)).abs() < 1e-6,
+            "coarse {} vs fine {} - matched {}",
+            cg.total_edge_weight(),
+            fine_total,
+            removed
+        );
+        // The builder's accumulated und weights agree with the running
+        // total the contraction kept.
+        let und_total = cg.graph().total_neighbor_weight() / 2.0;
+        assert!((und_total - cg.total_edge_weight()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn matched_pairs_map_to_one_coarse_vertex() {
+        let g = ring(20);
+        let mate = heavy_edge_matching(&g, 3, u64::MAX);
+        let (_, map) = contract(&g, &mate);
+        for v in 0..20usize {
+            assert_eq!(map[v], map[mate[v] as usize], "pair must contract together");
+        }
+    }
+
+    #[test]
+    fn parallel_coarse_edges_merge() {
+        // Square 0-1-2-3-0 with 0,1 and 2,3 matched: the two cross edges
+        // (1,2) and (3,0) become parallel coarse edges and must merge
+        // into one undirected coarse edge of weight 2 (stored as one
+        // forward edge per direction — the symmetric CSR).
+        let g = ring(4);
+        let mate = vec![1, 0, 3, 2];
+        let (cg, map) = contract(&g, &mate);
+        assert_eq!(cg.num_vertices(), 2);
+        assert_eq!(map, vec![0, 0, 1, 1]);
+        assert_eq!(cg.graph().num_edges(), 2, "one merged edge per direction");
+        assert_eq!(cg.graph().out_degree(0), 1);
+        assert_eq!(cg.graph().out_degree(1), 1, "coarse CSR must be symmetric");
+        assert_eq!(cg.graph().neighbor_weights(0), &[2.0]);
+        assert_eq!(cg.graph().neighbor_weights(1), &[2.0]);
+        assert!((cg.total_edge_weight() - 2.0).abs() < 1e-9);
+        assert_eq!(cg.graph().vertex_weight(0), 2);
+        assert_eq!(cg.graph().vertex_weight(1), 2);
+    }
+
+    #[test]
+    fn hierarchy_reaches_target_and_is_deterministic() {
+        use crate::graph::gen::rmat;
+        let g = rmat::rmat(512, 4096, 0.57, 0.19, 0.19, 4);
+        let h = Hierarchy::build(&g, 64, 7, u64::MAX);
+        assert!(h.levels() >= 1);
+        let coarsest = h.coarsest().unwrap();
+        assert!(coarsest.num_vertices() <= 512);
+        // Monotone shrinkage, weight conservation down the stack.
+        let mut prev = g.num_vertices();
+        for cg in &h.graphs {
+            assert!(cg.num_vertices() < prev);
+            prev = cg.num_vertices();
+            assert_eq!(cg.graph().total_vertex_weight(), 512);
+            cg.graph().validate().unwrap();
+        }
+        let h2 = Hierarchy::build(&g, 64, 7, u64::MAX);
+        assert_eq!(h.levels(), h2.levels());
+        for (a, b) in h.maps.iter().zip(&h2.maps) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn small_graph_yields_empty_hierarchy() {
+        let g = ring(16);
+        let h = Hierarchy::build(&g, 64, 1, u64::MAX);
+        assert_eq!(h.levels(), 0);
+        assert!(h.coarsest().is_none());
+    }
+}

@@ -1,0 +1,203 @@
+//! Randomized heavy-edge matching (HEM) — the coarsening kernel.
+//!
+//! Visit vertices in a seeded random order; each unmatched vertex
+//! matches its heaviest unmatched neighbour by the eq.-(4) undirected
+//! weight ŵ (accumulated contraction weight on coarser levels).
+//! Contracting heavy edges first removes the most intra-cluster weight
+//! per level, which is what makes the coarse cut a faithful proxy for
+//! the fine one.
+//!
+//! Two guards keep power-law graphs well-behaved:
+//! * **hub degree cap** — a hub only *scans* a bounded, evenly-strided
+//!   sample of its neighbour list ([`HUB_NEIGHBOR_CAP`]), so one pass
+//!   stays O(|E|) with a small constant even when a vertex owns a
+//!   percent of all edges (hubs still get matched — by themselves or by
+//!   a neighbour whose scan reaches them);
+//! * **pair-weight cap** — two vertices whose combined cluster size
+//!   exceeds `max_pair_weight` never match, so no coarse vertex grows
+//!   past a fraction of a balanced partition and the coarsest-level
+//!   balance problem stays feasible.
+
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+use crate::VertexId;
+
+/// Most neighbours a single vertex scans when looking for its mate.
+/// Hubs sample their list with an even stride instead of walking all of
+/// it; 64 comfortably covers the heavy head of a weight distribution.
+pub const HUB_NEIGHBOR_CAP: usize = 64;
+
+/// Compute a matching of `g`: `mate[v] == u` and `mate[u] == v` for a
+/// matched pair, `mate[v] == v` for an unmatched vertex. Pairs are
+/// always adjacent, and no pair's combined vertex weight exceeds
+/// `max_pair_weight`. Deterministic in (`g`, `seed`).
+pub fn heavy_edge_matching(g: &Graph, seed: u64, max_pair_weight: u64) -> Vec<VertexId> {
+    let n = g.num_vertices();
+    let mut order: Vec<VertexId> = (0..n as VertexId).collect();
+    Rng::new(seed ^ 0x4845_4D5F_5243_4C52).shuffle(&mut order);
+
+    let mut mate: Vec<VertexId> = (0..n as VertexId).collect();
+    for &v in &order {
+        if mate[v as usize] != v {
+            continue; // already matched by an earlier vertex
+        }
+        let nbrs = g.neighbors(v);
+        let ws = g.neighbor_weights(v);
+        let deg = nbrs.len();
+        if deg == 0 {
+            continue;
+        }
+        let wv = g.vertex_weight(v) as u64;
+
+        let mut best_w = 0.0f32;
+        let mut best_comb = u64::MAX;
+        let mut best_u: Option<VertexId> = None;
+        let scans = deg.min(HUB_NEIGHBOR_CAP);
+        for j in 0..scans {
+            // Even stride over the (sorted) neighbour list when capped;
+            // identity when not. Indices are strictly increasing, so no
+            // neighbour is scanned twice.
+            let i = if deg <= HUB_NEIGHBOR_CAP { j } else { j * deg / scans };
+            let u = nbrs[i];
+            if mate[u as usize] != u {
+                continue; // taken
+            }
+            let w = ws[i];
+            let comb = wv + g.vertex_weight(u) as u64;
+            if comb > max_pair_weight {
+                continue; // would create an unbalanceable cluster
+            }
+            // Heaviest edge wins; ties prefer the lighter cluster, then
+            // the lower id — fully deterministic.
+            let better = match best_u {
+                None => true,
+                Some(bu) => {
+                    w > best_w || (w == best_w && (comb < best_comb || (comb == best_comb && u < bu)))
+                }
+            };
+            if better {
+                best_w = w;
+                best_comb = comb;
+                best_u = Some(u);
+            }
+        }
+        if let Some(u) = best_u {
+            mate[v as usize] = u;
+            mate[u as usize] = v;
+        }
+    }
+    mate
+}
+
+/// Total ŵ of the matched edges — the weight a contraction of `mate`
+/// removes from the graph (the edge-conservation invariant: coarse
+/// total = fine total − matched total).
+pub fn matched_weight(g: &Graph, mate: &[VertexId]) -> f64 {
+    let mut total = 0.0f64;
+    for v in 0..g.num_vertices() {
+        let m = mate[v];
+        if (m as usize) <= v {
+            continue; // count each pair once (and skip unmatched)
+        }
+        let nbrs = g.neighbors(v as VertexId);
+        let i = nbrs
+            .binary_search(&m)
+            .expect("matched pairs are always adjacent");
+        total += g.neighbor_weights(v as VertexId)[i] as f64;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn check_is_matching(g: &Graph, mate: &[VertexId]) {
+        assert_eq!(mate.len(), g.num_vertices());
+        for v in 0..g.num_vertices() {
+            let m = mate[v] as usize;
+            assert!(m < g.num_vertices());
+            // Involution: v's mate points back — no vertex in two pairs.
+            assert_eq!(mate[m] as usize, v, "mate not symmetric at {v}");
+            if m != v {
+                assert!(
+                    g.neighbors(v as VertexId).binary_search(&(m as VertexId)).is_ok(),
+                    "matched pair ({v},{m}) must be adjacent"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn path_graph_matches_alternately() {
+        let mut b = GraphBuilder::new(8);
+        for v in 0..7u32 {
+            b.edge(v, v + 1);
+        }
+        let g = b.build();
+        let mate = heavy_edge_matching(&g, 1, u64::MAX);
+        check_is_matching(&g, &mate);
+        // A path admits a matching covering >= half the vertices; HEM is
+        // maximal, so at most one unmatched vertex per matched pair.
+        let matched = (0..8).filter(|&v| mate[v] != v as u32).count();
+        assert!(matched >= 4, "{mate:?}");
+    }
+
+    #[test]
+    fn prefers_heavy_edges() {
+        // Two reciprocal (ŵ=2) pairs joined by a one-way (ŵ=1) bridge:
+        // whichever vertex is visited first, every vertex's own heaviest
+        // unmatched neighbour is its reciprocal partner, so the matching
+        // is {0,1},{2,3} for every seed.
+        let g = GraphBuilder::new(4)
+            .edges(&[(0, 1), (1, 0), (2, 3), (3, 2), (0, 2)])
+            .build();
+        for seed in 0..10 {
+            let mate = heavy_edge_matching(&g, seed, u64::MAX);
+            check_is_matching(&g, &mate);
+            assert_eq!(mate[0], 1, "seed {seed}: heavy edge must win");
+            assert_eq!(mate[2], 3, "seed {seed}: heavy edge must win");
+        }
+    }
+
+    #[test]
+    fn pair_weight_cap_respected() {
+        let g = GraphBuilder::new(4).edges(&[(0, 1), (1, 2), (2, 3)]).build();
+        // Every vertex weighs 1; cap 1 forbids all pairs.
+        let mate = heavy_edge_matching(&g, 3, 1);
+        assert!(mate.iter().enumerate().all(|(v, &m)| m as usize == v), "{mate:?}");
+    }
+
+    #[test]
+    fn matched_weight_counts_each_pair_once() {
+        let g = GraphBuilder::new(4).edges(&[(0, 1), (1, 0), (2, 3)]).build();
+        let mate = heavy_edge_matching(&g, 7, u64::MAX);
+        check_is_matching(&g, &mate);
+        // 0-1 (ŵ=2) and 2-3 (ŵ=1) are independent edges: both match.
+        assert_eq!(mate[0], 1);
+        assert_eq!(mate[2], 3);
+        assert!((matched_weight(&g, &mate) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn isolated_vertices_stay_unmatched() {
+        let g = GraphBuilder::new(5).edges(&[(0, 1)]).build();
+        let mate = heavy_edge_matching(&g, 2, u64::MAX);
+        check_is_matching(&g, &mate);
+        for v in 2..5 {
+            assert_eq!(mate[v] as usize, v);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        use crate::graph::gen::rmat;
+        let g = rmat::rmat(256, 2048, 0.57, 0.19, 0.19, 9);
+        let a = heavy_edge_matching(&g, 5, u64::MAX);
+        let b = heavy_edge_matching(&g, 5, u64::MAX);
+        assert_eq!(a, b);
+        let c = heavy_edge_matching(&g, 6, u64::MAX);
+        check_is_matching(&g, &c);
+    }
+}

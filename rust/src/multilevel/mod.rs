@@ -1,0 +1,48 @@
+//! Multilevel partitioning: heavy-edge coarsening + V-cycle refinement
+//! driving Revolver/Spinner.
+//!
+//! Revolver's LA agents and Spinner's label propagation touch all |V|
+//! vertices every superstep, so convergence on large graphs is paid in
+//! full-graph passes. The multilevel paradigm (the Metis-class
+//! partitioners the paper compares against, and the distributed
+//! unconstrained-local-search line of Sanders & Seemaier 2024) fixes
+//! exactly that: contract the graph down a hierarchy of matchings,
+//! partition the tiny coarsest graph, then walk back up, at each level
+//! projecting the labels and running a *bounded* local-search
+//! refinement — most supersteps are spent on levels a fraction of the
+//! original size, and the finest level starts from a near-good cut
+//! instead of random noise (the same observation that motivates the
+//! streaming warm start, amplified).
+//!
+//! Pipeline ([`vcycle::Multilevel`]):
+//!
+//! ```text
+//! fine graph ──match──▶ level 1 ──match──▶ … ──▶ coarsest (≤ coarsen_until)
+//!                                                  │  any registered algo
+//!                                                  ▼  (default: fennel)
+//! labels ◀──refine+project── … ◀──refine+project── coarse labels
+//! ```
+//!
+//! * [`matching`] — randomized heavy-edge matching over the eq.-(4)
+//!   undirected weights, with a degree-capped neighbour scan for hubs
+//!   and a pair-weight cap that keeps clusters balanced.
+//! * [`coarsen`] — contraction of a matching into a [`CoarseGraph`]
+//!   (weighted CSR, parallel edges merged, vertex weight = cluster
+//!   size) and the [`Hierarchy`] stack of vertex maps.
+//! * [`project`] — label projection back down the hierarchy.
+//! * [`vcycle`] — the [`Multilevel`] partitioner: coarsest-level init by
+//!   any [`crate::partitioners::by_name`] algorithm, per-level bounded
+//!   Spinner/Revolver refinement through [`crate::engine::run_with_init`]
+//!   (balance in coarse-vertex-weight units via
+//!   [`crate::graph::Graph::load_mass`]), and a deterministic
+//!   ε-rebalance pass so no level silently overloads a partition.
+
+pub mod coarsen;
+pub mod matching;
+pub mod project;
+pub mod vcycle;
+
+pub use coarsen::{contract, CoarseGraph, Hierarchy};
+pub use matching::{heavy_edge_matching, matched_weight, HUB_NEIGHBOR_CAP};
+pub use project::{project, project_to_finest};
+pub use vcycle::{coarse_projection, hierarchy_for, rebalance, Multilevel, Refiner};

@@ -1,0 +1,60 @@
+//! Label projection back down the hierarchy: every fine vertex inherits
+//! its cluster's label.
+
+use crate::Label;
+use crate::VertexId;
+
+use super::coarsen::Hierarchy;
+
+/// Project labels of level `i+1` onto level `i` through the fine→coarse
+/// map of that level.
+pub fn project(coarse_labels: &[Label], map: &[VertexId]) -> Vec<Label> {
+    map.iter().map(|&c| coarse_labels[c as usize]).collect()
+}
+
+/// Unwind a coarsest-level labelling all the way to the finest level —
+/// the "no refinement" baseline the V-cycle must beat.
+pub fn project_to_finest(h: &Hierarchy, mut labels: Vec<Label>) -> Vec<Label> {
+    for map in h.maps.iter().rev() {
+        labels = project(&labels, map);
+    }
+    labels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn project_follows_map() {
+        let coarse = vec![7, 9];
+        let map = vec![0, 1, 1, 0];
+        assert_eq!(project(&coarse, &map), vec![7, 9, 9, 7]);
+    }
+
+    #[test]
+    fn project_to_finest_composes_all_maps() {
+        let mut b = GraphBuilder::new(64);
+        for v in 0..64u32 {
+            b.edge(v, (v + 1) % 64);
+            b.edge((v + 1) % 64, v);
+        }
+        let g = b.build();
+        let h = Hierarchy::build(&g, 8, 3, u64::MAX);
+        assert!(h.levels() >= 2, "64-ring must coarsen more than once");
+        let coarsest_n = h.coarsest().unwrap().num_vertices();
+        let coarse_labels: Vec<u32> = (0..coarsest_n as u32).collect();
+        let fine = project_to_finest(&h, coarse_labels);
+        assert_eq!(fine.len(), 64);
+        // Every fine vertex carries exactly its cluster's id, so the
+        // composed map partitions the fine vertex set into clusters of
+        // total size 64.
+        let mut counts = vec![0u32; coarsest_n];
+        for &l in &fine {
+            counts[l as usize] += 1;
+        }
+        assert_eq!(counts.iter().sum::<u32>(), 64);
+        assert!(counts.iter().all(|&c| c >= 1));
+    }
+}

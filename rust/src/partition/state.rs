@@ -10,19 +10,22 @@ use crate::{Label, VertexId};
 /// Shared mutable state of a k-way partitioning in progress.
 ///
 /// * `labels[v]` — current partition of vertex v (relaxed atomics).
-/// * `loads[l]`  — b(l): total **out-degree** of vertices in l (§II
-///   counts partition size in outgoing edges).
-/// * `capacity`  — C = (1+ε)·|E|/k.
+/// * `loads[l]`  — b(l): total [`Graph::load_mass`] of vertices in l —
+///   **out-degree** for the paper's graphs (§II counts partition size
+///   in outgoing edges), the coarse vertex weight for multilevel
+///   contractions (balance in cluster-size units).
+/// * `capacity`  — C = (1+ε)·(Σ_v mass)/k, i.e. (1+ε)·|E|/k for plain
+///   graphs.
 ///
-/// Invariant: Σ_l loads[l] == |E| at every quiescent point (each
-/// migration moves exactly `deg(v)` between two partitions atomically
-/// enough for the async model — the paper relies on progressive load
-/// exchange, not strict consistency).
+/// Invariant: Σ_l loads[l] == Σ_v mass(v) at every quiescent point
+/// (each migration moves exactly `mass(v)` between two partitions
+/// atomically enough for the async model — the paper relies on
+/// progressive load exchange, not strict consistency).
 pub struct PartitionState {
     k: usize,
     capacity: f64,
     epsilon: f64,
-    total_edges: u64,
+    total_mass: u64,
     labels: Vec<AtomicU32>,
     loads: Vec<AtomicI64>,
 }
@@ -59,18 +62,12 @@ impl PartitionState {
         let loads: Vec<AtomicI64> = (0..k).map(|_| AtomicI64::new(0)).collect();
         for v in 0..n {
             let l = labels[v].load(Ordering::Relaxed) as usize;
-            loads[l].fetch_add(g.out_degree(v as VertexId) as i64, Ordering::Relaxed);
+            loads[l].fetch_add(g.load_mass(v as VertexId) as i64, Ordering::Relaxed);
         }
 
-        let capacity = (1.0 + epsilon) * g.num_edges() as f64 / k as f64;
-        PartitionState {
-            k,
-            capacity,
-            epsilon,
-            total_edges: g.num_edges() as u64,
-            labels,
-            loads,
-        }
+        let total_mass = g.total_load_mass();
+        let capacity = (1.0 + epsilon) * total_mass as f64 / k as f64;
+        PartitionState { k, capacity, epsilon, total_mass, labels, loads }
     }
 
     #[inline]
@@ -78,8 +75,9 @@ impl PartitionState {
         self.k
     }
 
-    /// Per-partition capacity C = (1+ε)·|E|/k — what the migration
-    /// gate's remaining capacity r(l) = C − b(l) is measured against.
+    /// Per-partition capacity C = (1+ε)·(Σ mass)/k — (1+ε)·|E|/k on
+    /// plain graphs — what the migration gate's remaining capacity
+    /// r(l) = C − b(l) is measured against.
     #[inline]
     pub fn capacity(&self) -> f64 {
         self.capacity
@@ -127,8 +125,9 @@ impl PartitionState {
         self.capacity - self.load(l) as f64
     }
 
-    /// Migrate `v` (with out-degree `deg`) from its current label to
-    /// `to`. Returns the previous label. No-op if already there.
+    /// Migrate `v` (with load mass `deg` — its out-degree on plain
+    /// graphs, its vertex weight on coarse ones) from its current label
+    /// to `to`. Returns the previous label. No-op if already there.
     ///
     /// The label swap uses `swap` so two racing migrations of the same
     /// vertex still keep the load invariant: each swap observes the
@@ -148,14 +147,15 @@ impl PartitionState {
         self.labels.iter().map(|l| l.load(Ordering::Relaxed)).collect()
     }
 
-    /// Check Σ loads == |E| (test/debug invariant).
+    /// Check Σ loads == Σ mass (test/debug invariant); the total is |E|
+    /// for plain graphs.
     pub fn check_load_invariant(&self) -> anyhow::Result<()> {
         let sum: i64 = self.loads.iter().map(|l| l.load(Ordering::Relaxed)).sum();
         anyhow::ensure!(
-            sum as u64 == self.total_edges,
-            "load invariant violated: Σb(l)={} != |E|={}",
+            sum as u64 == self.total_mass,
+            "load invariant violated: Σb(l)={} != total mass {}",
             sum,
-            self.total_edges
+            self.total_mass
         );
         Ok(())
     }

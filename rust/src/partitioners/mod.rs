@@ -1,7 +1,9 @@
 //! The partitioning algorithms: the four the paper evaluates (§V-D) —
 //! Revolver (this paper), Spinner (LP baseline), Hash, and Range —
 //! plus the streaming family ([`crate::stream`]): LDG, Fennel, and
-//! prioritized restreaming.
+//! prioritized restreaming — plus the multilevel V-cycle
+//! ([`crate::multilevel`]) that drives Spinner/Revolver as per-level
+//! refiners over a heavy-edge coarsening hierarchy.
 
 pub mod hash;
 pub mod range;
@@ -31,11 +33,34 @@ pub trait Partitioner {
     fn partition(&self, g: &Graph) -> PartitionOutput;
 }
 
+/// The multilevel V-cycle family: names that may never be used as a
+/// multilevel `coarse_algo` (the coarsest level would recurse into
+/// another V-cycle without bound). Config validation reads this; the
+/// registry sync test asserts it stays a subset of [`REGISTRY`].
+pub const MULTILEVEL_FAMILY: &[&str] = &["multilevel", "ml-spinner", "ml-revolver"];
+
+/// Every name [`by_name`] accepts, in display order. Single source of
+/// truth for the CLI usage text and the unknown-algorithm error; a test
+/// below asserts it stays in sync with the construction match.
+pub const REGISTRY: &[&str] = &[
+    "revolver",
+    "spinner",
+    "hash",
+    "range",
+    "ldg",
+    "fennel",
+    "restream",
+    "multilevel",
+    "ml-spinner",
+    "ml-revolver",
+];
+
 /// Construct a partitioner by report name — the CLI/bench entry point.
 pub fn by_name(
     name: &str,
     cfg: crate::config::RevolverConfig,
 ) -> anyhow::Result<Box<dyn Partitioner>> {
+    use crate::multilevel::{Multilevel, Refiner};
     match name.to_lowercase().as_str() {
         "revolver" => Ok(Box::new(revolver::Revolver::new(cfg))),
         "spinner" => Ok(Box::new(spinner::Spinner::new(cfg))),
@@ -44,9 +69,13 @@ pub fn by_name(
         "ldg" => Ok(Box::new(crate::stream::Ldg::new(cfg))),
         "fennel" => Ok(Box::new(crate::stream::Fennel::new(cfg))),
         "restream" => Ok(Box::new(crate::stream::Restream::new(cfg))),
+        // The V-cycle's default refiner is Spinner (LP benefits most
+        // from a near-good seed, Spinner's ICDE'17 observation).
+        "multilevel" | "ml-spinner" => Ok(Box::new(Multilevel::new(cfg))),
+        "ml-revolver" => Ok(Box::new(Multilevel::with_refiner(cfg, Refiner::Revolver))),
         other => anyhow::bail!(
-            "unknown partitioner {other:?} \
-             (expected revolver|spinner|hash|range|ldg|fennel|restream)"
+            "unknown partitioner {other:?} (expected one of: {})",
+            REGISTRY.join("|")
         ),
     }
 }
@@ -66,5 +95,40 @@ mod tests {
             assert!(!p.name().is_empty());
         }
         assert!(by_name("metis", cfg).is_err());
+    }
+
+    #[test]
+    fn registry_stays_in_sync_with_by_name() {
+        let cfg = RevolverConfig { parts: 4, ..Default::default() };
+        // Every registered name constructs (the match accepts it)…
+        for name in REGISTRY {
+            let p = by_name(name, cfg.clone())
+                .unwrap_or_else(|e| panic!("registered {name:?} must construct: {e}"));
+            assert!(!p.name().is_empty());
+        }
+        // …and the unknown-name error enumerates every registered name.
+        // (The reverse direction — a match arm missing from REGISTRY —
+        // is not mechanically checkable here; REGISTRY is the single
+        // source the error text, usage string and coarse_algo validation
+        // all read, so an unlisted arm is unreachable from those paths.)
+        let err = by_name("metis", cfg).unwrap_err().to_string();
+        for name in REGISTRY {
+            assert!(err.contains(name), "error must list {name:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn multilevel_family_guard_covers_registry() {
+        // Every family name is registered, and the recursion guard in
+        // config validation rejects each one as a coarse_algo.
+        for name in MULTILEVEL_FAMILY {
+            assert!(REGISTRY.contains(name), "{name:?} must be in REGISTRY");
+            let cfg = RevolverConfig {
+                parts: 4,
+                coarse_algo: name.to_string(),
+                ..Default::default()
+            };
+            assert!(cfg.validate().is_err(), "{name:?} must be rejected as coarse_algo");
+        }
     }
 }

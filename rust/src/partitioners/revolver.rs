@@ -229,7 +229,7 @@ impl VertexProgram for RevolverProgram<'_> {
             let a = roulette::spin(row, rng) as u32;
             cs.selected[v - cs.start] = a;
             if a != ctx.state.label(v as VertexId) {
-                ctx.demand.add(a as usize, ctx.graph.out_degree(v as VertexId));
+                ctx.demand.add(a as usize, ctx.graph.load_mass(v as VertexId));
             }
         }
         StepStats::default()
@@ -313,6 +313,17 @@ impl Partitioner for Revolver {
     }
 }
 
+/// Run a bounded Revolver pass from an explicit initial assignment —
+/// the multilevel V-cycle's per-level refiner. Every LA row starts
+/// biased toward its vertex's given label (the same warm start the
+/// streaming bridge uses), and on graphs with vertex weights the
+/// demand/migration mass is the coarse vertex weight
+/// ([`Graph::load_mass`]).
+pub fn refine(g: &Graph, cfg: &RevolverConfig, init: Vec<crate::Label>) -> PartitionOutput {
+    let program = RevolverProgram { cfg, warm: Some(init.clone()) };
+    engine::run_with_init(g, cfg, &program, InitialAssignment::Given(init))
+}
+
 /// Native per-vertex phase-B body. Returns the vertex's best score
 /// (its contribution to the convergence signal S).
 #[inline]
@@ -352,7 +363,7 @@ fn native_vertex(
     {
         let p = ctx.demand.migration_probability(state, action as usize);
         if p > 0.0 && rng.next_f64() < p {
-            state.migrate(vid, action, g.out_degree(vid));
+            state.migrate(vid, action, g.load_mass(vid));
             *migrations += 1;
         }
     }
@@ -489,7 +500,7 @@ fn xla_batch(
         {
             let p = ctx.demand.migration_probability(state, action as usize);
             if p > 0.0 && rng.next_f64() < p {
-                state.migrate(vid, action, g.out_degree(vid));
+                state.migrate(vid, action, g.load_mass(vid));
                 *migrations += 1;
             }
         }

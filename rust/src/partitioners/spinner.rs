@@ -124,7 +124,7 @@ impl VertexProgram for SpinnerProgram<'_> {
             let current = ctx.label(vid) as usize;
             score_sum += s.scores[current] as f64;
             s.candidates[v - s.start] = if best != current {
-                ctx.demand.add(best, ctx.graph.out_degree(vid));
+                ctx.demand.add(best, ctx.graph.load_mass(vid));
                 best as u32
             } else {
                 STAY
@@ -149,7 +149,7 @@ impl VertexProgram for SpinnerProgram<'_> {
                 continue;
             }
             if rng.next_f64() < mig_prob[cand as usize] {
-                ctx.state.migrate(v as VertexId, cand, ctx.graph.out_degree(v as VertexId));
+                ctx.state.migrate(v as VertexId, cand, ctx.graph.load_mass(v as VertexId));
                 migrations += 1;
             }
         }
@@ -165,6 +165,20 @@ impl Partitioner for Spinner {
     fn partition(&self, g: &Graph) -> PartitionOutput {
         engine::run(g, &self.cfg, &SpinnerProgram { cfg: &self.cfg })
     }
+}
+
+/// Run a bounded Spinner pass from an explicit initial assignment —
+/// the multilevel V-cycle's per-level refiner. Step budget and halting
+/// come from `cfg` (`max_steps` is the bound); on graphs with vertex
+/// weights the capacity gate works in coarse-vertex-weight units via
+/// [`Graph::load_mass`].
+pub fn refine(g: &Graph, cfg: &RevolverConfig, init: Vec<crate::Label>) -> PartitionOutput {
+    engine::run_with_init(
+        g,
+        cfg,
+        &SpinnerProgram { cfg },
+        crate::partition::InitialAssignment::Given(init),
+    )
 }
 
 #[cfg(test)]

@@ -96,8 +96,11 @@ impl Partitioner for Restream {
 
 fn one_pass_labels(g: &Graph, cfg: &RevolverConfig, obj: Objective) -> Vec<Label> {
     let mut stream = CsrEdgeStream::new(g, cfg.stream_order, cfg.seed);
+    // Capacities in load-mass units: |E| on plain graphs, Σ vertex
+    // weights on multilevel contractions (matches the per-group masses
+    // the stream yields).
     let mut state =
-        StreamState::new(g.num_vertices(), cfg.parts, cfg.epsilon, Some(g.num_edges() as u64));
+        StreamState::new(g.num_vertices(), cfg.parts, cfg.epsilon, Some(g.total_load_mass()));
     run_pass(&mut stream, &mut state, obj, false).expect("CSR streams cannot fail");
     state.finish(g.num_vertices())
 }
@@ -105,7 +108,7 @@ fn one_pass_labels(g: &Graph, cfg: &RevolverConfig, obj: Objective) -> Vec<Label
 fn restream_labels(g: &Graph, cfg: &RevolverConfig) -> Vec<Label> {
     let obj = Objective::Fennel { gamma: cfg.fennel_gamma };
     let n = g.num_vertices();
-    let mut state = StreamState::new(n, cfg.parts, cfg.epsilon, Some(g.num_edges() as u64));
+    let mut state = StreamState::new(n, cfg.parts, cfg.epsilon, Some(g.total_load_mass()));
 
     let mut stream = CsrEdgeStream::new(g, cfg.stream_order, cfg.seed);
     run_pass(&mut stream, &mut state, obj, false).expect("CSR streams cannot fail");

@@ -14,15 +14,18 @@ use crate::graph::Graph;
 use crate::util::rng::Rng;
 use crate::VertexId;
 
-/// One unit of a streaming pass: a vertex and its group's out-edge
-/// count. The group's visible neighbours are written into the caller's
-/// buffer by [`EdgeStream::next_group`].
+/// One unit of a streaming pass: a vertex and its group's load mass.
+/// The group's visible neighbours are written into the caller's buffer
+/// by [`EdgeStream::next_group`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct StreamGroup {
     pub v: VertexId,
-    /// Out-edges carried by this group — the vertex's contribution to
-    /// partition load (exact for CSR; per-run for file streams).
-    pub out_degree: u32,
+    /// Load mass carried by this group — the vertex's contribution to
+    /// partition load: its out-edges (exact for CSR; per-run for file
+    /// streams), or the coarse vertex weight when the CSR carries
+    /// explicit vertex weights ([`Graph::load_mass`] — multilevel
+    /// coarsest-level seeding balances in cluster-size units).
+    pub load_mass: u32,
 }
 
 /// A graph presented as a stream of vertex groups.
@@ -31,13 +34,25 @@ pub trait EdgeStream {
     /// file streams (final once a pass completed).
     fn num_vertices(&self) -> usize;
 
-    /// Directed edge count if known *before* streaming — enables exact
-    /// capacities. File streams learn it during their first pass.
+    /// Total load mass of a full pass if known *before* streaming —
+    /// enables exact capacities. This is the directed edge count |E|
+    /// for plain sources, but Σ vertex weights for weighted multilevel
+    /// contractions: always the same units as
+    /// [`StreamGroup::load_mass`], never mix it with per-edge
+    /// statistics on weighted graphs. File streams learn it during
+    /// their first pass.
     fn num_edges(&self) -> Option<u64>;
 
     /// Produce the next group: fills `nbrs` with the group's visible
-    /// neighbours and returns its vertex, or `None` at end of pass.
-    fn next_group(&mut self, nbrs: &mut Vec<VertexId>) -> Result<Option<StreamGroup>>;
+    /// neighbours — and `nbr_ws` with their edge weights when the
+    /// source carries meaningful ones (weighted multilevel
+    /// contractions; left **empty** otherwise, meaning unit weight per
+    /// neighbour) — and returns its vertex, or `None` at end of pass.
+    fn next_group(
+        &mut self,
+        nbrs: &mut Vec<VertexId>,
+        nbr_ws: &mut Vec<f32>,
+    ) -> Result<Option<StreamGroup>>;
 
     /// Rewind for another pass (dense ids stay stable).
     fn reset(&mut self) -> Result<()>;
@@ -98,17 +113,32 @@ impl EdgeStream for CsrEdgeStream<'_> {
     }
 
     fn num_edges(&self) -> Option<u64> {
-        Some(self.g.num_edges() as u64)
+        // Total load mass, so capacities stay in the same units as the
+        // per-group masses below (== |E| for plain graphs).
+        Some(self.g.total_load_mass())
     }
 
-    fn next_group(&mut self, nbrs: &mut Vec<VertexId>) -> Result<Option<StreamGroup>> {
+    fn next_group(
+        &mut self,
+        nbrs: &mut Vec<VertexId>,
+        nbr_ws: &mut Vec<f32>,
+    ) -> Result<Option<StreamGroup>> {
         let Some(&v) = self.order.get(self.pos) else {
             return Ok(None);
         };
         self.pos += 1;
         nbrs.clear();
         nbrs.extend_from_slice(self.g.neighbors(v));
-        Ok(Some(StreamGroup { v, out_degree: self.g.out_degree(v) }))
+        nbr_ws.clear();
+        // Surface accumulated weights only for weighted contractions —
+        // a coarse edge can stand for 100+ fine edges and the seed's
+        // affinity histogram must see that. Plain graphs keep the
+        // streaming literature's unweighted |N(v) ∩ P| histogram
+        // (empty = unit weights), bit-identical to before.
+        if self.g.is_weighted() {
+            nbr_ws.extend_from_slice(self.g.neighbor_weights(v));
+        }
+        Ok(Some(StreamGroup { v, load_mass: self.g.load_mass(v) }))
     }
 
     fn reset(&mut self) -> Result<()> {
@@ -222,7 +252,12 @@ impl EdgeStream for FileEdgeStream {
         self.known_edges
     }
 
-    fn next_group(&mut self, nbrs: &mut Vec<VertexId>) -> Result<Option<StreamGroup>> {
+    fn next_group(
+        &mut self,
+        nbrs: &mut Vec<VertexId>,
+        nbr_ws: &mut Vec<f32>,
+    ) -> Result<Option<StreamGroup>> {
+        nbr_ws.clear(); // edge-list files carry no weights: unit per neighbour
         let (src, first_dst) = match self.pending.take() {
             Some(e) => e,
             None => match self.next_edge()? {
@@ -232,12 +267,12 @@ impl EdgeStream for FileEdgeStream {
         };
         nbrs.clear();
         nbrs.push(first_dst);
-        let mut out_degree = 1u32;
+        let mut load_mass = 1u32;
         loop {
             match self.next_edge()? {
                 Some((s, d)) if s == src => {
                     nbrs.push(d);
-                    out_degree += 1;
+                    load_mass += 1;
                 }
                 Some(e) => {
                     self.pending = Some(e);
@@ -246,7 +281,7 @@ impl EdgeStream for FileEdgeStream {
                 None => break,
             }
         }
-        Ok(Some(StreamGroup { v: src, out_degree }))
+        Ok(Some(StreamGroup { v: src, load_mass }))
     }
 
     fn reset(&mut self) -> Result<()> {
@@ -274,9 +309,11 @@ mod tests {
 
     fn drain<S: EdgeStream>(s: &mut S) -> Vec<(VertexId, u32, Vec<VertexId>)> {
         let mut nbrs = Vec::new();
+        let mut ws = Vec::new();
         let mut out = Vec::new();
-        while let Some(gp) = s.next_group(&mut nbrs).unwrap() {
-            out.push((gp.v, gp.out_degree, nbrs.clone()));
+        while let Some(gp) = s.next_group(&mut nbrs, &mut ws).unwrap() {
+            assert!(ws.is_empty() || ws.len() == nbrs.len());
+            out.push((gp.v, gp.load_mass, nbrs.clone()));
         }
         out
     }
@@ -356,8 +393,9 @@ mod tests {
         std::fs::write(&p, "0 1\nbogus\n").unwrap();
         let mut s = FileEdgeStream::open(&p).unwrap();
         let mut nbrs = Vec::new();
+        let mut ws = Vec::new();
         let err = loop {
-            match s.next_group(&mut nbrs) {
+            match s.next_group(&mut nbrs, &mut ws) {
                 Ok(Some(_)) => continue,
                 Ok(None) => panic!("expected a parse error"),
                 Err(e) => break e,

@@ -98,34 +98,40 @@ impl StreamState {
 
     /// Fold an extra same-source run of an already-placed vertex into
     /// its current partition's load.
-    fn add_load(&mut self, v: VertexId, out_degree: u32, count_edges: bool) {
+    fn add_load(&mut self, v: VertexId, load_mass: u32, count_edges: bool) {
         let vi = v as usize;
         self.ensure(vi);
         debug_assert_ne!(self.labels[vi], UNASSIGNED);
-        self.loads[self.labels[vi] as usize] += out_degree as f64;
-        self.charged[vi] += out_degree;
+        self.loads[self.labels[vi] as usize] += load_mass as f64;
+        self.charged[vi] += load_mass;
         if count_edges {
-            self.streamed_edges += out_degree as u64;
+            self.streamed_edges += load_mass as u64;
         }
     }
 
     /// Place (or, on a restreaming pass, re-place) vertex `v` given its
-    /// visible neighbours. Returns the chosen label.
+    /// visible neighbours. `nbr_ws` carries the neighbour edge weights
+    /// when the stream has meaningful ones (weighted multilevel
+    /// contractions — a coarse edge stands for many fine edges and the
+    /// affinity histogram must see that); empty means unit weights (the
+    /// plain one-pass model). Returns the chosen label.
     pub fn place(
         &mut self,
         v: VertexId,
         nbrs: &[VertexId],
-        out_degree: u32,
+        nbr_ws: &[f32],
+        load_mass: u32,
         obj: Objective,
         revisit: bool,
     ) -> Label {
+        debug_assert!(nbr_ws.is_empty() || nbr_ws.len() == nbrs.len());
         let vi = v as usize;
         self.ensure(vi);
         if self.labels[vi] != UNASSIGNED {
             if !revisit {
                 // Duplicate group in a plain pass (unsorted file):
                 // extra edges stay where the vertex already lives.
-                self.add_load(v, out_degree, true);
+                self.add_load(v, load_mass, true);
                 return self.labels[vi];
             }
             // Restreaming: lift v out before rescoring, so the gate
@@ -133,31 +139,35 @@ impl StreamState {
             self.loads[self.labels[vi] as usize] -= self.charged[vi] as f64;
             self.charged[vi] = 0;
         } else if !revisit {
-            self.streamed_edges += out_degree as u64;
+            self.streamed_edges += load_mass as u64;
         }
 
         // Histogram of already-placed neighbours (unplaced ones
-        // contribute nothing — the standard one-pass model).
+        // contribute nothing — the standard one-pass model), weighted
+        // by the stream's edge weights when it has them.
         self.hist.fill(0.0);
-        for &u in nbrs {
+        for (i, &u) in nbrs.iter().enumerate() {
             match self.labels.get(u as usize) {
-                Some(&l) if l != UNASSIGNED => self.hist[l as usize] += 1.0,
+                Some(&l) if l != UNASSIGNED => {
+                    let w = if nbr_ws.is_empty() { 1.0 } else { nbr_ws[i] as f64 };
+                    self.hist[l as usize] += w;
+                }
                 _ => {}
             }
         }
 
-        let l = self.choose(out_degree, obj);
+        let l = self.choose(load_mass, obj);
         self.labels[vi] = l;
-        self.charged[vi] = out_degree;
-        self.loads[l as usize] += out_degree as f64;
+        self.charged[vi] = load_mass;
+        self.loads[l as usize] += load_mass as f64;
         l
     }
 
     /// Argmax of the objective over partitions with room for `d` more
     /// out-edges; if every partition is full, least-loaded. Ties break
     /// to the lighter partition, then the lower index — deterministic.
-    fn choose(&self, out_degree: u32, obj: Objective) -> Label {
-        let d = out_degree as f64;
+    fn choose(&self, load_mass: u32, obj: Objective) -> Label {
+        let d = load_mass as f64;
         let cap = self.capacity();
         let alpha = match obj {
             Objective::Ldg => 0.0,
@@ -234,6 +244,7 @@ pub fn run_pass<S: EdgeStream + ?Sized>(
     revisit: bool,
 ) -> Result<()> {
     let mut nbrs: Vec<VertexId> = Vec::new();
+    let mut nbr_ws: Vec<f32> = Vec::new();
     // "First group this pass" (re-place) vs "later run of the same
     // source" (fold into load) only needs tracking when both can
     // happen: a plain pass gets it for free from the UNASSIGNED
@@ -242,19 +253,19 @@ pub fn run_pass<S: EdgeStream + ?Sized>(
     // file streams.
     let track_dups = revisit && !stream.exactly_once_per_pass();
     let mut visited = if track_dups { vec![false; stream.num_vertices()] } else { Vec::new() };
-    while let Some(group) = stream.next_group(&mut nbrs)? {
+    while let Some(group) = stream.next_group(&mut nbrs, &mut nbr_ws)? {
         if track_dups {
             let vi = group.v as usize;
             if vi >= visited.len() {
                 visited.resize(vi + 1, false);
             }
             if visited[vi] {
-                state.add_load(group.v, group.out_degree, false);
+                state.add_load(group.v, group.load_mass, false);
                 continue;
             }
             visited[vi] = true;
         }
-        state.place(group.v, &nbrs, group.out_degree, obj, revisit);
+        state.place(group.v, &nbrs, &nbr_ws, group.load_mass, obj, revisit);
     }
     Ok(())
 }
@@ -348,6 +359,25 @@ mod tests {
         let mass2: f64 = state.loads().iter().sum();
         assert!((mass2 - mass).abs() < 1e-9);
         assert_eq!(state.streamed_edges(), g.num_edges() as u64);
+    }
+
+    #[test]
+    fn weighted_stream_hist_follows_heavy_edges() {
+        // 0—2 (w=1), 1—2 (w=10). Natural order: 0 → p0; 1 (no placed
+        // neighbours) → lighter p1; 2 then sees p0 with weight 1 and p1
+        // with weight 10 — the weighted histogram must send it to p1
+        // (the unit histogram would tie 1:1 and fall to p0).
+        use crate::graph::WeightedGraphBuilder;
+        let mut b = WeightedGraphBuilder::new(3);
+        b.edge(0, 2, 1.0).edge(1, 2, 10.0);
+        let g = b.build();
+        let mut s = CsrEdgeStream::new(&g, StreamOrder::Natural, 1);
+        // ε = 1.0 so the capacity gate (total mass 3, C = 3) admits all.
+        let mut state = StreamState::new(3, 2, 1.0, Some(g.total_load_mass()));
+        run_pass(&mut s, &mut state, Objective::Ldg, false).unwrap();
+        let labels = state.finish(3);
+        assert_ne!(labels[0], labels[1]);
+        assert_eq!(labels[2], labels[1], "heavy edge must win: {labels:?}");
     }
 
     #[test]

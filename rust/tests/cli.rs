@@ -303,6 +303,100 @@ fn stream_subcommand_partitions_file_without_csr() {
 }
 
 #[test]
+fn partition_multilevel_on_generated_graph() {
+    let (ok, stdout, stderr) = run(&[
+        "partition",
+        "--graph",
+        "lj",
+        "--vertices",
+        "2048",
+        "--parts",
+        "4",
+        "--threads",
+        "2",
+        "--coarsen-until",
+        "64",
+        "--refine-steps",
+        "3",
+        "--algo", // the short alias
+        "multilevel",
+        "--evaluate",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("algorithm:           multilevel"), "{stdout}");
+    assert!(stdout.contains("comm volume/vertex:"), "{stdout}");
+    assert!(stdout.contains("per-partition loads"), "{stdout}");
+}
+
+#[test]
+fn partition_multilevel_on_edge_list_file() {
+    let dir = std::env::temp_dir().join("revolver_cli_multilevel");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("g.txt");
+    let (ok, stdout, _) = run(&[
+        "generate",
+        "--graph",
+        "lj",
+        "--vertices",
+        "1024",
+        "--format",
+        "txt",
+        "--out",
+        path.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stdout}");
+
+    let (ok, stdout, stderr) = run(&[
+        "partition",
+        "--graph",
+        path.to_str().unwrap(),
+        "--parts",
+        "4",
+        "--threads",
+        "2",
+        "--coarsen-until",
+        "64",
+        "--refine-steps",
+        "3",
+        "--coarse-algo",
+        "ldg",
+        "--algorithm",
+        "multilevel",
+        "--evaluate",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("local edges:"), "{stdout}");
+    assert!(stdout.contains("per-partition loads"), "{stdout}");
+}
+
+#[test]
+fn unknown_algorithm_error_lists_full_registry() {
+    let (ok, _, stderr) =
+        run(&["partition", "--graph", "so", "--vertices", "256", "--algorithm", "metis"]);
+    assert!(!ok);
+    for name in ["revolver", "spinner", "ldg", "fennel", "multilevel", "ml-revolver"] {
+        assert!(stderr.contains(name), "error must list {name}: {stderr}");
+    }
+}
+
+#[test]
+fn recursive_coarse_algo_rejected() {
+    let (ok, _, stderr) = run(&[
+        "partition",
+        "--graph",
+        "so",
+        "--vertices",
+        "256",
+        "--algorithm",
+        "multilevel",
+        "--coarse-algo",
+        "multilevel",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("coarse_algo"), "{stderr}");
+}
+
+#[test]
 fn bad_dataset_name_fails_with_hint() {
     let (ok, _, stderr) = run(&["partition", "--graph", "nonexistent_ds"]);
     assert!(!ok);

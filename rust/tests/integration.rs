@@ -17,13 +17,30 @@ fn all_algorithms_all_datasets_smoke() {
     // Every partitioner must produce valid output on every dataset class.
     for ds in Dataset::ALL {
         let g = generate_dataset(ds, 256, 1).unwrap();
-        for algo in ["revolver", "spinner", "hash", "range", "ldg", "fennel", "restream"] {
+        for algo in [
+            "revolver",
+            "spinner",
+            "hash",
+            "range",
+            "ldg",
+            "fennel",
+            "restream",
+            "multilevel",
+            "ml-revolver",
+        ] {
             let out = by_name(algo, cfg(4, 10)).unwrap().partition(&g);
             assert_eq!(out.labels.len(), g.num_vertices(), "{algo}/{}", ds.name());
             assert!(out.labels.iter().all(|&l| l < 4), "{algo}/{}", ds.name());
             let q = quality::evaluate(&g, &out.labels, 4);
             assert!((0.0..=1.0).contains(&q.local_edges));
             assert!(q.max_normalized_load >= 1.0 - 1e-9);
+            // Mean distinct remote partitions per vertex is bounded by
+            // the k−1 remote partitions that exist.
+            assert!(
+                (0.0..=3.0).contains(&q.mean_communication_volume),
+                "{algo}/{}",
+                ds.name()
+            );
         }
     }
 }
@@ -150,6 +167,84 @@ fn async_balances_better_than_sync() {
     let a = m["Asynchronous"];
     let s = m["Synchronous"];
     assert!(a <= s + 0.05, "async {a} should not balance worse than sync {s}");
+}
+
+/// The multilevel acceptance surrogate (ISSUE 3): R-MAT, 2^16 vertices,
+/// k = 8, fixed seed.
+fn multilevel_surrogate() -> Graph {
+    let n = 1 << 16;
+    rmat::rmat(n, 16 * n, 0.57, 0.19, 0.19, 5)
+}
+
+#[test]
+fn multilevel_matches_spinner_at_equal_superstep_budget() {
+    // The headline acceptance criterion: at the same total superstep
+    // budget, the V-cycle (most of whose supersteps run on levels a
+    // fraction of |V|) must reach at least flat Spinner's locality
+    // while staying inside the ε = 0.05 balance envelope.
+    let g = multilevel_surrogate();
+    let k = 8;
+    // threads = 1: the comparison margins are zero-slack, so both runs
+    // must be fully deterministic (multithreaded async interleavings
+    // shift quality by scheduler luck).
+    let mut c = cfg(k, 290);
+    c.threads = 1;
+    let ml = by_name("multilevel", c.clone()).unwrap().partition(&g);
+    let q_ml = quality::evaluate(&g, &ml.labels, k);
+    assert!(
+        q_ml.max_normalized_load <= 1.05 + 1e-9,
+        "multilevel must hold the ε envelope: {q_ml:?}"
+    );
+
+    let budget = ml.trace.steps().max(1);
+    let mut sc = c;
+    sc.max_steps = budget;
+    sc.halt_window = u32::MAX; // flat Spinner spends the whole budget
+    let sp = by_name("spinner", sc).unwrap().partition(&g);
+    let q_sp = quality::evaluate(&g, &sp.labels, k);
+    assert!(
+        q_ml.local_edges >= q_sp.local_edges,
+        "multilevel local edges {} must reach flat spinner's {} at {budget} supersteps",
+        q_ml.local_edges,
+        q_sp.local_edges
+    );
+}
+
+#[test]
+fn vcycle_refinement_improves_on_coarse_projection() {
+    // The coarsest-level partition projected straight down, with no
+    // refinement, must be strictly beaten by the refined V-cycle —
+    // otherwise the refinement levels add nothing.
+    let g = multilevel_surrogate();
+    let k = 8;
+    // threads = 1 for the same zero-slack determinism reason as the
+    // equal-budget test above.
+    let mut c = cfg(k, 290);
+    c.threads = 1;
+    let base = revolver::multilevel::coarse_projection(&g, &c);
+    let base_le = quality::local_edges(&g, &base);
+    let ml = by_name("multilevel", c).unwrap().partition(&g);
+    let ml_le = quality::local_edges(&g, &ml.labels);
+    assert!(
+        ml_le > base_le,
+        "refinement must strictly improve the projected coarse cut: {ml_le} vs {base_le}"
+    );
+}
+
+#[test]
+fn multilevel_cuts_communication_volume_versus_hash() {
+    // The new metric must show the structural win: a V-cycle cut needs
+    // far fewer distinct remote replicas per vertex than a hash split.
+    let g = rmat_surrogate();
+    let k = 8;
+    let hash = by_name("hash", cfg(k, 1)).unwrap().partition(&g);
+    let ml = by_name("multilevel", cfg(k, 290)).unwrap().partition(&g);
+    let cv_hash = quality::mean_communication_volume(&g, &hash.labels, k);
+    let cv_ml = quality::mean_communication_volume(&g, &ml.labels, k);
+    assert!(
+        cv_ml < cv_hash,
+        "multilevel comm volume {cv_ml} must beat hash {cv_hash}"
+    );
 }
 
 #[test]

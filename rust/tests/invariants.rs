@@ -230,3 +230,139 @@ fn prop_generators_always_valid() {
         g.validate().unwrap_or_else(|e| panic!("{} n={n}: {e}", ds.name()));
     });
 }
+
+// ───────────── multilevel coarsening invariants (BA + R-MAT) ─────────────
+
+/// One power-law graph per generator family, per seed — the matching /
+/// contraction properties must hold on both hub-heavy regimes.
+fn coarsening_graphs(seed: u64) -> Vec<(&'static str, revolver::graph::Graph)> {
+    use revolver::graph::gen::{ba, rmat};
+    vec![
+        ("ba", ba::barabasi_albert(512, 8, seed)),
+        ("rmat", rmat::rmat(512, 8 * 512, 0.57, 0.19, 0.19, seed)),
+    ]
+}
+
+#[test]
+fn prop_matching_pairs_disjoint_and_adjacent() {
+    use revolver::multilevel::heavy_edge_matching;
+    forall(4, |seed| {
+        for (name, g) in coarsening_graphs(seed) {
+            let mate = heavy_edge_matching(&g, seed, u64::MAX);
+            assert_eq!(mate.len(), g.num_vertices());
+            for v in 0..g.num_vertices() {
+                let m = mate[v] as usize;
+                // Involution ⇒ every vertex is in at most one pair.
+                assert_eq!(mate[m] as usize, v, "{name}: mate not symmetric at {v}");
+                if m != v {
+                    assert!(
+                        g.neighbors(v as u32).binary_search(&(m as u32)).is_ok(),
+                        "{name}: matched pair ({v},{m}) must be adjacent"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_coarse_vertex_weights_sum_to_fine_vertices() {
+    use revolver::multilevel::{contract, heavy_edge_matching};
+    forall(4, |seed| {
+        for (name, g) in coarsening_graphs(seed) {
+            let mate = heavy_edge_matching(&g, seed ^ 0x5150, u64::MAX);
+            let (cg, map) = contract(&g, &mate);
+            assert_eq!(
+                cg.graph().total_vertex_weight(),
+                g.num_vertices() as u64,
+                "{name}: coarse vertex weights must sum to |V|"
+            );
+            // The fine→coarse map is onto 0..cn (no empty clusters).
+            let mut hit = vec![false; cg.num_vertices()];
+            for &c in &map {
+                hit[c as usize] = true;
+            }
+            assert!(hit.iter().all(|&h| h), "{name}: every coarse vertex non-empty");
+            cg.graph().validate().unwrap();
+        }
+    });
+}
+
+#[test]
+fn prop_coarse_edge_weight_conservation() {
+    use revolver::multilevel::{contract, heavy_edge_matching, matched_weight};
+    forall(4, |seed| {
+        for (name, g) in coarsening_graphs(seed) {
+            let mate = heavy_edge_matching(&g, seed ^ 0x434F, u64::MAX);
+            let (cg, _) = contract(&g, &mate);
+            let fine = g.total_neighbor_weight() / 2.0;
+            let removed = matched_weight(&g, &mate);
+            let coarse = cg.total_edge_weight();
+            assert!(
+                (coarse - (fine - removed)).abs() <= 1e-6 * fine.max(1.0),
+                "{name}: coarse {coarse} != fine {fine} - matched {removed}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_hierarchy_invariants_hold_at_every_level() {
+    use revolver::multilevel::Hierarchy;
+    forall(3, |seed| {
+        for (name, g) in coarsening_graphs(seed) {
+            let h = Hierarchy::build(&g, 64, seed, u64::MAX);
+            assert!(h.levels() >= 1, "{name}: 512 vertices must coarsen at least once");
+            let total = g.num_vertices() as u64;
+            let mut prev_n = g.num_vertices();
+            for (i, cg) in h.graphs.iter().enumerate() {
+                assert!(cg.num_vertices() < prev_n, "{name}: level {i} must shrink");
+                assert_eq!(cg.graph().total_vertex_weight(), total, "{name}: level {i}");
+                assert_eq!(h.maps[i].len(), prev_n, "{name}: map {i} covers its level");
+                assert!(
+                    h.maps[i].iter().all(|&c| (c as usize) < cg.num_vertices()),
+                    "{name}: map {i} in range"
+                );
+                cg.graph().validate().unwrap_or_else(|e| panic!("{name} level {i}: {e}"));
+                prev_n = cg.num_vertices();
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_rebalance_always_lands_inside_envelope() {
+    use revolver::multilevel::rebalance;
+    forall(6, |seed| {
+        for (name, g) in coarsening_graphs(seed) {
+            // Adversarial start: all mass piled into partition 0.
+            let k = 4;
+            let mut labels = vec![0u32; g.num_vertices()];
+            rebalance(&g, &mut labels, k, 0.05);
+            let mnl = quality::max_normalized_load(&g, &labels, k);
+            assert!(mnl <= 1.05 + 1e-9, "{name}: mnl={mnl}");
+        }
+    });
+}
+
+#[test]
+fn prop_rebalance_drains_concentrated_start_at_large_k() {
+    // With every vertex in partition 0 all target histograms tie, so
+    // every candidate prefers the same lightest partition — the case
+    // that forces the apply-time fallback target. k well above the
+    // sweep bound proves one sweep can fan out across many partitions.
+    // BA's near-uniform out-degrees keep the instance feasible by
+    // construction (any partition with ≥ m_attach room accepts any
+    // vertex).
+    use revolver::graph::gen::ba;
+    use revolver::multilevel::rebalance;
+    forall(3, |seed| {
+        let g = ba::barabasi_albert(512, 8, seed);
+        for k in [8usize, 32] {
+            let mut labels = vec![0u32; g.num_vertices()];
+            rebalance(&g, &mut labels, k, 0.05);
+            let mnl = quality::max_normalized_load(&g, &labels, k);
+            assert!(mnl <= 1.05 + 1e-9, "k={k}: mnl={mnl}");
+        }
+    });
+}
