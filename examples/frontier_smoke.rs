@@ -1,0 +1,59 @@
+//! Release-mode frontier smoke check (run by CI): tiny R-MAT, Revolver
+//! with the frontier on vs off at the same seed and superstep budget.
+//! Asserts the active-set run (a) skips a nonzero number of vertex
+//! evaluations, and (b) stays inside the same quality envelope as the
+//! full-sweep run. Exits nonzero (assert panic) on violation.
+//!
+//!     cargo run --release --example frontier_smoke
+
+use revolver::config::{Frontier, RevolverConfig};
+use revolver::metrics::quality;
+use revolver::partitioners::revolver::Revolver;
+use revolver::partitioners::Partitioner;
+use revolver::util::bench::bench_rmat;
+
+fn main() {
+    let g = bench_rmat(13); // the shared hotpath-bench R-MAT recipe
+    let n = g.num_vertices();
+    let k = 8usize;
+    let steps = 15u32;
+    let base = RevolverConfig {
+        parts: k,
+        max_steps: steps,
+        halt_window: u32::MAX,
+        threads: 1, // deterministic smoke: no scheduler luck in the margins
+        seed: 3,
+        ..Default::default()
+    };
+
+    let run = |frontier: Frontier| {
+        let cfg = RevolverConfig { frontier, ..base.clone() };
+        let out = Revolver::new(cfg).partition(&g);
+        let q = quality::evaluate(&g, &out.labels, k);
+        (out.trace.total_evaluated, q)
+    };
+    let (evals_off, q_off) = run(Frontier::Off);
+    let (evals_on, q_on) = run(Frontier::On);
+
+    let full = steps as u64 * n as u64;
+    let saved = full.saturating_sub(evals_on);
+    println!("frontier off: evals={evals_off} local={:.4} mnl={:.4}", q_off.local_edges, q_off.max_normalized_load);
+    println!("frontier on:  evals={evals_on} local={:.4} mnl={:.4}", q_on.local_edges, q_on.max_normalized_load);
+    println!("evaluations saved: {saved} ({:.1}%)", 100.0 * saved as f64 / full as f64);
+
+    assert_eq!(evals_off, full, "full sweeps must evaluate steps × |V|");
+    assert!(saved > 0, "frontier execution must skip a nonzero number of evaluations");
+    assert!(
+        q_on.local_edges >= q_off.local_edges - 0.03,
+        "frontier quality out of envelope: on={} off={}",
+        q_on.local_edges,
+        q_off.local_edges
+    );
+    assert!(
+        q_on.max_normalized_load <= 1.1 && q_off.max_normalized_load <= 1.1,
+        "balance envelope violated: on={} off={}",
+        q_on.max_normalized_load,
+        q_off.max_normalized_load
+    );
+    println!("frontier smoke: OK");
+}

@@ -11,10 +11,10 @@ use revolver::config::{ExecutionModel, RevolverConfig};
 use revolver::graph::gen::{generate_dataset, Dataset};
 use revolver::metrics::quality;
 use revolver::partitioners::by_name;
-use revolver::util::bench::full_scale;
+use revolver::util::bench::scale_exp;
 
 fn main() {
-    let n = if full_scale() { 1 << 14 } else { 1 << 12 };
+    let n = 1usize << scale_exp(14, 12);
     println!("=== E4 — async vs sync Revolver (|V|≈{n}) ===\n");
     println!(
         "{:<6} {:>4} | {:>21} | {:>21} | async wins-or-ties balance",

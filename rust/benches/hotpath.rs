@@ -4,8 +4,8 @@
 //!
 //!     cargo bench --bench hotpath
 
-use revolver::config::{RevolverConfig, Schedule};
-use revolver::graph::gen::{generate_dataset, rmat, Dataset};
+use revolver::config::{Frontier, RevolverConfig, Schedule};
+use revolver::graph::gen::{generate_dataset, Dataset};
 use revolver::la::roulette;
 use revolver::la::signal::build_signals_into;
 use revolver::la::weighted::WeightedLa;
@@ -13,7 +13,7 @@ use revolver::la::Signal;
 use revolver::lp::{neighbor_histogram, normalized};
 use revolver::metrics::quality;
 use revolver::partitioners::{by_name, revolver::Revolver, spinner::Spinner, Partitioner};
-use revolver::util::bench::{bench, full_scale};
+use revolver::util::bench::{bench, bench_rmat, full_scale, scale_exp};
 use revolver::util::json::Json;
 use revolver::util::rng::Rng;
 
@@ -120,8 +120,7 @@ fn main() {
     // power-law R-MAT graph. Vertex-balanced chunks hand the hub-heavy
     // prefix to one worker; every barrier then waits on it. The JSON
     // line at the end feeds the BENCH trajectory.
-    let rn = if full_scale() { 1 << 15 } else { 1 << 13 };
-    let rg = rmat::rmat(rn, 16 * rn, 0.57, 0.19, 0.19, 11);
+    let rg = bench_rmat(scale_exp(15, 13));
     println!(
         "\n=== scheduler: vertex vs degree chunks (R-MAT |V|={} |E|={}, k={k}) ===\n",
         rg.num_vertices(),
@@ -168,8 +167,7 @@ fn main() {
     let k8 = 8usize;
     let exps: &[u32] = if full_scale() { &[14, 16, 18] } else { &[14] };
     for &e in exps {
-        let n = 1usize << e;
-        let sg = rmat::rmat(n, 16 * n, 0.57, 0.19, 0.19, 11);
+        let sg = bench_rmat(e);
         println!(
             "\n=== streaming: ldg / fennel / restream vs hash (R-MAT |V|={} |E|={}, k={k8}) ===\n",
             sg.num_vertices(),
@@ -213,8 +211,7 @@ fn main() {
     // pass pins the ε envelope; the JSON rows feed the BENCH trajectory
     // alongside stream_rmat.
     for &e in exps {
-        let n = 1usize << e;
-        let mg = rmat::rmat(n, 16 * n, 0.57, 0.19, 0.19, 11);
+        let mg = bench_rmat(e);
         println!(
             "\n=== multilevel: V-cycle vs spinner at equal budget (R-MAT |V|={} |E|={}, k={k8}) ===\n",
             mg.num_vertices(),
@@ -269,6 +266,76 @@ fn main() {
                 .into_iter()
                 .collect(),
             ));
+        }
+    }
+
+    // Active-set execution: Revolver with the frontier on vs off, same
+    // seed, across scales and thread counts. The interesting number is
+    // *total vertex-evaluations saved* — wall clock follows it once the
+    // frontier shrinks below |V| — so each row carries `evaluated`
+    // alongside the timing stats (full sweep = steps × |V|).
+    let fsteps = 10u32;
+    for &e in exps {
+        let fg = bench_rmat(e);
+        let full_evals = fsteps as u64 * fg.num_vertices() as u64;
+        println!(
+            "\n=== frontier: active-set vs full sweeps (R-MAT |V|={} |E|={}, k={k8}) ===\n",
+            fg.num_vertices(),
+            fg.num_edges()
+        );
+        for threads in [1usize, 2, 4, 8] {
+            for frontier in [Frontier::Off, Frontier::On] {
+                let cfg = RevolverConfig {
+                    parts: k8,
+                    max_steps: fsteps,
+                    halt_window: u32::MAX,
+                    threads,
+                    frontier,
+                    seed: 3,
+                    ..Default::default()
+                };
+                let p = Revolver::new(cfg);
+                let out = p.partition(&fg);
+                let evaluated = out.trace.total_evaluated;
+                let saved = full_evals.saturating_sub(evaluated);
+                let q = quality::evaluate(&fg, &out.labels, k8);
+                let name = format!(
+                    "revolver {fsteps} steps 2^{e}, t={threads}, frontier={frontier:?}"
+                );
+                let r = bench(&name, 1, 3, || p.partition(&fg).labels.len());
+                println!(
+                    "{r}   (evals={evaluated}, saved={:.1}%, local={:.4}, mnl={:.3})",
+                    100.0 * saved as f64 / full_evals as f64,
+                    q.local_edges,
+                    q.max_normalized_load
+                );
+                rows.push(Json::Obj(
+                    [
+                        ("bench".to_string(), Json::Str("frontier_rmat".to_string())),
+                        (
+                            "frontier".to_string(),
+                            Json::Str(format!("{frontier:?}").to_lowercase()),
+                        ),
+                        ("threads".to_string(), Json::Num(threads as f64)),
+                        ("steps".to_string(), Json::Num(fsteps as f64)),
+                        ("parts".to_string(), Json::Num(k8 as f64)),
+                        ("vertices".to_string(), Json::Num(fg.num_vertices() as f64)),
+                        ("edges".to_string(), Json::Num(fg.num_edges() as f64)),
+                        ("median_ns".to_string(), Json::Num(r.median_ns)),
+                        ("mean_ns".to_string(), Json::Num(r.mean_ns)),
+                        ("min_ns".to_string(), Json::Num(r.min_ns)),
+                        ("evaluated".to_string(), Json::Num(evaluated as f64)),
+                        ("evaluations_saved".to_string(), Json::Num(saved as f64)),
+                        ("local_edges".to_string(), Json::Num(q.local_edges)),
+                        (
+                            "max_normalized_load".to_string(),
+                            Json::Num(q.max_normalized_load),
+                        ),
+                    ]
+                    .into_iter()
+                    .collect(),
+                ));
+            }
         }
     }
 

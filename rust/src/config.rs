@@ -66,6 +66,33 @@ impl std::str::FromStr for Schedule {
     }
 }
 
+/// Active-set (frontier-driven) execution of the superstep engine
+/// (DESIGN.md §Active-set). `On` skips vertices whose neighbourhood has
+/// not changed since their last evaluation — late supersteps cost
+/// ~|frontier| instead of ~|V| — and halts immediately when the
+/// frontier empties. `Off` is the escape hatch that re-evaluates every
+/// vertex every step, bit-identical to the legacy engine at
+/// `threads = 1` and the same seed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Frontier {
+    /// Frontier-driven supersteps (default for `run`/`refine`).
+    #[default]
+    On,
+    /// Legacy full-sweep supersteps (bit-exact reproduction mode).
+    Off,
+}
+
+impl std::str::FromStr for Frontier {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_lowercase().as_str() {
+            "on" | "true" | "1" => Ok(Frontier::On),
+            "off" | "false" | "0" => Ok(Frontier::Off),
+            other => bail!("unknown frontier mode {other:?} (expected on|off)"),
+        }
+    }
+}
+
 /// Streaming algorithm family (L4 `stream` subsystem): one-pass linear
 /// deterministic greedy, one-pass Fennel, or prioritized restreaming.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -175,6 +202,10 @@ pub struct RevolverConfig {
     pub threads: usize,
     /// How vertices are split across worker threads.
     pub schedule: Schedule,
+    /// Active-set execution: skip vertices whose neighbourhood has not
+    /// changed since their last evaluation (`--frontier off` restores
+    /// the legacy full-sweep supersteps bit-exactly).
+    pub frontier: Frontier,
     /// RNG seed.
     pub seed: u64,
     /// Async (paper headline) or sync (ablation).
@@ -225,6 +256,7 @@ impl Default for RevolverConfig {
             beta: 0.1,
             threads: default_threads(),
             schedule: Schedule::Vertex,
+            frontier: Frontier::On,
             seed: 42,
             execution: ExecutionModel::Asynchronous,
             engine: Engine::Native,
@@ -320,6 +352,7 @@ impl RevolverConfig {
                 "beta" => cfg.beta = value.parse().context("beta")?,
                 "threads" => cfg.threads = value.parse().context("threads")?,
                 "schedule" => cfg.schedule = value.parse()?,
+                "frontier" => cfg.frontier = value.parse()?,
                 "seed" => cfg.seed = value.parse().context("seed")?,
                 "execution" => {
                     cfg.execution = match value.as_str() {
@@ -466,6 +499,19 @@ mod tests {
         assert_eq!(c.schedule, Schedule::Degree);
         let c = RevolverConfig::from_toml_str("[revolver]\nschedule = \"vertex\"\n").unwrap();
         assert_eq!(c.schedule, Schedule::Vertex);
+    }
+
+    #[test]
+    fn frontier_parse_default_and_toml() {
+        assert_eq!(RevolverConfig::default().frontier, Frontier::On);
+        assert_eq!("on".parse::<Frontier>().unwrap(), Frontier::On);
+        assert_eq!("OFF".parse::<Frontier>().unwrap(), Frontier::Off);
+        assert_eq!("true".parse::<Frontier>().unwrap(), Frontier::On);
+        assert!("maybe".parse::<Frontier>().is_err());
+        let c = RevolverConfig::from_toml_str("frontier = \"off\"\n").unwrap();
+        assert_eq!(c.frontier, Frontier::Off);
+        let c = RevolverConfig::from_toml_str("[revolver]\nfrontier = \"on\"\n").unwrap();
+        assert_eq!(c.frontier, Frontier::On);
     }
 
     #[test]

@@ -71,13 +71,33 @@ impl Chunks {
         Chunks { n, bounds }
     }
 
+    /// Weight-balanced chunking of an arbitrary **vertex subset** — the
+    /// active-frontier layout: chunk `c` owns the *positions*
+    /// `range(c)` of `verts`, so the caller slices `&verts[range(c)]`
+    /// to get chunk `c`'s vertices. Same cover-exactly / no-empty-chunk
+    /// invariants as [`Chunks::by_weight`], stated over positions
+    /// `0..verts.len()`. Unlike the full-graph constructors an **empty**
+    /// subset is legal and yields zero chunks (`is_empty()` — the
+    /// engine halts on an empty frontier before ever slicing one).
+    pub fn by_weight_subset<W: Fn(crate::VertexId) -> u64>(
+        verts: &[crate::VertexId],
+        threads: usize,
+        weight: W,
+    ) -> Self {
+        if verts.is_empty() {
+            return Chunks { n: 0, bounds: vec![0] };
+        }
+        Chunks::by_weight(verts.len(), threads, |i| weight(verts[i]))
+    }
+
     /// Number of chunks (== worker threads used).
     pub fn len(&self) -> usize {
         self.bounds.len() - 1
     }
 
-    /// A `Chunks` is never empty by construction (`n > 0` is asserted),
-    /// but derive this from `len()` instead of hard-coding it.
+    /// True only for the zero-chunk layout [`Chunks::by_weight_subset`]
+    /// builds from an empty frontier; the full-graph constructors assert
+    /// `n > 0` and always yield ≥ 1 chunk.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -249,6 +269,52 @@ mod tests {
         // All-zero weights must not produce empty or short coverage.
         let c = Chunks::by_weight(10, 3, |_| 0);
         assert_chunk_invariants(&c, 10);
+    }
+
+    #[test]
+    fn by_weight_subset_covers_exactly_the_subset() {
+        // Every other vertex of a BA graph, skewed degree weights.
+        let g = ba::barabasi_albert(1024, 8, 5);
+        let deg = out_degrees(&g);
+        let verts: Vec<u32> = (0..1024u32).filter(|v| v % 2 == 0).collect();
+        for t in [1usize, 2, 3, 4, 8] {
+            let c = Chunks::by_weight_subset(&verts, t, |v| 1 + deg[v as usize]);
+            assert_eq!(c.len(), t.min(verts.len()));
+            assert_chunk_invariants(&c, verts.len());
+            // Concatenated position ranges must reproduce the subset in
+            // order (the engine slices `&verts[range(c)]`).
+            let mut seen = Vec::new();
+            for i in 0..c.len() {
+                seen.extend_from_slice(&verts[c.range(i)]);
+            }
+            assert_eq!(seen, verts);
+        }
+    }
+
+    #[test]
+    fn by_weight_subset_empty_frontier_yields_no_chunks() {
+        let c = Chunks::by_weight_subset(&[], 4, |_| 1);
+        assert!(c.is_empty());
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.total(), 0);
+    }
+
+    #[test]
+    fn by_weight_subset_single_vertex() {
+        let c = Chunks::by_weight_subset(&[17u32], 8, |_| 1000);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.range(0), 0..1);
+        assert!(!c.is_empty());
+    }
+
+    #[test]
+    fn by_weight_subset_hub_heavy_subset_no_empty_chunks() {
+        // Subset led by one huge-weight vertex: later chunks must still
+        // each get at least one position.
+        let verts: Vec<u32> = (0..50u32).collect();
+        let c = Chunks::by_weight_subset(&verts, 4, |v| if v == 0 { 1_000_000 } else { 1 });
+        assert_chunk_invariants(&c, 50);
+        assert_eq!(c.range(0), 0..1, "hub chunk should stop right after the hub");
     }
 
     #[test]

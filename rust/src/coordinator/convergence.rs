@@ -1,5 +1,11 @@
 //! Convergence detection (§IV-D.9): halt when the global score has not
 //! improved by at least θ for `window` consecutive steps.
+//!
+//! Under active-set execution (DESIGN.md §Active-set) the observed
+//! score is the mean over *evaluated* vertices, not all of |V|, and an
+//! **empty frontier** is a stronger signal than any score window: no
+//! vertex can change state, so the run halts immediately
+//! ([`ConvergenceDetector::observe_empty_frontier`]).
 
 /// Tracks the global score S^i across steps and fires after `window`
 /// consecutive sub-θ improvements.
@@ -30,6 +36,16 @@ impl ConvergenceDetector {
             self.stall += 1;
         }
         self.stall >= self.window
+    }
+
+    /// An empty active frontier: every vertex is settled (labels, λ and
+    /// loads can no longer change), which dominates any score-window
+    /// evidence — the stall counter saturates and the run halts now.
+    /// Always returns `true`; the return mirrors [`Self::observe`] so
+    /// the engine's halting sites stay uniform.
+    pub fn observe_empty_frontier(&mut self) -> bool {
+        self.stall = self.stall.max(self.window);
+        true
     }
 
     /// Consecutive stalled steps so far.
@@ -80,6 +96,17 @@ mod tests {
         assert!(!d.observe(0.5));
         assert!(!d.observe(0.4));
         assert!(d.observe(0.3));
+    }
+
+    #[test]
+    fn empty_frontier_halts_immediately_and_stays_halted() {
+        let mut d = ConvergenceDetector::new(0.001, 5);
+        assert!(!d.observe(0.5), "one observation must not halt");
+        assert!(d.observe_empty_frontier(), "empty frontier halts now");
+        assert!(d.stalled() >= 5, "stall counter saturates to the window");
+        // Reset restores normal windowed behaviour.
+        d.reset();
+        assert!(!d.observe(0.5));
     }
 
     #[test]

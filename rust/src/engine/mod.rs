@@ -5,19 +5,17 @@
 //! an autonomous agent" that repeatedly senses its neighbourhood and
 //! acts. Spinner (Martella et al., arXiv:1404.3861) shows the same
 //! computation expressed as a reusable *vertex program* over a BSP
-//! runtime; Prioritized Restreaming (Awadelkarim & Ugander,
-//! arXiv:2007.03131) shows vertex ordering/assignment policy is a
-//! first-class lever of its own. This module factors both ideas out of
-//! the individual partitioners:
+//! runtime — and, crucially, that late in a run only vertices whose
+//! neighbourhood changed need re-evaluation. This module factors both
+//! ideas out of the individual partitioners:
 //!
 //! * [`VertexProgram`] — the algorithm: a phase-A (action/demand) hook,
 //!   a phase-B (score/migrate/learn) hook, a per-worker scratch factory,
 //!   and two coordinator-side hooks that freeze per-step data.
-//! * [`run`] — the runtime: persistent workers (one per contiguous
-//!   chunk), the four-barrier step protocol, the
-//!   [`ExecutionModel`]::{Asynchronous, Synchronous} snapshot machinery,
-//!   per-step aggregate collection, trace recording and
-//!   convergence-driven halting.
+//! * [`run`] — the runtime: persistent workers, the four-barrier step
+//!   protocol, the [`ExecutionModel`]::{Asynchronous, Synchronous}
+//!   snapshot machinery, per-step aggregate collection, trace recording
+//!   and convergence-driven halting.
 //!
 //! ## Step protocol
 //!
@@ -25,13 +23,14 @@
 //! barriers:
 //!
 //! ```text
-//! == reset demand; freeze snapshots (sync mode); prepare_phase_a
+//! == collect active frontier (or halt if empty); publish step plan;
+//!    reset demand; freeze snapshots (sync mode); prepare_phase_a
 //! W1 ─────────────────────────────────────────────────────────────
-//! -- phase_a over own chunk (action selection, demand registration)
+//! -- phase_a over own work list (action selection, demand registration)
 //! W2 ─────────────────────────────────────────────────────────────
 //! == prepare_phase_b (e.g. freeze migration probabilities)
 //! W2b ────────────────────────────────────────────────────────────
-//! -- phase_b over own chunk (score, migrate, learn); send StepStats
+//! -- phase_b over own work list (score, migrate, learn); send StepStats
 //! W3 ─────────────────────────────────────────────────────────────
 //! == aggregate stats; trace; convergence check
 //! ```
@@ -41,18 +40,34 @@
 //! thread, so `!Send` resources (PJRT executable handles) can live in
 //! it.
 //!
-//! ## Scheduling
+//! ## Scheduling & the active set
 //!
-//! Chunk boundaries come from [`crate::config::Schedule`]: the paper's
+//! Work arrives at the phase hooks as a **work list** (`&[VertexId]`),
+//! not a fixed range. Under [`Frontier::Off`] the list is the identity
+//! `0..n` split once by [`crate::config::Schedule`] (the paper's
 //! vertex-balanced |V|/n split, or the degree-balanced split that keeps
-//! a power-law hub chunk from serializing the step barrier (DESIGN.md
-//! §Scheduler).
+//! a power-law hub chunk from serializing the step barrier); iteration
+//! order and RNG streams are bit-identical to the legacy range-based
+//! engine. Under [`Frontier::On`] (the default) the coordinator keeps
+//! an **epoch-stamped activation array**: `stamp[v] >= step` means `v`
+//! is active this step. Programs report the three wake events through
+//! [`StepCtx`] — a migration ([`StepCtx::migrate`]), a published-λ
+//! change ([`StepCtx::publish`]), each waking the vertex *and* its
+//! undirected (in + out) neighbourhood, and an unsettled vertex that
+//! still wants to move ([`StepCtx::wake`], self only). Stamps are
+//! monotone (`fetch_max(step + 1)`), so nothing is ever cleared
+//! per-step; each superstep the coordinator collects the frontier and
+//! rebuilds **degree-balanced chunks over the frontier only**
+//! ([`Chunks::by_weight_subset`]), so thread balance tracks live work.
+//! An empty frontier halts the run immediately (no vertex can change —
+//! see [`ConvergenceDetector::observe_empty_frontier`]), and the
+//! convergence score becomes a mean over *evaluated* vertices
+//! (DESIGN.md §Active-set).
 
-use std::ops::Range;
 use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::{mpsc, Arc, Barrier, Mutex};
 
-use crate::config::{ExecutionModel, Init, RevolverConfig, Schedule};
+use crate::config::{ExecutionModel, Frontier, Init, RevolverConfig, Schedule};
 use crate::coordinator::{Chunks, ConvergenceDetector};
 use crate::graph::Graph;
 use crate::metrics::quality;
@@ -69,8 +84,11 @@ use crate::VertexId;
 pub struct StepStats {
     /// Σ over own vertices of the convergence score contribution.
     pub score_sum: f64,
-    /// Vertices of the own chunk migrated this step.
+    /// Vertices of the own work list migrated this step.
     pub migrations: u64,
+    /// Vertices evaluated — owned by the engine (set from the work-list
+    /// length after the phases run); programs leave it at 0.
+    pub evaluated: u64,
 }
 
 impl StepStats {
@@ -78,6 +96,29 @@ impl StepStats {
         StepStats {
             score_sum: self.score_sum + other.score_sum,
             migrations: self.migrations + other.migrations,
+            evaluated: self.evaluated + other.evaluated,
+        }
+    }
+}
+
+/// One superstep's work assignment: the vertices to evaluate plus the
+/// chunk layout splitting them across workers. Shared immutably via
+/// `Arc` — under [`Frontier::Off`] a single identity plan is reused for
+/// the whole run; under [`Frontier::On`] the coordinator republishes a
+/// fresh plan per step.
+struct StepPlan {
+    verts: Vec<VertexId>,
+    chunks: Chunks,
+}
+
+impl StepPlan {
+    /// Worker `c`'s slice of this step's work (empty when the frontier
+    /// produced fewer chunks than there are workers).
+    fn slice(&self, c: usize) -> &[VertexId] {
+        if c < self.chunks.len() {
+            &self.verts[self.chunks.range(c)]
+        } else {
+            &[]
         }
     }
 }
@@ -91,9 +132,12 @@ struct StepSnapshots {
 }
 
 /// Read-side view a vertex program gets during a step. Unifies the
-/// live-vs-frozen read paths the two execution models need: in
+/// live-vs-frozen read paths the two execution models need (in
 /// asynchronous mode reads hit the shared atomics, in synchronous mode
-/// the per-step snapshot.
+/// the per-step snapshot) and owns the active-set wake protocol: all
+/// state changes a program makes during phase B go through
+/// [`StepCtx::publish`] / [`StepCtx::migrate`] / [`StepCtx::wake`], so
+/// activation stamps can never drift from the events that require them.
 pub struct StepCtx<'a> {
     pub graph: &'a Graph,
     pub state: &'a PartitionState,
@@ -103,6 +147,9 @@ pub struct StepCtx<'a> {
     published: &'a [AtomicU32],
     snap: &'a StepSnapshots,
     sync: bool,
+    /// Epoch stamps of the active-set scheduler; `None` = frontier off
+    /// (every wake is a no-op and all vertices run every step).
+    stamps: Option<&'a [AtomicU32]>,
 }
 
 impl StepCtx<'_> {
@@ -128,19 +175,76 @@ impl StepCtx<'_> {
         }
     }
 
+    /// True when the engine is running frontier-driven supersteps.
+    #[inline]
+    pub fn frontier_on(&self) -> bool {
+        self.stamps.is_some()
+    }
+
     /// Publish `val` for vertex `v`. Writes always hit the live array;
     /// synchronous-mode *readers* keep seeing the frozen value until the
-    /// next step.
+    /// next step. A *changed* value is a wake event: `v` and its whole
+    /// undirected neighbourhood re-enter the frontier next step (their
+    /// scores depend on λ(v)).
     #[inline]
     pub fn publish(&self, v: VertexId, val: u32) {
-        self.published[v as usize].store(val, Ordering::Relaxed);
+        let old = self.published[v as usize].swap(val, Ordering::Relaxed);
+        if old != val {
+            self.wake_neighborhood(v);
+        }
+    }
+
+    /// Migrate `v` to `to` with load mass `mass` (see
+    /// [`PartitionState::migrate`]). An actual move is a wake event for
+    /// `v` and its undirected neighbourhood. Returns the previous label.
+    #[inline]
+    pub fn migrate(&self, v: VertexId, to: u32, mass: u32) -> u32 {
+        let from = self.state.migrate(v, to, mass);
+        if from != to {
+            self.wake_neighborhood(v);
+        }
+        from
+    }
+
+    /// Keep `v` (and only `v`) in the frontier next step — for vertices
+    /// that still want to move but were denied (capacity gate, lost coin
+    /// flip) or are otherwise unsettled. No-op with the frontier off.
+    #[inline]
+    pub fn wake(&self, v: VertexId) {
+        if let Some(stamps) = self.stamps {
+            stamps[v as usize].fetch_max(self.step + 1, Ordering::Relaxed);
+        }
+    }
+
+    /// Wake `v` and every undirected (in or out) neighbour for the next
+    /// step. Stamps are monotone maxima, so concurrent wakes from racing
+    /// workers merge for free and nothing is ever cleared per-step.
+    #[inline]
+    fn wake_neighborhood(&self, v: VertexId) {
+        if let Some(stamps) = self.stamps {
+            let next = self.step + 1;
+            stamps[v as usize].fetch_max(next, Ordering::Relaxed);
+            for &u in self.graph.neighbors(v) {
+                stamps[u as usize].fetch_max(next, Ordering::Relaxed);
+            }
+        }
     }
 }
 
 /// A vertex-centric partitioning algorithm, expressed against the
-/// engine's superstep protocol. Implementations hold only configuration;
-/// all mutable per-run state lives in the engine (shared) or in
+/// engine's superstep protocol. Implementations hold only configuration
+/// and (optionally) vertex-indexed persistent state they own themselves;
+/// per-run mutable state lives in the engine (shared) or in
 /// [`VertexProgram::Scratch`] (per worker).
+///
+/// **Work lists.** Both phase hooks receive the worker's work list for
+/// the step. The engine guarantees (a) the lists of distinct workers
+/// are disjoint within a step, (b) a worker's phase-A and phase-B lists
+/// of the same step are identical, and (c) with the frontier off the
+/// concatenated lists are exactly `0..n` in order, every step. Programs
+/// may therefore keep positional phase-A→B hand-off state in scratch
+/// (index `i` of the list), and vertex-indexed state shared across
+/// workers needs no locking *within* a step.
 pub trait VertexProgram: Sync {
     /// Per-worker mutable scratch. Built on the worker thread itself
     /// ([`VertexProgram::make_scratch`]), so it may hold `!Send`
@@ -163,8 +267,8 @@ pub trait VertexProgram: Sync {
     /// Initial per-vertex published value (λ(v) for Revolver).
     fn init_published(&self, v: VertexId, state: &PartitionState) -> u32;
 
-    /// Build scratch for `chunk`; called once, on the worker thread.
-    fn make_scratch(&self, chunk: Range<usize>) -> Self::Scratch;
+    /// Build one worker's scratch; called once, on the worker thread.
+    fn make_scratch(&self) -> Self::Scratch;
 
     /// Coordinator hook before phase A (workers are parked at W1).
     fn prepare_phase_a(&self, g: &Graph, state: &PartitionState, step: u32) -> Self::PhaseA;
@@ -179,30 +283,30 @@ pub trait VertexProgram: Sync {
         step: u32,
     ) -> Self::PhaseB;
 
-    /// Phase A over the worker's chunk: action selection / candidate
+    /// Phase A over the worker's work list: action selection / candidate
     /// registration / demand accounting (§IV-D.1–2).
     fn phase_a(
         &self,
         ctx: &StepCtx<'_>,
         frozen: &Self::PhaseA,
         scratch: &mut Self::Scratch,
-        chunk: Range<usize>,
+        work: &[VertexId],
         rng: &mut Rng,
     ) -> StepStats;
 
-    /// Phase B over the worker's chunk: score / migrate / learn
+    /// Phase B over the worker's work list: score / migrate / learn
     /// (§IV-D.3–7).
     fn phase_b(
         &self,
         ctx: &StepCtx<'_>,
         frozen: &Self::PhaseB,
         scratch: &mut Self::Scratch,
-        chunk: Range<usize>,
+        work: &[VertexId],
         rng: &mut Rng,
     ) -> StepStats;
 }
 
-/// Build the chunk layout `cfg` asks for.
+/// Build the full-graph chunk layout `cfg` asks for.
 pub fn chunks_for(g: &Graph, cfg: &RevolverConfig) -> Chunks {
     let n = g.num_vertices();
     match cfg.schedule {
@@ -226,9 +330,9 @@ pub fn initial_assignment(g: &Graph, cfg: &RevolverConfig) -> InitialAssignment 
     }
 }
 
-/// Run `program` over `g` to completion: max_steps, or
-/// convergence-driven halt (§IV-D.9), whichever first. The initial
-/// assignment comes from `cfg.init` (see [`initial_assignment`]).
+/// Run `program` over `g` to completion: max_steps, convergence-driven
+/// halt (§IV-D.9), or an empty active frontier, whichever first. The
+/// initial assignment comes from `cfg.init` (see [`initial_assignment`]).
 pub fn run<P: VertexProgram>(g: &Graph, cfg: &RevolverConfig, program: &P) -> PartitionOutput {
     let init = initial_assignment(g, cfg);
     run_with_init(g, cfg, program, init)
@@ -241,7 +345,10 @@ pub fn run<P: VertexProgram>(g: &Graph, cfg: &RevolverConfig, program: &P) -> Pa
 /// refinement enters here with the projected coarse labels and a
 /// per-level step budget (`cfg.max_steps = refine_steps`), and on
 /// graphs with vertex weights the whole load accounting runs in
-/// coarse-vertex-weight units via [`Graph::load_mass`].
+/// coarse-vertex-weight units via [`Graph::load_mass`]. Both inherit
+/// active-set execution (`cfg.frontier`) — bounded per-level refinement
+/// is exactly the "few vertices still moving" regime the frontier
+/// exploits.
 pub fn run_with_init<P: VertexProgram>(
     g: &Graph,
     cfg: &RevolverConfig,
@@ -252,10 +359,13 @@ pub fn run_with_init<P: VertexProgram>(
     let k = cfg.parts;
     let n = g.num_vertices();
     let sync = program.execution() == ExecutionModel::Synchronous;
+    let frontier_on = cfg.frontier == Frontier::On;
 
     let state = PartitionState::new(g, k, cfg.epsilon, init);
-    let chunks = chunks_for(g, cfg);
-    let t = chunks.len();
+    // Worker count: both full-graph chunk constructors produce exactly
+    // this many chunks, so the RNG stream indexing is identical whether
+    // or not the schedule layout is ever materialized.
+    let t = cfg.threads.max(1).min(n);
     let base_rng = Rng::new(cfg.seed ^ program.rng_salt());
 
     let published: Vec<AtomicU32> = (0..n)
@@ -263,9 +373,32 @@ pub fn run_with_init<P: VertexProgram>(
         .collect();
     let demand = DemandTracker::new(k);
 
+    // Activation stamps: `stamp[v] >= step` ⇔ v is active at `step`.
+    // All start at 0, so step 0 evaluates the full graph; wake events
+    // push stamps to `step + 1` and nothing is ever cleared (monotone
+    // epochs instead of a per-step bitmap — DESIGN.md §Active-set).
+    let stamps: Vec<AtomicU32> =
+        if frontier_on { (0..n).map(|_| AtomicU32::new(0)).collect() } else { Vec::new() };
+    let stamps_ref: Option<&[AtomicU32]> = if frontier_on { Some(&stamps) } else { None };
+
     let barrier = Barrier::new(t + 1);
     let stop = AtomicBool::new(false);
-    // Coordinator → worker hand-off slots, re-published every step.
+    // Coordinator → worker hand-off slots. With the frontier off, one
+    // identity plan (the `cfg.schedule` layout) serves the whole run;
+    // with it on, the coordinator republishes a fresh frontier plan
+    // before every W1, so no worker ever slices this placeholder and
+    // the O(n) identity list + schedule layout are never built.
+    let initial_plan = if frontier_on {
+        Arc::new(StepPlan {
+            verts: Vec::new(),
+            chunks: Chunks::by_weight_subset(&[], t, |_| 1),
+        })
+    } else {
+        let chunks = chunks_for(g, cfg);
+        debug_assert_eq!(chunks.len(), t, "worker count must match the chunk layout");
+        Arc::new(StepPlan { verts: (0..n as VertexId).collect(), chunks })
+    };
+    let plan_slot: Mutex<Arc<StepPlan>> = Mutex::new(initial_plan);
     let snap_slot: Mutex<Arc<StepSnapshots>> = Mutex::new(Arc::new(StepSnapshots::default()));
     let a_slot: Mutex<Option<Arc<P::PhaseA>>> = Mutex::new(None);
     let b_slot: Mutex<Option<Arc<P::PhaseB>>> = Mutex::new(None);
@@ -275,28 +408,32 @@ pub fn run_with_init<P: VertexProgram>(
     let mut detector = ConvergenceDetector::new(cfg.halt_theta, cfg.halt_window);
     let mut trace = RunTrace::default();
     let mut executed_steps: u32 = 0;
+    let mut total_evaluated: u64 = 0;
     // Last step's aggregates, for a truthful terminal trace point when
     // the sampler did not land on the final step.
     let mut last_mean_score = 0.0f64;
     let mut last_migrations = 0u64;
+    let mut last_evaluated = 0u64;
 
     std::thread::scope(|scope| {
         // ── Workers ──
         for c in 0..t {
-            let range = chunks.range(c);
             let (state, demand, published) = (&state, &demand, &published);
             let (barrier, stop) = (&barrier, &stop);
-            let (snap_slot, a_slot, b_slot) = (&snap_slot, &a_slot, &b_slot);
+            let (plan_slot, snap_slot, a_slot, b_slot) =
+                (&plan_slot, &snap_slot, &a_slot, &b_slot);
             let stats_tx = stats_tx.clone();
             let base_rng = base_rng.clone();
             scope.spawn(move || {
-                let mut scratch = program.make_scratch(range.clone());
+                let mut scratch = program.make_scratch();
                 let mut step: u64 = 0;
                 loop {
                     barrier.wait(); // W1: step start (coordinator prepared)
                     if stop.load(Ordering::Acquire) {
                         break;
                     }
+                    let plan = plan_slot.lock().unwrap().clone();
+                    let work = plan.slice(c);
                     let snap = snap_slot.lock().unwrap().clone();
                     let frozen_a =
                         a_slot.lock().unwrap().clone().expect("phase-A data published");
@@ -308,20 +445,21 @@ pub fn run_with_init<P: VertexProgram>(
                         published,
                         snap: &snap,
                         sync,
+                        stamps: stamps_ref,
                     };
                     let mut rng = base_rng.fork(step * 2 * t as u64 + c as u64);
                     let stats_a =
-                        program.phase_a(&ctx, &frozen_a, &mut scratch, range.clone(), &mut rng);
+                        program.phase_a(&ctx, &frozen_a, &mut scratch, work, &mut rng);
                     barrier.wait(); // W2: all demand registered
                     barrier.wait(); // W2b: coordinator froze phase-B data
                     let frozen_b =
                         b_slot.lock().unwrap().clone().expect("phase-B data published");
                     let mut rng = base_rng.fork((step * 2 + 1) * t as u64 + c as u64);
                     let stats_b =
-                        program.phase_b(&ctx, &frozen_b, &mut scratch, range.clone(), &mut rng);
-                    stats_tx
-                        .send((c, stats_a.merged(stats_b)))
-                        .expect("coordinator alive");
+                        program.phase_b(&ctx, &frozen_b, &mut scratch, work, &mut rng);
+                    let mut stats = stats_a.merged(stats_b);
+                    stats.evaluated = work.len() as u64;
+                    stats_tx.send((c, stats)).expect("coordinator alive");
                     barrier.wait(); // W3: step done; coordinator aggregates
                     step += 1;
                 }
@@ -331,6 +469,28 @@ pub fn run_with_init<P: VertexProgram>(
 
         // ── Coordinator ──
         for step in 0..cfg.max_steps {
+            if frontier_on {
+                // Collect the active frontier and rebuild degree-balanced
+                // chunks over it, so thread balance tracks live work.
+                let mut verts: Vec<VertexId> = Vec::new();
+                for (v, s) in stamps.iter().enumerate() {
+                    if s.load(Ordering::Relaxed) >= step {
+                        verts.push(v as VertexId);
+                    }
+                }
+                if verts.is_empty() && detector.observe_empty_frontier() {
+                    // No vertex can change state any more: labels, λ and
+                    // loads of skipped vertices are valid by
+                    // construction, so the run is converged — halt
+                    // without executing the step.
+                    trace.converged_at = Some(executed_steps.saturating_sub(1));
+                    break;
+                }
+                let fchunks = Chunks::by_weight_subset(&verts, t, |v| {
+                    1 + g.out_degree(v) as u64
+                });
+                *plan_slot.lock().unwrap() = Arc::new(StepPlan { verts, chunks: fchunks });
+            }
             executed_steps = step + 1;
             demand.reset();
             if sync {
@@ -357,9 +517,14 @@ pub fn run_with_init<P: VertexProgram>(
             let totals = parts
                 .into_iter()
                 .fold(StepStats::default(), StepStats::merged);
-            let mean_score = totals.score_sum / n as f64;
+            // Convergence signal: mean over *evaluated* vertices — with
+            // the frontier off, `evaluated == n` every step, so the
+            // legacy all-vertices mean is reproduced exactly.
+            let mean_score = totals.score_sum / totals.evaluated.max(1) as f64;
+            total_evaluated += totals.evaluated;
             last_mean_score = mean_score;
             last_migrations = totals.migrations;
+            last_evaluated = totals.evaluated;
 
             if cfg.trace_every > 0 && step % cfg.trace_every == 0 {
                 let labels = state.labels_snapshot();
@@ -369,6 +534,7 @@ pub fn run_with_init<P: VertexProgram>(
                     max_normalized_load: quality::max_normalized_load(g, &labels, k),
                     mean_score,
                     migrations: totals.migrations,
+                    evaluated: totals.evaluated,
                 });
             }
 
@@ -398,8 +564,10 @@ pub fn run_with_init<P: VertexProgram>(
             max_normalized_load: quality::max_normalized_load(g, &labels, k),
             mean_score: last_mean_score,
             migrations: last_migrations,
+            evaluated: last_evaluated,
         });
     }
+    trace.total_evaluated = total_evaluated;
     trace.wall_time_s = sw.elapsed_s();
     PartitionOutput { labels, trace }
 }
@@ -429,7 +597,8 @@ mod tests {
         }
     }
 
-    /// Counts phase visits; publishes `step + 1` in phase A and (in sync
+    /// Counts phase visits; publishes `step + 1` in phase A (so every
+    /// vertex stays in the frontier — λ changes each step) and (in sync
     /// mode) asserts cross-chunk reads still see the frozen value.
     struct ProbeProgram {
         execution: ExecutionModel,
@@ -463,7 +632,7 @@ mod tests {
         fn init_published(&self, _v: VertexId, _state: &PartitionState) -> u32 {
             0
         }
-        fn make_scratch(&self, _chunk: Range<usize>) {}
+        fn make_scratch(&self) {}
         fn prepare_phase_a(&self, _g: &Graph, _state: &PartitionState, step: u32) -> u32 {
             step
         }
@@ -482,13 +651,13 @@ mod tests {
             ctx: &StepCtx<'_>,
             frozen: &u32,
             _scratch: &mut (),
-            chunk: Range<usize>,
+            work: &[VertexId],
             _rng: &mut Rng,
         ) -> StepStats {
             assert_eq!(*frozen, ctx.step);
-            for v in chunk {
+            for &v in work {
                 self.a_visits.fetch_add(1, Ordering::Relaxed);
-                ctx.publish(v as VertexId, ctx.step + 1);
+                ctx.publish(v, ctx.step + 1);
             }
             StepStats::default()
         }
@@ -498,18 +667,18 @@ mod tests {
             ctx: &StepCtx<'_>,
             frozen: &u32,
             _scratch: &mut (),
-            chunk: Range<usize>,
+            work: &[VertexId],
             _rng: &mut Rng,
         ) -> StepStats {
             assert_eq!(*frozen, ctx.step);
             let mut visited = 0u64;
-            for v in chunk.clone() {
+            for &v in work {
                 self.b_visits.fetch_add(1, Ordering::Relaxed);
-                // Reads of vertices *outside* the own chunk exercise the
-                // snapshot machinery: in sync mode every read must see
-                // the value frozen at step start — i.e. last step's
+                // Reads of vertices *outside* the own work list exercise
+                // the snapshot machinery: in sync mode every read must
+                // see the value frozen at step start — i.e. last step's
                 // publish (`step`), not this step's (`step + 1`).
-                let other = (v + chunk.len()) % self.n;
+                let other = (v as usize + work.len()) % self.n;
                 if self.execution == ExecutionModel::Synchronous {
                     assert_eq!(
                         ctx.published(other as VertexId),
@@ -519,7 +688,114 @@ mod tests {
                 }
                 visited += 1;
             }
-            StepStats { score_sum: visited as f64, migrations: 0 }
+            StepStats { score_sum: visited as f64, ..StepStats::default() }
+        }
+    }
+
+    /// A program that never changes anything: publishes the unchanged
+    /// init value, never migrates, never wakes. Under the frontier the
+    /// run must halt after one full step (everything settled).
+    struct SettledProgram;
+
+    impl VertexProgram for SettledProgram {
+        type Scratch = ();
+        type PhaseA = ();
+        type PhaseB = ();
+        fn execution(&self) -> ExecutionModel {
+            ExecutionModel::Asynchronous
+        }
+        fn rng_salt(&self) -> u64 {
+            0xD0D0
+        }
+        fn init_published(&self, _v: VertexId, _state: &PartitionState) -> u32 {
+            0
+        }
+        fn make_scratch(&self) {}
+        fn prepare_phase_a(&self, _g: &Graph, _state: &PartitionState, _step: u32) {}
+        fn prepare_phase_b(
+            &self,
+            _g: &Graph,
+            _state: &PartitionState,
+            _demand: &DemandTracker,
+            _step: u32,
+        ) {
+        }
+        fn phase_a(
+            &self,
+            ctx: &StepCtx<'_>,
+            _f: &(),
+            _s: &mut (),
+            work: &[VertexId],
+            _rng: &mut Rng,
+        ) -> StepStats {
+            for &v in work {
+                ctx.publish(v, 0); // unchanged value: not a wake event
+            }
+            StepStats::default()
+        }
+        fn phase_b(
+            &self,
+            _ctx: &StepCtx<'_>,
+            _f: &(),
+            _s: &mut (),
+            _work: &[VertexId],
+            _rng: &mut Rng,
+        ) -> StepStats {
+            StepStats::default()
+        }
+    }
+
+    /// Publishes a changing value for vertex 0 only — the frontier must
+    /// shrink to 0's undirected neighbourhood and stay there.
+    struct SingleHotProgram;
+
+    impl VertexProgram for SingleHotProgram {
+        type Scratch = ();
+        type PhaseA = ();
+        type PhaseB = ();
+        fn execution(&self) -> ExecutionModel {
+            ExecutionModel::Asynchronous
+        }
+        fn rng_salt(&self) -> u64 {
+            0x1407
+        }
+        fn init_published(&self, _v: VertexId, _state: &PartitionState) -> u32 {
+            0
+        }
+        fn make_scratch(&self) {}
+        fn prepare_phase_a(&self, _g: &Graph, _state: &PartitionState, _step: u32) {}
+        fn prepare_phase_b(
+            &self,
+            _g: &Graph,
+            _state: &PartitionState,
+            _demand: &DemandTracker,
+            _step: u32,
+        ) {
+        }
+        fn phase_a(
+            &self,
+            ctx: &StepCtx<'_>,
+            _f: &(),
+            _s: &mut (),
+            work: &[VertexId],
+            _rng: &mut Rng,
+        ) -> StepStats {
+            for &v in work {
+                if v == 0 {
+                    ctx.publish(v, ctx.step + 1);
+                }
+            }
+            StepStats::default()
+        }
+        fn phase_b(
+            &self,
+            _ctx: &StepCtx<'_>,
+            _f: &(),
+            _s: &mut (),
+            work: &[VertexId],
+            _rng: &mut Rng,
+        ) -> StepStats {
+            StepStats { score_sum: work.len() as f64, ..StepStats::default() }
         }
     }
 
@@ -532,6 +808,7 @@ mod tests {
         assert_eq!(p.b_visits.load(Ordering::Relaxed), 4 * 103);
         assert_eq!(out.labels.len(), 103);
         assert_eq!(out.trace.steps(), 4);
+        assert_eq!(out.trace.total_evaluated, 4 * 103);
     }
 
     #[test]
@@ -591,5 +868,53 @@ mod tests {
         let out = run(&g, &cfg(1, 3), &p);
         assert_eq!(p.a_visits.load(Ordering::Relaxed), 3 * 50);
         assert!(out.labels.iter().all(|&l| l < 4));
+    }
+
+    #[test]
+    fn empty_frontier_halts_after_one_settled_step() {
+        // Nothing changes during step 0, so the frontier is empty at
+        // step 1: the run must halt immediately, regardless of the
+        // (disabled) score-window detector.
+        let g = ring_graph(40);
+        let out = run(&g, &cfg(2, 50), &SettledProgram);
+        assert_eq!(out.trace.steps(), 1, "one full step, then empty-frontier halt");
+        assert_eq!(out.trace.converged_at, Some(0));
+        assert_eq!(out.trace.total_evaluated, 40);
+    }
+
+    #[test]
+    fn frontier_off_runs_every_step_even_when_settled() {
+        let g = ring_graph(40);
+        let mut c = cfg(2, 7);
+        c.frontier = Frontier::Off;
+        let out = run(&g, &c, &SettledProgram);
+        assert_eq!(out.trace.steps(), 7, "escape hatch must keep full sweeps");
+        assert_eq!(out.trace.total_evaluated, 7 * 40);
+    }
+
+    #[test]
+    fn frontier_shrinks_to_woken_neighborhood() {
+        // Ring of 103: only vertex 0 keeps publishing changes, so from
+        // step 1 on the frontier is exactly {0, 1, 102} (0 plus its
+        // undirected neighbours).
+        let n = 103usize;
+        let g = ring_graph(n);
+        let steps = 5u32;
+        let out = run(&g, &cfg(3, steps), &SingleHotProgram);
+        let expect = n as u64 + (steps as u64 - 1) * 3;
+        assert_eq!(out.trace.total_evaluated, expect);
+        assert_eq!(out.trace.steps(), steps, "hot vertex keeps the run alive");
+        // Every sampled/terminal point records its frontier size.
+        assert_eq!(out.trace.points.last().unwrap().evaluated, 3);
+    }
+
+    #[test]
+    fn frontier_single_vertex_work_lists_cover_all_workers() {
+        // Frontier smaller than the worker count: surplus workers get
+        // empty slices but the protocol still completes every barrier.
+        let g = ring_graph(16);
+        let out = run(&g, &cfg(8, 4), &SingleHotProgram);
+        assert_eq!(out.trace.steps(), 4);
+        assert_eq!(out.trace.total_evaluated, 16 + 3 * 3);
     }
 }

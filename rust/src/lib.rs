@@ -31,11 +31,17 @@
 //!   Hash / Range round out the trivial baselines.
 //! * **L3 — execution engine** ([`engine`], [`coordinator`],
 //!   [`partition`]) — the shared superstep runtime: persistent workers
-//!   over contiguous vertex chunks (vertex- or degree-balanced, see
-//!   [`config::Schedule`]), the four-barrier step protocol, the
+//!   over per-step work lists, the four-barrier step protocol, the
 //!   async/sync snapshot machinery, per-step aggregate reduction, trace
-//!   recording and convergence-driven halting — plus the graph
-//!   substrate, shared partition state, metrics, config and CLI.
+//!   recording and convergence-driven halting. Scheduling is
+//!   **active-set by default** ([`config::Frontier`], `--frontier`):
+//!   an epoch-stamped activation array tracks which vertices'
+//!   neighbourhoods changed, each superstep evaluates only that
+//!   frontier (degree-balanced chunks rebuilt over it), and an empty
+//!   frontier halts the run — late supersteps cost ~|frontier| instead
+//!   of ~|V|. `--frontier off` restores the paper's full sweeps
+//!   bit-exactly (legacy chunking via [`config::Schedule`]). Plus the
+//!   graph substrate, shared partition state, metrics, config and CLI.
 //! * **L2 (python/compile/model.py)** — the dense per-batch numeric step
 //!   (normalized LP scores, signal construction, weighted-LA update) as
 //!   a JAX computation, AOT-lowered to HLO text.

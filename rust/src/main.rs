@@ -74,7 +74,12 @@ const USAGE_BODY: &str =
     --parts k             number of partitions (default 8)
     --seed S              RNG seed (default 42)
     --threads T           worker threads
-    --schedule <vertex|degree>  chunk layout (degree balances by out-degree)
+    --schedule <vertex|degree>  full-sweep chunk layout (degree balances by
+                          out-degree; only takes effect with --frontier off —
+                          frontier mode always degree-balances the live set)
+    --frontier <on|off>   active-set supersteps: skip settled vertices,
+                          halt on an empty frontier (default on; off =
+                          bit-exact legacy full sweeps)
     --init <random|stream:<ldg|fennel|restream>>  warm-start policy
     --stream-order <natural|shuffled|bfs>  streaming visit order
     --fennel-gamma G      Fennel load exponent (default 1.5)
@@ -110,6 +115,7 @@ fn config_from(args: &mut Args) -> Result<RevolverConfig> {
     cfg.beta = args.get_or("beta", cfg.beta)?;
     cfg.threads = args.get_or("threads", cfg.threads)?;
     cfg.schedule = args.get_or("schedule", cfg.schedule)?;
+    cfg.frontier = args.get_or("frontier", cfg.frontier)?;
     cfg.seed = args.get_or("seed", cfg.seed)?;
     cfg.trace_every = args.get_or("trace-every", cfg.trace_every)?;
     if let Some(init) = args.get("init") {
@@ -193,6 +199,7 @@ fn cmd_partition(mut args: Args) -> Result<()> {
     println!("partitions:          {k}");
     println!("steps:               {}", out.trace.steps());
     println!("converged at:        {:?}", out.trace.converged_at);
+    println!("vertex evals:        {}", with_commas(out.trace.total_evaluated));
     println!("local edges:         {:.4}", q.local_edges);
     println!("edge cuts:           {:.4}", 1.0 - q.local_edges);
     println!("max normalized load: {:.4}", q.max_normalized_load);

@@ -10,6 +10,10 @@ pub struct TracePoint {
     pub mean_score: f64,
     /// Vertices that migrated during this step.
     pub migrations: u64,
+    /// Vertices evaluated during this step — |V| per step under legacy
+    /// full-sweep execution, the active-frontier size under
+    /// [`crate::config::Frontier::On`].
+    pub evaluated: u64,
 }
 
 /// A full run trace plus its terminal summary.
@@ -20,6 +24,11 @@ pub struct RunTrace {
     /// max_steps).
     pub converged_at: Option<u32>,
     pub wall_time_s: f64,
+    /// Total vertex-evaluations across *every* executed step (not just
+    /// the sampled ones) — `steps × |V|` under full-sweep execution,
+    /// strictly less when the active frontier shrinks. The
+    /// frontier-acceptance tests compare this, not wall clock.
+    pub total_evaluated: u64,
 }
 
 impl RunTrace {
@@ -36,13 +45,17 @@ impl RunTrace {
         self.points.last().map(|p| p.step + 1).unwrap_or(0)
     }
 
-    /// CSV rows (`step,local_edges,max_norm_load,mean_score,migrations`).
+    /// CSV rows
+    /// (`step,local_edges,max_norm_load,mean_score,migrations,evaluated`).
     pub fn to_csv(&self) -> String {
-        let mut out = String::from("step,local_edges,max_normalized_load,mean_score,migrations\n");
+        let mut out = String::from(
+            "step,local_edges,max_normalized_load,mean_score,migrations,evaluated\n",
+        );
         for p in &self.points {
             out.push_str(&format!(
-                "{},{:.6},{:.6},{:.6},{}\n",
-                p.step, p.local_edges, p.max_normalized_load, p.mean_score, p.migrations
+                "{},{:.6},{:.6},{:.6},{},{}\n",
+                p.step, p.local_edges, p.max_normalized_load, p.mean_score, p.migrations,
+                p.evaluated
             ));
         }
         out
@@ -60,6 +73,7 @@ mod tests {
             max_normalized_load: 1.0,
             mean_score: le,
             migrations: 5,
+            evaluated: 100,
         }
     }
 

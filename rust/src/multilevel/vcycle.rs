@@ -188,12 +188,14 @@ impl Multilevel {
         labels: Vec<Label>,
         cfg: &RevolverConfig,
         total_steps: &mut u32,
+        total_evaluated: &mut u64,
     ) -> Vec<Label> {
         let out = match self.refiner {
             Refiner::Spinner => crate::partitioners::spinner::refine(g, cfg, labels),
             Refiner::Revolver => crate::partitioners::revolver::refine(g, cfg, labels),
         };
         *total_steps = total_steps.saturating_add(out.trace.steps());
+        *total_evaluated = total_evaluated.saturating_add(out.trace.total_evaluated);
         out.labels
     }
 }
@@ -221,19 +223,35 @@ impl Partitioner for Multilevel {
             .partition(coarsest);
         let mut labels = coarse.labels;
         let mut total_steps = coarse.trace.steps();
+        let mut total_evaluated = coarse.trace.total_evaluated;
 
         // Per-level refinement budget; halting (cfg.halt_window/theta)
-        // may finish a level early, which the budget accounting sees.
+        // may finish a level early, which the budget accounting sees —
+        // and under `cfg.frontier` each level's refinement also skips
+        // settled vertices and halts on an empty frontier (bounded
+        // refinement is exactly the few-vertices-still-moving regime).
         let mut refine_cfg = cfg.clone();
         refine_cfg.max_steps = cfg.refine_steps;
 
-        labels = self.refine_level(coarsest, labels, &refine_cfg, &mut total_steps);
+        labels = self.refine_level(
+            coarsest,
+            labels,
+            &refine_cfg,
+            &mut total_steps,
+            &mut total_evaluated,
+        );
         rebalance(coarsest, &mut labels, k, cfg.epsilon);
 
         for lev in (0..h.levels()).rev() {
             labels = project(&labels, &h.maps[lev]);
             let lg: &Graph = if lev == 0 { g } else { h.graphs[lev - 1].graph() };
-            labels = self.refine_level(lg, labels, &refine_cfg, &mut total_steps);
+            labels = self.refine_level(
+                lg,
+                labels,
+                &refine_cfg,
+                &mut total_steps,
+                &mut total_evaluated,
+            );
             rebalance(lg, &mut labels, k, cfg.epsilon);
         }
 
@@ -245,7 +263,9 @@ impl Partitioner for Multilevel {
             max_normalized_load: q.max_normalized_load,
             mean_score: 0.0,
             migrations: 0,
+            evaluated: 0, // summary point; the run total lives below
         });
+        trace.total_evaluated = total_evaluated;
         trace.wall_time_s = sw.elapsed_s();
         PartitionOutput { labels, trace }
     }

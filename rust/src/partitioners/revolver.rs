@@ -35,7 +35,7 @@
 //! action agrees, else 1/Σŵ while λ(u) has migration headroom. DESIGN.md
 //! §Fidelity-notes (F5–F7) records this and the other disambiguations.
 
-use std::ops::Range;
+use std::cell::UnsafeCell;
 
 use super::{PartitionOutput, Partitioner};
 use crate::config::{Engine, ExecutionModel, RevolverConfig};
@@ -44,7 +44,7 @@ use crate::graph::Graph;
 use crate::la::signal::build_signals_into;
 use crate::la::weighted::WeightedLa;
 use crate::la::{roulette, Signal};
-use crate::lp::{neighbor_histogram, normalized as nlp};
+use crate::lp::{clear_touched, neighbor_histogram, neighbor_histogram_sparse, normalized as nlp};
 use crate::partition::{DemandTracker, InitialAssignment, PartitionState};
 use crate::runtime::XlaStepEngine;
 use crate::util::rng::Rng;
@@ -70,19 +70,71 @@ impl Revolver {
     }
 }
 
-/// Per-worker mutable state: the probability slab for the chunk's
-/// vertices plus all scratch buffers, so the hot loop never allocates.
+/// The LA probability rows (n × k floats), shared across all workers.
+/// Rows are handed out mutably through `&self`; soundness rests on the
+/// engine's scheduling contract ([`VertexProgram`] docs): a vertex
+/// appears in exactly one worker's work list per superstep (chunk
+/// cover-exactly + frontier dedup), so no two threads ever touch the
+/// same row concurrently. The slab replaces the old per-chunk slabs —
+/// under frontier-driven scheduling a worker's per-step work list is
+/// not aligned with any static vertex range, so per-vertex persistent
+/// state must be globally addressable.
+struct ProbSlab {
+    k: usize,
+    cells: Vec<UnsafeCell<f32>>,
+}
+
+// SAFETY: concurrent access is only ever to disjoint rows (see above);
+// `UnsafeCell` makes the aliasing explicit instead of lying with `&mut`.
+unsafe impl Sync for ProbSlab {}
+
+impl ProbSlab {
+    fn new(n: usize, k: usize, warm: Option<&[crate::Label]>) -> Self {
+        let mut flat = vec![0.0f32; n * k];
+        match warm {
+            None => {
+                for row in flat.chunks_mut(k) {
+                    WeightedLa::init(row);
+                }
+            }
+            Some(labels) => {
+                for (v, row) in flat.chunks_mut(k).enumerate() {
+                    init_warm_row(row, labels[v] as usize);
+                }
+            }
+        }
+        ProbSlab { k, cells: flat.into_iter().map(UnsafeCell::new).collect() }
+    }
+
+    /// Vertex `v`'s probability row.
+    ///
+    /// SAFETY: the caller must be the only thread evaluating `v` in the
+    /// current phase — guaranteed by the engine's disjoint work lists.
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    unsafe fn row(&self, v: usize) -> &mut [f32] {
+        std::slice::from_raw_parts_mut(
+            self.cells.as_ptr().add(v * self.k) as *mut f32,
+            self.k,
+        )
+    }
+}
+
+/// Per-worker mutable scratch: the k-sized scoring buffers plus the
+/// positional phase-A → phase-B hand-off, so the hot loop never
+/// allocates.
 struct ChunkState {
-    /// Flat (chunk_len × k) probability rows.
-    probs: Vec<f32>,
-    /// The action each of the chunk's LAs selected this step (phase A →
-    /// phase B hand-off; only ever read for own vertices, so it lives in
-    /// scratch rather than a shared array).
+    /// The action each LA of this worker's *current work list* selected
+    /// this step — positional (index `i` ↔ `work[i]`), relying on the
+    /// engine's guarantee that both phases see the identical list.
     selected: Vec<u32>,
-    start: usize,
     k: usize,
     // Scratch (k-sized).
+    /// All-zero between vertices; the sparse accumulation records which
+    /// entries it dirtied in `touched` and clears only those (O(deg)
+    /// instead of an O(k) fill per vertex — wins when k ≫ avg degree).
     hist: Vec<f32>,
+    touched: Vec<u32>,
     scores: Vec<f32>,
     pi: Vec<f32>,
     raw_w: Vec<f32>,
@@ -113,27 +165,12 @@ fn init_warm_row(row: &mut [f32], warm: usize) {
 }
 
 impl ChunkState {
-    fn new(range: Range<usize>, k: usize, warm: Option<&[crate::Label]>) -> Self {
-        let len = range.len();
-        let mut probs = vec![0.0f32; len * k];
-        match warm {
-            None => {
-                for row in probs.chunks_mut(k) {
-                    WeightedLa::init(row);
-                }
-            }
-            Some(labels) => {
-                for (i, row) in probs.chunks_mut(k).enumerate() {
-                    init_warm_row(row, labels[range.start + i] as usize);
-                }
-            }
-        }
+    fn new(k: usize) -> Self {
         ChunkState {
-            probs,
-            selected: vec![0; len],
-            start: range.start,
+            selected: Vec::new(),
             k,
             hist: vec![0.0; k],
+            touched: Vec::with_capacity(k),
             scores: vec![0.0; k],
             pi: vec![0.0; k],
             raw_w: vec![0.0; k],
@@ -143,28 +180,17 @@ impl ChunkState {
             headroom: vec![true; k],
         }
     }
-
-    #[inline]
-    fn row_range(&self, v: usize) -> Range<usize> {
-        let i = (v - self.start) * self.k;
-        i..i + self.k
-    }
-
-    #[inline]
-    fn selected_of(&self, v: usize) -> u32 {
-        self.selected[v - self.start]
-    }
 }
 
 /// Revolver as a [`VertexProgram`]: phase A draws actions and registers
 /// demand, phase B scores/migrates/learns (natively or through the XLA
-/// artifacts).
+/// artifacts). The persistent per-vertex LA state lives in the program
+/// itself ([`ProbSlab`]); scratch holds only ephemeral buffers.
 struct RevolverProgram<'a> {
     cfg: &'a RevolverConfig,
-    /// Streaming warm-start labels (`--init stream:<algo>`): each
-    /// vertex's LA row starts biased toward its label instead of
-    /// uniform. `None` = uniform random init (the paper).
-    warm: Option<Vec<crate::Label>>,
+    /// n × k LA probability rows — built uniform, or biased toward the
+    /// warm-start labels (`--init stream:<algo>` / multilevel `refine`).
+    probs: ProbSlab,
 }
 
 impl VertexProgram for RevolverProgram<'_> {
@@ -185,7 +211,7 @@ impl VertexProgram for RevolverProgram<'_> {
         state.label(v)
     }
 
-    fn make_scratch(&self, chunk: Range<usize>) -> Self::Scratch {
+    fn make_scratch(&self) -> Self::Scratch {
         // PJRT handles are !Send: construct inside the worker.
         let eng = match self.cfg.engine {
             Engine::Xla => Some(
@@ -200,7 +226,7 @@ impl VertexProgram for RevolverProgram<'_> {
             ),
             Engine::Native => None,
         };
-        (ChunkState::new(chunk, self.cfg.parts, self.warm.as_deref()), eng)
+        (ChunkState::new(self.cfg.parts), eng)
     }
 
     fn prepare_phase_a(&self, _g: &Graph, _state: &PartitionState, _step: u32) {}
@@ -219,17 +245,30 @@ impl VertexProgram for RevolverProgram<'_> {
         ctx: &StepCtx<'_>,
         _frozen: &(),
         scratch: &mut Self::Scratch,
-        chunk: Range<usize>,
+        work: &[VertexId],
         rng: &mut Rng,
     ) -> StepStats {
         let cs = &mut scratch.0;
         // ── Action selection + demand (§IV-D.1/2) ──
-        for v in chunk {
-            let row = &cs.probs[cs.row_range(v)];
+        cs.selected.clear();
+        for &v in work {
+            // Frontier fast path, mirroring phase B's: an isolated
+            // vertex is inert under active-set execution, so don't draw
+            // an action or register demand it will never consume (dead
+            // demand would deflate min(1, r(l)/m(l)) for real movers).
+            // The positional slot still needs an entry; the current
+            // label is the harmless "stay" action.
+            if ctx.frontier_on() && ctx.graph.neighbors(v).is_empty() {
+                cs.selected.push(ctx.state.label(v));
+                continue;
+            }
+            // SAFETY: `v` is in this worker's work list only (engine
+            // contract), so the row access is exclusive.
+            let row: &[f32] = unsafe { self.probs.row(v as usize) };
             let a = roulette::spin(row, rng) as u32;
-            cs.selected[v - cs.start] = a;
-            if a != ctx.state.label(v as VertexId) {
-                ctx.demand.add(a as usize, ctx.graph.load_mass(v as VertexId));
+            cs.selected.push(a);
+            if a != ctx.state.label(v) {
+                ctx.demand.add(a as usize, ctx.graph.load_mass(v));
             }
         }
         StepStats::default()
@@ -240,15 +279,14 @@ impl VertexProgram for RevolverProgram<'_> {
         ctx: &StepCtx<'_>,
         _frozen: &(),
         scratch: &mut Self::Scratch,
-        chunk: Range<usize>,
+        work: &[VertexId],
         rng: &mut Rng,
     ) -> StepStats {
         let (cs, eng) = scratch;
         let k = cs.k;
         let mut stats = StepStats::default();
-        let mut batch_start = chunk.start;
-        while batch_start < chunk.end {
-            let batch_end = (batch_start + BATCH).min(chunk.end);
+        let mut pos = 0usize; // position into `work` / `cs.selected`
+        for batch in work.chunks(BATCH) {
             // One load/π snapshot per batch (async staleness tolerance;
             // exactly the artifact's granularity).
             ctx.state.loads_into(&mut cs.loads);
@@ -262,20 +300,31 @@ impl VertexProgram for RevolverProgram<'_> {
                     stats.score_sum += xla_batch(
                         ctx,
                         cs,
+                        &self.probs,
                         eng,
-                        batch_start..batch_end,
+                        batch,
+                        pos,
                         rng,
                         &mut stats.migrations,
                     );
                 }
                 None => {
-                    for v in batch_start..batch_end {
-                        stats.score_sum +=
-                            native_vertex(ctx, cs, v, rng, &mut stats.migrations, self.cfg);
+                    for (i, &v) in batch.iter().enumerate() {
+                        let action = cs.selected[pos + i];
+                        stats.score_sum += native_vertex(
+                            ctx,
+                            cs,
+                            &self.probs,
+                            v,
+                            action,
+                            rng,
+                            &mut stats.migrations,
+                            self.cfg,
+                        );
                     }
                 }
             }
-            batch_start = batch_end;
+            pos += batch.len();
         }
         stats
     }
@@ -309,7 +358,11 @@ impl Partitioner for Revolver {
             InitialAssignment::Given(labels) => Some(labels.clone()),
             _ => None,
         };
-        engine::run_with_init(g, &self.cfg, &RevolverProgram { cfg: &self.cfg, warm }, init)
+        let program = RevolverProgram {
+            cfg: &self.cfg,
+            probs: ProbSlab::new(g.num_vertices(), self.cfg.parts, warm.as_deref()),
+        };
+        engine::run_with_init(g, &self.cfg, &program, init)
     }
 }
 
@@ -320,33 +373,53 @@ impl Partitioner for Revolver {
 /// demand/migration mass is the coarse vertex weight
 /// ([`Graph::load_mass`]).
 pub fn refine(g: &Graph, cfg: &RevolverConfig, init: Vec<crate::Label>) -> PartitionOutput {
-    let program = RevolverProgram { cfg, warm: Some(init.clone()) };
+    let program = RevolverProgram {
+        cfg,
+        probs: ProbSlab::new(g.num_vertices(), cfg.parts, Some(&init)),
+    };
     engine::run_with_init(g, cfg, &program, InitialAssignment::Given(init))
 }
 
-/// Native per-vertex phase-B body. Returns the vertex's best score
-/// (its contribution to the convergence signal S).
+/// Native per-vertex phase-B body. Returns the vertex's score
+/// contribution to the convergence signal S.
 #[inline]
+#[allow(clippy::too_many_arguments)]
 fn native_vertex(
     ctx: &StepCtx<'_>,
     cs: &mut ChunkState,
-    v: usize,
+    probs: &ProbSlab,
+    vid: VertexId,
+    action: u32,
     rng: &mut Rng,
     migrations: &mut u64,
     cfg: &RevolverConfig,
 ) -> f64 {
-    let vid = v as VertexId;
     let g = ctx.graph;
     let state = ctx.state;
 
-    // 3. Normalized LP scores + λ(v) (eqs. 10-12).
-    let wsum = neighbor_histogram(
+    // Frontier fast path: an isolated vertex has no neighbourhood term,
+    // so its score is pure penalty — evaluating it would chase the
+    // globally emptiest partition forever (label churn with zero load
+    // mass and nobody to wake). Under active-set execution it is
+    // settled by construction: no migration, no λ change, no wakes —
+    // it leaves the frontier after step 0. Legacy mode (`frontier=off`)
+    // keeps the paper-faithful evaluation bit-exactly.
+    if ctx.frontier_on() && g.neighbors(vid).is_empty() {
+        return 0.0;
+    }
+
+    // 3. Normalized LP scores + λ(v) (eqs. 10-12). The histogram is
+    // accumulated sparsely: `cs.hist` is all-zero between vertices and
+    // only the entries this vertex touched are cleared afterwards.
+    let wsum = neighbor_histogram_sparse(
         g.neighbors(vid),
         g.neighbor_weights(vid),
         |u| ctx.label(u),
         &mut cs.hist,
+        &mut cs.touched,
     );
     let best = nlp::score_into(&cs.hist, wsum, &cs.pi, &mut cs.scores);
+    clear_touched(&mut cs.hist, &mut cs.touched);
     ctx.publish(vid, best as u32);
 
     // 4. Migration (§IV-D.4): move to the sampled action when it beats
@@ -355,7 +428,6 @@ fn native_vertex(
     // capacity gate admits it. Vertices sitting in an *over-capacity*
     // partition may leave unconditionally — draining b(l) > C back
     // under the eq. (1) bound takes precedence over locality.
-    let action = cs.selected_of(v);
     let current = state.label(vid);
     if action != current
         && (cs.scores[action as usize] >= cs.scores[current as usize]
@@ -363,7 +435,7 @@ fn native_vertex(
     {
         let p = ctx.demand.migration_probability(state, action as usize);
         if p > 0.0 && rng.next_f64() < p {
-            state.migrate(vid, action, g.load_mass(vid));
+            ctx.migrate(vid, action, g.load_mass(vid));
             *migrations += 1;
         }
     }
@@ -379,6 +451,8 @@ fn native_vertex(
     // τ-normalized neighbour-preference modulation — neighbour u
     // endorses partition λ(u) with ŵ(u,v)/Σŵ when v's action agrees,
     // else with 1/Σŵ while λ(u) still has migration headroom.
+    // (`raw_w` stays a dense k-copy: it is seeded from the dense score
+    // vector, not zero-filled, so there is nothing sparse to skip.)
     cs.raw_w.copy_from_slice(&cs.scores);
     let wsum_inv = if wsum > 1e-12 { 1.0 / wsum } else { 0.0 };
     for (&u, &w_uv) in g.neighbors(vid).iter().zip(g.neighbor_weights(vid)) {
@@ -391,18 +465,26 @@ fn native_vertex(
     }
 
     // 6+7. Signals + LA update (§IV-D.6/7).
-    let rr = cs.row_range(v);
+    // SAFETY: exclusive row access per the engine's disjoint work lists.
+    let row = unsafe { probs.row(vid as usize) };
     if cfg.classic_la {
         // Ablation E5: classic single-action update (eqs. 6-7) — reward
         // the selected action iff it matches λ(v).
         let sig = if action as usize == best { Signal::Reward } else { Signal::Penalty };
-        classic_update_row(&mut cs.probs[rr], action as usize, sig, cfg.alpha, cfg.beta);
+        classic_update_row(row, action as usize, sig, cfg.alpha, cfg.beta);
     } else {
         build_signals_into(&cs.raw_w, &mut cs.w_norm, &mut cs.signals);
-        // `probs` and the scratch vectors are distinct fields; split the
-        // borrows explicitly.
-        let ChunkState { probs, w_norm, signals, .. } = cs;
-        WeightedLa::update(&mut probs[rr], w_norm, signals, cfg.alpha, cfg.beta);
+        WeightedLa::update(row, &cs.w_norm, &cs.signals, cfg.alpha, cfg.beta);
+    }
+
+    // Keep the vertex in the frontier while it is unsettled: off its
+    // argmax (a denied or unattempted improving move must retry — the
+    // demand gate and loads it lost to are global state), or sitting in
+    // an over-capacity partition (the unconditional eq.-(1) drain above
+    // must keep retrying until b(l) ≤ C, even when label == argmax).
+    let post = state.label(vid);
+    if post != best as u32 || state.remaining(post as usize) < 0.0 {
+        ctx.wake(vid);
     }
 
     current_score
@@ -435,29 +517,34 @@ fn classic_update_row(row: &mut [f32], i: usize, sig: Signal, alpha: f32, beta: 
     }
 }
 
-/// XLA-engine phase-B body for one batch: scores through the `score`
-/// artifact, migration host-side, LA updates through the `la_update`
-/// artifact. Numerically equivalent to the native path (asserted in
-/// integration tests).
+/// XLA-engine phase-B body for one batch of the work list (`batch[i]`'s
+/// selected action is `cs.selected[pos + i]`): scores through the
+/// `score` artifact, migration host-side, LA updates through the
+/// `la_update` artifact. Numerically equivalent to the native path
+/// (asserted in integration tests), including the frontier-mode
+/// isolated-vertex skip.
+#[allow(clippy::too_many_arguments)]
 fn xla_batch(
     ctx: &StepCtx<'_>,
     cs: &mut ChunkState,
+    slab: &ProbSlab,
     eng: &mut XlaStepEngine,
-    range: Range<usize>,
+    batch: &[VertexId],
+    pos: usize,
     rng: &mut Rng,
     migrations: &mut u64,
 ) -> f64 {
     let k = cs.k;
-    let len = range.len();
+    let len = batch.len();
     debug_assert!(len <= BATCH);
     let g = ctx.graph;
     let state = ctx.state;
+    let skip = |vid: VertexId| ctx.frontier_on() && g.neighbors(vid).is_empty();
 
     // Gather histograms host-side (irregular CSR work stays on L3).
     let mut hist = vec![0.0f32; BATCH * k];
     let mut wsum = vec![0.0f32; BATCH];
-    for (i, v) in range.clone().enumerate() {
-        let vid = v as VertexId;
+    for (i, &vid) in batch.iter().enumerate() {
         wsum[i] = neighbor_histogram(
             g.neighbors(vid),
             g.neighbor_weights(vid),
@@ -479,9 +566,21 @@ fn xla_batch(
     let mut score_sum = 0.0f64;
     let mut raw_w = vec![0.0f32; BATCH * k];
     let mut probs = vec![0.0f32; BATCH * k];
-    for (i, v) in range.clone().enumerate() {
-        let vid = v as VertexId;
+    for (i, &vid) in batch.iter().enumerate() {
         let srow = &scores[i * k..(i + 1) * k];
+        // Raw-weight and probability rows must exist for the fixed-shape
+        // kernel even when the vertex is skipped (its update is simply
+        // never copied back).
+        let wrow = &mut raw_w[i * k..(i + 1) * k];
+        wrow.copy_from_slice(srow);
+        // SAFETY: exclusive row access per the engine's disjoint work
+        // lists.
+        probs[i * k..(i + 1) * k].copy_from_slice(unsafe { slab.row(vid as usize) });
+        if skip(vid) {
+            // Same semantics as `native_vertex`'s frontier fast path:
+            // no publish, no migration, no LA update, score 0, no wake.
+            continue;
+        }
         let mut best = 0usize;
         let mut best_s = f32::NEG_INFINITY;
         for (l, &s) in srow.iter().enumerate() {
@@ -492,7 +591,7 @@ fn xla_batch(
         }
         ctx.publish(vid, best as u32);
 
-        let action = cs.selected_of(v);
+        let action = cs.selected[pos + i];
         let current = state.label(vid);
         if action != current
             && (srow[action as usize] >= srow[current as usize]
@@ -500,7 +599,7 @@ fn xla_batch(
         {
             let p = ctx.demand.migration_probability(state, action as usize);
             if p > 0.0 && rng.next_f64() < p {
-                state.migrate(vid, action, g.load_mass(vid));
+                ctx.migrate(vid, action, g.load_mass(vid));
                 *migrations += 1;
             }
         }
@@ -510,8 +609,6 @@ fn xla_batch(
 
         // Raw weights (§IV-C step 4 + eq. 13), same semantics as
         // `native_vertex`.
-        let wrow = &mut raw_w[i * k..(i + 1) * k];
-        wrow.copy_from_slice(srow);
         let wsum_inv = if wsum[i] > 1e-12 { 1.0 / wsum[i] } else { 0.0 };
         for (&u, &w_uv) in g.neighbors(vid).iter().zip(g.neighbor_weights(vid)) {
             let lu = ctx.published(u) as usize;
@@ -521,7 +618,12 @@ fn xla_batch(
                 wrow[lu] += wsum_inv;
             }
         }
-        probs[i * k..(i + 1) * k].copy_from_slice(&cs.probs[cs.row_range(v)]);
+        // Unsettled self-wake (off-argmax or over-capacity drain
+        // pending), matching `native_vertex`.
+        let post = state.label(vid);
+        if post != best as u32 || state.remaining(post as usize) < 0.0 {
+            ctx.wake(vid);
+        }
     }
     // Pad rows beyond `len` with uniform distributions (the artifact has
     // a fixed batch dimension).
@@ -531,9 +633,12 @@ fn xla_batch(
 
     // L1 kernel: signal construction + weighted LA update (B, k).
     let p_next = eng.la_update(&probs, &raw_w).expect("XLA la_update failed");
-    for (i, v) in range.enumerate() {
-        let rr = cs.row_range(v);
-        cs.probs[rr].copy_from_slice(&p_next[i * k..(i + 1) * k]);
+    for (i, &vid) in batch.iter().enumerate() {
+        if skip(vid) {
+            continue; // frontier-settled: LA row stays frozen
+        }
+        // SAFETY: exclusive row access (see above).
+        unsafe { slab.row(vid as usize) }.copy_from_slice(&p_next[i * k..(i + 1) * k]);
     }
     score_sum
 }
@@ -622,6 +727,29 @@ mod tests {
     }
 
     #[test]
+    fn frontier_skips_evaluations_at_fixed_budget() {
+        use crate::config::Frontier;
+        let g = generate_dataset(Dataset::Lj, 2048, 8).unwrap();
+        let steps = 25u32;
+        let mut cfg = small_cfg(4);
+        cfg.threads = 1;
+        cfg.max_steps = steps;
+        cfg.halt_window = u32::MAX;
+        cfg.frontier = Frontier::Off;
+        let off = Revolver::new(cfg.clone()).partition(&g);
+        assert_eq!(off.trace.total_evaluated, steps as u64 * 2048);
+        cfg.frontier = Frontier::On;
+        let on = Revolver::new(cfg).partition(&g);
+        assert!(
+            on.trace.total_evaluated < off.trace.total_evaluated,
+            "on={} off={}",
+            on.trace.total_evaluated,
+            off.trace.total_evaluated
+        );
+        assert!(on.labels.iter().all(|&l| l < 4));
+    }
+
+    #[test]
     fn sync_mode_runs() {
         let g = generate_dataset(Dataset::So, 512, 5).unwrap();
         let mut cfg = small_cfg(4);
@@ -669,6 +797,9 @@ mod tests {
         cfg.trace_every = 1;
         cfg.max_steps = 40;
         cfg.halt_window = 1000;
+        // Full sweeps: the point-count floor below assumes no
+        // empty-frontier early halt.
+        cfg.frontier = crate::config::Frontier::Off;
         let out = Revolver::new(cfg).partition(&g);
         assert!(out.trace.points.len() >= 30);
         let first = out.trace.points.first().unwrap().local_edges;

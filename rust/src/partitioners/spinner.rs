@@ -12,8 +12,6 @@
 //! the BSP read semantics regardless of the configured execution model
 //! (Spinner has no asynchronous variant in the paper).
 
-use std::ops::Range;
-
 use super::{PartitionOutput, Partitioner};
 use crate::config::{ExecutionModel, RevolverConfig};
 use crate::engine::{self, StepCtx, StepStats, VertexProgram};
@@ -37,13 +35,14 @@ impl Spinner {
     }
 }
 
-/// Per-worker scratch: k-sized scoring buffers plus the chunk's
-/// candidate partitions (phase A → phase B hand-off).
+/// Per-worker scratch: k-sized scoring buffers plus the candidate
+/// partitions of this worker's current work list (phase A → phase B
+/// hand-off, positional — index `i` ↔ `work[i]`, relying on the
+/// engine's guarantee that both phases see the identical list).
 struct SpinnerScratch {
     hist: Vec<f32>,
     scores: Vec<f32>,
     candidates: Vec<u32>,
-    start: usize,
 }
 
 struct SpinnerProgram<'a> {
@@ -72,13 +71,12 @@ impl VertexProgram for SpinnerProgram<'_> {
         state.label(v)
     }
 
-    fn make_scratch(&self, chunk: Range<usize>) -> SpinnerScratch {
+    fn make_scratch(&self) -> SpinnerScratch {
         let k = self.cfg.parts;
         SpinnerScratch {
             hist: vec![0.0; k],
             scores: vec![0.0; k],
-            candidates: vec![STAY; chunk.len()],
-            start: chunk.start,
+            candidates: Vec::new(),
         }
     }
 
@@ -106,14 +104,23 @@ impl VertexProgram for SpinnerProgram<'_> {
         ctx: &StepCtx<'_>,
         pi_hat: &Vec<f32>,
         s: &mut SpinnerScratch,
-        chunk: Range<usize>,
+        work: &[VertexId],
         _rng: &mut Rng,
     ) -> StepStats {
-        // Score every vertex against the frozen snapshot; register
-        // candidates and demand.
+        // Score every active vertex against the frozen snapshot;
+        // register candidates and demand.
         let mut score_sum = 0.0f64;
-        for v in chunk {
-            let vid = v as VertexId;
+        s.candidates.clear();
+        for &vid in work {
+            // Frontier fast path: an isolated vertex's score is pure
+            // penalty, so it would chase the emptiest partition forever
+            // while waking nobody — under active-set execution it is
+            // settled by construction. Legacy mode keeps the original
+            // evaluation.
+            if ctx.frontier_on() && ctx.graph.neighbors(vid).is_empty() {
+                s.candidates.push(STAY);
+                continue;
+            }
             let wsum = neighbor_histogram(
                 ctx.graph.neighbors(vid),
                 ctx.graph.neighbor_weights(vid),
@@ -123,14 +130,14 @@ impl VertexProgram for SpinnerProgram<'_> {
             let best = sp::score_into(&s.hist, wsum, pi_hat, &mut s.scores);
             let current = ctx.label(vid) as usize;
             score_sum += s.scores[current] as f64;
-            s.candidates[v - s.start] = if best != current {
+            s.candidates.push(if best != current {
                 ctx.demand.add(best, ctx.graph.load_mass(vid));
                 best as u32
             } else {
                 STAY
-            };
+            });
         }
-        StepStats { score_sum, migrations: 0 }
+        StepStats { score_sum, ..StepStats::default() }
     }
 
     fn phase_b(
@@ -138,22 +145,30 @@ impl VertexProgram for SpinnerProgram<'_> {
         ctx: &StepCtx<'_>,
         mig_prob: &Vec<f64>,
         s: &mut SpinnerScratch,
-        chunk: Range<usize>,
+        work: &[VertexId],
         rng: &mut Rng,
     ) -> StepStats {
         // Probabilistic migrations against the frozen probabilities.
         let mut migrations = 0u64;
-        for v in chunk {
-            let cand = s.candidates[v - s.start];
+        for (i, &vid) in work.iter().enumerate() {
+            let cand = s.candidates[i];
             if cand == STAY {
                 continue;
             }
             if rng.next_f64() < mig_prob[cand as usize] {
-                ctx.state.migrate(v as VertexId, cand, ctx.graph.load_mass(v as VertexId));
+                // Wakes the vertex and its neighbourhood (their frozen
+                // snapshots change next step).
+                ctx.migrate(vid, cand, ctx.graph.load_mass(vid));
                 migrations += 1;
+            } else {
+                // The candidate stands but the coin (or the capacity
+                // gate, via a zero probability) denied the move: stay in
+                // the frontier and retry — demand and loads are global
+                // state that can change without any neighbour event.
+                ctx.wake(vid);
             }
         }
-        StepStats { score_sum: 0.0, migrations }
+        StepStats { migrations, ..StepStats::default() }
     }
 }
 
@@ -253,6 +268,9 @@ mod tests {
         cfg.trace_every = 1;
         cfg.max_steps = 10;
         cfg.halt_window = 100; // don't halt early
+        // Full sweeps: the point-count floor below assumes no
+        // empty-frontier early halt.
+        cfg.frontier = crate::config::Frontier::Off;
         let out = Spinner::new(cfg).partition(&g);
         assert!(out.trace.points.len() >= 9, "{}", out.trace.points.len());
         // Steps monotone.

@@ -87,6 +87,26 @@ pub fn full_scale() -> bool {
     std::env::var("REVOLVER_BENCH_SCALE").map(|v| v == "full").unwrap_or(false)
 }
 
+/// Pick a scale exponent by bench mode: `full` under
+/// `REVOLVER_BENCH_SCALE=full`, otherwise `smoke`.
+pub fn scale_exp(full: u32, smoke: u32) -> u32 {
+    if full_scale() {
+        full
+    } else {
+        smoke
+    }
+}
+
+/// The shared power-law benchmark graph: R-MAT with the Graph500
+/// (0.57, 0.19, 0.19) probabilities, 16 edges per vertex, fixed seed 11,
+/// at `|V| = 2^scale_exp`. One recipe for every bench section that
+/// needs a skewed graph (schedule, stream, multilevel, frontier)
+/// instead of per-file copies of the same call.
+pub fn bench_rmat(scale_exp: u32) -> crate::graph::Graph {
+    let n = 1usize << scale_exp;
+    crate::graph::gen::rmat::rmat(n, 16 * n, 0.57, 0.19, 0.19, 11)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,6 +134,15 @@ mod tests {
         };
         assert!((r.throughput(1000) - 1000.0).abs() < 1e-9);
         assert!((r.mean_ms() - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_rmat_recipe_is_deterministic() {
+        let a = bench_rmat(8);
+        let b = bench_rmat(8);
+        assert_eq!(a.num_vertices(), 256);
+        assert!(a.num_edges() > 0);
+        assert_eq!(a.num_edges(), b.num_edges(), "fixed seed must reproduce");
     }
 
     #[test]

@@ -222,6 +222,41 @@ fn schedule_flag_accepted_and_validated() {
 }
 
 #[test]
+fn frontier_flag_accepted_and_validated() {
+    // `--frontier off` must run (bit-exact legacy sweeps) and the
+    // report must expose the evaluation counter either way.
+    let (ok, stdout, _) = run(&[
+        "partition",
+        "--graph",
+        "lj",
+        "--vertices",
+        "512",
+        "--parts",
+        "4",
+        "--steps",
+        "5",
+        "--threads",
+        "1",
+        "--frontier",
+        "off",
+    ]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("vertex evals:"), "{stdout}");
+
+    let (ok, _, stderr) = run(&[
+        "partition",
+        "--graph",
+        "so",
+        "--vertices",
+        "256",
+        "--frontier",
+        "sideways",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown frontier mode"), "{stderr}");
+}
+
+#[test]
 fn partition_reports_edge_balance_metric() {
     let (ok, stdout, _) = run(&[
         "partition", "--graph", "so", "--vertices", "256", "--parts", "4", "--steps", "3",

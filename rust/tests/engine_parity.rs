@@ -9,7 +9,7 @@
 //! snapshot granularity, or convergence accounting) — not just
 //! performance.
 
-use revolver::config::RevolverConfig;
+use revolver::config::{Frontier, RevolverConfig};
 use revolver::coordinator::ConvergenceDetector;
 use revolver::graph::gen::{generate_dataset, Dataset};
 use revolver::graph::Graph;
@@ -136,6 +136,11 @@ fn parity_cfg(k: usize, steps: u32, seed: u64) -> RevolverConfig {
         max_steps: steps,
         threads: 1,
         seed,
+        // The seed loop re-evaluates every vertex every step; the
+        // active-set default intentionally does not. `frontier = off`
+        // is the documented bit-exact escape hatch, and this test is
+        // the acceptance check that it really is bit-exact.
+        frontier: Frontier::Off,
         ..Default::default()
     }
 }

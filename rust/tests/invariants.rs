@@ -366,3 +366,50 @@ fn prop_rebalance_drains_concentrated_start_at_large_k() {
         }
     });
 }
+
+#[test]
+fn prop_frontier_chunks_cover_exactly_the_frontier() {
+    // Active-set scheduling (ISSUE 4): subset-aware degree-balanced
+    // chunks must cover exactly the frontier, emit no empty chunks, and
+    // handle the empty- and single-vertex-frontier edges — on both BA
+    // and R-MAT degree sequences, across seeds and thread counts.
+    use revolver::coordinator::Chunks;
+    use revolver::graph::gen::{ba, rmat};
+    forall(8, |seed| {
+        let graphs = [
+            ("ba", ba::barabasi_albert(1024, 8, seed)),
+            ("rmat", rmat::rmat(1024, 8 * 1024, 0.57, 0.19, 0.19, seed)),
+        ];
+        for (name, g) in graphs {
+            let mut rng = Rng::new(seed ^ 0xF407);
+            // Random frontier: each vertex active with ~1/3 probability.
+            let frontier: Vec<u32> =
+                (0..g.num_vertices() as u32).filter(|_| rng.below(3) == 0).collect();
+            for threads in [1usize, 2, 3, 4, 8] {
+                let c = Chunks::by_weight_subset(&frontier, threads, |v| {
+                    1 + g.out_degree(v) as u64
+                });
+                if frontier.is_empty() {
+                    assert!(c.is_empty(), "{name}: empty frontier ⇒ zero chunks");
+                    continue;
+                }
+                assert_eq!(c.len(), threads.min(frontier.len()), "{name}");
+                assert_eq!(c.total(), frontier.len(), "{name}");
+                // Cover exactly, in order, with no empty chunk.
+                let mut covered = Vec::new();
+                for i in 0..c.len() {
+                    let r = c.range(i);
+                    assert!(!r.is_empty(), "{name}: chunk {i} empty (t={threads})");
+                    covered.extend_from_slice(&frontier[r]);
+                }
+                assert_eq!(covered, frontier, "{name}: chunks must cover the frontier");
+            }
+        }
+        // Edge cases independent of the random draw.
+        let one = [7u32];
+        let c = Chunks::by_weight_subset(&one, 8, |_| 1);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.range(0), 0..1);
+        assert!(Chunks::by_weight_subset(&[], 4, |_| 1).is_empty());
+    });
+}
