@@ -1,0 +1,77 @@
+//! Release-mode dynamic-subsystem smoke check (run by CI): R-MAT under
+//! uniform edge churn, incremental frontier-seeded repair vs a cold
+//! restart per epoch at the same per-epoch superstep budget. Asserts
+//! the repair path (a) spends strictly fewer evaluated vertex-steps
+//! than restarting, and (b) ends with locality within the acceptance
+//! envelope of the restart (and balanced). Exits nonzero (assert
+//! panic) on violation.
+//!
+//!     cargo run --release --example dynamic_churn
+
+use revolver::config::RevolverConfig;
+use revolver::dynamic::{ChurnRecipe, IncrementalPartitioner};
+use revolver::metrics::quality;
+use revolver::multilevel::Refiner;
+use revolver::partitioners::by_name;
+use revolver::util::bench::bench_rmat;
+
+fn main() {
+    let g = bench_rmat(13); // the shared hotpath-bench R-MAT recipe
+    let k = 8usize;
+    let repair = 5u32;
+    let epochs = 4u64;
+    let cfg = RevolverConfig {
+        parts: k,
+        max_steps: 40,
+        threads: 1, // deterministic smoke: no scheduler luck in the margins
+        seed: 3,
+        repair_steps: repair,
+        ..Default::default()
+    };
+
+    let mut inc = IncrementalPartitioner::new(g, cfg.clone(), Refiner::Spinner);
+    let recipe = ChurnRecipe::Uniform { frac: 0.02 };
+
+    let mut cold_evaluated = 0u64;
+    let mut cold_le = 0.0f64;
+    for e in 0..epochs {
+        let batch = recipe.generate(inc.current(), 500 + e);
+        let stats = inc.epoch(&batch);
+
+        let mut rc = cfg.clone();
+        rc.max_steps = repair;
+        rc.halt_window = u32::MAX;
+        let cold = by_name("spinner", rc).unwrap().partition(inc.current());
+        cold_evaluated += cold.trace.total_evaluated;
+        cold_le = quality::local_edges(inc.current(), &cold.labels);
+
+        let q = quality::evaluate(inc.current(), inc.labels(), k);
+        println!(
+            "epoch {e}: local={:.4} mnl={:.4} seeds={} evaluated={} (cold local={:.4})",
+            q.local_edges, q.max_normalized_load, stats.seeds, stats.evaluated, cold_le
+        );
+    }
+
+    let q = quality::evaluate(inc.current(), inc.labels(), k);
+    let (inc_ev, cold_ev) = (inc.total_evaluated(), cold_evaluated);
+    println!(
+        "totals: repair evaluated={inc_ev} vs restart evaluated={cold_ev} ({:.1}% saved)",
+        100.0 * (cold_ev.saturating_sub(inc_ev)) as f64 / cold_ev.max(1) as f64
+    );
+
+    assert!(
+        inc_ev < cold_ev,
+        "repair must beat per-epoch restarts on evaluated vertex-steps: {inc_ev} vs {cold_ev}"
+    );
+    assert!(
+        q.local_edges >= cold_le - 0.03 * cold_le,
+        "repair quality out of envelope: inc={} cold={cold_le}",
+        q.local_edges
+    );
+    assert!(
+        q.max_normalized_load <= 1.10,
+        "balance envelope violated: {}",
+        q.max_normalized_load
+    );
+    println!("dynamic churn smoke: OK");
+}

@@ -153,6 +153,33 @@ impl std::str::FromStr for StreamOrder {
     }
 }
 
+/// Greedy objective the dynamic subsystem scores arriving vertices
+/// with ([`crate::dynamic::IncrementalPartitioner`]): the same LDG /
+/// Fennel scoring rules the streaming passes use, applied against the
+/// *full current assignment* (Prioritized Restreaming's observation:
+/// an arriving vertex is best placed against everything already
+/// placed, not a prefix).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Placement {
+    /// Linear deterministic greedy score.
+    Ldg,
+    /// Degree-penalized greedy score (γ from `fennel_gamma`); the
+    /// default — restreaming placement is Fennel-objective.
+    #[default]
+    Fennel,
+}
+
+impl std::str::FromStr for Placement {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_lowercase().as_str() {
+            "ldg" => Ok(Placement::Ldg),
+            "fennel" => Ok(Placement::Fennel),
+            other => bail!("unknown placement {other:?} (expected ldg|fennel)"),
+        }
+    }
+}
+
 /// Initial assignment policy for the iterative partitioners
 /// (Revolver / Spinner).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -242,6 +269,16 @@ pub struct RevolverConfig {
     /// coarsest graph (any [`crate::partitioners::by_name`] entry except
     /// the multilevel family itself; default the streaming `fennel`).
     pub coarse_algo: String,
+    /// Dynamic: auto-compact the [`crate::dynamic::DynamicGraph`]
+    /// overlay once its delta adjacency entries exceed this fraction of
+    /// the base CSR's edges (bounds delta-query cost between epochs).
+    pub compact_ratio: f64,
+    /// Dynamic: superstep budget of each epoch's frontier-seeded repair
+    /// pass (convergence / empty-frontier halting may stop earlier).
+    pub repair_steps: u32,
+    /// Dynamic: greedy objective for placing arriving vertices against
+    /// the full current assignment.
+    pub placement: Placement,
 }
 
 impl Default for RevolverConfig {
@@ -270,6 +307,9 @@ impl Default for RevolverConfig {
             coarsen_until: 256,
             refine_steps: 10,
             coarse_algo: "fennel".to_string(),
+            compact_ratio: 0.25,
+            repair_steps: 10,
+            placement: Placement::Fennel,
         }
     }
 }
@@ -308,6 +348,12 @@ impl RevolverConfig {
         anyhow::ensure!(self.restream_passes >= 1, "restream_passes must be >= 1");
         anyhow::ensure!(self.coarsen_until >= 2, "coarsen_until must be >= 2");
         anyhow::ensure!(self.refine_steps >= 1, "refine_steps must be >= 1");
+        anyhow::ensure!(
+            self.compact_ratio.is_finite() && self.compact_ratio > 0.0,
+            "compact_ratio must be a positive finite fraction, got {}",
+            self.compact_ratio
+        );
+        anyhow::ensure!(self.repair_steps >= 1, "repair_steps must be >= 1");
         // The coarsest-level algorithm must itself be a registered
         // non-multilevel partitioner (a multilevel coarse_algo would
         // recurse forever). The family list lives next to the registry
@@ -374,6 +420,9 @@ impl RevolverConfig {
                 "coarsen_until" => cfg.coarsen_until = value.parse().context("coarsen_until")?,
                 "refine_steps" => cfg.refine_steps = value.parse().context("refine_steps")?,
                 "coarse_algo" => cfg.coarse_algo = value.clone(),
+                "compact_ratio" => cfg.compact_ratio = value.parse().context("compact_ratio")?,
+                "repair_steps" => cfg.repair_steps = value.parse().context("repair_steps")?,
+                "placement" => cfg.placement = value.parse()?,
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -570,6 +619,34 @@ mod tests {
         assert!(RevolverConfig::from_toml_str("coarse_algo = \"metis\"\n").is_err());
         assert!(RevolverConfig::from_toml_str("coarse_algo = \"multilevel\"\n").is_err());
         assert!(RevolverConfig::from_toml_str("coarse_algo = \"ml-revolver\"\n").is_err());
+    }
+
+    #[test]
+    fn dynamic_knobs_from_toml_and_validation() {
+        let c = RevolverConfig::from_toml_str(
+            "compact_ratio = 0.5\nrepair_steps = 4\nplacement = \"ldg\"\n",
+        )
+        .unwrap();
+        assert!((c.compact_ratio - 0.5).abs() < 1e-12);
+        assert_eq!(c.repair_steps, 4);
+        assert_eq!(c.placement, Placement::Ldg);
+
+        let d = RevolverConfig::default();
+        assert!((d.compact_ratio - 0.25).abs() < 1e-12);
+        assert_eq!(d.repair_steps, 10);
+        assert_eq!(d.placement, Placement::Fennel);
+
+        assert!(RevolverConfig::from_toml_str("compact_ratio = 0\n").is_err());
+        assert!(RevolverConfig::from_toml_str("compact_ratio = -1.0\n").is_err());
+        assert!(RevolverConfig::from_toml_str("repair_steps = 0\n").is_err());
+        assert!(RevolverConfig::from_toml_str("placement = \"restream\"\n").is_err());
+    }
+
+    #[test]
+    fn placement_parse() {
+        assert_eq!("ldg".parse::<Placement>().unwrap(), Placement::Ldg);
+        assert_eq!("FENNEL".parse::<Placement>().unwrap(), Placement::Fennel);
+        assert!("hash".parse::<Placement>().is_err());
     }
 
     #[test]

@@ -1,0 +1,768 @@
+//! The [`DynamicGraph`] overlay: an immutable base CSR plus per-vertex
+//! sorted insert/delete adjacency deltas and vertex tombstones, so a
+//! graph can evolve *between* CSR materializations instead of paying a
+//! full rebuild per update.
+//!
+//! ## Model
+//!
+//! The current graph is always
+//!
+//! ```text
+//! out(v) = (base_out(v) \ del_out[v]) ∪ add_out[v]
+//! und(v) = (base_und(v) \ del_und[v]) ∪ add_und[v]
+//! ```
+//!
+//! with the disjointness invariants `add ∩ base = ∅` and
+//! `del ⊆ base` (re-adding a deleted base edge shrinks `del` instead of
+//! growing `add`, so the delta mass tracks *net* divergence from the
+//! base). The undirected deltas are maintained transactionally with the
+//! directed ones — an undirected edge appears when its first direction
+//! does and disappears when its last direction goes — so neighbour
+//! iteration and degrees are O(Δ)-merge reads, never a scan of the
+//! other endpoint's list.
+//!
+//! Vertex ids are **stable**: `remove_vertex` tombstones (drops every
+//! incident edge and marks the id dead) rather than renumbering, so
+//! label vectors, traces and update logs stay valid across arbitrary
+//! churn; a compacted CSR keeps the dead id as an isolated vertex. New
+//! vertices take the next dense id.
+//!
+//! ## Compaction
+//!
+//! Delta reads cost a merge against two (usually tiny) sorted vecs.
+//! [`DynamicGraph::apply`] auto-compacts — rebuilds a fresh base CSR
+//! via [`GraphBuilder`] and clears every delta — once the delta
+//! adjacency entries exceed `compact_ratio` of the base's edges, which
+//! bounds query cost no matter how many batches accumulate between
+//! repair passes. [`DynamicGraph::compact`] does the same on demand:
+//! the epoch boundary of [`super::IncrementalPartitioner`] is one
+//! (the superstep engine and the quality metrics run on CSR), and
+//! keeping the materialized CSR as the new base makes that rebuild do
+//! double duty. Compaction never changes the observable graph —
+//! property-tested in `tests/invariants.rs`.
+
+use anyhow::Result;
+
+use crate::graph::{Graph, GraphBuilder};
+use crate::VertexId;
+
+use super::updates::{Update, UpdateBatch};
+
+/// Sorted-vec insert; returns false if already present.
+fn ins(v: &mut Vec<VertexId>, x: VertexId) -> bool {
+    match v.binary_search(&x) {
+        Ok(_) => false,
+        Err(i) => {
+            v.insert(i, x);
+            true
+        }
+    }
+}
+
+/// Sorted-vec remove; returns false if absent.
+fn rem(v: &mut Vec<VertexId>, x: VertexId) -> bool {
+    match v.binary_search(&x) {
+        Ok(i) => {
+            v.remove(i);
+            true
+        }
+        Err(_) => false,
+    }
+}
+
+/// Merge iterator over `(base \ del) ∪ add` — all three slices sorted,
+/// `del ⊆ base`, `add ∩ base = ∅`, so equal heads between the add
+/// stream and the surviving base stream are impossible.
+pub struct DeltaNeighbors<'a> {
+    base: &'a [VertexId],
+    del: &'a [VertexId],
+    add: &'a [VertexId],
+    bi: usize,
+    di: usize,
+    ai: usize,
+}
+
+impl Iterator for DeltaNeighbors<'_> {
+    type Item = VertexId;
+
+    fn next(&mut self) -> Option<VertexId> {
+        // Advance the base cursor past deleted entries.
+        let b = loop {
+            match self.base.get(self.bi) {
+                None => break None,
+                Some(&b) => {
+                    while self.di < self.del.len() && self.del[self.di] < b {
+                        self.di += 1;
+                    }
+                    if self.del.get(self.di) == Some(&b) {
+                        self.bi += 1;
+                        self.di += 1;
+                        continue;
+                    }
+                    break Some(b);
+                }
+            }
+        };
+        let a = self.add.get(self.ai).copied();
+        match (b, a) {
+            (None, None) => None,
+            (Some(b), None) => {
+                self.bi += 1;
+                Some(b)
+            }
+            (None, Some(a)) => {
+                self.ai += 1;
+                Some(a)
+            }
+            (Some(b), Some(a)) => {
+                if b < a {
+                    self.bi += 1;
+                    Some(b)
+                } else {
+                    self.ai += 1;
+                    Some(a)
+                }
+            }
+        }
+    }
+}
+
+/// Outcome of [`DynamicGraph::apply`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ApplyStats {
+    /// Updates that changed the graph.
+    pub applied: usize,
+    /// No-op updates (duplicate adds, removes of absent edges, …).
+    pub skipped: usize,
+    /// Whether the batch tripped the ratio-gated auto-compaction.
+    pub compacted: bool,
+}
+
+/// A mutable graph: immutable base CSR + sorted adjacency deltas +
+/// tombstones (module docs above). Plain graphs only — the multilevel
+/// contractions' weighted CSRs are derived artifacts, rebuilt from the
+/// (dynamic) fine graph rather than mutated in place.
+pub struct DynamicGraph {
+    base: Graph,
+    add_out: Vec<Vec<VertexId>>,
+    del_out: Vec<Vec<VertexId>>,
+    add_und: Vec<Vec<VertexId>>,
+    del_und: Vec<Vec<VertexId>>,
+    alive: Vec<bool>,
+    /// Current vertex count (base vertices + arrivals; tombstones keep
+    /// their id, so this never shrinks).
+    n: usize,
+    /// Current directed edge count.
+    edges: usize,
+    /// Directed delta adjacency entries (Σ |add_out| + |del_out|) —
+    /// the compaction trigger's mass.
+    delta_entries: usize,
+    compact_ratio: f64,
+    compactions: u64,
+}
+
+impl DynamicGraph {
+    /// Wrap `base` as the starting state. `compact_ratio` is the
+    /// delta-mass fraction of the base's edges beyond which
+    /// [`DynamicGraph::apply`] auto-compacts (must be positive).
+    pub fn new(base: Graph, compact_ratio: f64) -> Self {
+        assert!(
+            !base.is_weighted() && !base.has_vertex_weights(),
+            "DynamicGraph overlays plain graphs only"
+        );
+        assert!(
+            compact_ratio.is_finite() && compact_ratio > 0.0,
+            "compact_ratio must be positive"
+        );
+        let n = base.num_vertices();
+        let edges = base.num_edges();
+        DynamicGraph {
+            base,
+            add_out: vec![Vec::new(); n],
+            del_out: vec![Vec::new(); n],
+            add_und: vec![Vec::new(); n],
+            del_und: vec![Vec::new(); n],
+            alive: vec![true; n],
+            n,
+            edges,
+            delta_entries: 0,
+            compact_ratio,
+            compactions: 0,
+        }
+    }
+
+    /// Current vertex count, dead ids included (ids are stable).
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    /// Current directed edge count.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.edges
+    }
+
+    /// False once `v` has been tombstoned (and not revived by a new
+    /// incident edge).
+    #[inline]
+    pub fn is_alive(&self, v: VertexId) -> bool {
+        self.alive[v as usize]
+    }
+
+    /// The base CSR the deltas diverge from — the *current* graph
+    /// whenever [`DynamicGraph::is_dirty`] is false (i.e. right after a
+    /// compaction), which is how the repair pass gets its CSR.
+    #[inline]
+    pub fn base(&self) -> &Graph {
+        &self.base
+    }
+
+    /// True when any delta (edge or arrival) is pending against the
+    /// base.
+    #[inline]
+    pub fn is_dirty(&self) -> bool {
+        self.delta_entries > 0 || self.n > self.base.num_vertices()
+    }
+
+    /// Net delta adjacency entries as a fraction of the base's edges.
+    pub fn delta_ratio(&self) -> f64 {
+        self.delta_entries as f64 / self.base.num_edges().max(1) as f64
+    }
+
+    /// Compactions performed so far (ratio-triggered + explicit).
+    pub fn compactions(&self) -> u64 {
+        self.compactions
+    }
+
+    fn base_out(&self, v: VertexId) -> &[VertexId] {
+        if (v as usize) < self.base.num_vertices() {
+            self.base.out_neighbors(v)
+        } else {
+            &[]
+        }
+    }
+
+    fn base_und(&self, v: VertexId) -> &[VertexId] {
+        if (v as usize) < self.base.num_vertices() {
+            self.base.neighbors(v)
+        } else {
+            &[]
+        }
+    }
+
+    /// Grow the id space to cover `v` (new ids are alive and isolated).
+    fn ensure(&mut self, v: VertexId) {
+        let want = v as usize + 1;
+        if want > self.n {
+            assert!(v < VertexId::MAX, "vertex id space exhausted");
+            self.add_out.resize(want, Vec::new());
+            self.del_out.resize(want, Vec::new());
+            self.add_und.resize(want, Vec::new());
+            self.del_und.resize(want, Vec::new());
+            self.alive.resize(want, true);
+            self.n = want;
+        }
+    }
+
+    /// Does the directed edge (u, v) currently exist?
+    pub fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
+        if (u as usize) >= self.n || (v as usize) >= self.n {
+            return false;
+        }
+        if self.add_out[u as usize].binary_search(&v).is_ok() {
+            return true;
+        }
+        self.base_out(u).binary_search(&v).is_ok()
+            && self.del_out[u as usize].binary_search(&v).is_err()
+    }
+
+    /// Are u and v currently connected in either direction?
+    #[inline]
+    pub fn und_connected(&self, u: VertexId, v: VertexId) -> bool {
+        self.has_edge(u, v) || self.has_edge(v, u)
+    }
+
+    /// Current out-degree of `v` — O(1) from the list lengths.
+    #[inline]
+    pub fn out_degree(&self, v: VertexId) -> u32 {
+        (self.base_out(v).len() - self.del_out[v as usize].len()
+            + self.add_out[v as usize].len()) as u32
+    }
+
+    /// Current undirected degree |N(v)|.
+    #[inline]
+    pub fn und_degree(&self, v: VertexId) -> u32 {
+        (self.base_und(v).len() - self.del_und[v as usize].len()
+            + self.add_und[v as usize].len()) as u32
+    }
+
+    /// Load mass of `v` in the units the whole system balances —
+    /// out-degree, exactly [`Graph::load_mass`] on plain graphs.
+    #[inline]
+    pub fn load_mass(&self, v: VertexId) -> u32 {
+        self.out_degree(v)
+    }
+
+    /// Current out-neighbours of `v`, ascending.
+    pub fn out_neighbors(&self, v: VertexId) -> DeltaNeighbors<'_> {
+        DeltaNeighbors {
+            base: self.base_out(v),
+            del: &self.del_out[v as usize],
+            add: &self.add_out[v as usize],
+            bi: 0,
+            di: 0,
+            ai: 0,
+        }
+    }
+
+    /// Current undirected neighbourhood N(v), ascending, deduplicated.
+    pub fn und_neighbors(&self, v: VertexId) -> DeltaNeighbors<'_> {
+        DeltaNeighbors {
+            base: self.base_und(v),
+            del: &self.del_und[v as usize],
+            add: &self.add_und[v as usize],
+            bi: 0,
+            di: 0,
+            ai: 0,
+        }
+    }
+
+    /// Record that the undirected edge a—b now exists.
+    fn und_insert(&mut self, a: VertexId, b: VertexId) {
+        if self.base_und(a).binary_search(&b).is_ok() {
+            // Base edge coming back from deletion.
+            let undeleted = rem(&mut self.del_und[a as usize], b);
+            debug_assert!(undeleted, "base und edge neither live nor deleted");
+        } else {
+            let added = ins(&mut self.add_und[a as usize], b);
+            debug_assert!(added, "und delta out of sync (duplicate add)");
+        }
+    }
+
+    /// Record that the undirected edge a—b no longer exists.
+    fn und_remove(&mut self, a: VertexId, b: VertexId) {
+        if self.base_und(a).binary_search(&b).is_ok() {
+            let deleted = ins(&mut self.del_und[a as usize], b);
+            debug_assert!(deleted, "und delta out of sync (double delete)");
+        } else {
+            let removed = rem(&mut self.add_und[a as usize], b);
+            debug_assert!(removed, "und delta out of sync (remove of absent add)");
+        }
+    }
+
+    /// Add the directed edge (u, v). Unknown endpoints grow the id
+    /// space (that is how arrivals referenced by an update log enter);
+    /// tombstoned endpoints are revived. Self-loops and duplicates are
+    /// no-ops. Returns whether the graph changed.
+    pub fn add_edge(&mut self, u: VertexId, v: VertexId) -> bool {
+        if u == v {
+            return false;
+        }
+        self.ensure(u.max(v));
+        if self.has_edge(u, v) {
+            return false;
+        }
+        // Check *before* the directed insert: the pair is newly
+        // und-connected iff the reverse direction is absent too.
+        let und_new = !self.has_edge(v, u);
+        if self.base_out(u).binary_search(&v).is_ok() {
+            // Base edge coming back: shrink the delete delta.
+            let undeleted = rem(&mut self.del_out[u as usize], v);
+            debug_assert!(undeleted, "directed delta out of sync");
+            self.delta_entries -= 1;
+        } else {
+            let added = ins(&mut self.add_out[u as usize], v);
+            debug_assert!(added);
+            self.delta_entries += 1;
+        }
+        if und_new {
+            self.und_insert(u, v);
+            self.und_insert(v, u);
+        }
+        self.alive[u as usize] = true;
+        self.alive[v as usize] = true;
+        self.edges += 1;
+        true
+    }
+
+    /// Remove the directed edge (u, v) if present. Returns whether the
+    /// graph changed.
+    pub fn remove_edge(&mut self, u: VertexId, v: VertexId) -> bool {
+        if !self.has_edge(u, v) {
+            return false;
+        }
+        if rem(&mut self.add_out[u as usize], v) {
+            self.delta_entries -= 1;
+        } else {
+            let deleted = ins(&mut self.del_out[u as usize], v);
+            debug_assert!(deleted);
+            self.delta_entries += 1;
+        }
+        self.edges -= 1;
+        // After the directed removal: the und edge survives iff the
+        // reverse direction still exists.
+        if !self.has_edge(v, u) {
+            self.und_remove(u, v);
+            self.und_remove(v, u);
+        }
+        true
+    }
+
+    /// Add a fresh isolated vertex; returns its (next dense) id.
+    pub fn add_vertex(&mut self) -> VertexId {
+        let v = self.n as VertexId;
+        self.ensure(v);
+        v
+    }
+
+    /// Tombstone `v`: drop every incident edge (both directions) and
+    /// mark the id dead. The id is never reused; a later incident
+    /// `add_edge` revives it. Returns whether the graph changed.
+    pub fn remove_vertex(&mut self, v: VertexId) -> bool {
+        if (v as usize) >= self.n || !self.alive[v as usize] {
+            return false;
+        }
+        let outs: Vec<VertexId> = self.out_neighbors(v).collect();
+        for u in outs {
+            self.remove_edge(v, u);
+        }
+        let in_sources: Vec<VertexId> =
+            self.und_neighbors(v).filter(|&u| self.has_edge(u, v)).collect();
+        for u in in_sources {
+            self.remove_edge(u, v);
+        }
+        debug_assert_eq!(self.und_degree(v), 0, "tombstoned vertex keeps neighbours");
+        self.alive[v as usize] = false;
+        true
+    }
+
+    /// Apply a whole [`UpdateBatch`], pushing the endpoints of every
+    /// *effective* edge change (and new/revived vertex ids) onto
+    /// `touched` — the seed set for the frontier-localized repair pass.
+    /// A removed vertex contributes its former neighbours, not its own
+    /// (now dead) id. Auto-compacts afterwards when the delta mass
+    /// exceeds the configured ratio of the base's edges.
+    pub fn apply(&mut self, batch: &UpdateBatch, touched: &mut Vec<VertexId>) -> ApplyStats {
+        let mut stats = ApplyStats::default();
+        for up in &batch.updates {
+            let changed = match *up {
+                Update::AddEdge(u, v) => {
+                    let changed = self.add_edge(u, v);
+                    if changed {
+                        touched.push(u);
+                        touched.push(v);
+                    }
+                    changed
+                }
+                Update::RemoveEdge(u, v) => {
+                    let changed = self.remove_edge(u, v);
+                    if changed {
+                        touched.push(u);
+                        touched.push(v);
+                    }
+                    changed
+                }
+                Update::AddVertex(v) => {
+                    let existed = (v as usize) < self.n;
+                    self.ensure(v);
+                    let changed = !existed || !self.alive[v as usize];
+                    self.alive[v as usize] = true;
+                    if changed {
+                        touched.push(v);
+                    }
+                    changed
+                }
+                Update::RemoveVertex(v) => {
+                    if (v as usize) < self.n && self.alive[v as usize] {
+                        touched.extend(self.und_neighbors(v));
+                        self.remove_vertex(v)
+                    } else {
+                        false
+                    }
+                }
+            };
+            if changed {
+                stats.applied += 1;
+            } else {
+                stats.skipped += 1;
+            }
+        }
+        if self.delta_ratio() > self.compact_ratio {
+            self.compact();
+            stats.compacted = true;
+        }
+        stats
+    }
+
+    /// Materialize the current graph as a fresh CSR (the base is left
+    /// untouched — see [`DynamicGraph::compact`] for the consuming
+    /// variant). Tombstoned ids come out isolated; eq.-(4) undirected
+    /// weights are recomputed by the builder.
+    pub fn to_graph(&self) -> Graph {
+        let mut b = GraphBuilder::with_capacity(self.n.max(1), self.edges);
+        for v in 0..self.n as VertexId {
+            for u in self.out_neighbors(v) {
+                b.edge(v, u);
+            }
+        }
+        b.build()
+    }
+
+    /// Rebuild the base CSR from the current state and clear every
+    /// delta. O(|V| + |E| log |E|); afterwards [`DynamicGraph::base`]
+    /// *is* the current graph and reads are pure CSR until the next
+    /// mutation.
+    pub fn compact(&mut self) {
+        if !self.is_dirty() {
+            return;
+        }
+        self.base = self.to_graph();
+        let n = self.n;
+        self.add_out = vec![Vec::new(); n];
+        self.del_out = vec![Vec::new(); n];
+        self.add_und = vec![Vec::new(); n];
+        self.del_und = vec![Vec::new(); n];
+        self.delta_entries = 0;
+        self.compactions += 1;
+        debug_assert_eq!(self.base.num_edges(), self.edges, "compaction lost edges");
+    }
+
+    /// Structural self-check of every overlay invariant (tests).
+    pub fn check_invariants(&self) -> Result<()> {
+        anyhow::ensure!(self.n >= self.base.num_vertices(), "id space shrank");
+        let mut edges = 0usize;
+        let mut delta = 0usize;
+        for v in 0..self.n as VertexId {
+            let vi = v as usize;
+            for w in [&self.add_out[vi], &self.del_out[vi], &self.add_und[vi], &self.del_und[vi]]
+            {
+                for p in w.windows(2) {
+                    anyhow::ensure!(p[0] < p[1], "delta list of {v} not sorted/dedup");
+                }
+            }
+            for &u in &self.add_out[vi] {
+                anyhow::ensure!(
+                    self.base_out(v).binary_search(&u).is_err(),
+                    "add_out of {v} overlaps base"
+                );
+            }
+            for &u in &self.del_out[vi] {
+                anyhow::ensure!(
+                    self.base_out(v).binary_search(&u).is_ok(),
+                    "del_out of {v} not in base"
+                );
+            }
+            delta += self.add_out[vi].len() + self.del_out[vi].len();
+            let deg = self.out_degree(v);
+            edges += deg as usize;
+            anyhow::ensure!(
+                self.out_neighbors(v).count() == deg as usize,
+                "merged out list of {v} disagrees with out_degree"
+            );
+            // Undirected view: symmetric, consistent with the directed
+            // edges, and dead vertices are isolated.
+            let und: Vec<VertexId> = self.und_neighbors(v).collect();
+            anyhow::ensure!(und.len() == self.und_degree(v) as usize, "und degree mismatch");
+            for &u in &und {
+                anyhow::ensure!(self.und_connected(v, u), "phantom und edge {v}–{u}");
+                anyhow::ensure!(
+                    self.und_neighbors(u).any(|x| x == v),
+                    "und edge {v}–{u} not symmetric"
+                );
+            }
+            if !self.alive[vi] {
+                anyhow::ensure!(und.is_empty(), "dead vertex {v} keeps edges");
+            }
+        }
+        anyhow::ensure!(edges == self.edges, "edge count drifted: {edges} vs {}", self.edges);
+        anyhow::ensure!(delta == self.delta_entries, "delta_entries drifted");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dynamic::updates::{Update, UpdateBatch};
+
+    fn diamond() -> Graph {
+        // 0->1, 0->2, 1->3, 2->3, 3->0.
+        GraphBuilder::new(4)
+            .edges(&[(0, 1), (0, 2), (1, 3), (2, 3), (3, 0)])
+            .build()
+    }
+
+    #[test]
+    fn fresh_overlay_mirrors_base() {
+        let g = diamond();
+        let d = DynamicGraph::new(g.clone(), 0.25);
+        assert_eq!(d.num_vertices(), 4);
+        assert_eq!(d.num_edges(), 5);
+        assert!(!d.is_dirty());
+        for v in 0..4u32 {
+            assert_eq!(d.out_degree(v), g.out_degree(v));
+            assert_eq!(d.und_degree(v), g.und_degree(v));
+            assert_eq!(d.load_mass(v), g.load_mass(v));
+            assert_eq!(d.out_neighbors(v).collect::<Vec<_>>(), g.out_neighbors(v));
+            assert_eq!(d.und_neighbors(v).collect::<Vec<_>>(), g.neighbors(v));
+        }
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn add_and_remove_edges_compose() {
+        let mut d = DynamicGraph::new(diamond(), 100.0);
+        assert!(d.add_edge(1, 2));
+        assert!(!d.add_edge(1, 2), "duplicate add is a no-op");
+        assert!(!d.add_edge(1, 1), "self-loop rejected");
+        assert!(d.has_edge(1, 2));
+        assert_eq!(d.num_edges(), 6);
+        assert_eq!(d.und_neighbors(1).collect::<Vec<_>>(), vec![0, 2, 3]);
+
+        assert!(d.remove_edge(0, 1));
+        assert!(!d.remove_edge(0, 1), "double delete is a no-op");
+        assert!(!d.has_edge(0, 1));
+        assert_eq!(d.num_edges(), 5);
+        // 0—1 had only one direction: the und edge is gone too.
+        assert_eq!(d.und_neighbors(0).collect::<Vec<_>>(), vec![2, 3]);
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn und_edge_survives_until_both_directions_gone() {
+        // 3->0 and 0->3? diamond has 3->0 only; add the reverse first.
+        let mut d = DynamicGraph::new(diamond(), 100.0);
+        assert!(d.add_edge(0, 3));
+        assert!(d.und_neighbors(0).any(|u| u == 3));
+        assert!(d.remove_edge(3, 0));
+        assert!(d.und_neighbors(0).any(|u| u == 3), "reverse direction keeps und edge");
+        assert!(d.remove_edge(0, 3));
+        assert!(!d.und_neighbors(0).any(|u| u == 3));
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn readd_deleted_base_edge_shrinks_delta() {
+        let mut d = DynamicGraph::new(diamond(), 100.0);
+        assert!(d.remove_edge(0, 1));
+        assert!(d.is_dirty());
+        assert!(d.add_edge(0, 1));
+        assert_eq!(d.delta_ratio(), 0.0, "net divergence is zero again");
+        assert!(!d.is_dirty());
+        assert_eq!(d.out_neighbors(0).collect::<Vec<_>>(), vec![1, 2]);
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn vertex_arrival_and_tombstone() {
+        let mut d = DynamicGraph::new(diamond(), 100.0);
+        let v = d.add_vertex();
+        assert_eq!(v, 4);
+        assert_eq!(d.num_vertices(), 5);
+        assert!(d.is_alive(v));
+        assert_eq!(d.und_degree(v), 0);
+        assert!(d.add_edge(v, 0));
+        assert!(d.add_edge(2, v));
+        assert_eq!(d.und_neighbors(v).collect::<Vec<_>>(), vec![0, 2]);
+        d.check_invariants().unwrap();
+
+        assert!(d.remove_vertex(v));
+        assert!(!d.is_alive(v));
+        assert_eq!(d.und_degree(v), 0);
+        assert!(!d.has_edge(2, v), "in-edges dropped too");
+        assert_eq!(d.num_edges(), 5);
+        assert!(!d.remove_vertex(v), "double tombstone is a no-op");
+        d.check_invariants().unwrap();
+
+        // An incident add revives the id.
+        assert!(d.add_edge(0, v));
+        assert!(d.is_alive(v));
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn edge_to_unknown_id_grows_id_space() {
+        let mut d = DynamicGraph::new(diamond(), 100.0);
+        assert!(d.add_edge(1, 9));
+        assert_eq!(d.num_vertices(), 10);
+        assert!(d.is_alive(9));
+        assert!((4..9).all(|v| d.is_alive(v) && d.und_degree(v) == 0));
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn to_graph_matches_overlay_observations() {
+        let mut d = DynamicGraph::new(diamond(), 100.0);
+        d.add_edge(1, 2);
+        d.remove_edge(2, 3);
+        d.add_edge(4, 0);
+        let g = d.to_graph();
+        assert_eq!(g.num_vertices(), d.num_vertices());
+        assert_eq!(g.num_edges(), d.num_edges());
+        for v in 0..d.num_vertices() as VertexId {
+            assert_eq!(g.out_neighbors(v), d.out_neighbors(v).collect::<Vec<_>>(), "v={v}");
+            assert_eq!(g.neighbors(v), d.und_neighbors(v).collect::<Vec<_>>(), "v={v}");
+        }
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn compact_is_observationally_invisible() {
+        let mut d = DynamicGraph::new(diamond(), 100.0);
+        d.add_edge(3, 1);
+        d.remove_edge(0, 2);
+        let before: Vec<Vec<VertexId>> =
+            (0..4).map(|v| d.und_neighbors(v).collect()).collect();
+        let (n, m) = (d.num_vertices(), d.num_edges());
+        d.compact();
+        assert!(!d.is_dirty());
+        assert_eq!(d.compactions(), 1);
+        assert_eq!((d.num_vertices(), d.num_edges()), (n, m));
+        for v in 0..4u32 {
+            assert_eq!(d.und_neighbors(v).collect::<Vec<_>>(), before[v as usize]);
+        }
+        d.compact();
+        assert_eq!(d.compactions(), 1, "clean compact is a no-op");
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn apply_collects_touched_and_auto_compacts() {
+        // ratio 0.2 of 5 base edges = 1 entry: two effective updates
+        // must trip auto-compaction.
+        let mut d = DynamicGraph::new(diamond(), 0.2);
+        let batch = UpdateBatch {
+            updates: vec![
+                Update::AddEdge(1, 2),
+                Update::AddEdge(1, 2), // duplicate: skipped
+                Update::RemoveEdge(3, 0),
+                Update::RemoveEdge(3, 0), // absent now: skipped
+            ],
+        };
+        let mut touched = Vec::new();
+        let stats = d.apply(&batch, &mut touched);
+        assert_eq!(stats.applied, 2);
+        assert_eq!(stats.skipped, 2);
+        assert!(stats.compacted, "2 delta entries > 0.2 × 5");
+        assert_eq!(touched, vec![1, 2, 3, 0]);
+        assert!(!d.is_dirty());
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn apply_remove_vertex_touches_former_neighbors() {
+        let mut d = DynamicGraph::new(diamond(), 100.0);
+        let mut touched = Vec::new();
+        let batch =
+            UpdateBatch { updates: vec![Update::RemoveVertex(3), Update::AddVertex(7)] };
+        let stats = d.apply(&batch, &mut touched);
+        assert_eq!(stats.applied, 2);
+        // 3's und neighbourhood was {0, 1, 2}; the arrival contributes
+        // its own id.
+        assert_eq!(touched, vec![0, 1, 2, 7]);
+        assert!(!d.is_alive(3));
+        assert_eq!(d.num_vertices(), 8);
+        d.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,41 @@
+//! Dynamic graphs (L4): incremental updates with frontier-localized
+//! repartitioning — the evolving-graph workload class (social streams,
+//! road updates, arriving users) the static pipeline cannot serve
+//! without a full rebuild and a cold repartition per change.
+//!
+//! Three pieces:
+//!
+//! * [`delta`] — [`DynamicGraph`]: an immutable base CSR plus
+//!   per-vertex sorted insert/delete adjacency deltas and vertex
+//!   tombstones. Degrees, neighbourhoods and load mass compose
+//!   base+delta on the fly; a ratio-gated [`DynamicGraph::compact`]
+//!   rebuilds a fresh base once the deltas grow past
+//!   `compact_ratio` of the base's edges.
+//! * [`updates`] — [`UpdateBatch`] (add/remove edge, add/remove
+//!   vertex), a text update-log reader sharing
+//!   [`crate::graph::parse`]'s grammar and densification with every
+//!   other reader, and synthetic [`ChurnRecipe`] generators (uniform
+//!   edge churn, hub-biased churn, vertex arrival streams).
+//! * [`incremental`] — [`IncrementalPartitioner`]: applies a batch,
+//!   places arrivals greedily against the full current assignment
+//!   (LDG/Fennel, per Prioritized Restreaming), then runs a bounded
+//!   repair pass whose step-0 frontier is **only** the changed
+//!   endpoints and their undirected neighbourhoods
+//!   ([`crate::engine::InitialFrontier::Seeds`]), for either Revolver
+//!   or Spinner — followed by the deterministic ε-rebalance. Spinner
+//!   (ICDE'17) demonstrated the restart-from-previous-assignment
+//!   strategy; the active-set engine makes it *priced* like an
+//!   incremental computation: an epoch costs ~|affected region|
+//!   vertex-evaluations instead of ~|V| per superstep.
+//!
+//! CLI: `revolver dynamic --graph lj --churn uniform:0.02 --epochs 5`
+//! (or `--update-log file`), with per-epoch quality reporting and a
+//! quality-over-time CSV via [`crate::metrics::trace::RunTrace`].
+
+pub mod delta;
+pub mod incremental;
+pub mod updates;
+
+pub use delta::{ApplyStats, DynamicGraph};
+pub use incremental::{EpochStats, IncrementalPartitioner};
+pub use updates::{read_update_log, ChurnRecipe, Update, UpdateBatch};

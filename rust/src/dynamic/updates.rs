@@ -1,0 +1,535 @@
+//! Graph updates: the [`UpdateBatch`] model, a text update-log reader
+//! (built on [`crate::graph::parse`] — same line grammar and id
+//! densification as every other text reader in the system), and
+//! synthetic churn generators for benchmarks and tests.
+//!
+//! ## Update-log format
+//!
+//! One operation per line; `#` / `%` comments and blank lines are
+//! skipped (exactly like edge-list files):
+//!
+//! ```text
+//! src dst        add edge          (a plain edge list is a valid log)
+//! a src dst      add edge          (explicit form)
+//! d src dst      delete edge
+//! av id          add vertex        (isolated arrival)
+//! dv id          delete vertex     (tombstone)
+//! commit         batch boundary    (one epoch of updates)
+//! ```
+//!
+//! Raw ids are densified in first-appearance order through the shared
+//! [`crate::graph::parse::densify`], with the id map pre-seeded as the
+//! identity over the base graph's `0..n` — so a log written against a
+//! loaded/generated graph's dense ids means what it says, and unseen
+//! ids become arrivals with the next dense id (the same mapping
+//! [`crate::graph::io::read_edge_list`] would produce had the log been
+//! an edge list). Only *adding* ops allocate ids: a delete (`d` / `dv`)
+//! naming an unseen id is a guaranteed no-op and is skipped via lookup,
+//! never densified — otherwise a stale delete line would mint phantom
+//! vertices that materialize on the next arrival.
+
+use std::collections::HashMap;
+use std::io::BufRead;
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::parse::{densify, parse_edge_line};
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+use crate::VertexId;
+
+/// One graph mutation, in dense vertex ids.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Update {
+    AddEdge(VertexId, VertexId),
+    RemoveEdge(VertexId, VertexId),
+    /// Ensure the vertex exists and is alive (isolated arrival /
+    /// revival).
+    AddVertex(VertexId),
+    /// Tombstone the vertex and drop its incident edges.
+    RemoveVertex(VertexId),
+}
+
+/// An atomic group of updates — what one [`super::IncrementalPartitioner`]
+/// epoch applies and repairs against.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct UpdateBatch {
+    pub updates: Vec<Update>,
+}
+
+impl UpdateBatch {
+    pub fn is_empty(&self) -> bool {
+        self.updates.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.updates.len()
+    }
+}
+
+/// Read a whole update log into its `commit`-separated batches.
+/// `base_vertices` pre-seeds the densification map with the identity
+/// over `0..base_vertices` (pass 0 to build a graph from scratch out
+/// of a pure-add log). A trailing unterminated batch is kept; empty
+/// batches (consecutive `commit`s) are dropped.
+pub fn read_update_log<R: BufRead>(mut r: R, base_vertices: usize) -> Result<Vec<UpdateBatch>> {
+    let mut ids: HashMap<u64, VertexId> = HashMap::with_capacity(base_vertices);
+    for v in 0..base_vertices as u64 {
+        ids.insert(v, v as VertexId);
+    }
+    let mut batches = Vec::new();
+    let mut cur = UpdateBatch::default();
+    let mut line = String::new();
+    let mut lineno = 0usize;
+    loop {
+        line.clear();
+        if r.read_line(&mut line)? == 0 {
+            break;
+        }
+        lineno += 1;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        if t == "commit" {
+            if !cur.is_empty() {
+                batches.push(std::mem::take(&mut cur));
+            }
+            continue;
+        }
+        let mut words = t.split_whitespace();
+        let op = words.next().expect("non-empty line has a first token");
+        let parse_one_id = |words: &mut std::str::SplitWhitespace<'_>| -> Result<u64> {
+            let w = words
+                .next()
+                .with_context(|| format!("line {lineno}: expected `{op} <id>`"))?;
+            w.parse::<u64>().with_context(|| format!("line {lineno}: bad vertex id"))
+        };
+        let up = match op {
+            "a" | "d" => {
+                // The rest of the line is a plain `src dst` pair.
+                let rest = t[1..].trim_start();
+                let (a, b) = parse_edge_line(rest, lineno)?
+                    .with_context(|| format!("line {lineno}: expected `{op} src dst`"))?;
+                if op == "a" {
+                    Update::AddEdge(densify(a, &mut ids), densify(b, &mut ids))
+                } else {
+                    // Deletes only *look up* ids: an edge with an
+                    // unseen endpoint cannot exist, so the op is a
+                    // guaranteed no-op — minting a dense id for it
+                    // would permanently skew the map and materialize
+                    // phantom vertices on the next arrival.
+                    match (ids.get(&a), ids.get(&b)) {
+                        (Some(&s), Some(&d)) => Update::RemoveEdge(s, d),
+                        _ => continue,
+                    }
+                }
+            }
+            "av" | "dv" => {
+                let raw = parse_one_id(&mut words)?;
+                anyhow::ensure!(
+                    words.next().is_none(),
+                    "line {lineno}: trailing tokens after `{op} <id>`"
+                );
+                if op == "av" {
+                    Update::AddVertex(densify(raw, &mut ids))
+                } else {
+                    // Same lookup-only rule as `d` (see above).
+                    match ids.get(&raw) {
+                        Some(&v) => Update::RemoveVertex(v),
+                        None => continue,
+                    }
+                }
+            }
+            _ => {
+                // Bare `src dst` line: an add, same as an edge list.
+                match parse_edge_line(t, lineno)? {
+                    Some((a, b)) => {
+                        let (s, d) = (densify(a, &mut ids), densify(b, &mut ids));
+                        Update::AddEdge(s, d)
+                    }
+                    None => continue,
+                }
+            }
+        };
+        cur.updates.push(up);
+    }
+    if !cur.is_empty() {
+        batches.push(cur);
+    }
+    Ok(batches)
+}
+
+/// A named synthetic churn workload, parseable from the CLI
+/// (`--churn uniform:0.02`, `hub:0.02`, `arrivals:256x4`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ChurnRecipe {
+    /// Remove `frac·|E|` uniform-random existing edges, add the same
+    /// number of uniform-random new ones — stationary size, drifting
+    /// structure.
+    Uniform { frac: f64 },
+    /// Like `Uniform`, but new endpoints are degree-biased (sampled as
+    /// endpoints of random existing edges) — churn concentrates on
+    /// hubs, the hardest case for a frontier because hub wakes fan wide.
+    HubBiased { frac: f64 },
+    /// `count` new vertices arrive, each wiring `edges_per` out-edges
+    /// to degree-biased existing targets (BA-style growth).
+    Arrivals { count: usize, edges_per: usize },
+}
+
+impl ChurnRecipe {
+    /// Generate one epoch's batch against the current graph state.
+    pub fn generate(&self, g: &Graph, seed: u64) -> UpdateBatch {
+        match *self {
+            ChurnRecipe::Uniform { frac } => edge_churn(g, frac, seed, false),
+            ChurnRecipe::HubBiased { frac } => edge_churn(g, frac, seed, true),
+            ChurnRecipe::Arrivals { count, edges_per } => {
+                vertex_arrivals(g, count, edges_per, seed)
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for ChurnRecipe {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let low = s.to_lowercase();
+        let (kind, arg) = low
+            .split_once(':')
+            .with_context(|| format!("churn recipe {s:?} needs an argument, e.g. uniform:0.02"))?;
+        match kind {
+            "uniform" | "hub" => {
+                let frac: f64 = arg.parse().with_context(|| format!("bad churn fraction {arg:?}"))?;
+                anyhow::ensure!(
+                    frac > 0.0 && frac <= 1.0,
+                    "churn fraction must be in (0, 1], got {frac}"
+                );
+                Ok(if kind == "uniform" {
+                    ChurnRecipe::Uniform { frac }
+                } else {
+                    ChurnRecipe::HubBiased { frac }
+                })
+            }
+            "arrivals" => {
+                let (count, per) = arg
+                    .split_once('x')
+                    .with_context(|| format!("arrivals needs <count>x<edges>, got {arg:?}"))?;
+                let count: usize = count.parse().context("bad arrival count")?;
+                let edges_per: usize = per.parse().context("bad arrival edge count")?;
+                anyhow::ensure!(count >= 1 && edges_per >= 1, "arrivals need count, edges >= 1");
+                Ok(ChurnRecipe::Arrivals { count, edges_per })
+            }
+            other => bail!("unknown churn recipe {other:?} (expected uniform|hub|arrivals)"),
+        }
+    }
+}
+
+/// Out-degree prefix sums — O(log n) degree-biased edge sampling
+/// (pick a uniform edge index, binary-search its source).
+struct EdgeSampler {
+    prefix: Vec<u64>,
+}
+
+impl EdgeSampler {
+    fn new(g: &Graph) -> Self {
+        let n = g.num_vertices();
+        let mut prefix = Vec::with_capacity(n + 1);
+        let mut acc = 0u64;
+        prefix.push(acc);
+        for v in 0..n {
+            acc += g.out_degree(v as VertexId) as u64;
+            prefix.push(acc);
+        }
+        EdgeSampler { prefix }
+    }
+
+    /// The `i`-th directed edge in CSR order.
+    fn edge(&self, g: &Graph, i: u64) -> (VertexId, VertexId) {
+        debug_assert!(i < *self.prefix.last().unwrap());
+        // partition_point: first v with prefix[v+1] > i.
+        let v = self.prefix.partition_point(|&p| p <= i) - 1;
+        let off = (i - self.prefix[v]) as usize;
+        (v as VertexId, g.out_neighbors(v as VertexId)[off])
+    }
+
+    /// A degree-biased vertex: the source or target of a uniform edge.
+    fn biased_vertex(&self, g: &Graph, rng: &mut Rng) -> VertexId {
+        let m = *self.prefix.last().unwrap();
+        let (s, d) = self.edge(g, rng.below(m));
+        if rng.below(2) == 0 {
+            s
+        } else {
+            d
+        }
+    }
+}
+
+/// Shared body of the two edge-churn recipes: `frac·|E|` deletions of
+/// distinct uniform-random existing edges plus the same number of
+/// additions (uniform or degree-biased endpoints) that neither
+/// duplicate an existing edge nor another addition in the batch.
+fn edge_churn(g: &Graph, frac: f64, seed: u64, hub_biased: bool) -> UpdateBatch {
+    assert!(frac > 0.0 && frac <= 1.0, "churn fraction must be in (0, 1]");
+    let m = g.num_edges() as u64;
+    assert!(m > 0, "cannot churn an edgeless graph");
+    let n = g.num_vertices() as u64;
+    let count = ((m as f64 * frac).round() as u64).clamp(1, m);
+    let mut rng = Rng::new(seed ^ 0x4348_524E /* "CHRN" */);
+    let sampler = EdgeSampler::new(g);
+
+    // Deletions: distinct uniform edge indices.
+    let mut picked: Vec<u64> = Vec::with_capacity(count as usize);
+    let mut seen = std::collections::HashSet::with_capacity(count as usize * 2);
+    while (picked.len() as u64) < count {
+        let i = rng.below(m);
+        if seen.insert(i) {
+            picked.push(i);
+        }
+    }
+    let mut updates: Vec<Update> = picked
+        .iter()
+        .map(|&i| {
+            let (s, d) = sampler.edge(g, i);
+            Update::RemoveEdge(s, d)
+        })
+        .collect();
+
+    // Additions: new (u, v) pairs absent from the graph and the batch.
+    let has = |u: VertexId, v: VertexId| g.out_neighbors(u).binary_search(&v).is_ok();
+    let mut fresh = std::collections::HashSet::with_capacity(count as usize * 2);
+    let mut added = 0u64;
+    // Bounded retry: dense tiny graphs can run out of absent pairs.
+    let mut attempts = 0u64;
+    let max_attempts = count * 64 + 256;
+    while added < count && attempts < max_attempts {
+        attempts += 1;
+        let (u, v) = if hub_biased {
+            (sampler.biased_vertex(g, &mut rng), sampler.biased_vertex(g, &mut rng))
+        } else {
+            (rng.below(n) as VertexId, rng.below(n) as VertexId)
+        };
+        if u == v || has(u, v) || !fresh.insert((u, v)) {
+            continue;
+        }
+        updates.push(Update::AddEdge(u, v));
+        added += 1;
+    }
+    UpdateBatch { updates }
+}
+
+/// BA-style growth batch: `count` arrivals with `edges_per` out-edges
+/// each to degree-biased existing targets (distinct per arrival).
+fn vertex_arrivals(g: &Graph, count: usize, edges_per: usize, seed: u64) -> UpdateBatch {
+    assert!(count >= 1 && edges_per >= 1);
+    assert!(g.num_edges() > 0, "degree-biased arrival targets need an edge to sample");
+    let mut rng = Rng::new(seed ^ 0x4152_5256 /* "ARRV" */);
+    let sampler = EdgeSampler::new(g);
+    let base = g.num_vertices() as VertexId;
+    let mut updates = Vec::with_capacity(count * (edges_per + 1));
+    for i in 0..count {
+        let v = base + i as VertexId;
+        updates.push(Update::AddVertex(v));
+        let mut targets: Vec<VertexId> = Vec::with_capacity(edges_per);
+        let mut attempts = 0;
+        while targets.len() < edges_per && attempts < edges_per * 32 + 32 {
+            attempts += 1;
+            let t = sampler.biased_vertex(g, &mut rng);
+            if t != v && !targets.contains(&t) {
+                targets.push(t);
+            }
+        }
+        for t in targets {
+            updates.push(Update::AddEdge(v, t));
+        }
+    }
+    UpdateBatch { updates }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::rmat;
+    use crate::graph::GraphBuilder;
+    use std::io::Cursor;
+
+    #[test]
+    fn log_reader_parses_all_ops_and_batches() {
+        let log = "# header\n0 1\na 1 2\nd 0 1\ncommit\nav 9\ndv 2\n\ncommit\ncommit\n3 0\n";
+        let batches = read_update_log(Cursor::new(log), 4).unwrap();
+        assert_eq!(batches.len(), 3);
+        assert_eq!(
+            batches[0].updates,
+            vec![
+                Update::AddEdge(0, 1),
+                Update::AddEdge(1, 2),
+                Update::RemoveEdge(0, 1),
+            ]
+        );
+        // Raw id 9 is unseen with base_vertices = 4 ⇒ next dense id 4.
+        assert_eq!(
+            batches[1].updates,
+            vec![Update::AddVertex(4), Update::RemoveVertex(2)]
+        );
+        assert_eq!(batches[2].updates, vec![Update::AddEdge(3, 0)]);
+    }
+
+    #[test]
+    fn log_reader_densifies_like_edge_list_loader() {
+        // A pure-add log with sparse raw ids must produce the same
+        // dense-id edges as loading the same lines as an edge list.
+        let txt = "1000 5\n5 42\n42 1000\n";
+        let batches = read_update_log(Cursor::new(txt), 0).unwrap();
+        assert_eq!(batches.len(), 1);
+        let g = crate::graph::io::read_edge_list(Cursor::new(txt)).unwrap();
+        let expect: Vec<Update> =
+            g.edges().map(|(s, d)| Update::AddEdge(s, d)).collect();
+        // read_edge_list sorts edges into CSR order; compare as sets.
+        let mut got = batches[0].updates.clone();
+        let mut want = expect;
+        let key = |u: &Update| match *u {
+            Update::AddEdge(a, b) => (a, b),
+            _ => unreachable!(),
+        };
+        got.sort_by_key(key);
+        want.sort_by_key(key);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn log_reader_skips_deletes_of_unseen_ids_without_densifying() {
+        // `d 999 998` and `dv 777` name ids the map has never seen:
+        // both are guaranteed no-ops and must neither appear as updates
+        // nor consume dense ids — the later arrival of raw id 1234 must
+        // still get dense id 4 (base 0..4).
+        let log = "d 999 998\ndv 777\na 0 1234\n";
+        let batches = read_update_log(Cursor::new(log), 4).unwrap();
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].updates, vec![Update::AddEdge(0, 4)]);
+    }
+
+    #[test]
+    fn log_reader_rejects_malformed_lines() {
+        let err = read_update_log(Cursor::new("a 1\n"), 4).unwrap_err();
+        assert!(format!("{err:#}").contains("line 1"), "{err:#}");
+        let err = read_update_log(Cursor::new("0 1\nd x 1\n"), 4).unwrap_err();
+        assert!(format!("{err:#}").contains("line 2"), "{err:#}");
+        let err = read_update_log(Cursor::new("av\n"), 4).unwrap_err();
+        assert!(format!("{err:#}").contains("line 1"), "{err:#}");
+        let err = read_update_log(Cursor::new("dv 1 2\n"), 4).unwrap_err();
+        assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+    }
+
+    #[test]
+    fn churn_recipe_parsing() {
+        assert_eq!(
+            "uniform:0.02".parse::<ChurnRecipe>().unwrap(),
+            ChurnRecipe::Uniform { frac: 0.02 }
+        );
+        assert_eq!(
+            "HUB:0.1".parse::<ChurnRecipe>().unwrap(),
+            ChurnRecipe::HubBiased { frac: 0.1 }
+        );
+        assert_eq!(
+            "arrivals:256x4".parse::<ChurnRecipe>().unwrap(),
+            ChurnRecipe::Arrivals { count: 256, edges_per: 4 }
+        );
+        assert!("uniform".parse::<ChurnRecipe>().is_err());
+        assert!("uniform:0".parse::<ChurnRecipe>().is_err());
+        assert!("uniform:2".parse::<ChurnRecipe>().is_err());
+        assert!("arrivals:256".parse::<ChurnRecipe>().is_err());
+        assert!("metis:1".parse::<ChurnRecipe>().is_err());
+    }
+
+    fn churn_graph() -> Graph {
+        rmat::rmat(1 << 9, 8 << 9, 0.57, 0.19, 0.19, 7)
+    }
+
+    #[test]
+    fn edge_churn_deletes_existing_and_adds_fresh() {
+        let g = churn_graph();
+        for recipe in [ChurnRecipe::Uniform { frac: 0.05 }, ChurnRecipe::HubBiased { frac: 0.05 }]
+        {
+            let batch = recipe.generate(&g, 11);
+            let mut dels = 0usize;
+            let mut adds = 0usize;
+            for up in &batch.updates {
+                match *up {
+                    Update::RemoveEdge(u, v) => {
+                        dels += 1;
+                        assert!(
+                            g.out_neighbors(u).binary_search(&v).is_ok(),
+                            "{recipe:?}: delete of absent edge ({u},{v})"
+                        );
+                    }
+                    Update::AddEdge(u, v) => {
+                        adds += 1;
+                        assert_ne!(u, v, "{recipe:?}: self-loop add");
+                        assert!(
+                            g.out_neighbors(u).binary_search(&v).is_err(),
+                            "{recipe:?}: duplicate add ({u},{v})"
+                        );
+                    }
+                    other => panic!("{recipe:?}: unexpected {other:?}"),
+                }
+            }
+            let expect = (g.num_edges() as f64 * 0.05).round() as usize;
+            assert_eq!(dels, expect, "{recipe:?}");
+            assert_eq!(adds, expect, "{recipe:?}");
+            // Determinism: same graph + seed ⇒ same batch.
+            assert_eq!(batch, recipe.generate(&g, 11), "{recipe:?}");
+        }
+    }
+
+    #[test]
+    fn vertex_arrivals_wire_new_ids_to_existing_targets() {
+        let g = churn_graph();
+        let n = g.num_vertices() as VertexId;
+        let batch = ChurnRecipe::Arrivals { count: 8, edges_per: 3 }.generate(&g, 5);
+        let mut arrivals = Vec::new();
+        for up in &batch.updates {
+            match *up {
+                Update::AddVertex(v) => {
+                    assert!(v >= n);
+                    arrivals.push(v);
+                }
+                Update::AddEdge(u, v) => {
+                    assert!(u >= n, "arrival edges originate at the new vertex");
+                    assert!(v < n, "targets are existing vertices");
+                    assert_ne!(u, v);
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(arrivals, (n..n + 8).collect::<Vec<_>>(), "contiguous new ids");
+        assert_eq!(batch.updates.len(), 8 * 4, "1 vertex + 3 edges each");
+    }
+
+    #[test]
+    fn hub_biased_churn_touches_hubs_more() {
+        // Star over 0..32 (0 is the hub) plus a path over 32..64: the
+        // hub carries over half the degree mass, and fresh hub edges
+        // (0 ↔ path vertices) still exist to add. Degree-biased
+        // endpoint draws must produce hub-incident additions; a
+        // uniform draw would pick 0 with probability ~2/64 per slot.
+        let mut b = GraphBuilder::new(64);
+        for v in 1..32u32 {
+            b.edge(0, v);
+            b.edge(v, 0);
+        }
+        for v in 32..63u32 {
+            b.edge(v, v + 1);
+        }
+        let g = b.build();
+        let batch = ChurnRecipe::HubBiased { frac: 0.2 }.generate(&g, 3);
+        let hub_adds = batch
+            .updates
+            .iter()
+            .filter(|u| matches!(u, Update::AddEdge(a, b) if *a == 0 || *b == 0))
+            .count();
+        // ~19 additions, each endpoint drawn from edge endpoints where
+        // 0 owns ~1/3 of the slots — at least one hub-incident add is
+        // essentially certain (and deterministic for this seed).
+        assert!(hub_adds > 0, "{batch:?}");
+    }
+}

@@ -330,6 +330,28 @@ pub fn initial_assignment(g: &Graph, cfg: &RevolverConfig) -> InitialAssignment 
     }
 }
 
+/// The active set a run starts from (step 0's frontier).
+///
+/// `All` is the classic cold start: every vertex is evaluated at step 0
+/// and the frontier shrinks from there — every pre-existing caller uses
+/// this and is bit-identical to before the variant existed. `Seeds` is
+/// the incremental-repair start ([`crate::dynamic`]): only the given
+/// vertices enter step 0, so a run whose initial assignment is already
+/// near-converged pays ~|seeds| instead of ~|V| for its first superstep
+/// — wake events then grow the frontier organically wherever the repair
+/// actually propagates. Out-of-range ids are dropped and duplicates
+/// deduplicated. With [`Frontier::Off`] there is no active-set
+/// machinery to interpret the seeds, so the engine falls back to legacy
+/// full sweeps (documented escape hatch, not an error: the result is
+/// still correct, just not frontier-localized).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum InitialFrontier {
+    /// Every vertex is active at step 0 (the default).
+    All,
+    /// Only these vertices are active at step 0.
+    Seeds(Vec<VertexId>),
+}
+
 /// Run `program` over `g` to completion: max_steps, convergence-driven
 /// halt (§IV-D.9), or an empty active frontier, whichever first. The
 /// initial assignment comes from `cfg.init` (see [`initial_assignment`]).
@@ -354,6 +376,24 @@ pub fn run_with_init<P: VertexProgram>(
     cfg: &RevolverConfig,
     program: &P,
     init: InitialAssignment,
+) -> PartitionOutput {
+    run_with_frontier(g, cfg, program, init, InitialFrontier::All)
+}
+
+/// [`run_with_init`] with an explicit step-0 frontier. Under
+/// [`InitialFrontier::All`] this *is* `run_with_init` — same stamps,
+/// same frontier collection, bit-identical results. Under
+/// [`InitialFrontier::Seeds`] only the seed vertices are evaluated at
+/// step 0; everything else starts settled and enters the frontier only
+/// through the normal wake events. The incremental repair pass
+/// ([`crate::dynamic::IncrementalPartitioner`]) enters here with the
+/// endpoints of an update batch as seeds.
+pub fn run_with_frontier<P: VertexProgram>(
+    g: &Graph,
+    cfg: &RevolverConfig,
+    program: &P,
+    init: InitialAssignment,
+    initial_frontier: InitialFrontier,
 ) -> PartitionOutput {
     let sw = Stopwatch::start();
     let k = cfg.parts;
@@ -380,6 +420,22 @@ pub fn run_with_init<P: VertexProgram>(
     let stamps: Vec<AtomicU32> =
         if frontier_on { (0..n).map(|_| AtomicU32::new(0)).collect() } else { Vec::new() };
     let stamps_ref: Option<&[AtomicU32]> = if frontier_on { Some(&stamps) } else { None };
+
+    // Step-0 frontier override. `None` = every vertex (the stamp scan
+    // at step 0 returns all of 0..n, since every stamp starts at 0);
+    // `Some(seeds)` evaluates only the seeds at step 0 — later steps
+    // come from the stamp scan as usual (never-woken vertices keep
+    // stamp 0 < 1 and stay settled). Ignored with the frontier off
+    // (no active-set machinery to interpret it — legacy full sweeps).
+    let seed_frontier: Option<Vec<VertexId>> = match initial_frontier {
+        InitialFrontier::All => None,
+        InitialFrontier::Seeds(mut s) => {
+            s.retain(|&v| (v as usize) < n);
+            s.sort_unstable();
+            s.dedup();
+            Some(s)
+        }
+    };
 
     let barrier = Barrier::new(t + 1);
     let stop = AtomicBool::new(false);
@@ -472,10 +528,18 @@ pub fn run_with_init<P: VertexProgram>(
             if frontier_on {
                 // Collect the active frontier and rebuild degree-balanced
                 // chunks over it, so thread balance tracks live work.
+                // Step 0 honours the explicit initial frontier (the stamp
+                // scan would return all of 0..n — which is exactly what
+                // `InitialFrontier::All` wants, so only `Seeds` diverges).
                 let mut verts: Vec<VertexId> = Vec::new();
-                for (v, s) in stamps.iter().enumerate() {
-                    if s.load(Ordering::Relaxed) >= step {
-                        verts.push(v as VertexId);
+                match (&seed_frontier, step) {
+                    (Some(seeds), 0) => verts.extend_from_slice(seeds),
+                    _ => {
+                        for (v, s) in stamps.iter().enumerate() {
+                            if s.load(Ordering::Relaxed) >= step {
+                                verts.push(v as VertexId);
+                            }
+                        }
                     }
                 }
                 if verts.is_empty() && detector.observe_empty_frontier() {
@@ -916,5 +980,88 @@ mod tests {
         let out = run(&g, &cfg(8, 4), &SingleHotProgram);
         assert_eq!(out.trace.steps(), 4);
         assert_eq!(out.trace.total_evaluated, 16 + 3 * 3);
+    }
+
+    #[test]
+    fn seeded_frontier_evaluates_only_seeds() {
+        // SettledProgram wakes nobody: a Seeds start must evaluate
+        // exactly the (deduped, in-range) seeds at step 0 and then halt
+        // on the empty frontier. Vertex 99 is out of range for n = 40
+        // and one 7 is a duplicate — both must be dropped.
+        let g = ring_graph(40);
+        let out = run_with_frontier(
+            &g,
+            &cfg(2, 50),
+            &SettledProgram,
+            InitialAssignment::Random(5),
+            InitialFrontier::Seeds(vec![7, 3, 7, 99]),
+        );
+        assert_eq!(out.trace.total_evaluated, 2, "only the two valid seeds run");
+        assert_eq!(out.trace.steps(), 1, "one seeded step, then empty-frontier halt");
+    }
+
+    #[test]
+    fn seeded_frontier_grows_through_wakes() {
+        // Seeds = {0} and vertex 0 keeps publishing changes: step 0
+        // evaluates just the seed, every later step its woken undirected
+        // neighbourhood {0, 1, n-1}.
+        let n = 103usize;
+        let g = ring_graph(n);
+        let steps = 5u32;
+        let out = run_with_frontier(
+            &g,
+            &cfg(3, steps),
+            &SingleHotProgram,
+            InitialAssignment::Random(5),
+            InitialFrontier::Seeds(vec![0]),
+        );
+        assert_eq!(out.trace.total_evaluated, 1 + (steps as u64 - 1) * 3);
+        assert_eq!(out.trace.steps(), steps);
+    }
+
+    #[test]
+    fn run_with_frontier_all_is_bit_identical_to_run_with_init() {
+        let g = ring_graph(64);
+        let pa = ProbeProgram::new(ExecutionModel::Asynchronous, 64);
+        let a = run_with_init(&g, &cfg(2, 4), &pa, InitialAssignment::Random(9));
+        let pb = ProbeProgram::new(ExecutionModel::Asynchronous, 64);
+        let b = run_with_frontier(
+            &g,
+            &cfg(2, 4),
+            &pb,
+            InitialAssignment::Random(9),
+            InitialFrontier::All,
+        );
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.trace.total_evaluated, b.trace.total_evaluated);
+    }
+
+    #[test]
+    fn seeds_with_frontier_off_fall_back_to_full_sweeps() {
+        let g = ring_graph(40);
+        let mut c = cfg(2, 7);
+        c.frontier = Frontier::Off;
+        let out = run_with_frontier(
+            &g,
+            &c,
+            &SettledProgram,
+            InitialAssignment::Random(5),
+            InitialFrontier::Seeds(vec![1]),
+        );
+        assert_eq!(out.trace.total_evaluated, 7 * 40, "off-mode ignores the seed list");
+    }
+
+    #[test]
+    fn empty_seed_frontier_halts_without_evaluating() {
+        let g = ring_graph(16);
+        let out = run_with_frontier(
+            &g,
+            &cfg(2, 10),
+            &SettledProgram,
+            InitialAssignment::Random(1),
+            InitialFrontier::Seeds(Vec::new()),
+        );
+        assert_eq!(out.trace.total_evaluated, 0);
+        assert_eq!(out.labels.len(), 16, "labels still come from the init");
     }
 }

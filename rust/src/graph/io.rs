@@ -15,6 +15,7 @@ use anyhow::{bail, Context, Result};
 
 use super::builder::GraphBuilder;
 use super::csr::Graph;
+use super::parse::{densify, parse_edge_line};
 use crate::VertexId;
 
 /// Load a whitespace-separated edge-list text file.
@@ -25,34 +26,6 @@ pub fn load_edge_list<P: AsRef<Path>>(path: P) -> Result<Graph> {
     let f = File::open(path.as_ref())
         .with_context(|| format!("open {:?}", path.as_ref()))?;
     read_edge_list(BufReader::new(f))
-}
-
-/// Parse one `src<ws>dst` edge-list line. `Ok(None)` for comment /
-/// blank lines. Shared by [`read_edge_list`] and the streaming file
-/// reader ([`crate::stream::FileEdgeStream`]).
-pub(crate) fn parse_edge_line(line: &str, lineno: usize) -> Result<Option<(u64, u64)>> {
-    let t = line.trim();
-    if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
-        return Ok(None);
-    }
-    let mut it = t.split_whitespace();
-    let (a, b) = match (it.next(), it.next()) {
-        (Some(a), Some(b)) => (a, b),
-        _ => bail!("line {lineno}: expected `src dst`, got {t:?}"),
-    };
-    let a: u64 = a.parse().with_context(|| format!("line {lineno}: bad src"))?;
-    let b: u64 = b.parse().with_context(|| format!("line {lineno}: bad dst"))?;
-    Ok(Some((a, b)))
-}
-
-/// Densify an arbitrary raw id to 0..n in first-appearance order.
-#[inline]
-pub(crate) fn densify(
-    raw: u64,
-    ids: &mut std::collections::HashMap<u64, VertexId>,
-) -> VertexId {
-    let next = ids.len() as VertexId;
-    *ids.entry(raw).or_insert(next)
 }
 
 /// Parse an edge list from any reader (unit-testable without files).

@@ -16,6 +16,7 @@ pub mod builder;
 pub mod csr;
 pub mod gen;
 pub mod io;
+pub mod parse;
 pub mod stats;
 
 pub use csr::Graph;

@@ -1,0 +1,72 @@
+//! Shared edge-line parsing and id densification — the two text-format
+//! primitives every reader of `src<ws>dst` data uses: the edge-list
+//! loader ([`super::io::read_edge_list`]), the CSR-free streaming
+//! reader ([`crate::stream::FileEdgeStream`]), and the dynamic
+//! update-log reader ([`crate::dynamic::read_update_log`]). Keeping
+//! them in one module guarantees every path densifies raw ids in the
+//! same first-appearance order, so labels produced against one reader
+//! line up with a graph loaded by another.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::VertexId;
+
+/// Parse one `src<ws>dst` edge-list line. `Ok(None)` for comment
+/// (`#` / `%`) and blank lines.
+pub fn parse_edge_line(line: &str, lineno: usize) -> Result<Option<(u64, u64)>> {
+    let t = line.trim();
+    if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+        return Ok(None);
+    }
+    let mut it = t.split_whitespace();
+    let (a, b) = match (it.next(), it.next()) {
+        (Some(a), Some(b)) => (a, b),
+        _ => bail!("line {lineno}: expected `src dst`, got {t:?}"),
+    };
+    let a: u64 = a.parse().with_context(|| format!("line {lineno}: bad src"))?;
+    let b: u64 = b.parse().with_context(|| format!("line {lineno}: bad dst"))?;
+    Ok(Some((a, b)))
+}
+
+/// Densify an arbitrary raw id to 0..n in first-appearance order.
+#[inline]
+pub fn densify(raw: u64, ids: &mut HashMap<u64, VertexId>) -> VertexId {
+    let next = ids.len() as VertexId;
+    *ids.entry(raw).or_insert(next)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_pairs_and_skips_comments() {
+        assert_eq!(parse_edge_line("3 7", 1).unwrap(), Some((3, 7)));
+        assert_eq!(parse_edge_line("3\t7\r\n", 1).unwrap(), Some((3, 7)));
+        assert_eq!(parse_edge_line("# comment", 1).unwrap(), None);
+        assert_eq!(parse_edge_line("% comment", 1).unwrap(), None);
+        assert_eq!(parse_edge_line("   ", 1).unwrap(), None);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse_edge_line("7", 13).unwrap_err();
+        assert!(format!("{err:#}").contains("line 13"), "{err:#}");
+        let err = parse_edge_line("x 1", 4).unwrap_err();
+        assert!(format!("{err:#}").contains("line 4"), "{err:#}");
+        let err = parse_edge_line("1 y", 9).unwrap_err();
+        assert!(format!("{err:#}").contains("bad dst"), "{err:#}");
+    }
+
+    #[test]
+    fn densify_first_appearance_order() {
+        let mut ids = HashMap::new();
+        assert_eq!(densify(1000, &mut ids), 0);
+        assert_eq!(densify(5, &mut ids), 1);
+        assert_eq!(densify(1000, &mut ids), 0, "repeat id keeps its dense id");
+        assert_eq!(densify(42, &mut ids), 2);
+        assert_eq!(ids.len(), 3);
+    }
+}

@@ -8,8 +8,8 @@
 //!
 //! ## Architecture (four layers)
 //!
-//! * **L4 — algorithms** ([`partitioners`], [`stream`], [`multilevel`])
-//!   — three algorithm families behind one
+//! * **L4 — algorithms** ([`partitioners`], [`stream`], [`multilevel`],
+//!   [`dynamic`]) — the algorithm families behind one
 //!   [`partitioners::Partitioner`] trait:
 //!   - *Iterative* (Revolver / Spinner): pure
 //!     [`engine::VertexProgram`]s — per-vertex math plus the per-step
@@ -28,6 +28,18 @@
 //!     balance in cluster-size units via [`graph::Graph::load_mass`],
 //!     and a deterministic rebalance pass pins the ε envelope at every
 //!     level (`multilevel` / `ml-spinner` / `ml-revolver`).
+//!   - *Dynamic* ([`dynamic`]): evolving graphs. A
+//!     [`dynamic::DynamicGraph`] overlay (sorted insert/delete
+//!     adjacency deltas + tombstones over the immutable CSR, with
+//!     ratio-gated compaction) absorbs [`dynamic::UpdateBatch`]es —
+//!     from a text update log or synthetic [`dynamic::ChurnRecipe`]s —
+//!     and the [`dynamic::IncrementalPartitioner`] keeps the
+//!     assignment alive: arrivals placed greedily against the full
+//!     assignment ([`config::Placement`]), then a bounded repair pass
+//!     whose step-0 frontier is only the changed endpoints and their
+//!     neighbourhoods ([`engine::InitialFrontier::Seeds`]) — an epoch
+//!     of churn costs ~|affected region| vertex-evaluations, not
+//!     ~|V| per superstep (CLI: the `dynamic` subcommand).
 //!   Hash / Range round out the trivial baselines.
 //! * **L3 — execution engine** ([`engine`], [`coordinator`],
 //!   [`partition`]) — the shared superstep runtime: persistent workers
@@ -121,6 +133,7 @@
 
 pub mod config;
 pub mod coordinator;
+pub mod dynamic;
 pub mod engine;
 pub mod graph;
 pub mod la;

@@ -5,6 +5,8 @@
 //!   sweep        Figure-3 grid: graphs × algorithms × partition counts
 //!   convergence  Figure-4 per-step traces (Revolver vs Spinner)
 //!   stream       partition an edge-list file without building CSR
+//!   dynamic      evolve a graph (churn recipe / update log) with
+//!                incremental frontier-localized repartitioning
 //!   stats        Table-I statistics for the surrogate datasets
 //!   generate     materialize a surrogate dataset to disk
 //!   info         toolchain / artifact diagnostics
@@ -16,6 +18,7 @@
 //!   revolver sweep --graphs lj,so --algorithms revolver,fennel,ldg --parts 2,4,8
 //!   revolver convergence --graph lj --parts 32 --vertices 16384
 //!   revolver stream --file edges.txt --algorithm ldg --parts 8 --evaluate
+//!   revolver dynamic --graph lj --churn uniform:0.02 --epochs 5 --out dyn.csv
 //!   revolver stats --all
 //!   revolver partition --graph lj --engine xla --parts 8
 
@@ -44,6 +47,7 @@ fn run() -> Result<()> {
         Some("sweep") => cmd_sweep(args),
         Some("convergence") => cmd_convergence(args),
         Some("stream") => cmd_stream(args),
+        Some("dynamic") => cmd_dynamic(args),
         Some("stats") => cmd_stats(args),
         Some("generate") => cmd_generate(args),
         Some("info") => cmd_info(args),
@@ -67,7 +71,7 @@ fn usage() -> String {
 }
 
 const USAGE_BODY: &str =
-    "usage: revolver <partition|sweep|convergence|stream|stats|generate|info> [flags]
+    "usage: revolver <partition|sweep|convergence|stream|dynamic|stats|generate|info> [flags]
   common flags:
     --graph <wiki|uk|usa|so|lj|en|ok|hlwd|eu|path/to/edges.txt>
     --vertices N          surrogate scale (default 16384)
@@ -87,6 +91,9 @@ const USAGE_BODY: &str =
     --coarsen-until N     multilevel: coarsest-level size target (default 256)
     --refine-steps N      multilevel: per-level refinement superstep budget (default 10)
     --coarse-algo A       multilevel: coarsest-level algorithm (default fennel)
+    --repair-steps N      dynamic: per-epoch repair superstep budget (default 10)
+    --compact-ratio R     dynamic: delta/base edge ratio triggering compaction (default 0.25)
+    --placement <ldg|fennel>  dynamic: arrival placement score (default fennel)
     --config file.toml    load RevolverConfig from file";
 
 const USAGE_TAIL: &str =
@@ -95,6 +102,9 @@ const USAGE_TAIL: &str =
   convergence: --parts k --steps N --out dir
   stream:     --file edges.txt --algorithm <ldg|fennel|restream>
               [--evaluate] [--out labels.txt]   (CSR is never built)
+  dynamic:    --churn <uniform:F|hub:F|arrivals:NxE> --epochs N
+              | --update-log file.log   (batches separated by `commit`)
+              [--algorithm <spinner|revolver>] [--out trace.csv]
   stats:      --all | --graph g
   generate:   --graph g --out file [--format txt|bin]";
 
@@ -129,6 +139,9 @@ fn config_from(args: &mut Args) -> Result<RevolverConfig> {
     if let Some(ca) = args.get("coarse-algo") {
         cfg.coarse_algo = ca;
     }
+    cfg.compact_ratio = args.get_or("compact-ratio", cfg.compact_ratio)?;
+    cfg.repair_steps = args.get_or("repair-steps", cfg.repair_steps)?;
+    cfg.placement = args.get_or("placement", cfg.placement)?;
     if let Some(engine) = args.get("engine") {
         cfg.engine = engine.parse()?;
     }
@@ -275,6 +288,101 @@ fn cmd_stream(mut args: Args) -> Result<()> {
         println!("edge cuts:           {:.4}", 1.0 - q.local_edges);
         println!("max norm edge load:  {:.4}", q.max_normalized_edge_load);
         println!("comm volume/vertex:  {:.4}", q.mean_communication_volume);
+    }
+    Ok(())
+}
+
+/// Evolve a graph over N epochs — synthetic churn or a recorded update
+/// log — maintaining the partition incrementally: greedy arrival
+/// placement plus a frontier-seeded repair pass per epoch. Reports
+/// per-epoch quality and evaluated vertices; `--out` writes the
+/// quality-over-time trace as CSV (step column = epoch).
+fn cmd_dynamic(mut args: Args) -> Result<()> {
+    use revolver::dynamic::{read_update_log, ChurnRecipe, IncrementalPartitioner, UpdateBatch};
+    use revolver::metrics::trace::RunTrace;
+    use revolver::multilevel::Refiner;
+
+    let algorithm = args
+        .get("algorithm")
+        .or_else(|| args.get("algo"))
+        .unwrap_or_else(|| "spinner".to_string());
+    let churn = args.get("churn");
+    let log = args.get("update-log");
+    let epochs: u32 = args.get_or("epochs", 5)?;
+    let out = args.get("out");
+    let (gname, g) = load_graph(&mut args)?;
+    let cfg = config_from(&mut args)?;
+    args.finish()?;
+
+    let refiner = match algorithm.to_lowercase().as_str() {
+        "spinner" => Refiner::Spinner,
+        "revolver" => Refiner::Revolver,
+        other => bail!("dynamic repairs with spinner|revolver, got {other:?}"),
+    };
+    let recipe: Option<ChurnRecipe> = match (&churn, &log) {
+        (Some(c), None) => Some(c.parse()?),
+        (None, Some(_)) => None,
+        (Some(_), Some(_)) => bail!("--churn and --update-log are mutually exclusive"),
+        (None, None) => bail!("dynamic requires --churn <recipe> or --update-log <file>"),
+    };
+    let log_batches: Vec<UpdateBatch> = match &log {
+        Some(path) => {
+            let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+            read_update_log(std::io::BufReader::new(f), g.num_vertices())?
+        }
+        None => Vec::new(),
+    };
+    let epochs = if log.is_some() { log_batches.len() as u32 } else { epochs };
+
+    let k = cfg.parts;
+    let seed = cfg.seed;
+    eprintln!(
+        "dynamic: {gname} (|V|={}, |E|={}) repair={algorithm} k={k} epochs={epochs} {}",
+        with_commas(g.num_vertices() as u64),
+        with_commas(g.num_edges() as u64),
+        churn.as_deref().unwrap_or("update-log"),
+    );
+    let sw = Stopwatch::start();
+    let mut inc = IncrementalPartitioner::new(g, cfg, refiner);
+    let q0 = quality::evaluate(inc.current(), inc.labels(), k);
+    println!(
+        "epoch {:>3}: local={:.4} mnl={:.4} (cold partition)",
+        "-", q0.local_edges, q0.max_normalized_load
+    );
+
+    let mut trace = RunTrace::default();
+    for e in 0..epochs {
+        let batch = match &recipe {
+            Some(r) => r.generate(inc.current(), seed ^ (e as u64 + 1)),
+            None => log_batches[e as usize].clone(),
+        };
+        let stats = inc.epoch(&batch);
+        inc.record_epoch(&mut trace, e, &stats);
+        let p = trace.final_point().expect("record_epoch pushed a point");
+        println!(
+            "epoch {e:>3}: local={:.4} mnl={:.4} placed={} seeds={} steps={} evaluated={}",
+            p.local_edges,
+            p.max_normalized_load,
+            stats.placed,
+            stats.seeds,
+            stats.repair_steps,
+            with_commas(stats.evaluated),
+        );
+    }
+    println!(
+        "totals:    |V|={} |E|={} repair steps={} evaluated={} wall={:.2}s",
+        with_commas(inc.current().num_vertices() as u64),
+        with_commas(inc.current().num_edges() as u64),
+        inc.total_repair_steps(),
+        with_commas(inc.total_evaluated()),
+        sw.elapsed_s()
+    );
+    if let Some(out) = out.filter(|o| !o.is_empty()) {
+        std::fs::write(&out, trace.to_csv())?;
+        println!(
+            "trace:     {out} (one row per epoch; step=epoch, \
+             migrations=rebalance moves, mean_score unused)"
+        );
     }
     Ok(())
 }

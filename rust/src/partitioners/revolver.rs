@@ -380,6 +380,29 @@ pub fn refine(g: &Graph, cfg: &RevolverConfig, init: Vec<crate::Label>) -> Parti
     engine::run_with_init(g, cfg, &program, InitialAssignment::Given(init))
 }
 
+/// [`refine`] with an explicit step-0 frontier: only `seeds` (plus
+/// whatever their evaluation wakes) are re-evaluated, and every LA row
+/// still starts biased toward its given label — the incremental repair
+/// pass of [`crate::dynamic`].
+pub fn refine_seeded(
+    g: &Graph,
+    cfg: &RevolverConfig,
+    init: Vec<crate::Label>,
+    seeds: Vec<crate::VertexId>,
+) -> PartitionOutput {
+    let program = RevolverProgram {
+        cfg,
+        probs: ProbSlab::new(g.num_vertices(), cfg.parts, Some(&init)),
+    };
+    engine::run_with_frontier(
+        g,
+        cfg,
+        &program,
+        InitialAssignment::Given(init),
+        engine::InitialFrontier::Seeds(seeds),
+    )
+}
+
 /// Native per-vertex phase-B body. Returns the vertex's score
 /// contribution to the convergence signal S.
 #[inline]

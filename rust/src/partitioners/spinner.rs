@@ -196,6 +196,25 @@ pub fn refine(g: &Graph, cfg: &RevolverConfig, init: Vec<crate::Label>) -> Parti
     )
 }
 
+/// [`refine`] with an explicit step-0 frontier: only `seeds` (plus
+/// whatever their evaluation wakes) are re-evaluated — the incremental
+/// repair pass of [`crate::dynamic`], where `seeds` are the endpoints
+/// of an update batch and their undirected neighbourhoods.
+pub fn refine_seeded(
+    g: &Graph,
+    cfg: &RevolverConfig,
+    init: Vec<crate::Label>,
+    seeds: Vec<crate::VertexId>,
+) -> PartitionOutput {
+    engine::run_with_frontier(
+        g,
+        cfg,
+        &SpinnerProgram { cfg },
+        crate::partition::InitialAssignment::Given(init),
+        engine::InitialFrontier::Seeds(seeds),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

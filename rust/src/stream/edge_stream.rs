@@ -9,7 +9,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context, Result};
 
 use crate::config::StreamOrder;
-use crate::graph::io::{densify, parse_edge_line};
+use crate::graph::parse::{densify, parse_edge_line};
 use crate::graph::Graph;
 use crate::util::rng::Rng;
 use crate::VertexId;

@@ -55,6 +55,48 @@ impl StreamState {
         }
     }
 
+    /// Rehydrate streaming state from an existing assignment — the
+    /// dynamic subsystem's arrival-placement path
+    /// ([`crate::dynamic::IncrementalPartitioner`]): labels are the
+    /// full current assignment ([`UNASSIGNED`] for vertices awaiting
+    /// placement) and `charged[v]` is the load mass vertex `v`
+    /// currently contributes to its partition (0 for unplaced ones).
+    /// Per-partition loads are derived by summation, so subsequent
+    /// [`StreamState::place`] calls score exactly as if the assignment
+    /// had been streamed — Prioritized Restreaming's "place against the
+    /// full previous assignment", without replaying it.
+    pub fn from_assignment(
+        labels: Vec<Label>,
+        charged: Vec<u32>,
+        k: usize,
+        epsilon: f64,
+        known_edges: Option<u64>,
+    ) -> Self {
+        assert!(k >= 2, "need at least 2 partitions");
+        assert_eq!(labels.len(), charged.len(), "one charged mass per label");
+        let mut loads = vec![0.0f64; k];
+        let mut streamed = 0u64;
+        for (&l, &c) in labels.iter().zip(&charged) {
+            if l == UNASSIGNED {
+                debug_assert_eq!(c, 0, "unplaced vertices cannot carry charged mass");
+                continue;
+            }
+            assert!((l as usize) < k, "label {l} out of range for k={k}");
+            loads[l as usize] += c as f64;
+            streamed += c as u64;
+        }
+        StreamState {
+            k,
+            epsilon,
+            labels,
+            charged,
+            loads,
+            hist: vec![0.0; k],
+            known_edges,
+            streamed_edges: streamed,
+        }
+    }
+
     pub fn k(&self) -> usize {
         self.k
     }
@@ -378,6 +420,24 @@ mod tests {
         let labels = state.finish(3);
         assert_ne!(labels[0], labels[1]);
         assert_eq!(labels[2], labels[1], "heavy edge must win: {labels:?}");
+    }
+
+    #[test]
+    fn from_assignment_scores_against_existing_labels() {
+        // Assignment: 0,1 in p0 (mass 2 each), 2 in p1 (mass 1); vertex
+        // 3 arrives with neighbours {0, 1} — LDG must follow the
+        // neighbour majority into p0 (capacity permits: ε=1 ⇒ C=8).
+        let labels = vec![0, 0, 1, UNASSIGNED];
+        let charged = vec![2, 2, 1, 0];
+        let mut st = StreamState::from_assignment(labels, charged, 2, 1.0, Some(8));
+        assert_eq!(st.loads(), &[4.0, 1.0]);
+        assert_eq!(st.streamed_edges(), 5);
+        let l = st.place(3, &[0, 1], &[], 3, Objective::Ldg, false);
+        assert_eq!(l, 0, "neighbour majority wins");
+        assert_eq!(st.loads(), &[7.0, 1.0]);
+        // finish() leaves placed labels untouched.
+        let out = st.finish(4);
+        assert_eq!(out, vec![0, 0, 1, 0]);
     }
 
     #[test]

@@ -448,3 +448,102 @@ fn info_reports_artifacts_when_present() {
         assert!(stdout.contains("step_b256_k8"), "{stdout}");
     }
 }
+
+#[test]
+fn dynamic_churn_reports_epochs_and_writes_trace() {
+    let dir = std::env::temp_dir().join("revolver_cli_dynamic");
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv = dir.join("dyn.csv");
+    let (ok, stdout, stderr) = run(&[
+        "dynamic",
+        "--graph",
+        "so",
+        "--vertices",
+        "512",
+        "--parts",
+        "4",
+        "--threads",
+        "1",
+        "--steps",
+        "10",
+        "--repair-steps",
+        "3",
+        "--churn",
+        "uniform:0.05",
+        "--epochs",
+        "2",
+        "--out",
+        csv.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stderr}\n{stdout}");
+    assert!(stdout.contains("cold partition"), "{stdout}");
+    assert!(stdout.contains("epoch   0:"), "{stdout}");
+    assert!(stdout.contains("epoch   1:"), "{stdout}");
+    assert!(stdout.contains("evaluated="), "{stdout}");
+    assert!(stdout.contains("totals:"), "{stdout}");
+    let trace = std::fs::read_to_string(&csv).unwrap();
+    let lines: Vec<&str> = trace.trim().lines().collect();
+    assert_eq!(lines.len(), 3, "header + one row per epoch: {trace}");
+    assert!(lines[0].starts_with("step,local_edges"), "{trace}");
+    assert!(lines[1].starts_with("0,"), "{trace}");
+    assert!(lines[2].starts_with("1,"), "{trace}");
+}
+
+#[test]
+fn dynamic_update_log_drives_epochs() {
+    let dir = std::env::temp_dir().join("revolver_cli_dynamic");
+    std::fs::create_dir_all(&dir).unwrap();
+    let log = dir.join("updates.log");
+    // Two batches against dense ids of the generated graph.
+    std::fs::write(&log, "# batch 1\nd 0 1\na 0 2\ncommit\nav 9999\na 9999 3\ncommit\n")
+        .unwrap();
+    let (ok, stdout, stderr) = run(&[
+        "dynamic",
+        "--graph",
+        "so",
+        "--vertices",
+        "256",
+        "--parts",
+        "4",
+        "--threads",
+        "1",
+        "--steps",
+        "5",
+        "--update-log",
+        log.to_str().unwrap(),
+        "--algorithm",
+        "revolver",
+    ]);
+    assert!(ok, "{stderr}\n{stdout}");
+    assert!(stdout.contains("epoch   1:"), "two log batches = two epochs: {stdout}");
+    assert!(stdout.contains("placed=1"), "the av/edge arrival must be placed: {stdout}");
+}
+
+#[test]
+fn dynamic_requires_churn_or_log() {
+    let (ok, _, stderr) = run(&["dynamic", "--graph", "so", "--vertices", "256"]);
+    assert!(!ok);
+    assert!(stderr.contains("--churn"), "{stderr}");
+}
+
+#[test]
+fn dynamic_rejects_bad_recipe_and_algorithm() {
+    let (ok, _, stderr) = run(&[
+        "dynamic", "--graph", "so", "--vertices", "256", "--churn", "metis:1",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown churn recipe"), "{stderr}");
+    let (ok, _, stderr) = run(&[
+        "dynamic",
+        "--graph",
+        "so",
+        "--vertices",
+        "256",
+        "--churn",
+        "uniform:0.05",
+        "--algorithm",
+        "hash",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("spinner|revolver"), "{stderr}");
+}

@@ -373,6 +373,102 @@ fn isolated_vertices_never_migrate_or_stay_active_under_frontier() {
 }
 
 #[test]
+fn dynamic_repair_matches_restart_quality_with_fewer_evaluations() {
+    // The dynamic-subsystem acceptance criterion (ISSUE 5): 2^16 R-MAT
+    // k=8 (threads=1, fixed seed), 5 epochs of 2% edge churn. The
+    // incremental path (greedy arrival placement + frontier-seeded
+    // repair at `repair_steps` supersteps per epoch) must reach
+    // `local_edges` within 3% of a full from-scratch repartition given
+    // the same per-epoch superstep budget, hold mnl ≤ 1.10, and spend
+    // strictly fewer total evaluated vertex-steps than restarting each
+    // epoch.
+    use revolver::dynamic::{ChurnRecipe, IncrementalPartitioner};
+    use revolver::multilevel::Refiner;
+
+    let g = multilevel_surrogate(); // 2^16 R-MAT, k = 8
+    let k = 8;
+    let repair = 6u32;
+    let mut c = cfg(k, 60);
+    c.threads = 1; // deterministic: zero-slack statistical margins
+    c.repair_steps = repair;
+
+    let mut inc = IncrementalPartitioner::new(g, c.clone(), Refiner::Spinner);
+    let recipe = ChurnRecipe::Uniform { frac: 0.02 };
+
+    let mut cold_evaluated = 0u64;
+    let mut cold_final_le = 0.0f64;
+    for e in 0..5u64 {
+        let batch = recipe.generate(inc.current(), 1000 + e);
+        let stats = inc.epoch(&batch);
+        assert!(stats.applied > 0, "epoch {e}: churn must apply");
+
+        // Cold restart on the identical evolved graph, same per-epoch
+        // superstep budget, same seed family.
+        let mut rc = c.clone();
+        rc.max_steps = repair;
+        rc.halt_window = u32::MAX;
+        let cold = by_name("spinner", rc).unwrap().partition(inc.current());
+        cold_evaluated += cold.trace.total_evaluated;
+        if e == 4 {
+            cold_final_le = quality::local_edges(inc.current(), &cold.labels);
+        }
+    }
+
+    let q = quality::evaluate(inc.current(), inc.labels(), k);
+    assert!(
+        q.local_edges >= cold_final_le - 0.03 * cold_final_le,
+        "incremental local edges {} must be within 3% of the {}-step cold restart's {}",
+        q.local_edges,
+        repair,
+        cold_final_le
+    );
+    assert!(
+        q.max_normalized_load <= 1.10 + 1e-9,
+        "incremental repair must hold the balance envelope: {q:?}"
+    );
+    assert!(
+        inc.total_evaluated() < cold_evaluated,
+        "repair must beat per-epoch restarts on evaluated vertex-steps: inc={} cold={}",
+        inc.total_evaluated(),
+        cold_evaluated
+    );
+    assert!(inc.total_evaluated() > 0, "repair must actually run");
+}
+
+#[test]
+fn dynamic_arrivals_grow_partition_within_envelope() {
+    // Vertex arrival stream: the assignment must grow with the graph,
+    // keep every label valid, and stay balanced — the scenario class
+    // (BA-style growth) the placement path exists for.
+    use revolver::dynamic::{ChurnRecipe, IncrementalPartitioner};
+    use revolver::multilevel::Refiner;
+
+    let g = rmat_surrogate(); // 2^13 R-MAT
+    let k = 8;
+    let n0 = g.num_vertices();
+    let mut c = cfg(k, 40);
+    c.threads = 1;
+    c.repair_steps = 5;
+    let mut inc = IncrementalPartitioner::new(g, c, Refiner::Spinner);
+    let recipe = ChurnRecipe::Arrivals { count: 256, edges_per: 4 };
+    for e in 0..3u64 {
+        let batch = recipe.generate(inc.current(), 70 + e);
+        let stats = inc.epoch(&batch);
+        assert_eq!(stats.placed, 256, "epoch {e}");
+    }
+    assert_eq!(inc.current().num_vertices(), n0 + 3 * 256);
+    assert_eq!(inc.labels().len(), n0 + 3 * 256);
+    assert!(inc.labels().iter().all(|&l| (l as usize) < k));
+    let q = quality::evaluate(inc.current(), inc.labels(), k);
+    assert!(q.max_normalized_load <= 1.10 + 1e-9, "{q:?}");
+    // Placement against the full assignment keeps arrivals local:
+    // the evolved cut must stay far above a hash split.
+    let hash = by_name("hash", cfg(k, 1)).unwrap().partition(inc.current());
+    let hash_le = quality::local_edges(inc.current(), &hash.labels);
+    assert!(q.local_edges > hash_le, "evolved {} vs hash {hash_le}", q.local_edges);
+}
+
+#[test]
 fn partition_after_io_roundtrip() {
     // Generate → save → load → partition must equal partitioning the
     // original (loaders preserve structure exactly).

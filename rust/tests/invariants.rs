@@ -413,3 +413,215 @@ fn prop_frontier_chunks_cover_exactly_the_frontier() {
         assert!(Chunks::by_weight_subset(&[], 4, |_| 1).is_empty());
     });
 }
+
+// ── Dynamic-graph overlay properties (ISSUE 5) ──────────────────────
+
+/// Shadow model of [`revolver::dynamic::DynamicGraph`]: a plain
+/// directed edge set + tombstones with the same update semantics,
+/// rebuilt into a CSR from scratch for every comparison.
+struct ShadowGraph {
+    n: usize,
+    edges: std::collections::BTreeSet<(u32, u32)>,
+    alive: Vec<bool>,
+}
+
+impl ShadowGraph {
+    fn new(g: &revolver::graph::Graph) -> Self {
+        ShadowGraph {
+            n: g.num_vertices(),
+            edges: g.edges().collect(),
+            alive: vec![true; g.num_vertices()],
+        }
+    }
+
+    fn ensure(&mut self, v: u32) {
+        if v as usize >= self.n {
+            self.n = v as usize + 1;
+            self.alive.resize(self.n, true);
+        }
+    }
+
+    fn apply(&mut self, up: &revolver::dynamic::Update) {
+        use revolver::dynamic::Update::*;
+        match *up {
+            AddEdge(u, v) => {
+                if u != v {
+                    self.ensure(u.max(v));
+                    self.edges.insert((u, v));
+                    self.alive[u as usize] = true;
+                    self.alive[v as usize] = true;
+                }
+            }
+            RemoveEdge(u, v) => {
+                self.edges.remove(&(u, v));
+            }
+            AddVertex(v) => {
+                self.ensure(v);
+                self.alive[v as usize] = true;
+            }
+            RemoveVertex(v) => {
+                if (v as usize) < self.n && self.alive[v as usize] {
+                    self.edges.retain(|&(a, b)| a != v && b != v);
+                    self.alive[v as usize] = false;
+                }
+            }
+        }
+    }
+
+    fn rebuild(&self) -> revolver::graph::Graph {
+        let mut b = GraphBuilder::with_capacity(self.n.max(1), self.edges.len());
+        for &(u, v) in &self.edges {
+            b.edge(u, v);
+        }
+        b.build()
+    }
+}
+
+/// The overlay after arbitrary batches must be observation-equivalent
+/// to a CSR rebuilt from scratch: vertex/edge counts, per-vertex
+/// out/und degrees and neighbour sets, load-mass totals, and a valid
+/// materialization.
+fn assert_observation_equivalent(
+    tag: &str,
+    d: &revolver::dynamic::DynamicGraph,
+    shadow: &ShadowGraph,
+) {
+    let fresh = shadow.rebuild();
+    assert_eq!(d.num_vertices(), fresh.num_vertices(), "{tag}: |V|");
+    assert_eq!(d.num_edges(), fresh.num_edges(), "{tag}: |E|");
+    let mut mass = 0u64;
+    for v in 0..fresh.num_vertices() as u32 {
+        assert_eq!(d.out_degree(v), fresh.out_degree(v), "{tag}: out_degree({v})");
+        assert_eq!(d.und_degree(v), fresh.und_degree(v), "{tag}: und_degree({v})");
+        assert_eq!(d.load_mass(v), fresh.load_mass(v), "{tag}: load_mass({v})");
+        assert_eq!(
+            d.out_neighbors(v).collect::<Vec<_>>(),
+            fresh.out_neighbors(v),
+            "{tag}: out({v})"
+        );
+        assert_eq!(
+            d.und_neighbors(v).collect::<Vec<_>>(),
+            fresh.neighbors(v),
+            "{tag}: und({v})"
+        );
+        assert_eq!(d.is_alive(v), shadow.alive[v as usize], "{tag}: alive({v})");
+        mass += d.load_mass(v) as u64;
+    }
+    assert_eq!(mass, fresh.total_load_mass(), "{tag}: Σ load_mass");
+    let mat = d.to_graph();
+    mat.validate().unwrap();
+    assert_eq!(
+        mat.edges().collect::<Vec<_>>(),
+        fresh.edges().collect::<Vec<_>>(),
+        "{tag}: materialized edge set"
+    );
+    d.check_invariants().unwrap();
+}
+
+fn random_update(rng: &mut Rng, shadow: &ShadowGraph) -> revolver::dynamic::Update {
+    use revolver::dynamic::Update::*;
+    let n = shadow.n as u64;
+    match rng.below(10) {
+        // Adds dominate so the graph never collapses.
+        0..=3 => AddEdge(rng.below(n) as u32, rng.below(n) as u32),
+        4..=6 => {
+            // Remove an existing edge when possible (else a random
+            // probably-absent pair — exercising the no-op path).
+            if shadow.edges.is_empty() {
+                RemoveEdge(rng.below(n) as u32, rng.below(n) as u32)
+            } else {
+                let i = rng.below_usize(shadow.edges.len());
+                let &(u, v) = shadow.edges.iter().nth(i).unwrap();
+                RemoveEdge(u, v)
+            }
+        }
+        7 => AddVertex(rng.below(n + 4) as u32),
+        8 => RemoveVertex(rng.below(n) as u32),
+        // Edge to a brand-new id: implicit arrival.
+        _ => AddEdge(rng.below(n) as u32, n as u32),
+    }
+}
+
+#[test]
+fn prop_dynamic_overlay_equals_rebuilt_csr() {
+    use revolver::dynamic::{DynamicGraph, UpdateBatch};
+    use revolver::graph::gen::{ba, rmat};
+    forall(5, |seed| {
+        let graphs = [
+            ("ba", ba::barabasi_albert(256, 4, seed)),
+            ("rmat", rmat::rmat(256, 4 * 256, 0.57, 0.19, 0.19, seed)),
+        ];
+        for (name, g) in graphs {
+            let mut rng = Rng::new(seed ^ 0xD1CE);
+            // Tiny compact ratio on odd seeds: auto-compaction fires
+            // mid-run and must stay invisible.
+            let ratio = if seed % 2 == 1 { 0.01 } else { 1000.0 };
+            let mut d = DynamicGraph::new(g.clone(), ratio);
+            let mut shadow = ShadowGraph::new(&g);
+            for round in 0..4 {
+                let updates: Vec<_> =
+                    (0..48).map(|_| random_update(&mut rng, &shadow)).collect();
+                for up in &updates {
+                    shadow.apply(up);
+                }
+                let mut touched = Vec::new();
+                d.apply(&UpdateBatch { updates }, &mut touched);
+                assert_observation_equivalent(
+                    &format!("{name} seed={seed} round={round}"),
+                    &d,
+                    &shadow,
+                );
+            }
+            if seed % 2 == 1 {
+                assert!(d.compactions() > 0, "{name}: tiny ratio must trigger compaction");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_dynamic_compact_is_quality_noop() {
+    use revolver::dynamic::{ChurnRecipe, DynamicGraph, UpdateBatch};
+    use revolver::graph::gen::{ba, rmat};
+    forall(5, |seed| {
+        let graphs = [
+            ("ba", ba::barabasi_albert(512, 6, seed)),
+            ("rmat", rmat::rmat(512, 6 * 512, 0.57, 0.19, 0.19, seed)),
+        ];
+        for (name, g) in graphs {
+            let mut d = DynamicGraph::new(g.clone(), 1000.0);
+            // Recipe-generated churn (the workload the CLI applies).
+            let batch = ChurnRecipe::Uniform { frac: 0.05 }.generate(&g, seed);
+            let mut touched = Vec::new();
+            d.apply(&batch, &mut touched);
+            // A couple of manual vertex ops on top.
+            let extra = UpdateBatch {
+                updates: vec![
+                    revolver::dynamic::Update::RemoveVertex(3),
+                    revolver::dynamic::Update::AddVertex(g.num_vertices() as u32),
+                ],
+            };
+            d.apply(&extra, &mut touched);
+
+            let k = 4;
+            let mut rng = Rng::new(seed ^ 0x9A9A);
+            let labels: Vec<u32> =
+                (0..d.num_vertices()).map(|_| rng.below(k as u64) as u32).collect();
+            let before = quality::evaluate(&d.to_graph(), &labels, k);
+            assert!(d.is_dirty());
+            d.compact();
+            assert!(!d.is_dirty());
+            let after = quality::evaluate(d.base(), &labels, k);
+            assert_eq!(before.local_edges, after.local_edges, "{name} seed={seed}");
+            assert_eq!(
+                before.max_normalized_load, after.max_normalized_load,
+                "{name} seed={seed}"
+            );
+            assert_eq!(
+                before.mean_communication_volume, after.mean_communication_volume,
+                "{name} seed={seed}"
+            );
+            d.check_invariants().unwrap();
+        }
+    });
+}
