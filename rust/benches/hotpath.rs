@@ -4,7 +4,7 @@
 //!
 //!     cargo bench --bench hotpath
 
-use revolver::config::{Frontier, RevolverConfig, Schedule};
+use revolver::config::{Frontier, ProbFormat, RevolverConfig, Schedule};
 use revolver::dynamic::{ChurnRecipe, IncrementalPartitioner};
 use revolver::graph::gen::{generate_dataset, Dataset};
 use revolver::multilevel::Refiner;
@@ -12,14 +12,72 @@ use revolver::la::roulette;
 use revolver::la::signal::build_signals_into;
 use revolver::la::weighted::WeightedLa;
 use revolver::la::Signal;
-use revolver::lp::{neighbor_histogram, normalized};
+use revolver::lp::{neighbor_histogram, neighbor_histogram_counts, normalized};
 use revolver::metrics::quality;
+use revolver::partitioners::revolver::ProbSlab;
 use revolver::partitioners::{by_name, revolver::Revolver, spinner::Spinner, Partitioner};
-use revolver::util::bench::{bench, bench_rmat, full_scale, scale_exp};
+use revolver::util::bench::{bench, bench_rmat, full_scale, scale_exp, validate_rows, BenchResult};
 use revolver::util::json::Json;
 use revolver::util::rng::Rng;
 
+/// Every section tag a BENCH_JSON row may carry, with the numeric keys
+/// each row of that section must provide — the schema
+/// BENCH_hotpath.json records and `scripts/bench_hotpath.sh` harvests.
+/// `validate_rows` gates the payload against this before printing.
+const BENCH_SPEC: &[(&str, &[&str])] = &[
+    ("schedule_rmat", &["threads", "steps", "vertices", "edges", "median_ns", "mean_ns", "min_ns"]),
+    (
+        "stream_rmat",
+        &["parts", "vertices", "edges", "median_ns", "mean_ns", "min_ns", "local_edges",
+          "max_normalized_load"],
+    ),
+    (
+        "multilevel_rmat",
+        &["parts", "vertices", "edges", "supersteps", "median_ns", "mean_ns", "min_ns",
+          "local_edges", "max_normalized_load", "mean_communication_volume"],
+    ),
+    (
+        "frontier_rmat",
+        &["threads", "steps", "parts", "vertices", "edges", "median_ns", "mean_ns", "min_ns",
+          "evaluated", "evaluations_saved", "local_edges", "max_normalized_load", "stamp_reads",
+          "scan_steps", "worklist_steps", "chunk_reuses"],
+    ),
+    (
+        "dynamic_rmat",
+        &["epoch", "parts", "vertices", "edges", "repair_ns", "repair_steps", "seeds",
+          "evaluated", "local_edges", "max_normalized_load"],
+    ),
+    ("hotpath_micro", &["iters", "median_ns", "mean_ns", "min_ns"]),
+    (
+        "frontier_collect",
+        &["dense_frac", "threads", "steps", "vertices", "edges", "stamp_reads", "scan_steps",
+          "worklist_steps", "chunk_reuses", "evaluated", "mean_ns"],
+    ),
+    (
+        "probslab_rmat",
+        &["threads", "steps", "parts", "vertices", "edges", "median_ns", "mean_ns", "min_ns",
+          "local_edges", "max_normalized_load"],
+    ),
+];
+
+/// A `hotpath_micro` row: one isolated-primitive timing.
+fn micro_row(name: &str, r: &BenchResult) -> Json {
+    Json::Obj(
+        [
+            ("bench".to_string(), Json::Str("hotpath_micro".to_string())),
+            ("name".to_string(), Json::Str(name.to_string())),
+            ("iters".to_string(), Json::Num(r.iters as f64)),
+            ("median_ns".to_string(), Json::Num(r.median_ns)),
+            ("mean_ns".to_string(), Json::Num(r.mean_ns)),
+            ("min_ns".to_string(), Json::Num(r.min_ns)),
+        ]
+        .into_iter()
+        .collect(),
+    )
+}
+
 fn main() {
+    let mut rows: Vec<Json> = Vec::new();
     let n = if full_scale() { 1 << 15 } else { 1 << 13 };
     let g = generate_dataset(Dataset::Lj, n, 7).unwrap();
     let k = 32usize;
@@ -78,7 +136,7 @@ fn main() {
     });
     println!("{r}   ({:.1}M LA-updates/s)", r.throughput(100_000) / 1e6);
 
-    // Primitive 4: roulette wheel.
+    // Primitive 4: roulette wheel, f32 and q16 wheels side by side.
     let mut rng = Rng::new(2);
     let r = bench("roulette_spin x 1M", 2, 10, || {
         let mut acc = 0usize;
@@ -88,6 +146,72 @@ fn main() {
         acc
     });
     println!("{r}   ({:.1}M spins/s)", r.throughput(1_000_000) / 1e6);
+    rows.push(micro_row("roulette_spin_f32_1m", &r));
+    let qwheel: Vec<u16> = p.iter().map(|&x| (x * 65535.0).round() as u16).collect();
+    let r = bench("roulette_spin_u16 x 1M", 2, 10, || {
+        let mut acc = 0usize;
+        for _ in 0..1_000_000 {
+            acc += roulette::spin_u16(&qwheel, &mut rng);
+        }
+        acc
+    });
+    println!("{r}   ({:.1}M spins/s)", r.throughput(1_000_000) / 1e6);
+    rows.push(micro_row("roulette_spin_u16_1m", &r));
+
+    // Primitive 5: ProbSlab row update — the LA write path in both
+    // storage formats. The q16 slab pays a dequantize→update→quantize
+    // round-trip per row but halves the bytes each step streams, so the
+    // comparison is the memory-bound story BENCH_hotpath.json tracks.
+    println!();
+    let slab_rows = 4096usize;
+    for (fmt_name, fmt) in [("f32", ProbFormat::F32), ("q16", ProbFormat::Q16)] {
+        let mut slab = ProbSlab::new(slab_rows, k, None, fmt);
+        let mut scratch = vec![0.0f32; k];
+        let r = bench(&format!("probslab[{fmt_name}] update x {slab_rows} rows"), 2, 10, || {
+            for v in 0..slab_rows {
+                slab.update_row_mut(v, &mut scratch, &w, &s, 1.0, 0.1);
+            }
+            slab.row_vec(0)[0]
+        });
+        println!("{r}   ({:.1}M row-updates/s)", r.throughput(slab_rows as u64) / 1e6);
+        rows.push(micro_row(&format!("probslab_update_{fmt_name}"), &r));
+    }
+
+    // Primitive 6: histogram + score + argmax in isolation, f32 gather
+    // vs the u32 counts fast path (eq.-(4) integer weights). Same
+    // vertices, same labels — the delta is pure arithmetic/layout.
+    println!();
+    let mut hist_u = vec![0u32; k];
+    let r = bench("hist+score f32 (all vertices)", 2, 10, || {
+        let mut acc = 0usize;
+        for v in 0..g.num_vertices() as u32 {
+            let wsum = neighbor_histogram(
+                g.neighbors(v),
+                g.neighbor_weights(v),
+                |u| labels[u as usize],
+                &mut hist,
+            );
+            acc += normalized::score_into(&hist, wsum, &pi, &mut scores);
+        }
+        acc
+    });
+    println!("{r}   ({:.1}M edge-visits/s)", r.throughput(2 * g.num_edges() as u64) / 1e6);
+    rows.push(micro_row("hist_score_f32", &r));
+    let r = bench("hist+score u32 counts (all vertices)", 2, 10, || {
+        let mut acc = 0usize;
+        for v in 0..g.num_vertices() as u32 {
+            let cnt = neighbor_histogram_counts(
+                g.neighbors(v),
+                g.neighbor_weights(v),
+                |u| labels[u as usize],
+                &mut hist_u,
+            );
+            acc += normalized::score_counts_into(&hist_u, cnt, &pi, &mut scores);
+        }
+        acc
+    });
+    println!("{r}   ({:.1}M edge-visits/s)", r.throughput(2 * g.num_edges() as u64) / 1e6);
+    rows.push(micro_row("hist_score_u32_counts", &r));
 
     // End-to-end: one full Revolver / Spinner step (the §Perf headline).
     println!();
@@ -129,7 +253,6 @@ fn main() {
         rg.num_edges()
     );
     let steps = 5u32;
-    let mut rows: Vec<Json> = Vec::new();
     for threads in [1usize, 2, 4, 8] {
         for schedule in [Schedule::Vertex, Schedule::Degree] {
             let cfg = RevolverConfig {
@@ -333,6 +456,13 @@ fn main() {
                             "max_normalized_load".to_string(),
                             Json::Num(q.max_normalized_load),
                         ),
+                        ("stamp_reads".to_string(), Json::Num(out.trace.stamp_reads as f64)),
+                        ("scan_steps".to_string(), Json::Num(out.trace.scan_steps as f64)),
+                        (
+                            "worklist_steps".to_string(),
+                            Json::Num(out.trace.worklist_steps as f64),
+                        ),
+                        ("chunk_reuses".to_string(), Json::Num(out.trace.chunk_reuses as f64)),
                     ]
                     .into_iter()
                     .collect(),
@@ -402,5 +532,122 @@ fn main() {
         }
     }
 
-    println!("\nBENCH_JSON {}", Json::Arr(rows).to_string());
+    // Frontier collection in isolation: the same active-set run under
+    // the three collector regimes (dense scan / worklist / hybrid).
+    // Labels are bit-identical across rows (hotpath_parity.rs proves
+    // it), so the stamp_reads / scan_steps / worklist_steps deltas at
+    // equal mean_ns isolate the scheduling cost — this is where the
+    // "≥5× fewer stamp reads" acceptance row comes from.
+    for &e in exps {
+        let cg = bench_rmat(e);
+        println!(
+            "\n=== frontier collect: scan vs worklist vs hybrid (R-MAT |V|={} |E|={}, k={k8}) ===\n",
+            cg.num_vertices(),
+            cg.num_edges()
+        );
+        for frac in [0.0f64, 1.0, 0.25] {
+            let cfg = RevolverConfig {
+                parts: k8,
+                max_steps: fsteps,
+                halt_window: u32::MAX,
+                threads: 1,
+                frontier: Frontier::On,
+                frontier_dense_frac: frac,
+                seed: 3,
+                ..Default::default()
+            };
+            let p = Revolver::new(cfg);
+            let out = p.partition(&cg);
+            let name = format!("collect 2^{e} dense_frac={frac}");
+            let r = bench(&name, 1, 3, || p.partition(&cg).labels.len());
+            println!(
+                "{r}   (stamp_reads={}, scan={}, worklist={}, chunk_reuses={})",
+                out.trace.stamp_reads,
+                out.trace.scan_steps,
+                out.trace.worklist_steps,
+                out.trace.chunk_reuses
+            );
+            rows.push(Json::Obj(
+                [
+                    ("bench".to_string(), Json::Str("frontier_collect".to_string())),
+                    ("dense_frac".to_string(), Json::Num(frac)),
+                    ("threads".to_string(), Json::Num(1.0)),
+                    ("steps".to_string(), Json::Num(fsteps as f64)),
+                    ("vertices".to_string(), Json::Num(cg.num_vertices() as f64)),
+                    ("edges".to_string(), Json::Num(cg.num_edges() as f64)),
+                    ("stamp_reads".to_string(), Json::Num(out.trace.stamp_reads as f64)),
+                    ("scan_steps".to_string(), Json::Num(out.trace.scan_steps as f64)),
+                    ("worklist_steps".to_string(), Json::Num(out.trace.worklist_steps as f64)),
+                    ("chunk_reuses".to_string(), Json::Num(out.trace.chunk_reuses as f64)),
+                    ("evaluated".to_string(), Json::Num(out.trace.total_evaluated as f64)),
+                    ("mean_ns".to_string(), Json::Num(r.mean_ns)),
+                ]
+                .into_iter()
+                .collect(),
+            ));
+        }
+    }
+
+    // Quantized LA storage end-to-end: the same frontier run with f32
+    // vs q16 slab rows. Different trajectories (the q16 wheel consumes
+    // the RNG differently), so each row carries its own quality numbers
+    // — the acceptance check is the time ratio *and* the q16 quality
+    // staying inside the envelope hotpath_parity.rs enforces.
+    for &e in exps {
+        let pg = bench_rmat(e);
+        println!(
+            "\n=== probslab: f32 vs q16 rows, frontier on (R-MAT |V|={} |E|={}, k={k8}) ===\n",
+            pg.num_vertices(),
+            pg.num_edges()
+        );
+        for (fmt_name, fmt) in [("f32", ProbFormat::F32), ("q16", ProbFormat::Q16)] {
+            let cfg = RevolverConfig {
+                parts: k8,
+                max_steps: fsteps,
+                halt_window: u32::MAX,
+                threads: 1,
+                frontier: Frontier::On,
+                prob_format: fmt,
+                seed: 3,
+                ..Default::default()
+            };
+            let p = Revolver::new(cfg);
+            let out = p.partition(&pg);
+            let q = quality::evaluate(&pg, &out.labels, k8);
+            let r = bench(&format!("revolver 2^{e} prob_format={fmt_name}"), 1, 3, || {
+                p.partition(&pg).labels.len()
+            });
+            println!(
+                "{r}   (local={:.4}, mnl={:.3})",
+                q.local_edges, q.max_normalized_load
+            );
+            rows.push(Json::Obj(
+                [
+                    ("bench".to_string(), Json::Str("probslab_rmat".to_string())),
+                    ("prob_format".to_string(), Json::Str(fmt_name.to_string())),
+                    ("threads".to_string(), Json::Num(1.0)),
+                    ("steps".to_string(), Json::Num(fsteps as f64)),
+                    ("parts".to_string(), Json::Num(k8 as f64)),
+                    ("vertices".to_string(), Json::Num(pg.num_vertices() as f64)),
+                    ("edges".to_string(), Json::Num(pg.num_edges() as f64)),
+                    ("median_ns".to_string(), Json::Num(r.median_ns)),
+                    ("mean_ns".to_string(), Json::Num(r.mean_ns)),
+                    ("min_ns".to_string(), Json::Num(r.min_ns)),
+                    ("local_edges".to_string(), Json::Num(q.local_edges)),
+                    ("max_normalized_load".to_string(), Json::Num(q.max_normalized_load)),
+                ]
+                .into_iter()
+                .collect(),
+            ));
+        }
+    }
+
+    // Schema gate: a renamed key or unknown section dies here rather
+    // than producing unmergeable BENCH_hotpath.json history rows.
+    let payload = Json::Arr(rows);
+    match validate_rows(&payload, BENCH_SPEC) {
+        Ok(count) => println!("\n({count} BENCH_JSON rows validated)"),
+        Err(e) => panic!("BENCH_JSON schema violation: {e}"),
+    }
+    println!("\nBENCH_JSON {}", payload.to_string());
 }

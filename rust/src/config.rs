@@ -93,6 +93,34 @@ impl std::str::FromStr for Frontier {
     }
 }
 
+/// Storage format of the learning-automaton probability slab
+/// (`partitioners::revolver::ProbSlab`, the n×k hot structure).
+///
+/// Rows are normalized probability vectors, so 16-bit fixed point
+/// (q = round(p·65535)) resolves 1/65535 ≈ 1.5e-5 per entry — far below
+/// the statistical noise of the roulette selection — while halving the
+/// slab's load/store bandwidth. `F32` is the bit-exact reproduction
+/// format the parity tests pin.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ProbFormat {
+    /// u16 fixed point, 1/65535 resolution (default; 2× less bandwidth).
+    #[default]
+    Q16,
+    /// f32 rows — bit-exact with the pre-quantization implementation.
+    F32,
+}
+
+impl std::str::FromStr for ProbFormat {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_lowercase().as_str() {
+            "q16" | "u16" | "fixed" => Ok(ProbFormat::Q16),
+            "f32" | "float" => Ok(ProbFormat::F32),
+            other => bail!("unknown prob format {other:?} (expected q16|f32)"),
+        }
+    }
+}
+
 /// Streaming algorithm family (L4 `stream` subsystem): one-pass linear
 /// deterministic greedy, one-pass Fennel, or prioritized restreaming.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -233,6 +261,17 @@ pub struct RevolverConfig {
     /// changed since their last evaluation (`--frontier off` restores
     /// the legacy full-sweep supersteps bit-exactly).
     pub frontier: Frontier,
+    /// Frontier collection strategy crossover: while the frontier holds
+    /// more than this fraction of |V|, the coordinator scans the stamp
+    /// array (dense, branch-free); once it shrinks below, workers record
+    /// woken vertices into per-worker worklists merged at the step
+    /// barrier, making coordinator cost O(frontier) instead of O(n).
+    /// `0.0` forces scan-always, `1.0` worklist-always (both produce
+    /// bit-identical runs; DESIGN.md §Hot paths).
+    pub frontier_dense_frac: f64,
+    /// Storage format of the LA probability slab (`q16` fixed point
+    /// halves bandwidth; `f32` is the bit-exact parity format).
+    pub prob_format: ProbFormat,
     /// RNG seed.
     pub seed: u64,
     /// Async (paper headline) or sync (ablation).
@@ -294,6 +333,8 @@ impl Default for RevolverConfig {
             threads: default_threads(),
             schedule: Schedule::Vertex,
             frontier: Frontier::On,
+            frontier_dense_frac: 0.25,
+            prob_format: ProbFormat::Q16,
             seed: 42,
             execution: ExecutionModel::Asynchronous,
             engine: Engine::Native,
@@ -340,6 +381,12 @@ impl RevolverConfig {
             self.beta
         );
         anyhow::ensure!(self.threads >= 1, "threads must be >= 1");
+        anyhow::ensure!(
+            self.frontier_dense_frac.is_finite()
+                && (0.0..=1.0).contains(&self.frontier_dense_frac),
+            "frontier_dense_frac must be in [0,1], got {}",
+            self.frontier_dense_frac
+        );
         anyhow::ensure!(
             self.fennel_gamma > 1.0,
             "fennel_gamma must be > 1 (superlinear load cost), got {}",
@@ -399,6 +446,11 @@ impl RevolverConfig {
                 "threads" => cfg.threads = value.parse().context("threads")?,
                 "schedule" => cfg.schedule = value.parse()?,
                 "frontier" => cfg.frontier = value.parse()?,
+                "frontier_dense_frac" => {
+                    cfg.frontier_dense_frac =
+                        value.parse().context("frontier_dense_frac")?
+                }
+                "prob_format" => cfg.prob_format = value.parse()?,
                 "seed" => cfg.seed = value.parse().context("seed")?,
                 "execution" => {
                     cfg.execution = match value.as_str() {
@@ -561,6 +613,32 @@ mod tests {
         assert_eq!(c.frontier, Frontier::Off);
         let c = RevolverConfig::from_toml_str("[revolver]\nfrontier = \"on\"\n").unwrap();
         assert_eq!(c.frontier, Frontier::On);
+    }
+
+    #[test]
+    fn prob_format_parse_default_and_toml() {
+        assert_eq!(RevolverConfig::default().prob_format, ProbFormat::Q16);
+        assert_eq!("q16".parse::<ProbFormat>().unwrap(), ProbFormat::Q16);
+        assert_eq!("F32".parse::<ProbFormat>().unwrap(), ProbFormat::F32);
+        assert_eq!("fixed".parse::<ProbFormat>().unwrap(), ProbFormat::Q16);
+        assert!("f64".parse::<ProbFormat>().is_err());
+        let c = RevolverConfig::from_toml_str("prob_format = \"f32\"\n").unwrap();
+        assert_eq!(c.prob_format, ProbFormat::F32);
+        let c = RevolverConfig::from_toml_str("[revolver]\nprob_format = \"q16\"\n").unwrap();
+        assert_eq!(c.prob_format, ProbFormat::Q16);
+    }
+
+    #[test]
+    fn frontier_dense_frac_default_toml_and_validation() {
+        let d = RevolverConfig::default();
+        assert!((d.frontier_dense_frac - 0.25).abs() < 1e-12);
+        let c = RevolverConfig::from_toml_str("frontier_dense_frac = 0.5\n").unwrap();
+        assert!((c.frontier_dense_frac - 0.5).abs() < 1e-12);
+        // Degenerate endpoints are legal (scan-always / worklist-always).
+        assert!(RevolverConfig::from_toml_str("frontier_dense_frac = 0.0\n").is_ok());
+        assert!(RevolverConfig::from_toml_str("frontier_dense_frac = 1.0\n").is_ok());
+        assert!(RevolverConfig::from_toml_str("frontier_dense_frac = 1.5\n").is_err());
+        assert!(RevolverConfig::from_toml_str("frontier_dense_frac = -0.1\n").is_err());
     }
 
     #[test]

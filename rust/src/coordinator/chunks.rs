@@ -90,6 +90,22 @@ impl Chunks {
         Chunks::by_weight(verts.len(), threads, |i| weight(verts[i]))
     }
 
+    /// Reuse this layout for a **shorter** vertex/position list of
+    /// length `new_total` — the frontier-shrink amortization: rebuilding
+    /// [`Chunks::by_weight_subset`] costs O(frontier) per step, but when
+    /// the frontier shrank by < 2× the previous quantile boundaries are
+    /// still near-balanced, so the coordinator clamps them instead of
+    /// recomputing the prefix-sum walk. Every boundary is clamped to
+    /// `new_total`; chunk count is preserved, so — unlike the
+    /// constructors — trailing chunks **may be empty** (the engine
+    /// tolerates empty slices). Cover-exactly over `0..new_total` still
+    /// holds.
+    pub fn clamped(&self, new_total: usize) -> Self {
+        debug_assert!(new_total <= self.n);
+        let bounds: Vec<usize> = self.bounds.iter().map(|&b| b.min(new_total)).collect();
+        Chunks { n: new_total, bounds }
+    }
+
     /// Number of chunks (== worker threads used).
     pub fn len(&self) -> usize {
         self.bounds.len() - 1
@@ -315,6 +331,43 @@ mod tests {
         let c = Chunks::by_weight_subset(&verts, 4, |v| if v == 0 { 1_000_000 } else { 1 });
         assert_chunk_invariants(&c, 50);
         assert_eq!(c.range(0), 0..1, "hub chunk should stop right after the hub");
+    }
+
+    #[test]
+    fn clamped_covers_exactly_allows_empty_tail() {
+        let g = ba::barabasi_albert(1024, 8, 5);
+        let deg = out_degrees(&g);
+        let verts: Vec<u32> = (0..1024u32).collect();
+        let c = Chunks::by_weight_subset(&verts, 4, |v| 1 + deg[v as usize]);
+        for new_total in [1024usize, 900, 600, 513, 4, 1, 0] {
+            let cc = c.clamped(new_total);
+            assert_eq!(cc.len(), c.len(), "chunk count preserved");
+            assert_eq!(cc.total(), new_total);
+            // Cover-exactly over 0..new_total (empty chunks legal).
+            let mut covered = vec![false; new_total];
+            for i in 0..cc.len() {
+                for v in cc.range(i) {
+                    assert!(!covered[v], "position {v} covered twice");
+                    covered[v] = true;
+                }
+            }
+            assert!(covered.iter().all(|&x| x), "new_total={new_total}");
+            // Ranges stay monotone and in-bounds.
+            for i in 0..cc.len() {
+                let r = cc.range(i);
+                assert!(r.start <= r.end && r.end <= new_total);
+            }
+        }
+    }
+
+    #[test]
+    fn clamped_identity_when_total_unchanged() {
+        let c = Chunks::by_weight(100, 4, |v| 1 + v as u64);
+        let cc = c.clamped(100);
+        assert_eq!(cc.len(), c.len());
+        for i in 0..c.len() {
+            assert_eq!(cc.range(i), c.range(i));
+        }
     }
 
     #[test]

@@ -64,6 +64,7 @@
 //! convergence score becomes a mean over *evaluated* vertices
 //! (DESIGN.md §Active-set).
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::{mpsc, Arc, Barrier, Mutex};
 
@@ -109,6 +110,11 @@ impl StepStats {
 struct StepPlan {
     verts: Vec<VertexId>,
     chunks: Chunks,
+    /// Workers record first-wake transitions into per-worker worklists
+    /// this step (the O(frontier) collection path — set when the current
+    /// frontier is below `cfg.frontier_dense_frac · n`, so the *next*
+    /// step's frontier can be assembled without an O(n) stamp scan).
+    record: bool,
 }
 
 impl StepPlan {
@@ -150,6 +156,17 @@ pub struct StepCtx<'a> {
     /// Epoch stamps of the active-set scheduler; `None` = frontier off
     /// (every wake is a no-op and all vertices run every step).
     stamps: Option<&'a [AtomicU32]>,
+    /// Per-worker wake worklist (the O(frontier) collection path).
+    /// `Some` only when the step plan asked workers to record: a vertex
+    /// is pushed exactly when its stamp *transitions* to `step + 1` —
+    /// `fetch_max` returns the previous value, and during step `s` every
+    /// pre-existing stamp is ≤ `s`, so the first wake of a vertex (and
+    /// only the first, across all workers: the atomic max hands the
+    /// transition to exactly one caller) observes `prev < s + 1`. The
+    /// merged per-worker lists are therefore the exact deduplicated
+    /// next-step frontier, with the monotone stamps retained as the
+    /// correctness oracle (debug builds re-scan and compare).
+    wake_sink: Option<&'a RefCell<Vec<VertexId>>>,
 }
 
 impl StepCtx<'_> {
@@ -211,9 +228,7 @@ impl StepCtx<'_> {
     /// flip) or are otherwise unsettled. No-op with the frontier off.
     #[inline]
     pub fn wake(&self, v: VertexId) {
-        if let Some(stamps) = self.stamps {
-            stamps[v as usize].fetch_max(self.step + 1, Ordering::Relaxed);
-        }
+        self.stamp_wake(v);
     }
 
     /// Wake `v` and every undirected (in or out) neighbour for the next
@@ -221,11 +236,26 @@ impl StepCtx<'_> {
     /// workers merge for free and nothing is ever cleared per-step.
     #[inline]
     fn wake_neighborhood(&self, v: VertexId) {
+        if self.stamps.is_some() {
+            self.stamp_wake(v);
+            for &u in self.graph.neighbors(v) {
+                self.stamp_wake(u);
+            }
+        }
+    }
+
+    /// Monotone stamp bump, recording the first-wake transition into the
+    /// worker's worklist when the step plan asked for it (see
+    /// [`StepCtx::wake_sink`]).
+    #[inline]
+    fn stamp_wake(&self, v: VertexId) {
         if let Some(stamps) = self.stamps {
             let next = self.step + 1;
-            stamps[v as usize].fetch_max(next, Ordering::Relaxed);
-            for &u in self.graph.neighbors(v) {
-                stamps[u as usize].fetch_max(next, Ordering::Relaxed);
+            let prev = stamps[v as usize].fetch_max(next, Ordering::Relaxed);
+            if prev < next {
+                if let Some(sink) = self.wake_sink {
+                    sink.borrow_mut().push(v);
+                }
             }
         }
     }
@@ -448,11 +478,12 @@ pub fn run_with_frontier<P: VertexProgram>(
         Arc::new(StepPlan {
             verts: Vec::new(),
             chunks: Chunks::by_weight_subset(&[], t, |_| 1),
+            record: false,
         })
     } else {
         let chunks = chunks_for(g, cfg);
         debug_assert_eq!(chunks.len(), t, "worker count must match the chunk layout");
-        Arc::new(StepPlan { verts: (0..n as VertexId).collect(), chunks })
+        Arc::new(StepPlan { verts: (0..n as VertexId).collect(), chunks, record: false })
     };
     let plan_slot: Mutex<Arc<StepPlan>> = Mutex::new(initial_plan);
     let snap_slot: Mutex<Arc<StepSnapshots>> = Mutex::new(Arc::new(StepSnapshots::default()));
@@ -460,11 +491,32 @@ pub fn run_with_frontier<P: VertexProgram>(
     let b_slot: Mutex<Option<Arc<P::PhaseB>>> = Mutex::new(None);
     // Worker → coordinator aggregates (one message per worker per step).
     let (stats_tx, stats_rx) = mpsc::channel::<(usize, StepStats)>();
+    // Worker → coordinator wake worklists: exactly one message per
+    // worker on recording steps, none otherwise.
+    let (wake_tx, wake_rx) = mpsc::channel::<Vec<VertexId>>();
 
     let mut detector = ConvergenceDetector::new(cfg.halt_theta, cfg.halt_window);
     let mut trace = RunTrace::default();
     let mut executed_steps: u32 = 0;
     let mut total_evaluated: u64 = 0;
+    // ── Frontier-collection machinery (tentpole: O(frontier) steps) ──
+    // Next step's frontier as merged from the workers' wake worklists
+    // (`None` = not recorded last step → fall back to the stamp scan).
+    let mut pending: Option<Vec<VertexId>> = None;
+    // Whether the *current* step's plan records wakes.
+    let mut recording = false;
+    // Worklist collection pays off below this frontier size; above it
+    // the branch-free dense stamp scan wins (DESIGN.md §Hot paths).
+    let dense_limit = cfg.frontier_dense_frac * n as f64;
+    // Frontier chunk layout cache: `(layout, frontier size it was built
+    // for)`. While the frontier shrinks by < 2×, the old quantile
+    // boundaries are clamped instead of recomputed.
+    let mut chunk_cache: Option<(Chunks, usize)> = None;
+    // Instrumentation for the bench trajectory (BENCH_hotpath.json).
+    let mut stamp_reads: u64 = 0;
+    let mut scan_steps: u32 = 0;
+    let mut worklist_steps: u32 = 0;
+    let mut chunk_reuses: u32 = 0;
     // Last step's aggregates, for a truthful terminal trace point when
     // the sampler did not land on the final step.
     let mut last_mean_score = 0.0f64;
@@ -479,10 +531,14 @@ pub fn run_with_frontier<P: VertexProgram>(
             let (plan_slot, snap_slot, a_slot, b_slot) =
                 (&plan_slot, &snap_slot, &a_slot, &b_slot);
             let stats_tx = stats_tx.clone();
+            let wake_tx = wake_tx.clone();
             let base_rng = base_rng.clone();
             scope.spawn(move || {
                 let mut scratch = program.make_scratch();
                 let mut step: u64 = 0;
+                // This worker's wake worklist (drained every recording
+                // step; allocation reused via the swap below).
+                let wake_buf: RefCell<Vec<VertexId>> = RefCell::new(Vec::new());
                 loop {
                     barrier.wait(); // W1: step start (coordinator prepared)
                     if stop.load(Ordering::Acquire) {
@@ -502,6 +558,7 @@ pub fn run_with_frontier<P: VertexProgram>(
                         snap: &snap,
                         sync,
                         stamps: stamps_ref,
+                        wake_sink: if plan.record { Some(&wake_buf) } else { None },
                     };
                     let mut rng = base_rng.fork(step * 2 * t as u64 + c as u64);
                     let stats_a =
@@ -516,32 +573,67 @@ pub fn run_with_frontier<P: VertexProgram>(
                     let mut stats = stats_a.merged(stats_b);
                     stats.evaluated = work.len() as u64;
                     stats_tx.send((c, stats)).expect("coordinator alive");
+                    if plan.record {
+                        wake_tx
+                            .send(std::mem::take(&mut *wake_buf.borrow_mut()))
+                            .expect("coordinator alive");
+                    }
                     barrier.wait(); // W3: step done; coordinator aggregates
                     step += 1;
                 }
             });
         }
         drop(stats_tx); // workers hold their own clones
+        drop(wake_tx);
 
         // ── Coordinator ──
         for step in 0..cfg.max_steps {
             if frontier_on {
-                // Collect the active frontier and rebuild degree-balanced
-                // chunks over it, so thread balance tracks live work.
-                // Step 0 honours the explicit initial frontier (the stamp
-                // scan would return all of 0..n — which is exactly what
-                // `InitialFrontier::All` wants, so only `Seeds` diverges).
-                let mut verts: Vec<VertexId> = Vec::new();
-                match (&seed_frontier, step) {
-                    (Some(seeds), 0) => verts.extend_from_slice(seeds),
-                    _ => {
-                        for (v, s) in stamps.iter().enumerate() {
-                            if s.load(Ordering::Relaxed) >= step {
-                                verts.push(v as VertexId);
+                // Collect the active frontier. Three sources, cheapest
+                // first: step 0 is the identity (or the explicit seed
+                // list) and needs no stamp reads at all; a recorded
+                // worklist from last step costs O(frontier); otherwise
+                // fall back to the dense O(n) stamp scan. The worklist
+                // path is *bit-identical* to the scan: merged first-wake
+                // transitions are exactly the set {v : stamp[v] ≥ step}
+                // (see [`StepCtx::wake_sink`]), and sorting restores the
+                // scan's ascending vertex order, so chunking and RNG
+                // stream assignment cannot diverge between the paths.
+                let verts: Vec<VertexId> = match (&seed_frontier, step) {
+                    (Some(seeds), 0) => seeds.clone(),
+                    (None, 0) => (0..n as VertexId).collect(),
+                    _ => match pending.take() {
+                        Some(wl) => {
+                            worklist_steps += 1;
+                            #[cfg(debug_assertions)]
+                            {
+                                let mut oracle: Vec<VertexId> = Vec::new();
+                                for (v, s) in stamps.iter().enumerate() {
+                                    if s.load(Ordering::Relaxed) >= step {
+                                        oracle.push(v as VertexId);
+                                    }
+                                }
+                                debug_assert_eq!(
+                                    wl, oracle,
+                                    "worklist frontier diverged from the stamp oracle \
+                                     at step {step}"
+                                );
                             }
+                            wl
                         }
-                    }
-                }
+                        None => {
+                            let mut scanned: Vec<VertexId> = Vec::new();
+                            for (v, s) in stamps.iter().enumerate() {
+                                if s.load(Ordering::Relaxed) >= step {
+                                    scanned.push(v as VertexId);
+                                }
+                            }
+                            stamp_reads += n as u64;
+                            scan_steps += 1;
+                            scanned
+                        }
+                    },
+                };
                 if verts.is_empty() && detector.observe_empty_frontier() {
                     // No vertex can change state any more: labels, λ and
                     // loads of skipped vertices are valid by
@@ -550,10 +642,30 @@ pub fn run_with_frontier<P: VertexProgram>(
                     trace.converged_at = Some(executed_steps.saturating_sub(1));
                     break;
                 }
-                let fchunks = Chunks::by_weight_subset(&verts, t, |v| {
-                    1 + g.out_degree(v) as u64
-                });
-                *plan_slot.lock().unwrap() = Arc::new(StepPlan { verts, chunks: fchunks });
+                // Record wakes whenever the frontier sits below the
+                // density crossover, so the *next* collection is the
+                // O(frontier) merge. `frontier_dense_frac = 0` forces
+                // scan-always, `1` worklist-always.
+                let f = verts.len();
+                recording = f as f64 <= dense_limit && f > 0;
+                // Chunk-rebuild amortization: a < 2× shrink keeps the
+                // cached quantile boundaries near-balanced — clamp them
+                // instead of re-walking the degree prefix sums.
+                let fchunks = match &chunk_cache {
+                    Some((cached, built_for)) if f <= *built_for && 2 * f > *built_for => {
+                        chunk_reuses += 1;
+                        cached.clamped(f)
+                    }
+                    _ => {
+                        let fresh = Chunks::by_weight_subset(&verts, t, |v| {
+                            1 + g.out_degree(v) as u64
+                        });
+                        chunk_cache = Some((fresh.clone(), f));
+                        fresh
+                    }
+                };
+                *plan_slot.lock().unwrap() =
+                    Arc::new(StepPlan { verts, chunks: fchunks, record: recording });
             }
             executed_steps = step + 1;
             demand.reset();
@@ -570,6 +682,19 @@ pub fn run_with_frontier<P: VertexProgram>(
                 Some(Arc::new(program.prepare_phase_b(g, &state, &demand, step)));
             barrier.wait(); // W2b
             barrier.wait(); // W3
+
+            // Merge the wake worklists (recording steps send exactly one
+            // message per worker) into next step's frontier: sorted
+            // ascending = the stamp scan's vertex order.
+            if recording {
+                let mut merged: Vec<VertexId> = Vec::new();
+                for _ in 0..t {
+                    let wl = wake_rx.recv().expect("worker alive");
+                    merged.extend_from_slice(&wl);
+                }
+                merged.sort_unstable();
+                pending = Some(merged);
+            }
 
             // Deterministic reduction: fill per-worker slots, then fold
             // in chunk order (f64 addition order is fixed run-to-run).
@@ -632,6 +757,10 @@ pub fn run_with_frontier<P: VertexProgram>(
         });
     }
     trace.total_evaluated = total_evaluated;
+    trace.stamp_reads = stamp_reads;
+    trace.scan_steps = scan_steps;
+    trace.worklist_steps = worklist_steps;
+    trace.chunk_reuses = chunk_reuses;
     trace.wall_time_s = sw.elapsed_s();
     PartitionOutput { labels, trace }
 }
@@ -1017,6 +1146,94 @@ mod tests {
         );
         assert_eq!(out.trace.total_evaluated, 1 + (steps as u64 - 1) * 3);
         assert_eq!(out.trace.steps(), steps);
+    }
+
+    #[test]
+    fn worklist_collection_bit_identical_to_scan() {
+        // Scan-always (frac 0.0), worklist-always (1.0) and the hybrid
+        // default must produce identical runs — same frontier sets, same
+        // order, same chunking — differing only in collection-path
+        // accounting.
+        let g = ring_graph(103);
+        let run_frac = |frac: f64| {
+            let mut c = cfg(3, 6);
+            c.frontier_dense_frac = frac;
+            run(&g, &c, &SingleHotProgram)
+        };
+        let scan = run_frac(0.0);
+        let wl = run_frac(1.0);
+        let hybrid = run_frac(0.25);
+        assert_eq!(scan.labels, wl.labels);
+        assert_eq!(scan.labels, hybrid.labels);
+        assert_eq!(scan.trace.total_evaluated, wl.trace.total_evaluated);
+        assert_eq!(scan.trace.total_evaluated, hybrid.trace.total_evaluated);
+        assert_eq!(scan.trace.steps(), 6);
+
+        // Scan-always: 5 post-identity collections × 103 stamp loads.
+        assert_eq!(scan.trace.scan_steps, 5);
+        assert_eq!(scan.trace.worklist_steps, 0);
+        assert_eq!(scan.trace.stamp_reads, 5 * 103);
+        // Worklist-always: no collection ever reads a stamp.
+        assert_eq!(wl.trace.scan_steps, 0);
+        assert_eq!(wl.trace.worklist_steps, 5);
+        assert_eq!(wl.trace.stamp_reads, 0);
+        // Hybrid: the full step-0 frontier is above the 0.25 crossover
+        // (one scan), then the 3-vertex frontier rides worklists —
+        // 5× fewer coordinator stamp reads than scan-always.
+        assert_eq!(hybrid.trace.scan_steps, 1);
+        assert_eq!(hybrid.trace.worklist_steps, 4);
+        assert_eq!(hybrid.trace.stamp_reads, 103);
+
+        // Chunk-layout amortization fires identically in every mode
+        // (steps 2..=5 reuse the f=3 layout built at step 1).
+        assert_eq!(scan.trace.chunk_reuses, 4);
+        assert_eq!(wl.trace.chunk_reuses, hybrid.trace.chunk_reuses);
+        assert_eq!(scan.trace.chunk_reuses, hybrid.trace.chunk_reuses);
+    }
+
+    #[test]
+    fn worklist_matches_scan_with_probe_churn_multithreaded() {
+        // ProbeProgram keeps every vertex publishing changes, so the
+        // frontier stays full — the worklist path must still collect the
+        // exact identity frontier from concurrent per-worker wake lists.
+        for threads in [1usize, 2, 4] {
+            let mk = |frac: f64| {
+                let p = ProbeProgram::new(ExecutionModel::Asynchronous, 64);
+                let g = ring_graph(64);
+                let mut c = cfg(threads, 4);
+                c.frontier_dense_frac = frac;
+                let out = run(&g, &c, &p);
+                (out, p.a_visits.load(Ordering::Relaxed), p.b_visits.load(Ordering::Relaxed))
+            };
+            let (scan, sa, sb) = mk(0.0);
+            let (wl, wa, wb) = mk(1.0);
+            assert_eq!(scan.labels, wl.labels, "threads={threads}");
+            assert_eq!(scan.trace.total_evaluated, wl.trace.total_evaluated);
+            assert_eq!((sa, sb), (wa, wb), "threads={threads}");
+            assert_eq!(wl.trace.stamp_reads, 0);
+            assert_eq!(wl.trace.worklist_steps, 3);
+        }
+    }
+
+    #[test]
+    fn seeded_frontier_records_worklists_too() {
+        // A small seed frontier immediately crosses under the density
+        // threshold, so the follow-up steps ride worklists and the
+        // stamp array is never scanned.
+        let n = 103usize;
+        let g = ring_graph(n);
+        let steps = 5u32;
+        let out = run_with_frontier(
+            &g,
+            &cfg(3, steps),
+            &SingleHotProgram,
+            InitialAssignment::Random(5),
+            InitialFrontier::Seeds(vec![0]),
+        );
+        assert_eq!(out.trace.total_evaluated, 1 + (steps as u64 - 1) * 3);
+        assert_eq!(out.trace.stamp_reads, 0);
+        assert_eq!(out.trace.scan_steps, 0);
+        assert_eq!(out.trace.worklist_steps, steps - 1);
     }
 
     #[test]

@@ -31,6 +31,34 @@ pub fn spin(probs: &[f32], rng: &mut Rng) -> usize {
     last_nonzero
 }
 
+/// [`spin`] over a u16 fixed-point row (the quantized `ProbSlab`
+/// format, q = round(p·65535)). The wheel spins directly on the
+/// integer weights — one u64 draw, no dequantization, no FP in the
+/// walk — with the same guarantees as the f32 wheel: zero-weight
+/// actions are never drawn, a degenerate all-zero row falls back to
+/// uniform, and accumulated shortfall lands on the last non-zero index.
+#[inline]
+pub fn spin_u16(probs: &[u16], rng: &mut Rng) -> usize {
+    debug_assert!(!probs.is_empty());
+    let total: u32 = probs.iter().map(|&p| p as u32).sum();
+    if total == 0 {
+        return rng.below_usize(probs.len());
+    }
+    let mut target = rng.below(total as u64) as u32;
+    let mut last_nonzero = 0usize;
+    for (i, &p) in probs.iter().enumerate() {
+        let p = p as u32;
+        if p > 0 {
+            last_nonzero = i;
+            if target < p {
+                return i;
+            }
+            target -= p;
+        }
+    }
+    last_nonzero
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -90,5 +118,54 @@ mod tests {
     fn single_action() {
         let mut rng = Rng::new(5);
         assert_eq!(spin(&[1.0], &mut rng), 0);
+    }
+
+    #[test]
+    fn u16_respects_distribution() {
+        // q16 encoding of [0.1, 0.6, 0.3].
+        let probs = [6554u16, 39321, 19661];
+        let expect = [0.1f64, 0.6, 0.3];
+        let mut rng = Rng::new(21);
+        let mut counts = [0usize; 3];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[spin_u16(&probs, &mut rng)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let frac = c as f64 / n as f64;
+            assert!((frac - expect[i]).abs() < 0.01, "action {i}: {frac}");
+        }
+    }
+
+    #[test]
+    fn u16_zero_weight_never_drawn() {
+        let probs = [0u16, 65535, 0];
+        let mut rng = Rng::new(22);
+        for _ in 0..1000 {
+            assert_eq!(spin_u16(&probs, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn u16_degenerate_all_zero_uniform() {
+        let probs = [0u16; 4];
+        let mut rng = Rng::new(23);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..100 {
+            seen.insert(spin_u16(&probs, &mut rng));
+        }
+        assert!(seen.len() > 1, "all-zero wheel should fall back to uniform");
+    }
+
+    #[test]
+    fn u16_single_and_shortfall() {
+        let mut rng = Rng::new(24);
+        assert_eq!(spin_u16(&[7], &mut rng), 0);
+        // Trailing zeros: the draw can never land past the last
+        // non-zero entry.
+        let probs = [1u16, 1, 0, 0];
+        for _ in 0..1000 {
+            assert!(spin_u16(&probs, &mut rng) < 2);
+        }
     }
 }

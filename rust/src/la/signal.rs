@@ -77,6 +77,68 @@ pub fn build_signals_into(raw: &[f32], w_out: &mut [f32], s_out: &mut [Signal]) 
     }
 }
 
+/// [`build_signals_into`] over the *implicit* raw vector
+/// `raw[i] = base[i] + overlay[i]`, without materializing it.
+///
+/// This is the sparse-seeding fast path for eq. 13: the hot loop keeps
+/// the dense `scores` (base) untouched and accumulates the neighbour
+/// modulation into a zeroed `overlay` scratch cleared via its touched
+/// stack — O(deg) writes instead of an O(k) `copy_from_slice` per
+/// vertex. Each pass recomputes `base[i] + overlay[i]`; f32 addition is
+/// deterministic, so the result is **bit-identical** to calling
+/// [`build_signals_into`] on the precomputed sum (asserted in tests).
+pub fn build_signals_overlay_into(
+    base: &[f32],
+    overlay: &[f32],
+    w_out: &mut [f32],
+    s_out: &mut [Signal],
+) {
+    let m = base.len();
+    debug_assert!(m >= 2);
+    debug_assert_eq!(overlay.len(), m);
+    debug_assert_eq!(w_out.len(), m);
+    debug_assert_eq!(s_out.len(), m);
+
+    let mut sum = 0.0f32;
+    for i in 0..m {
+        sum += base[i] + overlay[i];
+    }
+    let mean: f32 = sum / m as f32;
+
+    let mut rew_sum = 0.0f32;
+    let mut rew_cnt = 0u32;
+    let mut pen_sum = 0.0f32;
+    let mut pen_cnt = 0u32;
+    for i in 0..m {
+        let x = base[i] + overlay[i];
+        let dev = (x - mean).abs();
+        w_out[i] = dev;
+        if x > mean {
+            s_out[i] = Signal::Reward;
+            rew_sum += dev;
+            rew_cnt += 1;
+        } else {
+            s_out[i] = Signal::Penalty;
+            pen_sum += dev;
+            pen_cnt += 1;
+        }
+    }
+
+    for i in 0..m {
+        let (sum, cnt) = match s_out[i] {
+            Signal::Reward => (rew_sum, rew_cnt),
+            Signal::Penalty => (pen_sum, pen_cnt),
+        };
+        w_out[i] = if sum > 0.0 {
+            w_out[i] / sum
+        } else if cnt > 0 {
+            1.0 / cnt as f32
+        } else {
+            0.0
+        };
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,6 +203,33 @@ mod tests {
         assert!((w[0] - 1.0).abs() < 1e-6);
         assert!((w[1] - 0.5).abs() < 1e-6);
         assert!((w[2] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn overlay_variant_bit_identical_to_dense_sum() {
+        use crate::util::rng::Rng;
+        for seed in 0..60u64 {
+            let mut rng = Rng::new(0x0E ^ seed);
+            let k = 2 + rng.below_usize(30);
+            let base: Vec<f32> = (0..k).map(|_| rng.next_f32()).collect();
+            // Sparse overlay: most entries zero, as the modulation loop
+            // produces (only labels of v's neighbours are touched).
+            let overlay: Vec<f32> = (0..k)
+                .map(|_| if rng.chance(0.3) { rng.next_f32() } else { 0.0 })
+                .collect();
+            let dense: Vec<f32> =
+                base.iter().zip(&overlay).map(|(&b, &o)| b + o).collect();
+
+            let mut w1 = vec![0.0f32; k];
+            let mut s1 = vec![Signal::Penalty; k];
+            build_signals_into(&dense, &mut w1, &mut s1);
+
+            let mut w2 = vec![0.0f32; k];
+            let mut s2 = vec![Signal::Penalty; k];
+            build_signals_overlay_into(&base, &overlay, &mut w2, &mut s2);
+            assert_eq!(w1, w2, "seed={seed}");
+            assert_eq!(s1, s2, "seed={seed}");
+        }
     }
 
     #[test]

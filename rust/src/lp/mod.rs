@@ -100,6 +100,96 @@ pub fn clear_touched(hist: &mut [f32], touched: &mut Vec<u32>) {
     touched.clear();
 }
 
+/// Integer fast path of [`neighbor_histogram`] for graphs whose edge
+/// weights are eq. (4)'s small integers (1 one-directional, 2
+/// reciprocated — `Graph::is_weighted() == false`). The f32 histogram
+/// then only ever holds integer values, so accumulating in a contiguous
+/// `u32` layout streams half the bytes and keeps FP adds out of the
+/// gather loop, and converts back losslessly: every partial sum stays
+/// far below 2²⁴, where `count as f32` is **bit-identical** to the f32
+/// accumulation of the same integers. Returns the integer Σ ŵ(u,v).
+#[inline]
+pub fn neighbor_histogram_counts<F>(
+    neighbors: &[u32],
+    weights: &[f32],
+    labels_of: F,
+    hist: &mut [u32],
+) -> u32
+where
+    F: Fn(u32) -> u32,
+{
+    debug_assert_eq!(neighbors.len(), weights.len());
+    hist.iter_mut().for_each(|h| *h = 0);
+    let mut wsum = 0u32;
+    for (&u, &w) in neighbors.iter().zip(weights.iter()) {
+        let l = labels_of(u) as usize;
+        debug_assert!(l < hist.len());
+        debug_assert_eq!(w, w as u32 as f32, "counts path needs integer weights");
+        let wi = w as u32;
+        hist[l] += wi;
+        wsum += wi;
+    }
+    wsum
+}
+
+/// Touched-stack variant of [`neighbor_histogram_counts`]; same
+/// all-zero-on-entry contract as [`neighbor_histogram_sparse`].
+#[inline]
+pub fn neighbor_histogram_counts_sparse<F>(
+    neighbors: &[u32],
+    weights: &[f32],
+    labels_of: F,
+    hist: &mut [u32],
+    touched: &mut Vec<u32>,
+) -> u32
+where
+    F: Fn(u32) -> u32,
+{
+    debug_assert_eq!(neighbors.len(), weights.len());
+    debug_assert!(hist.iter().all(|&h| h == 0), "hist must be all-zero on entry");
+    let mut wsum = 0u32;
+    for (&u, &w) in neighbors.iter().zip(weights.iter()) {
+        let l = labels_of(u) as usize;
+        debug_assert!(l < hist.len());
+        debug_assert_eq!(w, w as u32 as f32, "counts path needs integer weights");
+        if hist[l] == 0 {
+            touched.push(l as u32);
+        }
+        let wi = w as u32;
+        hist[l] += wi;
+        wsum += wi;
+    }
+    wsum
+}
+
+/// [`clear_touched`] for the u32 count histograms.
+#[inline]
+pub fn clear_touched_u32(hist: &mut [u32], touched: &mut Vec<u32>) {
+    for &l in touched.iter() {
+        hist[l as usize] = 0;
+    }
+    touched.clear();
+}
+
+/// Index of the maximum score, first occurrence on ties — the exact
+/// semantics of the strict-`>` scan both scoring functions used inline,
+/// but written as a fold over the value (max-reduce, then locate) so
+/// the reduction loop autovectorizes. `scores` must be non-empty and
+/// NaN-free (LP scores are finite by construction).
+#[inline]
+pub fn argmax(scores: &[f32]) -> usize {
+    debug_assert!(!scores.is_empty());
+    let mut best = scores[0];
+    for &s in &scores[1..] {
+        if s > best {
+            best = s;
+        }
+    }
+    // First position holding the max — ties resolve to the lowest
+    // label, matching the strict-`>` sequential scan.
+    scores.iter().position(|&s| s == best).unwrap_or(0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,6 +255,82 @@ mod tests {
             assert!(sparse.iter().all(|&h| h == 0.0), "seed={seed}");
             assert!(touched.is_empty());
         }
+    }
+
+    #[test]
+    fn count_histograms_bit_exact_vs_f32_unit_weights() {
+        // The u32 fast path must reproduce the f32 path exactly on
+        // eq.-(4)-weighted graphs (ŵ ∈ {1, 2}): integer-valued f32 sums
+        // below 2^24 are exact, so `count as f32` == Σ ŵ in f32.
+        use crate::util::rng::Rng;
+        for seed in 0..50u64 {
+            let mut rng = Rng::new(0xC0 ^ seed);
+            let k = 2 + rng.below_usize(40);
+            let deg = rng.below_usize(200);
+            let neighbors: Vec<u32> = (0..deg as u32).collect();
+            let labels: Vec<u32> = (0..deg).map(|_| rng.below(k as u64) as u32).collect();
+            let weights: Vec<f32> =
+                (0..deg).map(|_| if rng.chance(0.5) { 2.0 } else { 1.0 }).collect();
+
+            let mut hist_f = vec![0.0f32; k];
+            let wsum_f =
+                neighbor_histogram(&neighbors, &weights, |u| labels[u as usize], &mut hist_f);
+
+            let mut hist_u = vec![0u32; k];
+            let wsum_u = neighbor_histogram_counts(
+                &neighbors,
+                &weights,
+                |u| labels[u as usize],
+                &mut hist_u,
+            );
+            assert_eq!(wsum_f, wsum_u as f32, "seed={seed}");
+            for l in 0..k {
+                assert_eq!(hist_f[l], hist_u[l] as f32, "seed={seed} l={l}");
+            }
+
+            let mut hist_s = vec![0u32; k];
+            let mut touched = Vec::new();
+            let wsum_s = neighbor_histogram_counts_sparse(
+                &neighbors,
+                &weights,
+                |u| labels[u as usize],
+                &mut hist_s,
+                &mut touched,
+            );
+            assert_eq!(wsum_u, wsum_s, "seed={seed}");
+            assert_eq!(hist_u, hist_s, "seed={seed}");
+            let mut t = touched.clone();
+            t.sort_unstable();
+            let mut nonzero: Vec<u32> =
+                (0..k as u32).filter(|&l| hist_s[l as usize] != 0).collect();
+            nonzero.sort_unstable();
+            assert_eq!(t, nonzero, "seed={seed}");
+            clear_touched_u32(&mut hist_s, &mut touched);
+            assert!(hist_s.iter().all(|&h| h == 0), "seed={seed}");
+            assert!(touched.is_empty());
+        }
+    }
+
+    #[test]
+    fn argmax_matches_strict_gt_scan() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(99);
+        for _ in 0..200 {
+            let k = 1 + rng.below_usize(33);
+            // Coarse values force frequent ties.
+            let xs: Vec<f32> =
+                (0..k).map(|_| (rng.below(5) as f32) * 0.25).collect();
+            let mut ref_best = 0usize;
+            for (i, &x) in xs.iter().enumerate() {
+                if x > xs[ref_best] {
+                    ref_best = i;
+                }
+            }
+            assert_eq!(argmax(&xs), ref_best, "xs={xs:?}");
+        }
+        assert_eq!(argmax(&[1.0]), 0);
+        assert_eq!(argmax(&[2.0, 2.0, 2.0]), 0, "ties go to the first max");
+        assert_eq!(argmax(&[-1.0, -0.5, -0.5]), 1);
     }
 
     #[test]

@@ -39,18 +39,27 @@ pub fn score_into(hist: &[f32], wsum: f32, pi: &[f32], scores: &mut [f32]) -> us
     debug_assert_eq!(hist.len(), pi.len());
     debug_assert_eq!(hist.len(), scores.len());
     let inv_w = if wsum > 1e-12 { 1.0 / wsum } else { 0.0 };
-    let mut best = 0usize;
-    let mut best_s = f32::NEG_INFINITY;
+    // Fill then reduce: the plain fill loop and the max-fold both
+    // autovectorize, where the fused fill+argmax scan does not. Tie
+    // semantics (first max) match the previous strict-`>` scan.
     for l in 0..hist.len() {
-        let tau = hist[l] * inv_w;
-        let s = (tau + pi[l]) * 0.5;
-        scores[l] = s;
-        if s > best_s {
-            best_s = s;
-            best = l;
-        }
+        scores[l] = (hist[l] * inv_w + pi[l]) * 0.5;
     }
-    best
+    crate::lp::argmax(scores)
+}
+
+/// [`score_into`] over a u32 count histogram (the unweighted-graph fast
+/// path). Counts convert to f32 exactly (degrees ≪ 2²⁴), so this is
+/// bit-identical to `score_into(&counts.map(f32), wsum as f32, ..)`.
+#[inline]
+pub fn score_counts_into(hist: &[u32], wsum: u32, pi: &[f32], scores: &mut [f32]) -> usize {
+    debug_assert_eq!(hist.len(), pi.len());
+    debug_assert_eq!(hist.len(), scores.len());
+    let inv_w = if wsum > 0 { 1.0 / wsum as f32 } else { 0.0 };
+    for l in 0..hist.len() {
+        scores[l] = (hist[l] as f32 * inv_w + pi[l]) * 0.5;
+    }
+    crate::lp::argmax(scores)
 }
 
 #[cfg(test)]
@@ -113,6 +122,35 @@ mod tests {
         let best = score_into(&hist, 0.0, &pi, &mut scores);
         assert_eq!(best, 0);
         assert!((scores[0] - 0.35).abs() < 1e-6);
+    }
+
+    #[test]
+    fn score_counts_bit_exact_vs_f32() {
+        use crate::util::rng::Rng;
+        for seed in 0..40u64 {
+            let mut rng = Rng::new(0x5C ^ seed);
+            let k = 2 + rng.below_usize(30);
+            let counts: Vec<u32> = (0..k).map(|_| rng.below(50) as u32).collect();
+            let wsum: u32 = counts.iter().sum();
+            let hist_f: Vec<f32> = counts.iter().map(|&c| c as f32).collect();
+            let mut pi = vec![0.0f32; k];
+            let loads: Vec<f32> = (0..k).map(|_| rng.next_f32() * 40.0).collect();
+            penalty_into(&loads, 40.0, &mut pi);
+
+            let mut s_f = vec![0.0f32; k];
+            let mut s_u = vec![0.0f32; k];
+            let best_f = score_into(&hist_f, wsum as f32, &pi, &mut s_f);
+            let best_u = score_counts_into(&counts, wsum, &pi, &mut s_u);
+            assert_eq!(best_f, best_u, "seed={seed}");
+            assert_eq!(s_f, s_u, "seed={seed}");
+        }
+        // Isolated vertex: wsum = 0 degrades identically.
+        let mut s_f = vec![0.0f32; 2];
+        let mut s_u = vec![0.0f32; 2];
+        let best_f = score_into(&[0.0, 0.0], 0.0, &[0.7, 0.3], &mut s_f);
+        let best_u = score_counts_into(&[0, 0], 0, &[0.7, 0.3], &mut s_u);
+        assert_eq!(best_f, best_u);
+        assert_eq!(s_f, s_u);
     }
 
     #[test]

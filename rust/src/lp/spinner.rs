@@ -27,17 +27,24 @@ pub fn score_into(hist: &[f32], wsum: f32, pi_hat: &[f32], scores: &mut [f32]) -
     debug_assert_eq!(hist.len(), pi_hat.len());
     debug_assert_eq!(hist.len(), scores.len());
     let inv_w = if wsum > 1e-12 { 1.0 / wsum } else { 0.0 };
-    let mut best = 0usize;
-    let mut best_s = f32::NEG_INFINITY;
+    // Fill then reduce (autovectorizes; see `normalized::score_into`).
     for l in 0..hist.len() {
-        let s = hist[l] * inv_w - pi_hat[l];
-        scores[l] = s;
-        if s > best_s {
-            best_s = s;
-            best = l;
-        }
+        scores[l] = hist[l] * inv_w - pi_hat[l];
     }
-    best
+    crate::lp::argmax(scores)
+}
+
+/// [`score_into`] over a u32 count histogram (unweighted-graph fast
+/// path; bit-identical — counts convert to f32 exactly).
+#[inline]
+pub fn score_counts_into(hist: &[u32], wsum: u32, pi_hat: &[f32], scores: &mut [f32]) -> usize {
+    debug_assert_eq!(hist.len(), pi_hat.len());
+    debug_assert_eq!(hist.len(), scores.len());
+    let inv_w = if wsum > 0 { 1.0 / wsum as f32 } else { 0.0 };
+    for l in 0..hist.len() {
+        scores[l] = hist[l] as f32 * inv_w - pi_hat[l];
+    }
+    crate::lp::argmax(scores)
 }
 
 /// Migration probability to candidate partition `l` (§III-A): remaining
@@ -88,6 +95,25 @@ mod tests {
         let mut scores = vec![0.0f32; 2];
         let best = score_into(&hist, 4.0, &pi, &mut scores);
         assert_eq!(best, 1);
+    }
+
+    #[test]
+    fn score_counts_bit_exact_vs_f32() {
+        use crate::util::rng::Rng;
+        for seed in 0..40u64 {
+            let mut rng = Rng::new(0x59 ^ seed);
+            let k = 2 + rng.below_usize(30);
+            let counts: Vec<u32> = (0..k).map(|_| rng.below(50) as u32).collect();
+            let wsum: u32 = counts.iter().sum();
+            let hist_f: Vec<f32> = counts.iter().map(|&c| c as f32).collect();
+            let pi: Vec<f32> = (0..k).map(|_| rng.next_f32()).collect();
+            let mut s_f = vec![0.0f32; k];
+            let mut s_u = vec![0.0f32; k];
+            let best_f = score_into(&hist_f, wsum as f32, &pi, &mut s_f);
+            let best_u = score_counts_into(&counts, wsum, &pi, &mut s_u);
+            assert_eq!(best_f, best_u, "seed={seed}");
+            assert_eq!(s_f, s_u, "seed={seed}");
+        }
     }
 
     #[test]

@@ -84,6 +84,14 @@ const USAGE_BODY: &str =
     --frontier <on|off>   active-set supersteps: skip settled vertices,
                           halt on an empty frontier (default on; off =
                           bit-exact legacy full sweeps)
+    --frontier-dense-frac F  frontier collector switch point: frontiers
+                          larger than F·|V| use the dense stamp scan,
+                          smaller ones the merged per-worker worklists
+                          (default 0.25; 0 = always scan, 1 = always
+                          worklists — same runs either way)
+    --prob-format <q16|f32>  LA probability-row storage (default q16,
+                          half the memory traffic; f32 = the bit-exact
+                          reference trajectory)
     --init <random|stream:<ldg|fennel|restream>>  warm-start policy
     --stream-order <natural|shuffled|bfs>  streaming visit order
     --fennel-gamma G      Fennel load exponent (default 1.5)
@@ -126,6 +134,8 @@ fn config_from(args: &mut Args) -> Result<RevolverConfig> {
     cfg.threads = args.get_or("threads", cfg.threads)?;
     cfg.schedule = args.get_or("schedule", cfg.schedule)?;
     cfg.frontier = args.get_or("frontier", cfg.frontier)?;
+    cfg.frontier_dense_frac = args.get_or("frontier-dense-frac", cfg.frontier_dense_frac)?;
+    cfg.prob_format = args.get_or("prob-format", cfg.prob_format)?;
     cfg.seed = args.get_or("seed", cfg.seed)?;
     cfg.trace_every = args.get_or("trace-every", cfg.trace_every)?;
     if let Some(init) = args.get("init") {

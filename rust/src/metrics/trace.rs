@@ -29,6 +29,20 @@ pub struct RunTrace {
     /// strictly less when the active frontier shrinks. The
     /// frontier-acceptance tests compare this, not wall clock.
     pub total_evaluated: u64,
+    /// Coordinator-side stamp loads spent collecting frontiers — |V| per
+    /// dense-scanned step, 0 for worklist-merged and step-0 identity
+    /// frontiers. The hot-path bench rows diff this across
+    /// `frontier_dense_frac` settings (DESIGN.md §Hot paths).
+    pub stamp_reads: u64,
+    /// Frontier collections that fell back to the dense O(n) stamp scan.
+    pub scan_steps: u32,
+    /// Frontier collections served by the merged O(frontier) worklists.
+    pub worklist_steps: u32,
+    /// Frontier chunk layouts reused via [`Chunks::clamped`] instead of
+    /// a fresh `by_weight_subset` prefix-sum walk.
+    ///
+    /// [`Chunks::clamped`]: crate::coordinator::Chunks::clamped
+    pub chunk_reuses: u32,
 }
 
 impl RunTrace {

@@ -38,13 +38,16 @@
 use std::cell::UnsafeCell;
 
 use super::{PartitionOutput, Partitioner};
-use crate::config::{Engine, ExecutionModel, RevolverConfig};
+use crate::config::{Engine, ExecutionModel, ProbFormat, RevolverConfig};
 use crate::engine::{self, StepCtx, StepStats, VertexProgram};
 use crate::graph::Graph;
-use crate::la::signal::build_signals_into;
+use crate::la::signal::build_signals_overlay_into;
 use crate::la::weighted::WeightedLa;
 use crate::la::{roulette, Signal};
-use crate::lp::{clear_touched, neighbor_histogram, neighbor_histogram_sparse, normalized as nlp};
+use crate::lp::{
+    argmax, clear_touched, clear_touched_u32, neighbor_histogram,
+    neighbor_histogram_counts_sparse, neighbor_histogram_sparse, normalized as nlp,
+};
 use crate::partition::{DemandTracker, InitialAssignment, PartitionState};
 use crate::runtime::XlaStepEngine;
 use crate::util::rng::Rng;
@@ -70,7 +73,11 @@ impl Revolver {
     }
 }
 
-/// The LA probability rows (n × k floats), shared across all workers.
+/// One probability unit in q16 fixed point: q = round(p·65535), so the
+/// whole [0, 1] range of an LA probability maps onto the full u16 span.
+const Q16_ONE: f32 = 65535.0;
+
+/// The LA probability rows (n × k), shared across all workers.
 /// Rows are handed out mutably through `&self`; soundness rests on the
 /// engine's scheduling contract ([`VertexProgram`] docs): a vertex
 /// appears in exactly one worker's work list per superstep (chunk
@@ -79,9 +86,22 @@ impl Revolver {
 /// under frontier-driven scheduling a worker's per-step work list is
 /// not aligned with any static vertex range, so per-vertex persistent
 /// state must be globally addressable.
-struct ProbSlab {
+///
+/// Storage is format-selected ([`ProbFormat`]): `F32` keeps the exact
+/// rows the LA math produces (the bit-parity reference), `Q16` stores
+/// each probability as u16 fixed point — half the slab bytes, integer
+/// roulette wheels ([`roulette::spin_u16`]), and a dequantize →
+/// update → requantize round-trip per LA update (the update arithmetic
+/// itself stays the f32 [`WeightedLa::update`], so the only difference
+/// from the F32 path is the ±½ulp₁₆ storage rounding).
+pub struct ProbSlab {
     k: usize,
-    cells: Vec<UnsafeCell<f32>>,
+    data: SlabData,
+}
+
+enum SlabData {
+    F32(Vec<UnsafeCell<f32>>),
+    Q16(Vec<UnsafeCell<u16>>),
 }
 
 // SAFETY: concurrent access is only ever to disjoint rows (see above);
@@ -89,7 +109,12 @@ struct ProbSlab {
 unsafe impl Sync for ProbSlab {}
 
 impl ProbSlab {
-    fn new(n: usize, k: usize, warm: Option<&[crate::Label]>) -> Self {
+    pub fn new(
+        n: usize,
+        k: usize,
+        warm: Option<&[crate::Label]>,
+        format: ProbFormat,
+    ) -> Self {
         let mut flat = vec![0.0f32; n * k];
         match warm {
             None => {
@@ -103,20 +128,154 @@ impl ProbSlab {
                 }
             }
         }
-        ProbSlab { k, cells: flat.into_iter().map(UnsafeCell::new).collect() }
+        let data = match format {
+            ProbFormat::F32 => {
+                SlabData::F32(flat.into_iter().map(UnsafeCell::new).collect())
+            }
+            ProbFormat::Q16 => SlabData::Q16(
+                flat.into_iter().map(|p| UnsafeCell::new(Self::quantize(p))).collect(),
+            ),
+        };
+        ProbSlab { k, data }
     }
 
-    /// Vertex `v`'s probability row.
+    /// Actions per row.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    fn quantize(p: f32) -> u16 {
+        // `as` saturates, so a renormalized row (p ≤ 1 up to float
+        // drift) can never wrap.
+        (p * Q16_ONE).round() as u16
+    }
+
+    /// Vertex `v`'s raw f32 row; F32 storage only.
     ///
     /// SAFETY: the caller must be the only thread evaluating `v` in the
     /// current phase — guaranteed by the engine's disjoint work lists.
     #[allow(clippy::mut_from_ref)]
     #[inline]
-    unsafe fn row(&self, v: usize) -> &mut [f32] {
-        std::slice::from_raw_parts_mut(
-            self.cells.as_ptr().add(v * self.k) as *mut f32,
-            self.k,
-        )
+    unsafe fn f32_row(&self, v: usize) -> &mut [f32] {
+        match &self.data {
+            SlabData::F32(cells) => std::slice::from_raw_parts_mut(
+                cells.as_ptr().add(v * self.k) as *mut f32,
+                self.k,
+            ),
+            SlabData::Q16(_) => unreachable!("f32_row on a Q16 slab"),
+        }
+    }
+
+    /// Vertex `v`'s raw q16 row; Q16 storage only. SAFETY: as
+    /// [`Self::f32_row`].
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    unsafe fn q16_row(&self, v: usize) -> &mut [u16] {
+        match &self.data {
+            SlabData::Q16(cells) => std::slice::from_raw_parts_mut(
+                cells.as_ptr().add(v * self.k) as *mut u16,
+                self.k,
+            ),
+            SlabData::F32(_) => unreachable!("q16_row on an F32 slab"),
+        }
+    }
+
+    /// Roulette draw from `v`'s row — native wheel per format (the q16
+    /// wheel spins on integer weights, no dequantization).
+    ///
+    /// SAFETY: as [`Self::f32_row`].
+    #[inline]
+    unsafe fn spin(&self, v: usize, rng: &mut Rng) -> usize {
+        match &self.data {
+            SlabData::F32(_) => roulette::spin(self.f32_row(v), rng),
+            SlabData::Q16(_) => roulette::spin_u16(self.q16_row(v), rng),
+        }
+    }
+
+    /// Copy `v`'s row into `out` as f32 (dequantizing under Q16).
+    ///
+    /// SAFETY: as [`Self::f32_row`].
+    #[inline]
+    unsafe fn read_row(&self, v: usize, out: &mut [f32]) {
+        match &self.data {
+            SlabData::F32(_) => out.copy_from_slice(self.f32_row(v)),
+            SlabData::Q16(_) => {
+                for (o, &q) in out.iter_mut().zip(self.q16_row(v).iter()) {
+                    *o = q as f32 * (1.0 / Q16_ONE);
+                }
+            }
+        }
+    }
+
+    /// Store an f32 row back into `v`'s slot (quantizing under Q16).
+    ///
+    /// SAFETY: as [`Self::f32_row`].
+    #[inline]
+    unsafe fn write_row(&self, v: usize, row: &[f32]) {
+        match &self.data {
+            SlabData::F32(_) => self.f32_row(v).copy_from_slice(row),
+            SlabData::Q16(_) => {
+                for (q, &p) in self.q16_row(v).iter_mut().zip(row.iter()) {
+                    *q = Self::quantize(p);
+                }
+            }
+        }
+    }
+
+    /// Apply `update` to `v`'s row in f32 space: in place for F32
+    /// storage, through the `scratch` round-trip for Q16.
+    ///
+    /// SAFETY: as [`Self::f32_row`].
+    #[inline]
+    unsafe fn with_row_mut(
+        &self,
+        v: usize,
+        scratch: &mut [f32],
+        update: impl FnOnce(&mut [f32]),
+    ) {
+        match &self.data {
+            SlabData::F32(_) => update(self.f32_row(v)),
+            SlabData::Q16(_) => {
+                self.read_row(v, scratch);
+                update(scratch);
+                self.write_row(v, scratch);
+            }
+        }
+    }
+
+    // ── Safe single-threaded wrappers (benches/tests): `&mut self`
+    // guarantees the exclusivity the unsafe accessors require. ──
+
+    /// [`Self::spin`] for exclusive owners.
+    pub fn spin_mut(&mut self, v: usize, rng: &mut Rng) -> usize {
+        unsafe { self.spin(v, rng) }
+    }
+
+    /// One weighted-LA update of `v`'s row (dequantize → update →
+    /// requantize under Q16); `scratch` must be k-sized.
+    pub fn update_row_mut(
+        &mut self,
+        v: usize,
+        scratch: &mut [f32],
+        weights: &[f32],
+        signals: &[Signal],
+        alpha: f32,
+        beta: f32,
+    ) {
+        unsafe {
+            self.with_row_mut(v, scratch, |row| {
+                WeightedLa::update(row, weights, signals, alpha, beta)
+            })
+        }
+    }
+
+    /// Copy of `v`'s row as f32 (dequantized under Q16) — test/bench
+    /// inspection.
+    pub fn row_vec(&mut self, v: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.k];
+        unsafe { self.read_row(v, &mut out) };
+        out
     }
 }
 
@@ -134,13 +293,23 @@ struct ChunkState {
     /// entries it dirtied in `touched` and clears only those (O(deg)
     /// instead of an O(k) fill per vertex — wins when k ≫ avg degree).
     hist: Vec<f32>,
+    /// u32 twin of `hist` for the integer-weight fast path
+    /// ([`neighbor_histogram_counts_sparse`]); same all-zero contract.
+    hist_u32: Vec<u32>,
     touched: Vec<u32>,
     scores: Vec<f32>,
     pi: Vec<f32>,
-    raw_w: Vec<f32>,
+    /// Sparse eq.-(13) neighbour-modulation overlay: all-zero between
+    /// vertices, dirtied entries tracked in `touched_w`, consumed via
+    /// [`build_signals_overlay_into`] against the dense `scores` base —
+    /// O(deg) writes instead of the old O(k) `raw_w` copy per vertex.
+    overlay: Vec<f32>,
+    touched_w: Vec<u32>,
     w_norm: Vec<f32>,
     signals: Vec<Signal>,
     loads: Vec<f32>,
+    /// f32 staging row for Q16 slab round-trips (unused under F32).
+    prob_row: Vec<f32>,
     /// Per-batch precomputed "partition still has migration headroom"
     /// flags — replaces two atomic loads per neighbour in the eq.-(13)
     /// accumulation (perf log P3).
@@ -170,13 +339,16 @@ impl ChunkState {
             selected: Vec::new(),
             k,
             hist: vec![0.0; k],
+            hist_u32: vec![0; k],
             touched: Vec::with_capacity(k),
             scores: vec![0.0; k],
             pi: vec![0.0; k],
-            raw_w: vec![0.0; k],
+            overlay: vec![0.0; k],
+            touched_w: Vec::with_capacity(k),
             w_norm: vec![0.0; k],
             signals: vec![Signal::Penalty; k],
             loads: vec![0.0; k],
+            prob_row: vec![0.0; k],
             headroom: vec![true; k],
         }
     }
@@ -264,8 +436,7 @@ impl VertexProgram for RevolverProgram<'_> {
             }
             // SAFETY: `v` is in this worker's work list only (engine
             // contract), so the row access is exclusive.
-            let row: &[f32] = unsafe { self.probs.row(v as usize) };
-            let a = roulette::spin(row, rng) as u32;
+            let a = unsafe { self.probs.spin(v as usize, rng) } as u32;
             cs.selected.push(a);
             if a != ctx.state.label(v) {
                 ctx.demand.add(a as usize, ctx.graph.load_mass(v));
@@ -360,7 +531,12 @@ impl Partitioner for Revolver {
         };
         let program = RevolverProgram {
             cfg: &self.cfg,
-            probs: ProbSlab::new(g.num_vertices(), self.cfg.parts, warm.as_deref()),
+            probs: ProbSlab::new(
+                g.num_vertices(),
+                self.cfg.parts,
+                warm.as_deref(),
+                self.cfg.prob_format,
+            ),
         };
         engine::run_with_init(g, &self.cfg, &program, init)
     }
@@ -375,7 +551,7 @@ impl Partitioner for Revolver {
 pub fn refine(g: &Graph, cfg: &RevolverConfig, init: Vec<crate::Label>) -> PartitionOutput {
     let program = RevolverProgram {
         cfg,
-        probs: ProbSlab::new(g.num_vertices(), cfg.parts, Some(&init)),
+        probs: ProbSlab::new(g.num_vertices(), cfg.parts, Some(&init), cfg.prob_format),
     };
     engine::run_with_init(g, cfg, &program, InitialAssignment::Given(init))
 }
@@ -392,7 +568,7 @@ pub fn refine_seeded(
 ) -> PartitionOutput {
     let program = RevolverProgram {
         cfg,
-        probs: ProbSlab::new(g.num_vertices(), cfg.parts, Some(&init)),
+        probs: ProbSlab::new(g.num_vertices(), cfg.parts, Some(&init), cfg.prob_format),
     };
     engine::run_with_frontier(
         g,
@@ -432,17 +608,34 @@ fn native_vertex(
     }
 
     // 3. Normalized LP scores + λ(v) (eqs. 10-12). The histogram is
-    // accumulated sparsely: `cs.hist` is all-zero between vertices and
-    // only the entries this vertex touched are cleared afterwards.
-    let wsum = neighbor_histogram_sparse(
-        g.neighbors(vid),
-        g.neighbor_weights(vid),
-        |u| ctx.label(u),
-        &mut cs.hist,
-        &mut cs.touched,
-    );
-    let best = nlp::score_into(&cs.hist, wsum, &cs.pi, &mut cs.scores);
-    clear_touched(&mut cs.hist, &mut cs.touched);
+    // accumulated sparsely: the scratch is all-zero between vertices and
+    // only the entries this vertex touched are cleared afterwards. On
+    // graphs with eq.-(4) integer weights (the paper's datasets) the
+    // gather runs over the contiguous u32 layout — half the histogram
+    // bytes, no FP adds — and is bit-exact to the f32 path (lp tests).
+    let (best, wsum) = if !g.is_weighted() {
+        let cnt = neighbor_histogram_counts_sparse(
+            g.neighbors(vid),
+            g.neighbor_weights(vid),
+            |u| ctx.label(u),
+            &mut cs.hist_u32,
+            &mut cs.touched,
+        );
+        let best = nlp::score_counts_into(&cs.hist_u32, cnt, &cs.pi, &mut cs.scores);
+        clear_touched_u32(&mut cs.hist_u32, &mut cs.touched);
+        (best, cnt as f32)
+    } else {
+        let wsum = neighbor_histogram_sparse(
+            g.neighbors(vid),
+            g.neighbor_weights(vid),
+            |u| ctx.label(u),
+            &mut cs.hist,
+            &mut cs.touched,
+        );
+        let best = nlp::score_into(&cs.hist, wsum, &cs.pi, &mut cs.scores);
+        clear_touched(&mut cs.hist, &mut cs.touched);
+        (best, wsum)
+    };
     ctx.publish(vid, best as u32);
 
     // 4. Migration (§IV-D.4): move to the sampled action when it beats
@@ -468,36 +661,57 @@ fn native_vertex(
     // this tracks actual assignment quality.
     let current_score = cs.scores[state.label(vid) as usize] as f64;
 
-    // 5. Raw weights (§IV-C step 4 + eq. 13): start from the normalized
-    // LP scores ("scores generated from multiple passes of (10) are
-    // evaluated by (13) to form the weight vector W") and add the
-    // τ-normalized neighbour-preference modulation — neighbour u
-    // endorses partition λ(u) with ŵ(u,v)/Σŵ when v's action agrees,
-    // else with 1/Σŵ while λ(u) still has migration headroom.
-    // (`raw_w` stays a dense k-copy: it is seeded from the dense score
-    // vector, not zero-filled, so there is nothing sparse to skip.)
-    cs.raw_w.copy_from_slice(&cs.scores);
-    let wsum_inv = if wsum > 1e-12 { 1.0 / wsum } else { 0.0 };
-    for (&u, &w_uv) in g.neighbors(vid).iter().zip(g.neighbor_weights(vid)) {
-        let lu = ctx.published(u) as usize;
-        if lu == action as usize {
-            cs.raw_w[lu] += w_uv * wsum_inv;
-        } else if cs.headroom[lu] {
-            cs.raw_w[lu] += wsum_inv;
-        }
-    }
-
     // 6+7. Signals + LA update (§IV-D.6/7).
-    // SAFETY: exclusive row access per the engine's disjoint work lists.
-    let row = unsafe { probs.row(vid as usize) };
+    // SAFETY (both arms): exclusive row access per the engine's
+    // disjoint work lists.
     if cfg.classic_la {
         // Ablation E5: classic single-action update (eqs. 6-7) — reward
-        // the selected action iff it matches λ(v).
+        // the selected action iff it matches λ(v). (Eq. 13's weight
+        // vector only feeds the weighted update, so it is skipped here.)
         let sig = if action as usize == best { Signal::Reward } else { Signal::Penalty };
-        classic_update_row(row, action as usize, sig, cfg.alpha, cfg.beta);
+        unsafe {
+            probs.with_row_mut(vid as usize, &mut cs.prob_row, |row| {
+                classic_update_row(row, action as usize, sig, cfg.alpha, cfg.beta)
+            });
+        }
     } else {
-        build_signals_into(&cs.raw_w, &mut cs.w_norm, &mut cs.signals);
-        WeightedLa::update(row, &cs.w_norm, &cs.signals, cfg.alpha, cfg.beta);
+        // 5. Raw weights (§IV-C step 4 + eq. 13): the normalized LP
+        // scores ("scores generated from multiple passes of (10) are
+        // evaluated by (13) to form the weight vector W") plus the
+        // τ-normalized neighbour-preference modulation — neighbour u
+        // endorses partition λ(u) with ŵ(u,v)/Σŵ when v's action
+        // agrees, else with 1/Σŵ while λ(u) still has migration
+        // headroom. The modulation lands in the sparse `overlay`
+        // (all-zero between vertices, O(deg) entries dirtied) and the
+        // signal builder reads `scores[l] + overlay[l]` on the fly —
+        // the old dense `raw_w` seed copy never materializes.
+        let wsum_inv = if wsum > 1e-12 { 1.0 / wsum } else { 0.0 };
+        if wsum_inv > 0.0 {
+            for (&u, &w_uv) in g.neighbors(vid).iter().zip(g.neighbor_weights(vid)) {
+                let lu = ctx.published(u) as usize;
+                let add = if lu == action as usize {
+                    w_uv * wsum_inv
+                } else if cs.headroom[lu] {
+                    wsum_inv
+                } else {
+                    continue;
+                };
+                // Adds are strictly positive (ŵ > 0), so an entry is
+                // zero exactly until its first touch.
+                if cs.overlay[lu] == 0.0 {
+                    cs.touched_w.push(lu as u32);
+                }
+                cs.overlay[lu] += add;
+            }
+        }
+        build_signals_overlay_into(&cs.scores, &cs.overlay, &mut cs.w_norm, &mut cs.signals);
+        clear_touched(&mut cs.overlay, &mut cs.touched_w);
+        let ChunkState { prob_row, w_norm, signals, .. } = cs;
+        unsafe {
+            probs.with_row_mut(vid as usize, prob_row, |row| {
+                WeightedLa::update(row, w_norm, signals, cfg.alpha, cfg.beta)
+            });
+        }
     }
 
     // Keep the vertex in the frontier while it is unsettled: off its
@@ -593,25 +807,18 @@ fn xla_batch(
         let srow = &scores[i * k..(i + 1) * k];
         // Raw-weight and probability rows must exist for the fixed-shape
         // kernel even when the vertex is skipped (its update is simply
-        // never copied back).
+        // never copied back) — a skipped row keeps the all-zero raw
+        // vector, exactly like the pad rows past `len`.
         let wrow = &mut raw_w[i * k..(i + 1) * k];
-        wrow.copy_from_slice(srow);
         // SAFETY: exclusive row access per the engine's disjoint work
         // lists.
-        probs[i * k..(i + 1) * k].copy_from_slice(unsafe { slab.row(vid as usize) });
+        unsafe { slab.read_row(vid as usize, &mut probs[i * k..(i + 1) * k]) };
         if skip(vid) {
             // Same semantics as `native_vertex`'s frontier fast path:
             // no publish, no migration, no LA update, score 0, no wake.
             continue;
         }
-        let mut best = 0usize;
-        let mut best_s = f32::NEG_INFINITY;
-        for (l, &s) in srow.iter().enumerate() {
-            if s > best_s {
-                best_s = s;
-                best = l;
-            }
-        }
+        let best = argmax(srow);
         ctx.publish(vid, best as u32);
 
         let action = cs.selected[pos + i];
@@ -630,16 +837,24 @@ fn xla_batch(
         // (matches `native_vertex`).
         score_sum += srow[state.label(vid) as usize] as f64;
 
-        // Raw weights (§IV-C step 4 + eq. 13), same semantics as
-        // `native_vertex`.
+        // Raw weights (§IV-C step 4 + eq. 13), same arithmetic as
+        // `native_vertex`: the modulation accumulates into the zeroed
+        // `wrow` (the overlay), then the score base is added on top —
+        // f32 addition commutes, so `overlay + score` here is bitwise
+        // `score + overlay` there.
         let wsum_inv = if wsum[i] > 1e-12 { 1.0 / wsum[i] } else { 0.0 };
-        for (&u, &w_uv) in g.neighbors(vid).iter().zip(g.neighbor_weights(vid)) {
-            let lu = ctx.published(u) as usize;
-            if lu == action as usize {
-                wrow[lu] += w_uv * wsum_inv;
-            } else if cs.headroom[lu] {
-                wrow[lu] += wsum_inv;
+        if wsum_inv > 0.0 {
+            for (&u, &w_uv) in g.neighbors(vid).iter().zip(g.neighbor_weights(vid)) {
+                let lu = ctx.published(u) as usize;
+                if lu == action as usize {
+                    wrow[lu] += w_uv * wsum_inv;
+                } else if cs.headroom[lu] {
+                    wrow[lu] += wsum_inv;
+                }
             }
+        }
+        for (wj, &sj) in wrow.iter_mut().zip(srow.iter()) {
+            *wj = sj + *wj;
         }
         // Unsettled self-wake (off-argmax or over-capacity drain
         // pending), matching `native_vertex`.
@@ -661,7 +876,7 @@ fn xla_batch(
             continue; // frontier-settled: LA row stays frozen
         }
         // SAFETY: exclusive row access (see above).
-        unsafe { slab.row(vid as usize) }.copy_from_slice(&p_next[i * k..(i + 1) * k]);
+        unsafe { slab.write_row(vid as usize, &p_next[i * k..(i + 1) * k]) };
     }
     score_sum
 }
@@ -807,6 +1022,52 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn q16_slab_roundtrip_update_and_spin() {
+        use crate::util::rng::Rng;
+        let k = 8;
+        let mut slab = ProbSlab::new(4, k, None, ProbFormat::Q16);
+        // Uniform init survives the quantize/dequantize round-trip to
+        // within half a q16 step.
+        for &p in &slab.row_vec(2) {
+            assert!((p - 0.125).abs() < 0.5 / 65535.0, "p={p}");
+        }
+        // Rewarding one action drives its (quantized) mass up exactly
+        // like the f32 slab does.
+        let mut w = vec![1.0 / (k as f32 - 1.0); k];
+        let mut s = vec![Signal::Penalty; k];
+        w[3] = 1.0;
+        s[3] = Signal::Reward;
+        let mut scratch = vec![0.0f32; k];
+        for _ in 0..30 {
+            slab.update_row_mut(2, &mut scratch, &w, &s, 0.5, 0.1);
+        }
+        let row = slab.row_vec(2);
+        assert!(row[3] > 0.8, "row={row:?}");
+        // Untouched rows stay uniform; draws stay in range and favour
+        // the trained action on the trained row.
+        assert!((slab.row_vec(1)[3] - 0.125).abs() < 0.5 / 65535.0);
+        let mut rng = Rng::new(7);
+        let mut hot = 0;
+        for _ in 0..200 {
+            let a = slab.spin_mut(2, &mut rng);
+            assert!(a < k);
+            hot += (a == 3) as u32;
+        }
+        assert!(hot > 120, "hot={hot}");
+    }
+
+    #[test]
+    fn q16_format_runs_and_balances() {
+        let g = generate_dataset(Dataset::Lj, 2048, 6).unwrap();
+        let mut cfg = small_cfg(4);
+        cfg.prob_format = ProbFormat::Q16;
+        let out = Revolver::new(cfg).partition(&g);
+        assert!(out.labels.iter().all(|&l| l < 4));
+        let mnl = quality::max_normalized_load(&g, &out.labels, 4);
+        assert!(mnl < 1.15, "mnl={mnl}");
     }
 
     // The warm-vs-cold convergence assertion (stream:fennel init

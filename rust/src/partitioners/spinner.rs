@@ -16,7 +16,7 @@ use super::{PartitionOutput, Partitioner};
 use crate::config::{ExecutionModel, RevolverConfig};
 use crate::engine::{self, StepCtx, StepStats, VertexProgram};
 use crate::graph::Graph;
-use crate::lp::{neighbor_histogram, spinner as sp};
+use crate::lp::{neighbor_histogram, neighbor_histogram_counts, spinner as sp};
 use crate::partition::{DemandTracker, PartitionState};
 use crate::util::rng::Rng;
 use crate::VertexId;
@@ -41,6 +41,9 @@ impl Spinner {
 /// engine's guarantee that both phases see the identical list).
 struct SpinnerScratch {
     hist: Vec<f32>,
+    /// u32 twin of `hist` for the integer-weight fast path
+    /// ([`neighbor_histogram_counts`]).
+    hist_u32: Vec<u32>,
     scores: Vec<f32>,
     candidates: Vec<u32>,
 }
@@ -75,6 +78,7 @@ impl VertexProgram for SpinnerProgram<'_> {
         let k = self.cfg.parts;
         SpinnerScratch {
             hist: vec![0.0; k],
+            hist_u32: vec![0; k],
             scores: vec![0.0; k],
             candidates: Vec::new(),
         }
@@ -121,13 +125,25 @@ impl VertexProgram for SpinnerProgram<'_> {
                 s.candidates.push(STAY);
                 continue;
             }
-            let wsum = neighbor_histogram(
-                ctx.graph.neighbors(vid),
-                ctx.graph.neighbor_weights(vid),
-                |u| ctx.label(u),
-                &mut s.hist,
-            );
-            let best = sp::score_into(&s.hist, wsum, pi_hat, &mut s.scores);
+            // Integer-weight fast path (eq.-(4) graphs): u32 gather +
+            // count scoring, bit-exact to the f32 path (lp tests).
+            let best = if !ctx.graph.is_weighted() {
+                let cnt = neighbor_histogram_counts(
+                    ctx.graph.neighbors(vid),
+                    ctx.graph.neighbor_weights(vid),
+                    |u| ctx.label(u),
+                    &mut s.hist_u32,
+                );
+                sp::score_counts_into(&s.hist_u32, cnt, pi_hat, &mut s.scores)
+            } else {
+                let wsum = neighbor_histogram(
+                    ctx.graph.neighbors(vid),
+                    ctx.graph.neighbor_weights(vid),
+                    |u| ctx.label(u),
+                    &mut s.hist,
+                );
+                sp::score_into(&s.hist, wsum, pi_hat, &mut s.scores)
+            };
             let current = ctx.label(vid) as usize;
             score_sum += s.scores[current] as f64;
             s.candidates.push(if best != current {

@@ -4,6 +4,8 @@
 
 use std::time::Instant;
 
+use crate::util::json::Json;
+
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -107,6 +109,49 @@ pub fn bench_rmat(scale_exp: u32) -> crate::graph::Graph {
     crate::graph::gen::rmat::rmat(n, 16 * n, 0.57, 0.19, 0.19, 11)
 }
 
+/// Validate a `BENCH_JSON` row array against a section spec before it
+/// is printed (and when CI re-parses the harvested line): `spec` maps
+/// each legal `"bench"` section tag to the numeric keys every row of
+/// that section must carry. Rows must be objects, carry a string
+/// `"bench"` tag listed in the spec, hold only string/number values
+/// (the flat schema BENCH_hotpath.json documents), and provide every
+/// required key as a number. Returns the row count.
+///
+/// This is the schema gate for the recorded bench trajectory — a
+/// renamed key or dropped section fails here, in-process, instead of
+/// silently producing unmergeable history rows.
+pub fn validate_rows(rows: &Json, spec: &[(&str, &[&str])]) -> Result<usize, String> {
+    let arr = rows.as_arr().ok_or("BENCH_JSON payload must be an array")?;
+    for (i, row) in arr.iter().enumerate() {
+        let obj = match row {
+            Json::Obj(m) => m,
+            _ => return Err(format!("row {i}: not an object")),
+        };
+        let section = row
+            .get("bench")
+            .and_then(|b| b.as_str())
+            .ok_or(format!("row {i}: missing string \"bench\" tag"))?;
+        let required = spec
+            .iter()
+            .find(|(name, _)| *name == section)
+            .map(|(_, keys)| *keys)
+            .ok_or(format!("row {i}: unknown section {section:?}"))?;
+        for key in required {
+            match row.get(key) {
+                Some(Json::Num(x)) if x.is_finite() => {}
+                Some(_) => return Err(format!("row {i} ({section}): {key:?} not finite")),
+                None => return Err(format!("row {i} ({section}): missing {key:?}")),
+            }
+        }
+        for (key, val) in obj.iter() {
+            if !matches!(val, Json::Num(_) | Json::Str(_)) {
+                return Err(format!("row {i} ({section}): {key:?} must be number/string"));
+            }
+        }
+    }
+    Ok(arr.len())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,5 +195,37 @@ mod tests {
         let r = bench("fmt", 0, 3, || 1 + 1);
         let s = format!("{r}");
         assert!(s.contains("fmt"));
+    }
+
+    #[test]
+    fn validate_rows_accepts_spec_conformant_rows() {
+        let spec: &[(&str, &[&str])] =
+            &[("alpha", &["mean_ns"]), ("beta", &["mean_ns", "evaluated"])];
+        let rows = Json::parse(
+            r#"[{"bench":"alpha","mean_ns":12.5,"note":"x"},
+                {"bench":"beta","mean_ns":3,"evaluated":400}]"#,
+        )
+        .unwrap();
+        assert_eq!(validate_rows(&rows, spec), Ok(2));
+        assert_eq!(validate_rows(&Json::Arr(vec![]), spec), Ok(0));
+    }
+
+    #[test]
+    fn validate_rows_rejects_schema_drift() {
+        let spec: &[(&str, &[&str])] = &[("alpha", &["mean_ns"])];
+        // Not an array.
+        assert!(validate_rows(&Json::Num(1.0), spec).is_err());
+        // Missing tag / unknown section / missing required key.
+        for bad in [
+            r#"[{"mean_ns":1}]"#,
+            r#"[{"bench":"gamma","mean_ns":1}]"#,
+            r#"[{"bench":"alpha"}]"#,
+            // Required key present but not a finite number.
+            r#"[{"bench":"alpha","mean_ns":"fast"}]"#,
+            // Nested values break the flat schema.
+            r#"[{"bench":"alpha","mean_ns":1,"sub":{"x":1}}]"#,
+        ] {
+            assert!(validate_rows(&Json::parse(bad).unwrap(), spec).is_err(), "{bad}");
+        }
     }
 }

@@ -9,7 +9,7 @@
 //! snapshot granularity, or convergence accounting) — not just
 //! performance.
 
-use revolver::config::{Frontier, RevolverConfig};
+use revolver::config::{Frontier, ProbFormat, RevolverConfig};
 use revolver::coordinator::ConvergenceDetector;
 use revolver::graph::gen::{generate_dataset, Dataset};
 use revolver::graph::Graph;
@@ -45,6 +45,7 @@ fn seed_reference(g: &Graph, cfg: &RevolverConfig) -> Vec<u32> {
     let mut hist = vec![0.0f32; k];
     let mut scores = vec![0.0f32; k];
     let mut pi = vec![0.0f32; k];
+    let mut overlay = vec![0.0f32; k];
     let mut raw_w = vec![0.0f32; k];
     let mut w_norm = vec![0.0f32; k];
     let mut signals = vec![Signal::Penalty; k];
@@ -101,15 +102,25 @@ fn seed_reference(g: &Graph, cfg: &RevolverConfig) -> Vec<u32> {
                 }
                 score_sum += scores[state.label(vid) as usize] as f64;
 
-                raw_w.copy_from_slice(&scores);
+                // Eq.-(13) raw weights in the hot path's overlay form:
+                // neighbour modulation accumulates separately and the
+                // score base is added per entry (`scores[l] +
+                // overlay[l]` — the arithmetic
+                // `build_signals_overlay_into` evaluates on the fly).
+                overlay.fill(0.0);
                 let wsum_inv = if wsum > 1e-12 { 1.0 / wsum } else { 0.0 };
-                for (&u, &w_uv) in g.neighbors(vid).iter().zip(g.neighbor_weights(vid)) {
-                    let lu = lambda[u as usize] as usize;
-                    if lu == action as usize {
-                        raw_w[lu] += w_uv * wsum_inv;
-                    } else if headroom[lu] {
-                        raw_w[lu] += wsum_inv;
+                if wsum_inv > 0.0 {
+                    for (&u, &w_uv) in g.neighbors(vid).iter().zip(g.neighbor_weights(vid)) {
+                        let lu = lambda[u as usize] as usize;
+                        if lu == action as usize {
+                            overlay[lu] += w_uv * wsum_inv;
+                        } else if headroom[lu] {
+                            overlay[lu] += wsum_inv;
+                        }
                     }
+                }
+                for l in 0..k {
+                    raw_w[l] = scores[l] + overlay[l];
                 }
                 build_signals_into(&raw_w, &mut w_norm, &mut signals);
                 WeightedLa::update(
@@ -141,6 +152,9 @@ fn parity_cfg(k: usize, steps: u32, seed: u64) -> RevolverConfig {
         // is the documented bit-exact escape hatch, and this test is
         // the acceptance check that it really is bit-exact.
         frontier: Frontier::Off,
+        // The seed loop keeps f32 LA rows; `prob_format = f32` is the
+        // documented bit-exact setting (q16 storage rounds each row).
+        prob_format: ProbFormat::F32,
         ..Default::default()
     }
 }

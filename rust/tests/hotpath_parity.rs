@@ -1,0 +1,163 @@
+//! Hot-path equivalence properties (DESIGN.md §Hot paths):
+//!
+//! 1. **Scheduling**: the coordinator's frontier collection is a pure
+//!    implementation choice — merged per-worker worklists, the dense
+//!    stamp scan, and the density-switched hybrid must produce
+//!    bit-identical runs (labels *and* evaluation counts) at any
+//!    thread count, while the counters prove the cheap path actually
+//!    ran.
+//! 2. **Quantized LA storage**: `prob_format = q16` changes the RNG
+//!    consumption pattern and rounds every stored probability, so it is
+//!    a *different trajectory* — but it must land inside a quality
+//!    envelope of the f32 reference at equal step budget.
+
+use revolver::config::{Frontier, ProbFormat, RevolverConfig};
+use revolver::graph::gen::ba::barabasi_albert;
+use revolver::graph::gen::rmat::rmat;
+use revolver::graph::Graph;
+use revolver::metrics::quality;
+use revolver::partitioners::revolver::Revolver;
+use revolver::partitioners::spinner::Spinner;
+use revolver::partitioners::{PartitionOutput, Partitioner};
+
+fn graphs(seed: u64) -> Vec<(&'static str, Graph)> {
+    vec![
+        ("ba", barabasi_albert(1024, 4, seed)),
+        ("rmat", rmat(1024, 8 * 1024, 0.57, 0.19, 0.19, seed)),
+    ]
+}
+
+fn base_cfg(k: usize, threads: usize, seed: u64) -> RevolverConfig {
+    RevolverConfig {
+        parts: k,
+        threads,
+        seed,
+        max_steps: 15,
+        halt_window: u32::MAX, // fixed budget: only the empty frontier halts
+        frontier: Frontier::On,
+        ..Default::default()
+    }
+}
+
+/// Run at a given dense-scan threshold.
+fn run_revolver(g: &Graph, cfg: &RevolverConfig, frac: f64) -> PartitionOutput {
+    let mut cfg = cfg.clone();
+    cfg.frontier_dense_frac = frac;
+    Revolver::new(cfg).partition(g)
+}
+
+fn run_spinner(g: &Graph, cfg: &RevolverConfig, frac: f64) -> PartitionOutput {
+    let mut cfg = cfg.clone();
+    cfg.frontier_dense_frac = frac;
+    Spinner::new(cfg).partition(g)
+}
+
+#[test]
+fn worklist_scan_and_hybrid_runs_identical_revolver() {
+    for seed in [3u64, 17, 91] {
+        for (name, g) in graphs(seed) {
+            let cfg = base_cfg(4, 1, seed);
+            let scan = run_revolver(&g, &cfg, 0.0);
+            let wl = run_revolver(&g, &cfg, 1.0);
+            let hybrid = run_revolver(&g, &cfg, 0.25);
+            assert_eq!(scan.labels, wl.labels, "{name} seed={seed}");
+            assert_eq!(scan.labels, hybrid.labels, "{name} seed={seed}");
+            assert_eq!(
+                scan.trace.total_evaluated, wl.trace.total_evaluated,
+                "{name} seed={seed}"
+            );
+            assert_eq!(
+                scan.trace.total_evaluated, hybrid.trace.total_evaluated,
+                "{name} seed={seed}"
+            );
+            // The counters prove which collector ran: scan-always never
+            // merges worklists, worklist-always never reads a stamp, and
+            // both saw the same number of post-step-0 collections
+            // (identical trajectories ⇒ identical step counts).
+            assert_eq!(scan.trace.worklist_steps, 0, "{name} seed={seed}");
+            assert_eq!(wl.trace.stamp_reads, 0, "{name} seed={seed}");
+            assert_eq!(wl.trace.scan_steps, 0, "{name} seed={seed}");
+            assert_eq!(
+                scan.trace.scan_steps, wl.trace.worklist_steps,
+                "{name} seed={seed}"
+            );
+            assert_eq!(
+                hybrid.trace.scan_steps + hybrid.trace.worklist_steps,
+                scan.trace.scan_steps,
+                "{name} seed={seed}"
+            );
+        }
+    }
+}
+
+#[test]
+fn worklist_scan_identical_spinner_multithreaded() {
+    // Frontier collection happens on the coordinator before chunking,
+    // so the equivalence must hold at any worker count — the merged
+    // worklists are sorted back into the scan order the chunker (and
+    // hence every per-chunk RNG stream) sees.
+    for seed in [5u64, 23] {
+        for (name, g) in graphs(seed) {
+            let cfg = base_cfg(4, 4, seed);
+            let scan = run_spinner(&g, &cfg, 0.0);
+            let wl = run_spinner(&g, &cfg, 1.0);
+            assert_eq!(scan.labels, wl.labels, "{name} seed={seed}");
+            assert_eq!(
+                scan.trace.total_evaluated, wl.trace.total_evaluated,
+                "{name} seed={seed}"
+            );
+            assert_eq!(wl.trace.stamp_reads, 0, "{name} seed={seed}");
+        }
+    }
+}
+
+#[test]
+fn q16_quality_within_envelope_of_f32() {
+    // Equal budget, converged runs: the quantized slab must stay within
+    // 1% mean local-edges (3 seeds) and 1.10× balance of the f32 rows.
+    let mut le_f = 0.0f64;
+    let mut le_q = 0.0f64;
+    for seed in [11u64, 29, 47] {
+        let g = barabasi_albert(2048, 5, seed);
+        let mut cfg = RevolverConfig {
+            parts: 4,
+            threads: 2,
+            seed,
+            max_steps: 80,
+            ..Default::default()
+        };
+        cfg.prob_format = ProbFormat::F32;
+        let f = Revolver::new(cfg.clone()).partition(&g);
+        cfg.prob_format = ProbFormat::Q16;
+        let q = Revolver::new(cfg).partition(&g);
+
+        le_f += quality::local_edges(&g, &f.labels);
+        le_q += quality::local_edges(&g, &q.labels);
+        let mnl_f = quality::max_normalized_load(&g, &f.labels, 4);
+        let mnl_q = quality::max_normalized_load(&g, &q.labels, 4);
+        assert!(mnl_q <= 1.10 * mnl_f, "seed={seed} mnl q16={mnl_q} f32={mnl_f}");
+    }
+    le_f /= 3.0;
+    le_q /= 3.0;
+    assert!(
+        le_q >= 0.99 * le_f,
+        "q16 mean local edges {le_q} fell >1% below f32's {le_f}"
+    );
+}
+
+#[test]
+fn q16_single_thread_deterministic() {
+    let g = rmat(1024, 8 * 1024, 0.57, 0.19, 0.19, 13);
+    let cfg = RevolverConfig {
+        parts: 8,
+        threads: 1,
+        seed: 13,
+        max_steps: 25,
+        prob_format: ProbFormat::Q16,
+        ..Default::default()
+    };
+    let a = Revolver::new(cfg.clone()).partition(&g);
+    let b = Revolver::new(cfg).partition(&g);
+    assert_eq!(a.labels, b.labels);
+    assert!(a.labels.iter().all(|&l| l < 8));
+}

@@ -1,0 +1,92 @@
+#!/usr/bin/env bash
+# Run the hot-path bench suite and record its BENCH_JSON rows as one
+# dated entry in BENCH_hotpath.json (repo root) — the bench trajectory
+# DESIGN.md §Hot paths documents.
+#
+#   scripts/bench_hotpath.sh                # quick mode, append a run
+#   scripts/bench_hotpath.sh --full         # REVOLVER_BENCH_SCALE=full
+#   scripts/bench_hotpath.sh --check        # run + validate, append nothing
+#   scripts/bench_hotpath.sh --note "text"  # free-form provenance note
+#
+# The bench binary validates every row against its section schema
+# in-process (util::bench::validate_rows) and panics on drift, so a
+# harvested line is already schema-clean; this script only extracts it
+# and merges it with machine metadata. Requires python3 for the JSON
+# merge (stdlib only).
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+OUT="BENCH_hotpath.json"
+MODE="quick"
+CHECK=0
+NOTE=""
+while [ $# -gt 0 ]; do
+    case "$1" in
+        --full) MODE="full" ;;
+        --check) CHECK=1 ;;
+        --note) NOTE="$2"; shift ;;
+        --out) OUT="$2"; shift ;;
+        *) echo "unknown flag: $1" >&2; exit 2 ;;
+    esac
+    shift
+done
+
+LOG="$(mktemp)"
+trap 'rm -f "$LOG"' EXIT
+
+echo "== cargo bench --bench hotpath (mode=$MODE) ==" >&2
+if [ "$MODE" = "full" ]; then
+    (cd rust && REVOLVER_BENCH_SCALE=full cargo bench --bench hotpath) | tee "$LOG"
+else
+    (cd rust && cargo bench --bench hotpath) | tee "$LOG"
+fi
+
+ROWS_LINE="$(grep '^BENCH_JSON \[' "$LOG" | tail -n 1 | sed 's/^BENCH_JSON //')"
+if [ -z "$ROWS_LINE" ]; then
+    echo "error: no BENCH_JSON line in bench output" >&2
+    exit 1
+fi
+grep -q 'BENCH_JSON rows validated' "$LOG" || {
+    echo "error: bench did not report in-process row validation" >&2
+    exit 1
+}
+
+if [ "$CHECK" = 1 ]; then
+    echo "ok: BENCH_JSON line present and validated (check mode, nothing written)" >&2
+    exit 0
+fi
+
+ROWS_LINE="$ROWS_LINE" OUT="$OUT" MODE="$MODE" NOTE="$NOTE" python3 - <<'PY'
+import json, os, platform, subprocess, sys
+from datetime import datetime, timezone
+
+out = os.environ["OUT"]
+rows = json.loads(os.environ["ROWS_LINE"])
+with open(out) as f:
+    doc = json.load(f)
+
+def git(*args):
+    try:
+        return subprocess.check_output(["git", *args], text=True).strip()
+    except Exception:
+        return "unknown"
+
+run = {
+    "recorded_at": datetime.now(timezone.utc).strftime("%Y-%m-%dT%H:%M:%SZ"),
+    "git_commit": git("rev-parse", "--short", "HEAD"),
+    "git_dirty": bool(git("status", "--porcelain")),
+    "scale": os.environ["MODE"],
+    "host": {
+        "machine": platform.machine(),
+        "system": platform.system(),
+        "cpus": os.cpu_count(),
+    },
+    "note": os.environ.get("NOTE", ""),
+    "rows": rows,
+}
+doc["runs"].append(run)
+with open(out, "w") as f:
+    json.dump(doc, f, indent=1)
+    f.write("\n")
+print(f"appended run with {len(rows)} rows to {out}", file=sys.stderr)
+PY
