@@ -58,6 +58,7 @@ const BENCH_SPEC: &[(&str, &[&str])] = &[
         &["threads", "steps", "parts", "vertices", "edges", "median_ns", "mean_ns", "min_ns",
           "local_edges", "max_normalized_load"],
     ),
+    ("obs_overhead", &["iters", "median_ns", "mean_ns", "min_ns"]),
 ];
 
 /// A `hotpath_micro` row: one isolated-primitive timing.
@@ -639,6 +640,49 @@ fn main() {
                 .into_iter()
                 .collect(),
             ));
+        }
+    }
+
+    // Observability overhead guard: the same engine run with recording
+    // disabled, with the no-op recorder (pure dispatch cost), and with
+    // a full RunRecorder retaining everything. The acceptance claim is
+    // that disabled ≈ noop ≈ recorder within noise — instrumentation
+    // must never show up in the step loop's profile.
+    {
+        let og = bench_rmat(scale_exp(14, 12));
+        println!(
+            "\n=== obs overhead: disabled vs noop vs recorder (R-MAT |V|={} |E|={}, k={k8}) ===\n",
+            og.num_vertices(),
+            og.num_edges()
+        );
+        let cfg = RevolverConfig {
+            parts: k8,
+            max_steps: 5,
+            halt_window: u32::MAX,
+            threads: 1,
+            seed: 3,
+            ..Default::default()
+        };
+        let p = Revolver::new(cfg);
+        for mode in ["disabled", "noop", "recorder"] {
+            match mode {
+                "noop" => revolver::obs::install(std::sync::Arc::new(revolver::obs::NoopRecorder)),
+                "recorder" => revolver::obs::install(std::sync::Arc::new(
+                    revolver::obs::RunRecorder::new(),
+                )),
+                _ => {}
+            }
+            let r = bench(&format!("revolver 5 steps obs={mode}"), 1, 3, || {
+                p.partition(&og).labels.len()
+            });
+            revolver::obs::uninstall();
+            println!("{r}");
+            let mut row = micro_row(mode, &r);
+            if let Json::Obj(m) = &mut row {
+                m.insert("bench".to_string(), Json::Str("obs_overhead".to_string()));
+                m.insert("mode".to_string(), Json::Str(mode.to_string()));
+            }
+            rows.push(row);
         }
     }
 

@@ -208,6 +208,32 @@ impl std::str::FromStr for Placement {
     }
 }
 
+/// CLI progress verbosity (`--verbosity`): how chatty the stderr
+/// progress lines routed through [`crate::obs::log`] are. Hard errors
+/// always print regardless of level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Verbosity {
+    /// No progress output (long scripted runs).
+    Quiet,
+    /// One-line progress per phase — what the CLI always printed.
+    #[default]
+    Info,
+    /// Additional detail lines.
+    Debug,
+}
+
+impl std::str::FromStr for Verbosity {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_lowercase().as_str() {
+            "quiet" => Ok(Verbosity::Quiet),
+            "info" => Ok(Verbosity::Info),
+            "debug" => Ok(Verbosity::Debug),
+            other => bail!("unknown verbosity {other:?} (expected quiet|info|debug)"),
+        }
+    }
+}
+
 /// Initial assignment policy for the iterative partitioners
 /// (Revolver / Spinner).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -318,6 +344,14 @@ pub struct RevolverConfig {
     /// Dynamic: greedy objective for placing arriving vertices against
     /// the full current assignment.
     pub placement: Placement,
+    /// Progress verbosity of the CLI ([`crate::obs::log`]).
+    pub verbosity: Verbosity,
+    /// Stream JSONL observability events to this file (`--obs-log`);
+    /// empty = off. Installs a [`crate::obs::RunRecorder`] for the run.
+    pub obs_log: String,
+    /// Print the end-of-run hierarchical span timing tree
+    /// (`--profile`). Also installs a run recorder.
+    pub profile: bool,
 }
 
 impl Default for RevolverConfig {
@@ -351,6 +385,9 @@ impl Default for RevolverConfig {
             compact_ratio: 0.25,
             repair_steps: 10,
             placement: Placement::Fennel,
+            verbosity: Verbosity::Info,
+            obs_log: String::new(),
+            profile: false,
         }
     }
 }
@@ -475,6 +512,9 @@ impl RevolverConfig {
                 "compact_ratio" => cfg.compact_ratio = value.parse().context("compact_ratio")?,
                 "repair_steps" => cfg.repair_steps = value.parse().context("repair_steps")?,
                 "placement" => cfg.placement = value.parse()?,
+                "verbosity" => cfg.verbosity = value.parse()?,
+                "obs_log" => cfg.obs_log = value.clone(),
+                "profile" => cfg.profile = value.parse().context("profile")?,
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -577,6 +617,23 @@ mod tests {
         assert!(RevolverConfig::from_toml_str("parts = 1\n").is_err());
         assert!(RevolverConfig::from_toml_str("alpha = 2.0\n").is_err());
         assert!(RevolverConfig::from_toml_str("parts = banana\n").is_err());
+    }
+
+    #[test]
+    fn verbosity_parse_and_obs_knobs_from_toml() {
+        assert_eq!(RevolverConfig::default().verbosity, Verbosity::Info);
+        assert_eq!("quiet".parse::<Verbosity>().unwrap(), Verbosity::Quiet);
+        assert_eq!("Info".parse::<Verbosity>().unwrap(), Verbosity::Info);
+        assert_eq!("DEBUG".parse::<Verbosity>().unwrap(), Verbosity::Debug);
+        assert!("loud".parse::<Verbosity>().is_err());
+        let c = RevolverConfig::from_toml_str(
+            "verbosity = \"quiet\"\nobs_log = \"run.jsonl\"\nprofile = true\n",
+        )
+        .unwrap();
+        assert_eq!(c.verbosity, Verbosity::Quiet);
+        assert_eq!(c.obs_log, "run.jsonl");
+        assert!(c.profile);
+        assert!(RevolverConfig::from_toml_str("profile = maybe\n").is_err());
     }
 
     #[test]

@@ -35,7 +35,11 @@ impl ConvergenceDetector {
         } else {
             self.stall += 1;
         }
-        self.stall >= self.window
+        let halt = self.stall >= self.window;
+        if halt {
+            crate::obs::counter_add("engine_halts_converged", 1);
+        }
+        halt
     }
 
     /// An empty active frontier: every vertex is settled (labels, λ and
@@ -45,6 +49,7 @@ impl ConvergenceDetector {
     /// the engine's halting sites stay uniform.
     pub fn observe_empty_frontier(&mut self) -> bool {
         self.stall = self.stall.max(self.window);
+        crate::obs::counter_add("engine_halts_empty_frontier", 1);
         true
     }
 

@@ -57,6 +57,10 @@ pub struct EpochStats {
     pub evaluated: u64,
     /// Boundary moves of the post-repair ε-rebalance.
     pub rebalance_moves: u64,
+    /// Wall seconds of the repair pass alone (0.0 when no seeds, i.e.
+    /// no repair ran) — surfaced as the `mean_score` column of the
+    /// dynamic trace CSV.
+    pub repair_wall_s: f64,
 }
 
 /// A partition assignment maintained incrementally over a
@@ -68,6 +72,7 @@ pub struct IncrementalPartitioner {
     labels: Vec<Label>,
     total_evaluated: u64,
     total_repair_steps: u32,
+    total_wall_s: f64,
 }
 
 impl IncrementalPartitioner {
@@ -109,6 +114,7 @@ impl IncrementalPartitioner {
             labels,
             total_evaluated: 0,
             total_repair_steps: 0,
+            total_wall_s: 0.0,
         }
     }
 
@@ -142,23 +148,41 @@ impl IncrementalPartitioner {
         self.total_repair_steps
     }
 
+    /// Σ wall seconds across all epochs (apply + place + repair +
+    /// rebalance; the cold start is not counted, matching
+    /// [`IncrementalPartitioner::total_evaluated`]).
+    pub fn total_wall_s(&self) -> f64 {
+        self.total_wall_s
+    }
+
     /// Apply one update batch and repair the assignment around it.
     pub fn epoch(&mut self, batch: &UpdateBatch) -> EpochStats {
         let k = self.cfg.parts;
+        let sw = crate::util::Stopwatch::start();
+        let _ep = crate::obs::span("dynamic_epoch");
         let mut stats = EpochStats::default();
 
         // 1. Mutate the overlay, collecting changed endpoints.
         let mut touched: Vec<VertexId> = Vec::new();
-        let applied = self.graph.apply(batch, &mut touched);
-        stats.applied = applied.applied;
-        stats.skipped = applied.skipped;
+        {
+            let _s = crate::obs::span("apply");
+            let applied = self.graph.apply(batch, &mut touched);
+            stats.applied = applied.applied;
+            stats.skipped = applied.skipped;
+        }
 
         // 2. Greedy placement of arrivals against the full assignment.
-        stats.placed = self.place_new_vertices();
+        {
+            let _s = crate::obs::span("place");
+            stats.placed = self.place_new_vertices();
+        }
 
         // 3. Materialize the CSR for repair + metrics (epoch boundary =
         //    compaction point, see module docs).
-        self.graph.compact();
+        {
+            let _s = crate::obs::span("compact");
+            self.graph.compact();
+        }
         let g = self.graph.base();
 
         // Seed set: live changed endpoints plus their undirected
@@ -175,6 +199,8 @@ impl IncrementalPartitioner {
         stats.seeds = seeds.len();
 
         if !seeds.is_empty() {
+            let _s = crate::obs::span("repair");
+            let rsw = crate::util::Stopwatch::start();
             let mut rcfg = self.cfg.clone();
             rcfg.max_steps = self.cfg.repair_steps;
             let out = match self.refiner {
@@ -187,26 +213,32 @@ impl IncrementalPartitioner {
             };
             stats.repair_steps = out.trace.steps();
             stats.evaluated = out.trace.total_evaluated;
+            stats.repair_wall_s = rsw.elapsed_s();
             self.labels = out.labels;
         }
 
         // 4. Pin the ε envelope (removals can strand b(l) > C; the
         //    engine's gate only bounds inflow).
-        stats.rebalance_moves = rebalance(g, &mut self.labels, k, self.cfg.epsilon);
+        {
+            let _s = crate::obs::span("rebalance");
+            stats.rebalance_moves = rebalance(g, &mut self.labels, k, self.cfg.epsilon);
+        }
 
         self.total_evaluated += stats.evaluated;
         self.total_repair_steps += stats.repair_steps;
+        self.total_wall_s += sw.elapsed_s();
         stats
     }
 
     /// Build a per-epoch quality trace point — the quality-over-time
     /// CSV rows the `dynamic` subcommand emits ride the existing
-    /// [`RunTrace`] machinery, with three columns reinterpreted
-    /// (schema note, mirrored in the CLI output): `step` is the epoch
-    /// index, `migrations` carries the post-repair *rebalance boundary
-    /// moves* (the repair pass's internal engine migrations are not
-    /// surfaced), and `mean_score` is unused (0.0 — there is no single
-    /// per-epoch convergence score).
+    /// [`RunTrace`] machinery, with columns reinterpreted (schema
+    /// note, mirrored in the CLI output): `step` is the epoch index,
+    /// `migrations` carries the post-repair *rebalance boundary moves*
+    /// (the repair pass's internal engine migrations are not
+    /// surfaced), `mean_score` carries the epoch's repair-pass wall
+    /// seconds (0.0 when no repair ran), and `elapsed_s` is cumulative
+    /// epoch wall time (cold start excluded).
     pub fn trace_point(&self, epoch: u32, stats: &EpochStats) -> crate::metrics::trace::TracePoint {
         use crate::metrics::quality;
         let g = self.current();
@@ -214,9 +246,10 @@ impl IncrementalPartitioner {
             step: epoch,
             local_edges: quality::local_edges(g, &self.labels),
             max_normalized_load: quality::max_normalized_load(g, &self.labels, self.cfg.parts),
-            mean_score: 0.0,
+            mean_score: stats.repair_wall_s,
             migrations: stats.rebalance_moves,
             evaluated: stats.evaluated,
+            elapsed_s: self.total_wall_s,
         }
     }
 
@@ -224,6 +257,16 @@ impl IncrementalPartitioner {
     pub fn record_epoch(&self, trace: &mut RunTrace, epoch: u32, stats: &EpochStats) {
         trace.push(self.trace_point(epoch, stats));
         trace.total_evaluated += stats.evaluated;
+        crate::obs::event(
+            "epoch",
+            &[
+                ("epoch", epoch as f64),
+                ("placed", stats.placed as f64),
+                ("seeds", stats.seeds as f64),
+                ("evaluated", stats.evaluated as f64),
+                ("repair_s", stats.repair_wall_s),
+            ],
+        );
     }
 
     /// Assign every not-yet-labelled vertex (arrivals, including ids

@@ -426,6 +426,13 @@ pub fn run_with_frontier<P: VertexProgram>(
     initial_frontier: InitialFrontier,
 ) -> PartitionOutput {
     let sw = Stopwatch::start();
+    // Observability: `obs_on` is captured once and gates every clock
+    // read below, so the disabled path adds only dead branches (the
+    // overhead contract, `obs`). The "engine" guard nests the segment
+    // cuts under any caller spans (multilevel refine, dynamic repair).
+    let obs_on = crate::obs::enabled();
+    let _run_span = crate::obs::span("engine");
+    let mut seg = crate::obs::span::Segments::start(obs_on);
     let k = cfg.parts;
     let n = g.num_vertices();
     let sync = program.execution() == ExecutionModel::Synchronous;
@@ -517,6 +524,8 @@ pub fn run_with_frontier<P: VertexProgram>(
     let mut scan_steps: u32 = 0;
     let mut worklist_steps: u32 = 0;
     let mut chunk_reuses: u32 = 0;
+    let mut chunk_builds: u32 = 0;
+    let mut total_migrations: u64 = 0;
     // Last step's aggregates, for a truthful terminal trace point when
     // the sampler did not land on the final step.
     let mut last_mean_score = 0.0f64;
@@ -561,17 +570,27 @@ pub fn run_with_frontier<P: VertexProgram>(
                         wake_sink: if plan.record { Some(&wake_buf) } else { None },
                     };
                     let mut rng = base_rng.fork(step * 2 * t as u64 + c as u64);
+                    let t_a = obs_on.then(Stopwatch::start);
                     let stats_a =
                         program.phase_a(&ctx, &frozen_a, &mut scratch, work, &mut rng);
+                    let busy_a = t_a.map_or(0.0, |w| w.elapsed_s());
                     barrier.wait(); // W2: all demand registered
                     barrier.wait(); // W2b: coordinator froze phase-B data
                     let frozen_b =
                         b_slot.lock().unwrap().clone().expect("phase-B data published");
                     let mut rng = base_rng.fork((step * 2 + 1) * t as u64 + c as u64);
+                    let t_b = obs_on.then(Stopwatch::start);
                     let stats_b =
                         program.phase_b(&ctx, &frozen_b, &mut scratch, work, &mut rng);
                     let mut stats = stats_a.merged(stats_b);
                     stats.evaluated = work.len() as u64;
+                    if obs_on {
+                        // Per-worker busy time: the straggler /
+                        // utilization signal behind degree-balanced
+                        // scheduling (max/median across workers).
+                        let busy_s = busy_a + t_b.map_or(0.0, |w| w.elapsed_s());
+                        crate::obs::observe("engine_worker_busy_us", (busy_s * 1e6) as u64);
+                    }
                     stats_tx.send((c, stats)).expect("coordinator alive");
                     if plan.record {
                         wake_tx
@@ -585,6 +604,7 @@ pub fn run_with_frontier<P: VertexProgram>(
         }
         drop(stats_tx); // workers hold their own clones
         drop(wake_tx);
+        seg.cut("init"); // state + slots + worker spawn
 
         // ── Coordinator ──
         for step in 0..cfg.max_steps {
@@ -657,6 +677,7 @@ pub fn run_with_frontier<P: VertexProgram>(
                         cached.clamped(f)
                     }
                     _ => {
+                        chunk_builds += 1;
                         let fresh = Chunks::by_weight_subset(&verts, t, |v| {
                             1 + g.out_degree(v) as u64
                         });
@@ -676,12 +697,20 @@ pub fn run_with_frontier<P: VertexProgram>(
                 });
             }
             *a_slot.lock().unwrap() = Some(Arc::new(program.prepare_phase_a(g, &state, step)));
+            // Coordinator-clock phase segments: consecutive cuts tile
+            // the step exactly, so the profile tree's engine children
+            // sum to the engine total (barrier-synchronized, the
+            // coordinator crosses W1/W2/W2b/W3 with the workers).
+            seg.cut("collect"); // frontier + plan + snapshots + prep A
             barrier.wait(); // W1
             barrier.wait(); // W2
+            seg.cut("phase_a");
             *b_slot.lock().unwrap() =
                 Some(Arc::new(program.prepare_phase_b(g, &state, &demand, step)));
             barrier.wait(); // W2b
+            seg.cut("phase_b_prep");
             barrier.wait(); // W3
+            seg.cut("phase_b");
 
             // Merge the wake worklists (recording steps send exactly one
             // message per worker) into next step's frontier: sorted
@@ -711,9 +740,24 @@ pub fn run_with_frontier<P: VertexProgram>(
             // legacy all-vertices mean is reproduced exactly.
             let mean_score = totals.score_sum / totals.evaluated.max(1) as f64;
             total_evaluated += totals.evaluated;
+            total_migrations += totals.migrations;
             last_mean_score = mean_score;
             last_migrations = totals.migrations;
             last_evaluated = totals.evaluated;
+            if obs_on {
+                crate::obs::observe("engine_frontier_size", totals.evaluated);
+                crate::obs::gauge_set("engine_mean_score", mean_score);
+                crate::obs::event(
+                    "step",
+                    &[
+                        ("step", step as f64),
+                        ("frontier", totals.evaluated as f64),
+                        ("evaluated", totals.evaluated as f64),
+                        ("migrations", totals.migrations as f64),
+                        ("mean_score", mean_score),
+                    ],
+                );
+            }
 
             if cfg.trace_every > 0 && step % cfg.trace_every == 0 {
                 let labels = state.labels_snapshot();
@@ -724,8 +768,10 @@ pub fn run_with_frontier<P: VertexProgram>(
                     mean_score,
                     migrations: totals.migrations,
                     evaluated: totals.evaluated,
+                    elapsed_s: sw.elapsed_s(),
                 });
             }
+            seg.cut("reduce"); // worklist merge + stats fold + trace
 
             if detector.observe(mean_score) {
                 trace.converged_at = Some(step);
@@ -754,6 +800,7 @@ pub fn run_with_frontier<P: VertexProgram>(
             mean_score: last_mean_score,
             migrations: last_migrations,
             evaluated: last_evaluated,
+            elapsed_s: sw.elapsed_s(),
         });
     }
     trace.total_evaluated = total_evaluated;
@@ -762,6 +809,18 @@ pub fn run_with_frontier<P: VertexProgram>(
     trace.worklist_steps = worklist_steps;
     trace.chunk_reuses = chunk_reuses;
     trace.wall_time_s = sw.elapsed_s();
+    seg.cut("finish"); // scope teardown + terminal trace point
+    if obs_on {
+        crate::obs::counter_add("engine_runs", 1);
+        crate::obs::counter_add("engine_steps", executed_steps as u64);
+        crate::obs::counter_add("engine_evaluated", total_evaluated);
+        crate::obs::counter_add("engine_migrations", total_migrations);
+        crate::obs::counter_add("engine_scan_steps", scan_steps as u64);
+        crate::obs::counter_add("engine_worklist_steps", worklist_steps as u64);
+        crate::obs::counter_add("engine_stamp_reads", stamp_reads);
+        crate::obs::counter_add("engine_chunk_builds", chunk_builds as u64);
+        crate::obs::counter_add("engine_chunk_reuses", chunk_reuses as u64);
+    }
     PartitionOutput { labels, trace }
 }
 

@@ -140,6 +140,7 @@ pub mod la;
 pub mod lp;
 pub mod metrics;
 pub mod multilevel;
+pub mod obs;
 pub mod partition;
 pub mod partitioners;
 pub mod runtime;

@@ -22,6 +22,8 @@
 //!   revolver stats --all
 //!   revolver partition --graph lj --engine xla --parts 8
 
+use std::sync::Arc;
+
 use anyhow::{bail, Context, Result};
 
 use revolver::config::{ExecutionModel, RevolverConfig, StreamAlgo};
@@ -102,6 +104,9 @@ const USAGE_BODY: &str =
     --repair-steps N      dynamic: per-epoch repair superstep budget (default 10)
     --compact-ratio R     dynamic: delta/base edge ratio triggering compaction (default 0.25)
     --placement <ldg|fennel>  dynamic: arrival placement score (default fennel)
+    --verbosity <quiet|info|debug>  stderr progress chatter (default info)
+    --obs-log file.jsonl  stream instrumentation events as JSONL
+    --profile             print the hierarchical span timing tree after the run
     --config file.toml    load RevolverConfig from file";
 
 const USAGE_TAIL: &str =
@@ -166,8 +171,53 @@ fn config_from(args: &mut Args) -> Result<RevolverConfig> {
         cfg.artifacts_dir = dir;
     }
     cfg.classic_la = args.get_bool("classic-la");
+    cfg.verbosity = args.get_or("verbosity", cfg.verbosity)?;
+    if let Some(p) = args.get("obs-log") {
+        cfg.obs_log = p;
+    }
+    cfg.profile = cfg.profile || args.get_bool("profile");
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// Apply the verbosity knob and, when `--obs-log`/`--profile` ask for
+/// it, build + install the process-global recorder. The caller keeps
+/// the concrete handle for [`obs_finish`].
+fn obs_setup(cfg: &RevolverConfig) -> Result<Option<Arc<revolver::obs::RunRecorder>>> {
+    use revolver::config::Verbosity;
+    use revolver::obs::log::Level;
+    revolver::obs::log::set_level(match cfg.verbosity {
+        Verbosity::Quiet => Level::Quiet,
+        Verbosity::Info => Level::Info,
+        Verbosity::Debug => Level::Debug,
+    });
+    if cfg.obs_log.is_empty() && !cfg.profile {
+        return Ok(None);
+    }
+    let rec = if cfg.obs_log.is_empty() {
+        revolver::obs::RunRecorder::new()
+    } else {
+        let f = std::fs::File::create(&cfg.obs_log)
+            .with_context(|| format!("create --obs-log {:?}", cfg.obs_log))?;
+        revolver::obs::RunRecorder::with_sink(Box::new(std::io::BufWriter::new(f)))
+    };
+    let rec = Arc::new(rec);
+    revolver::obs::install(rec.clone());
+    revolver::obs::event("run_start", &[]);
+    Ok(Some(rec))
+}
+
+/// Close out a recorded run: terminal event, uninstall, flush the JSONL
+/// sink, and print the `--profile` tree if asked.
+fn obs_finish(rec: Option<Arc<revolver::obs::RunRecorder>>, profile: bool) {
+    use revolver::obs::Recorder as _;
+    let Some(rec) = rec else { return };
+    revolver::obs::event("run_end", &[("wall_s", rec.elapsed_s())]);
+    revolver::obs::uninstall();
+    rec.flush();
+    if profile {
+        print!("{}", rec.profile_report());
+    }
 }
 
 /// Load a graph: surrogate dataset name, or a file path (.txt/.bin).
@@ -207,15 +257,18 @@ fn cmd_partition(mut args: Args) -> Result<()> {
     args.finish()?;
 
     let k = cfg.parts;
-    eprintln!(
+    let obs = obs_setup(&cfg)?;
+    let profile = cfg.profile;
+    revolver::obs::log::info(&format!(
         "partitioning {gname} (|V|={}, |E|={}) with {algorithm}, k={k}, engine={:?}",
         with_commas(g.num_vertices() as u64),
         with_commas(g.num_edges() as u64),
         cfg.engine,
-    );
+    ));
     let p = by_name(&algorithm, cfg)?;
     let sw = Stopwatch::start();
     let out = p.partition(&g);
+    obs_finish(obs, profile);
     let q = quality::evaluate(&g, &out.labels, k);
     println!("graph:               {gname}");
     println!("algorithm:           {algorithm}");
@@ -258,8 +311,10 @@ fn cmd_stream(mut args: Args) -> Result<()> {
     args.finish()?;
     let algo: StreamAlgo = algorithm.parse()?;
 
+    let obs = obs_setup(&cfg)?;
     let sw = Stopwatch::start();
     let res = revolver::stream::partition_edge_list_file(&file, &cfg, algo)?;
+    obs_finish(obs, cfg.profile);
     let elapsed = sw.elapsed_s();
     let k = cfg.parts;
     let max_load = res.loads.iter().cloned().fold(0.0f64, f64::max);
@@ -346,12 +401,14 @@ fn cmd_dynamic(mut args: Args) -> Result<()> {
 
     let k = cfg.parts;
     let seed = cfg.seed;
-    eprintln!(
+    let obs = obs_setup(&cfg)?;
+    let profile = cfg.profile;
+    revolver::obs::log::info(&format!(
         "dynamic: {gname} (|V|={}, |E|={}) repair={algorithm} k={k} epochs={epochs} {}",
         with_commas(g.num_vertices() as u64),
         with_commas(g.num_edges() as u64),
         churn.as_deref().unwrap_or("update-log"),
-    );
+    ));
     let sw = Stopwatch::start();
     let mut inc = IncrementalPartitioner::new(g, cfg, refiner);
     let q0 = quality::evaluate(inc.current(), inc.labels(), k);
@@ -387,11 +444,13 @@ fn cmd_dynamic(mut args: Args) -> Result<()> {
         with_commas(inc.total_evaluated()),
         sw.elapsed_s()
     );
+    obs_finish(obs, profile);
     if let Some(out) = out.filter(|o| !o.is_empty()) {
         std::fs::write(&out, trace.to_csv())?;
         println!(
             "trace:     {out} (one row per epoch; step=epoch, \
-             migrations=rebalance moves, mean_score unused)"
+             migrations=rebalance moves, mean_score=repair wall seconds, \
+             elapsed_s=cumulative epoch wall)"
         );
     }
     Ok(())
@@ -415,17 +474,18 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
     let vertices: usize = args.get_or("vertices", 16384)?;
     let base_cfg = config_from(&mut args)?;
     args.finish()?;
+    let obs = obs_setup(&base_cfg)?;
 
     let mut report = Report::new();
     for gname in &graphs {
         let ds = Dataset::from_name(gname)
             .with_context(|| format!("unknown dataset {gname:?} in --graphs"))?;
         let g = generate_dataset(ds, vertices, 7)?;
-        eprintln!(
+        revolver::obs::log::info(&format!(
             "sweep: {gname} |V|={} |E|={}",
             with_commas(g.num_vertices() as u64),
             with_commas(g.num_edges() as u64)
-        );
+        ));
         for algo in &algorithms {
             for &k in &parts {
                 let mut le_sum = 0.0;
@@ -453,17 +513,18 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
                     wall_time_s: sw.elapsed_s() / runs as f64,
                     runs,
                 };
-                eprintln!(
+                revolver::obs::log::info(&format!(
                     "  {algo:>9} k={k:<4} local={:.4} mnl={:.4}",
                     row.local_edges, row.max_normalized_load
-                );
+                ));
                 report.push(row);
             }
         }
     }
+    obs_finish(obs, base_cfg.profile);
     print!("{}", report.to_table());
     report.write_files(std::path::Path::new(&out_dir), "fig3_sweep")?;
-    eprintln!("wrote {out_dir}/fig3_sweep.csv and .json");
+    revolver::obs::log::info(&format!("wrote {out_dir}/fig3_sweep.csv and .json"));
     Ok(())
 }
 
@@ -477,9 +538,10 @@ fn cmd_convergence(mut args: Args) -> Result<()> {
     cfg.halt_window = u32::MAX;
 
     std::fs::create_dir_all(&out_dir)?;
+    let obs = obs_setup(&cfg)?;
     for algo in ["revolver", "spinner"] {
         let p = by_name(algo, cfg.clone())?;
-        eprintln!("convergence: {algo} on {gname} k={}", cfg.parts);
+        revolver::obs::log::info(&format!("convergence: {algo} on {gname} k={}", cfg.parts));
         let out = p.partition(&g);
         let path = format!("{out_dir}/fig4_{algo}_{gname}_k{}.csv", cfg.parts);
         std::fs::write(&path, out.trace.to_csv())?;
@@ -491,6 +553,7 @@ fn cmd_convergence(mut args: Args) -> Result<()> {
             out.trace.steps()
         );
     }
+    obs_finish(obs, cfg.profile);
     Ok(())
 }
 

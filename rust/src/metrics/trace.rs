@@ -14,6 +14,10 @@ pub struct TracePoint {
     /// full-sweep execution, the active-frontier size under
     /// [`crate::config::Frontier::On`].
     pub evaluated: u64,
+    /// Wall-clock seconds since the run started, sampled when this
+    /// point was recorded — the x-axis for convergence-vs-time plots
+    /// (the terminal point's value ~equals `wall_time_s`).
+    pub elapsed_s: f64,
 }
 
 /// A full run trace plus its terminal summary.
@@ -60,16 +64,16 @@ impl RunTrace {
     }
 
     /// CSV rows
-    /// (`step,local_edges,max_norm_load,mean_score,migrations,evaluated`).
+    /// (`step,local_edges,max_norm_load,mean_score,migrations,evaluated,elapsed_s`).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "step,local_edges,max_normalized_load,mean_score,migrations,evaluated\n",
+            "step,local_edges,max_normalized_load,mean_score,migrations,evaluated,elapsed_s\n",
         );
         for p in &self.points {
             out.push_str(&format!(
-                "{},{:.6},{:.6},{:.6},{},{}\n",
+                "{},{:.6},{:.6},{:.6},{},{},{:.6}\n",
                 p.step, p.local_edges, p.max_normalized_load, p.mean_score, p.migrations,
-                p.evaluated
+                p.evaluated, p.elapsed_s
             ));
         }
         out
@@ -88,6 +92,7 @@ mod tests {
             mean_score: le,
             migrations: 5,
             evaluated: 100,
+            elapsed_s: 0.5,
         }
     }
 
@@ -110,6 +115,8 @@ mod tests {
         let lines: Vec<&str> = csv.trim().lines().collect();
         assert_eq!(lines.len(), 2);
         assert!(lines[0].starts_with("step,"));
+        assert!(lines[0].ends_with(",elapsed_s"));
         assert!(lines[1].starts_with("0,0.25"));
+        assert!(lines[1].ends_with(",0.500000"));
     }
 }

@@ -210,17 +210,24 @@ impl Partitioner for Multilevel {
 
     fn partition(&self, g: &Graph) -> PartitionOutput {
         let sw = Stopwatch::start();
+        let _run = crate::obs::span("multilevel");
         let cfg = &self.cfg;
         let k = cfg.parts;
 
-        let h = hierarchy_for(g, cfg);
+        let h = {
+            let _s = crate::obs::span("coarsen");
+            hierarchy_for(g, cfg)
+        };
         let coarsest: &Graph = h.coarsest().map(|c| c.graph()).unwrap_or(g);
 
         // Coarsest level: any registered algorithm (streaming passes
         // contribute no supersteps to the budget — they are one sweep).
-        let coarse = by_name(&cfg.coarse_algo, cfg.clone())
-            .expect("coarse_algo is validated against the registry")
-            .partition(coarsest);
+        let coarse = {
+            let _s = crate::obs::span("coarse_partition");
+            by_name(&cfg.coarse_algo, cfg.clone())
+                .expect("coarse_algo is validated against the registry")
+                .partition(coarsest)
+        };
         let mut labels = coarse.labels;
         let mut total_steps = coarse.trace.steps();
         let mut total_evaluated = coarse.trace.total_evaluated;
@@ -233,26 +240,49 @@ impl Partitioner for Multilevel {
         let mut refine_cfg = cfg.clone();
         refine_cfg.max_steps = cfg.refine_steps;
 
-        labels = self.refine_level(
-            coarsest,
-            labels,
-            &refine_cfg,
-            &mut total_steps,
-            &mut total_evaluated,
+        crate::obs::event(
+            "ml_level",
+            &[("level", h.levels() as f64), ("vertices", coarsest.num_vertices() as f64)],
         );
-        rebalance(coarsest, &mut labels, k, cfg.epsilon);
-
-        for lev in (0..h.levels()).rev() {
-            labels = project(&labels, &h.maps[lev]);
-            let lg: &Graph = if lev == 0 { g } else { h.graphs[lev - 1].graph() };
+        {
+            let _s = crate::obs::span("refine");
             labels = self.refine_level(
-                lg,
+                coarsest,
                 labels,
                 &refine_cfg,
                 &mut total_steps,
                 &mut total_evaluated,
             );
-            rebalance(lg, &mut labels, k, cfg.epsilon);
+        }
+        {
+            let _s = crate::obs::span("rebalance");
+            rebalance(coarsest, &mut labels, k, cfg.epsilon);
+        }
+
+        for lev in (0..h.levels()).rev() {
+            {
+                let _s = crate::obs::span("project");
+                labels = project(&labels, &h.maps[lev]);
+            }
+            let lg: &Graph = if lev == 0 { g } else { h.graphs[lev - 1].graph() };
+            crate::obs::event(
+                "ml_level",
+                &[("level", lev as f64), ("vertices", lg.num_vertices() as f64)],
+            );
+            {
+                let _s = crate::obs::span("refine");
+                labels = self.refine_level(
+                    lg,
+                    labels,
+                    &refine_cfg,
+                    &mut total_steps,
+                    &mut total_evaluated,
+                );
+            }
+            {
+                let _s = crate::obs::span("rebalance");
+                rebalance(lg, &mut labels, k, cfg.epsilon);
+            }
         }
 
         let q = quality::evaluate(g, &labels, k);
@@ -264,6 +294,7 @@ impl Partitioner for Multilevel {
             mean_score: 0.0,
             migrations: 0,
             evaluated: 0, // summary point; the run total lives below
+            elapsed_s: sw.elapsed_s(),
         });
         trace.total_evaluated = total_evaluated;
         trace.wall_time_s = sw.elapsed_s();

@@ -1,0 +1,148 @@
+//! JSONL run events: the `--obs-log` stream.
+//!
+//! One JSON object per line. Every event carries `"ev"` (its kind) and
+//! `"t_s"` (seconds since the recorder started); [`EVENT_SPEC`] fixes
+//! the numeric fields each kind must additionally carry. The schema is
+//! validated twice: in-process by [`validate_events`] (mirroring
+//! `util::bench::validate_rows` — drift fails loudly, not in a
+//! downstream parser) and out-of-process by
+//! `scripts/check_obs_log.py` in CI.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Event kind → required numeric fields (besides `"ev"`/`"t_s"`).
+/// Extra number/string fields are allowed; nested values are not.
+pub const EVENT_SPEC: &[(&str, &[&str])] = &[
+    ("run_start", &[]),
+    ("step", &["step", "frontier", "evaluated", "migrations"]),
+    ("stream_pass", &["pass", "edges"]),
+    ("ml_level", &["level", "vertices"]),
+    ("epoch", &["epoch", "placed", "seeds", "evaluated", "repair_s"]),
+    ("run_end", &["wall_s"]),
+];
+
+/// Render one event line (no trailing newline). Non-finite field
+/// values are dropped rather than emitted as invalid JSON — if a
+/// *required* field goes non-finite, [`validate_events`] reports it.
+pub fn render(kind: &str, t_s: f64, fields: &[(&str, f64)]) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("ev".to_string(), Json::Str(kind.to_string()));
+    m.insert("t_s".to_string(), Json::Num(t_s));
+    for &(k, v) in fields {
+        if v.is_finite() {
+            m.insert(k.to_string(), Json::Num(v));
+        }
+    }
+    Json::Obj(m).to_string()
+}
+
+/// Validate a JSONL event stream against [`EVENT_SPEC`]; returns the
+/// event count. Blank lines are permitted (and not counted).
+pub fn validate_events(text: &str) -> Result<usize, String> {
+    let mut n = 0usize;
+    for (idx, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let lineno = idx + 1;
+        let j = Json::parse(line).map_err(|e| format!("line {lineno}: {e}"))?;
+        let obj = match &j {
+            Json::Obj(m) => m,
+            _ => return Err(format!("line {lineno}: not an object")),
+        };
+        let kind = j
+            .get("ev")
+            .and_then(|v| v.as_str())
+            .ok_or(format!("line {lineno}: missing string \"ev\" tag"))?;
+        let required = EVENT_SPEC
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .map(|(_, fields)| *fields)
+            .ok_or(format!("line {lineno}: unknown event kind {kind:?}"))?;
+        match j.get("t_s") {
+            Some(Json::Num(x)) if x.is_finite() && *x >= 0.0 => {}
+            _ => return Err(format!("line {lineno} ({kind}): \"t_s\" missing or invalid")),
+        }
+        for key in required {
+            match j.get(key) {
+                Some(Json::Num(x)) if x.is_finite() => {}
+                Some(_) => return Err(format!("line {lineno} ({kind}): {key:?} not finite")),
+                None => return Err(format!("line {lineno} ({kind}): missing {key:?}")),
+            }
+        }
+        for (key, val) in obj.iter() {
+            if !matches!(val, Json::Num(_) | Json::Str(_)) {
+                return Err(format!("line {lineno} ({kind}): {key:?} must be number/string"));
+            }
+        }
+        n += 1;
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rendered_events_validate() {
+        let mut log = String::new();
+        log.push_str(&render("run_start", 0.0, &[]));
+        log.push('\n');
+        log.push_str(&render(
+            "step",
+            0.5,
+            &[("step", 0.0), ("frontier", 103.0), ("evaluated", 103.0), ("migrations", 7.0)],
+        ));
+        log.push('\n');
+        log.push_str(&render("run_end", 1.25, &[("wall_s", 1.25)]));
+        log.push('\n');
+        assert_eq!(validate_events(&log), Ok(3));
+        assert_eq!(validate_events(""), Ok(0));
+    }
+
+    #[test]
+    fn extra_flat_fields_are_allowed() {
+        let line = render(
+            "step",
+            1.0,
+            &[
+                ("step", 1.0),
+                ("frontier", 5.0),
+                ("evaluated", 5.0),
+                ("migrations", 0.0),
+                ("mean_score", 0.83),
+            ],
+        );
+        assert_eq!(validate_events(&line), Ok(1));
+    }
+
+    #[test]
+    fn non_finite_optional_fields_are_dropped() {
+        let line = render("run_start", 0.0, &[("junk", f64::NAN)]);
+        assert!(!line.contains("junk"));
+        assert_eq!(validate_events(&line), Ok(1));
+        // A required field dropped for non-finiteness fails validation.
+        let line = render("run_end", 0.0, &[("wall_s", f64::INFINITY)]);
+        assert!(validate_events(&line).unwrap_err().contains("wall_s"));
+    }
+
+    #[test]
+    fn schema_drift_is_rejected() {
+        for bad in [
+            "[1,2]",                                        // not an object
+            r#"{"t_s":0.1}"#,                               // missing ev
+            r#"{"ev":"mystery","t_s":0.1}"#,                // unknown kind
+            r#"{"ev":"run_end","wall_s":1.0}"#,             // missing t_s
+            r#"{"ev":"run_end","t_s":-1.0,"wall_s":1.0}"#,  // negative t_s
+            r#"{"ev":"run_end","t_s":0.1}"#,                // missing required
+            r#"{"ev":"run_end","t_s":0.1,"wall_s":"x"}"#,   // wrong type
+            r#"{"ev":"run_end","t_s":0.1,"wall_s":1,"sub":{"a":1}}"#, // nested
+            "not json",
+        ] {
+            assert!(validate_events(bad).is_err(), "{bad}");
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Prometheus text exposition (the snapshot format the future `serve`
+//! layer will put behind `/metrics`; until then `RunRecorder::
+//! prometheus` renders it on demand).
+//!
+//! Counters and gauges render as `name value`; histograms as
+//! cumulative `_bucket{le="..."}` lines over the log2 bucket edges
+//! plus `_sum`/`_count`; span stats as two labelled counter families,
+//! `span_seconds_total{path="..."}` and `span_calls_total{path="..."}`
+//! (paths are label *values* and go through [`escape_label`]).
+
+use std::fmt::Write as _;
+
+use crate::obs::registry::{bucket_upper, HistogramSnapshot};
+use crate::obs::span::SpanStat;
+
+/// Escape a string for use inside a Prometheus label value:
+/// backslash, double quote, and newline must be backslash-escaped.
+pub fn escape_label(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render one snapshot in Prometheus text format. Inputs come sorted
+/// (registry snapshots iterate `BTreeMap`s), so output order is
+/// deterministic.
+pub fn render(
+    counters: &[(String, u64)],
+    gauges: &[(String, f64)],
+    histograms: &[(String, HistogramSnapshot)],
+    spans: &[(String, SpanStat)],
+) -> String {
+    let mut out = String::new();
+    for (name, v) in counters {
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {v}");
+    }
+    for (name, v) in gauges {
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        let _ = writeln!(out, "{name} {v}");
+    }
+    for (name, h) in histograms {
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        let mut cum = 0u64;
+        let top = h.buckets.iter().rposition(|&c| c > 0).unwrap_or(0);
+        for (i, &c) in h.buckets.iter().enumerate().take(top + 1) {
+            cum += c;
+            let _ = writeln!(out, "{name}_bucket{{le=\"{}\"}} {cum}", bucket_upper(i));
+        }
+        let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count);
+        let _ = writeln!(out, "{name}_sum {}", h.sum);
+        let _ = writeln!(out, "{name}_count {}", h.count);
+    }
+    if !spans.is_empty() {
+        let _ = writeln!(out, "# TYPE span_seconds_total counter");
+        for (path, s) in spans {
+            let _ = writeln!(
+                out,
+                "span_seconds_total{{path=\"{}\"}} {}",
+                escape_label(path),
+                s.total_ns as f64 / 1e9
+            );
+        }
+        let _ = writeln!(out, "# TYPE span_calls_total counter");
+        for (path, s) in spans {
+            let _ =
+                writeln!(out, "span_calls_total{{path=\"{}\"}} {}", escape_label(path), s.count);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escaping_covers_the_three_specials() {
+        assert_eq!(escape_label("plain/path"), "plain/path");
+        assert_eq!(escape_label(r#"a"b"#), r#"a\"b"#);
+        assert_eq!(escape_label(r"a\b"), r"a\\b");
+        assert_eq!(escape_label("a\nb"), r"a\nb");
+        // Escaping composes: a literal backslash-n stays distinguishable
+        // from a newline.
+        assert_eq!(escape_label("x\\ny"), "x\\\\ny");
+    }
+
+    #[test]
+    fn renders_all_four_families() {
+        let mut buckets = vec![0; crate::obs::registry::BUCKETS];
+        buckets[1] = 2; // two samples of value 1
+        buckets[2] = 1; // one sample in [2,3]
+        let h = HistogramSnapshot { buckets, sum: 5, count: 3 };
+        let text = render(
+            &[("engine_steps".to_string(), 5)],
+            &[("engine_mean_score".to_string(), 0.75)],
+            &[("engine_frontier_size".to_string(), h)],
+            &[(
+                "engine/phase_a".to_string(),
+                SpanStat { total_ns: 2_000_000_000, count: 4, max_ns: 1_000_000_000 },
+            )],
+        );
+        assert!(text.contains("# TYPE engine_steps counter\nengine_steps 5\n"));
+        assert!(text.contains("# TYPE engine_mean_score gauge\nengine_mean_score 0.75\n"));
+        // Buckets are cumulative and stop at the last occupied edge.
+        assert!(text.contains("engine_frontier_size_bucket{le=\"0\"} 0"));
+        assert!(text.contains("engine_frontier_size_bucket{le=\"1\"} 2"));
+        assert!(text.contains("engine_frontier_size_bucket{le=\"3\"} 3"));
+        assert!(!text.contains("le=\"7\""));
+        assert!(text.contains("engine_frontier_size_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("engine_frontier_size_sum 5"));
+        assert!(text.contains("engine_frontier_size_count 3"));
+        assert!(text.contains("span_seconds_total{path=\"engine/phase_a\"} 2"));
+        assert!(text.contains("span_calls_total{path=\"engine/phase_a\"} 4"));
+    }
+
+    #[test]
+    fn empty_snapshot_renders_empty() {
+        assert_eq!(render(&[], &[], &[], &[]), "");
+    }
+}

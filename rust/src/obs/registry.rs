@@ -1,0 +1,266 @@
+//! Atomic metrics registry: named counters, gauges, and log2-bucketed
+//! histograms.
+//!
+//! Metric instruments are created on first use (no pre-registration)
+//! and updated lock-free: the name→instrument map sits behind a
+//! `Mutex`, but the instruments themselves are `Arc`-shared atomics,
+//! so steady-state updates are one `fetch_add`. Names must be
+//! `'static` — every metric the engine emits is listed in the README
+//! metrics reference, and string literals keep the hot-path signature
+//! allocation-free.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Histogram bucket count: bucket `i` holds values with
+/// [`bucket_index`] `i`; index 64 catches `u64::MAX`.
+pub const BUCKETS: usize = 65;
+
+/// Log2 bucket index of a value: 0 → 0, and for v > 0 the bit length
+/// of v — bucket `i ≥ 1` covers `[2^(i-1), 2^i - 1]`.
+pub fn bucket_index(v: u64) -> usize {
+    (u64::BITS - v.leading_zeros()) as usize
+}
+
+/// Inclusive upper edge of bucket `i`: `2^i - 1`, saturating at
+/// `u64::MAX` for the last bucket.
+pub fn bucket_upper(i: usize) -> u64 {
+    if i >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// Lock-free log2-bucketed histogram of `u64` samples.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    fn new() -> Histogram {
+        Histogram {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            sum: self.sum.load(Ordering::Relaxed),
+            count: self.count.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of a [`Histogram`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub buckets: Vec<u64>,
+    pub sum: u64,
+    pub count: u64,
+}
+
+impl HistogramSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Upper edge of the first bucket whose cumulative count reaches
+    /// `q · count` (an upper bound on the q-quantile, since buckets
+    /// only know their edges). `q` is clamped to [0, 1].
+    pub fn quantile_upper(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return bucket_upper(i);
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// The named-instrument registry a [`crate::obs::RunRecorder`] owns.
+/// Gauges store `f64::to_bits` in an `AtomicU64` (last write wins).
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<&'static str, Arc<AtomicU64>>>,
+    gauges: Mutex<BTreeMap<&'static str, Arc<AtomicU64>>>,
+    histograms: Mutex<BTreeMap<&'static str, Arc<Histogram>>>,
+}
+
+impl Registry {
+    /// Handle to a counter, created at zero on first use. Callers that
+    /// update one counter in a loop can hoist this lookup out of it.
+    pub fn counter(&self, name: &'static str) -> Arc<AtomicU64> {
+        self.counters.lock().unwrap().entry(name).or_default().clone()
+    }
+
+    pub fn counter_add(&self, name: &'static str, delta: u64) {
+        self.counter(name).fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn gauge_set(&self, name: &'static str, value: f64) {
+        self.gauges
+            .lock()
+            .unwrap()
+            .entry(name)
+            .or_default()
+            .store(value.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Handle to a histogram, created empty on first use.
+    pub fn histogram(&self, name: &'static str) -> Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name)
+            .or_insert_with(|| Arc::new(Histogram::new()))
+            .clone()
+    }
+
+    pub fn observe(&self, name: &'static str, value: u64) {
+        self.histogram(name).observe(value);
+    }
+
+    pub fn counters(&self) -> Vec<(String, u64)> {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    pub fn gauges(&self) -> Vec<(String, f64)> {
+        self.gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.to_string(), f64::from_bits(v.load(Ordering::Relaxed))))
+            .collect()
+    }
+
+    pub fn histograms(&self) -> Vec<(String, HistogramSnapshot)> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.snapshot()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bucket_boundaries_are_powers_of_two() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(u64::MAX), 64);
+        assert_eq!(bucket_upper(0), 0);
+        assert_eq!(bucket_upper(1), 1);
+        assert_eq!(bucket_upper(2), 3);
+        assert_eq!(bucket_upper(64), u64::MAX);
+    }
+
+    #[test]
+    fn every_value_lands_inside_its_bucket_edges() {
+        // Property: upper(i-1) < v <= upper(i) for i = bucket_index(v),
+        // checked at the exact boundaries and at random draws.
+        let mut vals: Vec<u64> = (0..64)
+            .flat_map(|e| {
+                let p = 1u64 << e;
+                [p.saturating_sub(1), p, p.saturating_add(1)]
+            })
+            .collect();
+        let mut rng = Rng::new(17);
+        for _ in 0..1000 {
+            vals.push(rng.next_u64());
+        }
+        vals.push(u64::MAX);
+        for v in vals {
+            let i = bucket_index(v);
+            assert!(i < BUCKETS, "{v}: index {i} out of range");
+            assert!(v <= bucket_upper(i), "{v} above upper edge of bucket {i}");
+            if i > 0 {
+                assert!(v > bucket_upper(i - 1), "{v} inside previous bucket {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_index_is_monotone() {
+        let mut prev = bucket_index(0);
+        for e in 0..64u32 {
+            let cur = bucket_index(1u64 << e);
+            assert!(cur >= prev);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn histogram_counts_sum_and_quantile() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 1, 3, 100] {
+            h.observe(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum, 105);
+        assert_eq!(s.buckets[bucket_index(0)], 1);
+        assert_eq!(s.buckets[bucket_index(1)], 2);
+        assert_eq!(s.buckets[bucket_index(3)], 1);
+        assert_eq!(s.buckets[bucket_index(100)], 1);
+        assert!((s.mean() - 21.0).abs() < 1e-12);
+        // Median bucket holds the two 1s: upper edge 1.
+        assert_eq!(s.quantile_upper(0.5), 1);
+        // Max quantile is bounded by the top occupied bucket's edge.
+        assert!(s.quantile_upper(1.0) >= 100);
+        assert_eq!(HistogramSnapshot::default().quantile_upper(0.5), 0);
+    }
+
+    #[test]
+    fn registry_creates_on_first_use_and_accumulates() {
+        let r = Registry::default();
+        r.counter_add("a", 2);
+        r.counter_add("a", 3);
+        r.counter_add("b", 1);
+        r.gauge_set("g", 1.5);
+        r.gauge_set("g", 2.5); // last write wins
+        r.observe("h", 7);
+        assert_eq!(r.counters(), vec![("a".to_string(), 5), ("b".to_string(), 1)]);
+        assert_eq!(r.gauges(), vec![("g".to_string(), 2.5)]);
+        let hists = r.histograms();
+        assert_eq!(hists.len(), 1);
+        assert_eq!(hists[0].1.count, 1);
+        assert_eq!(hists[0].1.sum, 7);
+    }
+}

@@ -1,0 +1,184 @@
+//! Nestable monotonic spans.
+//!
+//! A span is a named wall-time interval. Nesting is tracked per thread
+//! through a stack of open span names; a span's *path* is the
+//! '/'-joined stack at the moment it closes (`multilevel/refine/engine`),
+//! which is what makes the `--profile` tree hierarchical: the engine
+//! records the same relative segment names whether it runs standalone
+//! (`engine/phase_a`) or under a multilevel refine pass
+//! (`multilevel/refine/engine/phase_a`).
+//!
+//! Two recording shapes:
+//! * [`SpanGuard`] (via [`crate::obs::span`]) — RAII: open on
+//!   construction, record on drop. Inert, with **no clock read**, when
+//!   observability is disabled at construction.
+//! * [`Segments`] — a coordinator-side segment timer: each
+//!   [`Segments::cut`] records the time since the previous cut, so
+//!   consecutive cuts tile an enclosing span exactly (the engine's
+//!   per-step phases sum to the engine total by construction).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+thread_local! {
+    static STACK: RefCell<Vec<&'static str>> = const { RefCell::new(Vec::new()) };
+}
+
+pub(crate) fn enter(name: &'static str) {
+    STACK.with(|s| s.borrow_mut().push(name));
+}
+
+/// Pop `name` off this thread's stack and return the full path it ran
+/// under (the remaining stack joined with '/', then `name`).
+pub(crate) fn exit_path(name: &'static str) -> String {
+    STACK.with(|s| {
+        let mut st = s.borrow_mut();
+        debug_assert_eq!(st.last().copied(), Some(name), "span guards must drop LIFO");
+        st.pop();
+        joined(&st, name)
+    })
+}
+
+/// `rel` prefixed by this thread's currently open spans.
+pub(crate) fn prefixed(rel: &str) -> String {
+    STACK.with(|s| joined(&s.borrow(), rel))
+}
+
+fn joined(stack: &[&'static str], leaf: &str) -> String {
+    let cap = stack.iter().map(|p| p.len() + 1).sum::<usize>() + leaf.len();
+    let mut out = String::with_capacity(cap);
+    for part in stack {
+        out.push_str(part);
+        out.push('/');
+    }
+    out.push_str(leaf);
+    out
+}
+
+/// RAII span handle returned by [`crate::obs::span`]. When armed it
+/// pushed its name onto the thread's span stack at construction; on
+/// drop it pops the name and records the elapsed wall time under the
+/// nested path. When disarmed (observability disabled) it is a no-op
+/// that never touches the clock.
+#[derive(Debug)]
+pub struct SpanGuard {
+    armed: Option<(&'static str, Instant)>,
+}
+
+impl SpanGuard {
+    pub(crate) fn new(name: &'static str, armed: bool) -> SpanGuard {
+        if !armed {
+            return SpanGuard { armed: None };
+        }
+        enter(name);
+        SpanGuard { armed: Some((name, Instant::now())) }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some((name, start)) = self.armed.take() {
+            let ns = start.elapsed().as_nanos() as u64;
+            let path = exit_path(name);
+            crate::obs::span_record_absolute(&path, ns);
+        }
+    }
+}
+
+/// Segment timer for straight-line phase accounting: `cut(name)`
+/// records the wall time since the previous cut under `name` (prefixed
+/// by the thread's open spans, like every span). Started disarmed it
+/// never reads the clock.
+#[derive(Debug)]
+pub struct Segments {
+    last: Option<Instant>,
+}
+
+impl Segments {
+    pub fn start(armed: bool) -> Segments {
+        Segments { last: armed.then(Instant::now) }
+    }
+
+    pub fn cut(&mut self, rel_path: &str) {
+        if let Some(prev) = self.last {
+            let now = Instant::now();
+            crate::obs::span_record(rel_path, now.duration_since(prev).as_nanos() as u64);
+            self.last = Some(now);
+        }
+    }
+}
+
+/// Aggregate statistics of one span path.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpanStat {
+    pub total_ns: u64,
+    pub count: u64,
+    pub max_ns: u64,
+}
+
+/// Path → [`SpanStat`] accumulator owned by the run recorder. A
+/// `BTreeMap` keeps paths sorted, which the profile tree relies on:
+/// a child path (`parent/child`) sorts directly after its parent.
+#[derive(Debug, Default)]
+pub struct SpanSet {
+    stats: Mutex<BTreeMap<String, SpanStat>>,
+}
+
+impl SpanSet {
+    pub fn record(&self, path: &str, ns: u64) {
+        let mut m = self.stats.lock().unwrap();
+        let e = m.entry(path.to_string()).or_default();
+        e.total_ns += ns;
+        e.count += 1;
+        e.max_ns = e.max_ns.max(ns);
+    }
+
+    pub fn snapshot(&self) -> Vec<(String, SpanStat)> {
+        self.stats.lock().unwrap().iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nesting_builds_slash_paths() {
+        // The stack is thread-local; this test never enables the
+        // global recorder, it drives the path bookkeeping directly.
+        enter("a");
+        enter("b");
+        assert_eq!(prefixed("leaf"), "a/b/leaf");
+        assert_eq!(exit_path("b"), "a/b");
+        assert_eq!(prefixed("leaf"), "a/leaf");
+        assert_eq!(exit_path("a"), "a");
+        assert_eq!(prefixed("leaf"), "leaf");
+    }
+
+    #[test]
+    fn disarmed_guard_and_segments_touch_nothing() {
+        {
+            let _g = SpanGuard::new("x", false);
+            assert_eq!(prefixed("leaf"), "leaf", "disarmed guard must not push");
+        }
+        let mut seg = Segments::start(false);
+        seg.cut("y"); // must not record or read the clock
+        assert_eq!(prefixed("leaf"), "leaf");
+    }
+
+    #[test]
+    fn span_set_accumulates_per_path() {
+        let s = SpanSet::default();
+        s.record("a", 10);
+        s.record("a/b", 4);
+        s.record("a", 30);
+        let snap = s.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].0, "a");
+        assert_eq!(snap[0].1, SpanStat { total_ns: 40, count: 2, max_ns: 30 });
+        assert_eq!(snap[1].0, "a/b");
+        assert_eq!(snap[1].1.count, 1);
+    }
+}

@@ -421,6 +421,7 @@ impl VertexProgram for RevolverProgram<'_> {
         rng: &mut Rng,
     ) -> StepStats {
         let cs = &mut scratch.0;
+        crate::obs::counter_add("revolver_spins", work.len() as u64);
         // ── Action selection + demand (§IV-D.1/2) ──
         cs.selected.clear();
         for &v in work {
@@ -454,6 +455,7 @@ impl VertexProgram for RevolverProgram<'_> {
         rng: &mut Rng,
     ) -> StepStats {
         let (cs, eng) = scratch;
+        crate::obs::counter_add("revolver_la_updates", work.len() as u64);
         let k = cs.k;
         let mut stats = StepStats::default();
         let mut pos = 0usize; // position into `work` / `cs.selected`

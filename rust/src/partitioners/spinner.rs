@@ -85,11 +85,18 @@ impl VertexProgram for SpinnerProgram<'_> {
     }
 
     fn prepare_phase_a(&self, _g: &Graph, state: &PartitionState, _step: u32) -> Vec<f32> {
+        let t = crate::obs::enabled().then(crate::util::Stopwatch::start);
         let k = self.cfg.parts;
         let mut loads = vec![0.0f32; k];
         state.loads_into(&mut loads);
         let mut pi_hat = vec![0.0f32; k];
         sp::penalty_into(&loads, state.capacity() as f32, &mut pi_hat);
+        if let Some(w) = t {
+            // Histogram, not a span: prep runs as the coordinator's
+            // barrier-crossing segments' siblings and a child span here
+            // would double-count inside the engine's profile tree.
+            crate::obs::observe("spinner_prep_a_us", (w.elapsed_s() * 1e6) as u64);
+        }
         pi_hat
     }
 
@@ -100,7 +107,12 @@ impl VertexProgram for SpinnerProgram<'_> {
         demand: &DemandTracker,
         _step: u32,
     ) -> Vec<f64> {
-        (0..self.cfg.parts).map(|l| demand.migration_probability(state, l)).collect()
+        let t = crate::obs::enabled().then(crate::util::Stopwatch::start);
+        let p = (0..self.cfg.parts).map(|l| demand.migration_probability(state, l)).collect();
+        if let Some(w) = t {
+            crate::obs::observe("spinner_prep_b_us", (w.elapsed_s() * 1e6) as u64);
+        }
+        p
     }
 
     fn phase_a(

@@ -94,6 +94,12 @@ impl Partitioner for Restream {
     }
 }
 
+/// One `stream_pass` span + event around a finished pass (`pass` is the
+/// 0-based pass index, `edges` the pass's streamed-edge count).
+fn note_pass(pass: u32, edges: u64) {
+    crate::obs::event("stream_pass", &[("pass", pass as f64), ("edges", edges as f64)]);
+}
+
 fn one_pass_labels(g: &Graph, cfg: &RevolverConfig, obj: Objective) -> Vec<Label> {
     let mut stream = CsrEdgeStream::new(g, cfg.stream_order, cfg.seed);
     // Capacities in load-mass units: |E| on plain graphs, Σ vertex
@@ -101,7 +107,11 @@ fn one_pass_labels(g: &Graph, cfg: &RevolverConfig, obj: Objective) -> Vec<Label
     // the stream yields).
     let mut state =
         StreamState::new(g.num_vertices(), cfg.parts, cfg.epsilon, Some(g.total_load_mass()));
-    run_pass(&mut stream, &mut state, obj, false).expect("CSR streams cannot fail");
+    {
+        let _s = crate::obs::span("stream_pass");
+        run_pass(&mut stream, &mut state, obj, false).expect("CSR streams cannot fail");
+    }
+    note_pass(0, state.streamed_edges());
     state.finish(g.num_vertices())
 }
 
@@ -111,13 +121,21 @@ fn restream_labels(g: &Graph, cfg: &RevolverConfig) -> Vec<Label> {
     let mut state = StreamState::new(n, cfg.parts, cfg.epsilon, Some(g.total_load_mass()));
 
     let mut stream = CsrEdgeStream::new(g, cfg.stream_order, cfg.seed);
-    run_pass(&mut stream, &mut state, obj, false).expect("CSR streams cannot fail");
+    {
+        let _s = crate::obs::span("stream_pass");
+        run_pass(&mut stream, &mut state, obj, false).expect("CSR streams cannot fail");
+    }
+    note_pass(0, state.streamed_edges());
     let mut best = state.finish(n);
     let mut best_le = quality::local_edges(g, &best);
 
     let mut priority = CsrEdgeStream::with_order(g, CsrEdgeStream::degree_descending(g));
-    for _ in 1..cfg.restream_passes {
-        run_pass(&mut priority, &mut state, obj, true).expect("CSR streams cannot fail");
+    for pass in 1..cfg.restream_passes {
+        {
+            let _s = crate::obs::span("stream_pass");
+            run_pass(&mut priority, &mut state, obj, true).expect("CSR streams cannot fail");
+        }
+        note_pass(pass, state.streamed_edges());
         priority.reset().expect("CSR streams cannot fail");
         let labels = state.finish(n);
         let le = quality::local_edges(g, &labels);
@@ -175,13 +193,21 @@ pub fn partition_edge_list_file<P: AsRef<std::path::Path>>(
     };
     let mut stream = FileEdgeStream::open(path)?;
     let mut state = StreamState::new(1024, cfg.parts, cfg.epsilon, None);
-    run_pass(&mut stream, &mut state, obj, false)?;
+    {
+        let _s = crate::obs::span("stream_pass");
+        run_pass(&mut stream, &mut state, obj, false)?;
+    }
+    note_pass(0, state.streamed_edges());
     anyhow::ensure!(stream.num_vertices() > 0, "edge list contains no edges");
     if algo == StreamAlgo::Restream {
-        for _ in 1..cfg.restream_passes {
+        for pass in 1..cfg.restream_passes {
             stream.reset()?;
             state.set_known_edges(stream.num_edges());
-            run_pass(&mut stream, &mut state, obj, true)?;
+            {
+                let _s = crate::obs::span("stream_pass");
+                run_pass(&mut stream, &mut state, obj, true)?;
+            }
+            note_pass(pass, state.streamed_edges());
         }
     }
     let vertices = stream.num_vertices();

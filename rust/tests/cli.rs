@@ -520,6 +520,52 @@ fn dynamic_update_log_drives_epochs() {
 }
 
 #[test]
+fn obs_flags_profile_log_and_quiet() {
+    let dir = std::env::temp_dir().join("revolver_cli_obs");
+    std::fs::create_dir_all(&dir).unwrap();
+    let log = dir.join("obs.jsonl");
+    let (ok, stdout, stderr) = run(&[
+        "partition",
+        "--graph",
+        "so",
+        "--vertices",
+        "512",
+        "--parts",
+        "4",
+        "--steps",
+        "5",
+        "--threads",
+        "1",
+        "--profile",
+        "--obs-log",
+        log.to_str().unwrap(),
+        "--verbosity",
+        "quiet",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("── profile ("), "--profile must print the tree: {stdout}");
+    assert!(stdout.contains("top-level spans:"), "{stdout}");
+    assert!(stdout.contains("engine"), "{stdout}");
+    assert!(stdout.contains("local edges:"), "metrics still print: {stdout}");
+    assert!(
+        !stderr.contains("partitioning"),
+        "--verbosity quiet must silence progress: {stderr}"
+    );
+    let text = std::fs::read_to_string(&log).unwrap();
+    let n = revolver::obs::events::validate_events(&text).expect("obs log must validate");
+    assert!(n >= 3, "run_start + steps + run_end: {text}");
+    assert!(text.lines().next().unwrap().contains("\"ev\":\"run_start\""), "{text}");
+    assert!(text.lines().last().unwrap().contains("\"ev\":\"run_end\""), "{text}");
+
+    // Bad verbosity is a clean flag error.
+    let (ok, _, stderr) = run(&[
+        "partition", "--graph", "so", "--vertices", "256", "--verbosity", "loud",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown verbosity"), "{stderr}");
+}
+
+#[test]
 fn dynamic_requires_churn_or_log() {
     let (ok, _, stderr) = run(&["dynamic", "--graph", "so", "--vertices", "256"]);
     assert!(!ok);

@@ -1,0 +1,173 @@
+//! Observability integration: the process-global recorder slot end to
+//! end — a real partition run streams schema-valid JSONL, the engine's
+//! barrier segments tile its span, counters/histograms land in the
+//! registry — and the overhead contract: an installed recorder must
+//! never change the labels a run produces.
+//!
+//! These tests install into the global slot, so they serialize behind
+//! one mutex (unit tests elsewhere use `RunRecorder` directly and never
+//! install).
+
+use std::io::Write;
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use revolver::config::{Frontier, ProbFormat, RevolverConfig};
+use revolver::graph::gen::{generate_dataset, Dataset};
+use revolver::obs::{self, events, Recorder as _, RunRecorder};
+use revolver::partitioners::revolver::Revolver;
+use revolver::partitioners::Partitioner;
+
+fn serialize() -> MutexGuard<'static, ()> {
+    static GUARD: OnceLock<Mutex<()>> = OnceLock::new();
+    GUARD.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl Write for SharedBuf {
+    fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(data);
+        Ok(data.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+fn run_cfg(k: usize, steps: u32, seed: u64) -> RevolverConfig {
+    RevolverConfig {
+        parts: k,
+        max_steps: steps,
+        threads: 1,
+        seed,
+        frontier: Frontier::Off,
+        prob_format: ProbFormat::F32,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn recorded_run_emits_valid_events_spans_and_metrics() {
+    let _serial = serialize();
+    let g = generate_dataset(Dataset::So, 512, 4).unwrap();
+    let steps = 5u32;
+    let buf = Arc::new(Mutex::new(Vec::<u8>::new()));
+    let rec = Arc::new(RunRecorder::with_sink(Box::new(SharedBuf(buf.clone()))));
+    obs::install(rec.clone());
+    obs::event("run_start", &[]);
+    let out = Revolver::new(run_cfg(4, steps, 7)).partition(&g);
+    obs::event("run_end", &[("wall_s", rec.elapsed_s())]);
+    obs::uninstall();
+    rec.flush();
+    assert_eq!(out.labels.len(), 512);
+
+    // JSONL: run_start + one step event per executed step + run_end,
+    // every line schema-valid.
+    let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+    let n = events::validate_events(&text).expect("event log must be schema-valid");
+    assert_eq!(n as u32, out.trace.steps() + 2, "{text}");
+    assert!(text.lines().next().unwrap().contains("\"run_start\""), "{text}");
+    assert!(text.lines().last().unwrap().contains("\"run_end\""), "{text}");
+
+    // Spans: the engine's guard plus its barrier-crossing segments,
+    // which tile the run — their sum accounts for the engine span.
+    let spans = rec.spans();
+    let get = |p: &str| spans.iter().find(|(q, _)| q == p).map(|(_, s)| s.total_ns);
+    let engine_ns = get("engine").expect("engine span recorded");
+    for seg in [
+        "engine/init",
+        "engine/collect",
+        "engine/phase_a",
+        "engine/phase_b_prep",
+        "engine/phase_b",
+        "engine/reduce",
+        "engine/finish",
+    ] {
+        assert!(get(seg).is_some(), "missing segment {seg} in {spans:?}");
+    }
+    let child_ns: u64 = spans
+        .iter()
+        .filter(|(p, _)| p.starts_with("engine/"))
+        .map(|(_, s)| s.total_ns)
+        .sum();
+    assert!(
+        child_ns <= engine_ns && child_ns as f64 >= engine_ns as f64 * 0.90,
+        "segments must tile the engine span: {child_ns} of {engine_ns}"
+    );
+
+    // Registry: run counters and worker histograms.
+    let counters = rec.registry().counters();
+    let counter = |n: &str| counters.iter().find(|(k, _)| k == n).map(|(_, v)| *v);
+    assert_eq!(counter("engine_runs"), Some(1));
+    assert_eq!(counter("engine_steps"), Some(out.trace.steps() as u64));
+    assert_eq!(counter("engine_evaluated"), Some(out.trace.total_evaluated));
+    assert_eq!(counter("revolver_spins"), Some(out.trace.total_evaluated));
+    let hists = rec.registry().histograms();
+    let frontier = &hists.iter().find(|(k, _)| k == "engine_frontier_size").unwrap().1;
+    assert_eq!(frontier.count, out.trace.steps() as u64);
+
+    // Exports render from the same snapshots.
+    let prom = rec.prometheus();
+    assert!(prom.contains("# TYPE engine_steps counter"), "{prom}");
+    assert!(prom.contains("span_seconds_total{path=\"engine\"}"), "{prom}");
+    let tree = rec.profile_report();
+    assert!(tree.contains("engine"), "{tree}");
+    assert!(tree.contains("top-level spans:"), "{tree}");
+}
+
+#[test]
+fn installed_recorder_never_changes_labels() {
+    let _serial = serialize();
+    let g = generate_dataset(Dataset::Lj, 1024, 4).unwrap();
+    let cfg = run_cfg(4, 15, 42);
+    let plain = Revolver::new(cfg.clone()).partition(&g).labels;
+
+    let rec = Arc::new(RunRecorder::new());
+    obs::install(rec.clone());
+    let recorded = Revolver::new(cfg.clone()).partition(&g).labels;
+    obs::uninstall();
+    assert_eq!(plain, recorded, "full recorder must not perturb the run");
+    assert!(!rec.spans().is_empty(), "the recorded run must actually record");
+
+    // The no-op recorder exercises dispatch without retention.
+    obs::install(Arc::new(obs::NoopRecorder));
+    let noop = Revolver::new(cfg).partition(&g).labels;
+    obs::uninstall();
+    assert_eq!(plain, noop, "no-op recorder must not perturb the run");
+}
+
+#[test]
+fn dynamic_epochs_emit_epoch_events() {
+    let _serial = serialize();
+    use revolver::dynamic::{ChurnRecipe, IncrementalPartitioner};
+    use revolver::metrics::trace::RunTrace;
+    use revolver::multilevel::Refiner;
+
+    let g = generate_dataset(Dataset::So, 512, 4).unwrap();
+    let mut cfg = run_cfg(4, 10, 7);
+    cfg.repair_steps = 3;
+    let buf = Arc::new(Mutex::new(Vec::<u8>::new()));
+    let rec = Arc::new(RunRecorder::with_sink(Box::new(SharedBuf(buf.clone()))));
+    obs::install(rec.clone());
+    let recipe: ChurnRecipe = "uniform:0.05".parse().unwrap();
+    let mut inc = IncrementalPartitioner::new(g, cfg, Refiner::Spinner);
+    let mut trace = RunTrace::default();
+    for e in 0..2u32 {
+        let batch = recipe.generate(inc.current(), 100 + e as u64);
+        let stats = inc.epoch(&batch);
+        inc.record_epoch(&mut trace, e, &stats);
+    }
+    obs::uninstall();
+    rec.flush();
+
+    let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+    events::validate_events(&text).expect("epoch events must be schema-valid");
+    assert_eq!(text.matches("\"ev\":\"epoch\"").count(), 2, "{text}");
+    let spans = rec.spans();
+    for p in ["dynamic_epoch", "dynamic_epoch/repair", "dynamic_epoch/rebalance"] {
+        assert!(spans.iter().any(|(q, _)| q == p), "missing {p} in {spans:?}");
+    }
+    // The CSV satellite: mean_score now carries repair wall seconds.
+    let pt = trace.final_point().unwrap();
+    assert!(pt.mean_score >= 0.0 && pt.elapsed_s > 0.0);
+}

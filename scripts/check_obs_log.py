@@ -1,0 +1,87 @@
+#!/usr/bin/env python3
+"""Validate a --obs-log JSONL file (CI smoke gate).
+
+Mirrors rust/src/obs/events.rs EVENT_SPEC: every line is a flat JSON
+object with an "ev" kind from the spec, a finite t_s >= 0, the kind's
+required numeric fields, and only string/number values. Additionally
+enforces run shape: non-empty, starts with run_start, contains at least
+one step, ends with run_end.
+
+Usage: check_obs_log.py <file.jsonl>
+Exits non-zero with a message on the first violation.
+
+Stdlib only.
+"""
+
+import json
+import math
+import sys
+
+EVENT_SPEC = {
+    "run_start": [],
+    "step": ["step", "frontier", "evaluated", "migrations"],
+    "stream_pass": ["pass", "edges"],
+    "ml_level": ["level", "vertices"],
+    "epoch": ["epoch", "placed", "seeds", "evaluated", "repair_s"],
+    "run_end": ["wall_s"],
+}
+
+
+def fail(msg):
+    print(f"check_obs_log: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def is_finite_number(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool) and math.isfinite(v)
+
+
+def main():
+    if len(sys.argv) != 2:
+        fail("usage: check_obs_log.py <file.jsonl>")
+    path = sys.argv[1]
+    try:
+        with open(path, encoding="utf-8") as f:
+            lines = f.read().splitlines()
+    except OSError as e:
+        fail(f"cannot read {path}: {e}")
+
+    kinds = []
+    for i, line in enumerate(lines, 1):
+        if not line.strip():
+            continue
+        try:
+            ev = json.loads(line)
+        except json.JSONDecodeError as e:
+            fail(f"line {i}: invalid JSON: {e}")
+        if not isinstance(ev, dict):
+            fail(f"line {i}: not an object")
+        kind = ev.get("ev")
+        if not isinstance(kind, str):
+            fail(f"line {i}: missing string \"ev\"")
+        if kind not in EVENT_SPEC:
+            fail(f"line {i}: unknown event kind {kind!r}")
+        t_s = ev.get("t_s")
+        if not is_finite_number(t_s) or t_s < 0:
+            fail(f"line {i} ({kind}): t_s must be a finite number >= 0, got {t_s!r}")
+        for key in EVENT_SPEC[kind]:
+            if not is_finite_number(ev.get(key)):
+                fail(f"line {i} ({kind}): missing/non-finite required field {key!r}")
+        for key, val in ev.items():
+            if not (isinstance(val, str) or is_finite_number(val)):
+                fail(f"line {i} ({kind}): field {key!r} must be string/finite number")
+        kinds.append(kind)
+
+    if not kinds:
+        fail(f"{path}: no events")
+    if kinds[0] != "run_start":
+        fail(f"first event must be run_start, got {kinds[0]!r}")
+    if kinds[-1] != "run_end":
+        fail(f"last event must be run_end, got {kinds[-1]!r}")
+    if "step" not in kinds:
+        fail("no step events recorded")
+    print(f"check_obs_log: OK ({len(kinds)} events, {kinds.count('step')} steps)")
+
+
+if __name__ == "__main__":
+    main()
