@@ -684,6 +684,57 @@ fn main() {
             }
             rows.push(row);
         }
+
+        // obs_http: `/metrics` scrape latency under write load — a
+        // populated recorder served live while writer threads keep
+        // hammering the registry, timed end to end through a real TCP
+        // GET (connection setup + render + transfer).
+        {
+            use revolver::obs::{httpd, Recorder as _, RunRecorder};
+            use std::sync::atomic::{AtomicBool, Ordering};
+            use std::sync::Arc;
+            let rec = Arc::new(RunRecorder::new());
+            revolver::obs::install(rec.clone());
+            let _ = p.partition(&og); // populate engine metrics + spans
+            revolver::obs::uninstall();
+            let srv = revolver::obs::http::MetricsServer::start("127.0.0.1:0", rec.clone())
+                .expect("bind loopback for the obs_http bench");
+            let addr = srv.local_addr();
+            let stop = Arc::new(AtomicBool::new(false));
+            let writers: Vec<_> = (0..4)
+                .map(|_| {
+                    let rec = rec.clone();
+                    let stop = stop.clone();
+                    std::thread::spawn(move || {
+                        let mut i = 0u64;
+                        while !stop.load(Ordering::Relaxed) {
+                            rec.counter_add("bench_scrape_load", 1);
+                            rec.observe("bench_scrape_hist", i % 4096);
+                            i += 1;
+                        }
+                    })
+                })
+                .collect();
+            let r = bench("GET /metrics under write load", 5, 50, || {
+                let timeout = std::time::Duration::from_secs(5);
+                let (status, _, body) =
+                    httpd::get(addr, "/metrics", timeout).expect("live scrape must answer");
+                assert_eq!(status, 200);
+                body.len()
+            });
+            stop.store(true, Ordering::Relaxed);
+            for w in writers {
+                w.join().unwrap();
+            }
+            drop(srv);
+            println!("{r}");
+            let mut row = micro_row("obs_http_scrape", &r);
+            if let Json::Obj(m) = &mut row {
+                m.insert("bench".to_string(), Json::Str("obs_overhead".to_string()));
+                m.insert("mode".to_string(), Json::Str("obs_http".to_string()));
+            }
+            rows.push(row);
+        }
     }
 
     // Schema gate: a renamed key or unknown section dies here rather

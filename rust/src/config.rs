@@ -352,6 +352,11 @@ pub struct RevolverConfig {
     /// Print the end-of-run hierarchical span timing tree
     /// (`--profile`). Also installs a run recorder.
     pub profile: bool,
+    /// Serve live telemetry (`/metrics`, `/healthz`, `/profile`,
+    /// `/events`) on this `HOST:PORT` for the run's lifetime
+    /// (`--metrics-addr`); empty = off. Port 0 picks a free port — the
+    /// bound address is echoed on stderr. Also installs a run recorder.
+    pub metrics_addr: String,
 }
 
 impl Default for RevolverConfig {
@@ -388,6 +393,7 @@ impl Default for RevolverConfig {
             verbosity: Verbosity::Info,
             obs_log: String::new(),
             profile: false,
+            metrics_addr: String::new(),
         }
     }
 }
@@ -515,6 +521,7 @@ impl RevolverConfig {
                 "verbosity" => cfg.verbosity = value.parse()?,
                 "obs_log" => cfg.obs_log = value.clone(),
                 "profile" => cfg.profile = value.parse().context("profile")?,
+                "metrics_addr" => cfg.metrics_addr = value.clone(),
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -627,12 +634,15 @@ mod tests {
         assert_eq!("DEBUG".parse::<Verbosity>().unwrap(), Verbosity::Debug);
         assert!("loud".parse::<Verbosity>().is_err());
         let c = RevolverConfig::from_toml_str(
-            "verbosity = \"quiet\"\nobs_log = \"run.jsonl\"\nprofile = true\n",
+            "verbosity = \"quiet\"\nobs_log = \"run.jsonl\"\nprofile = true\n\
+             metrics_addr = \"127.0.0.1:0\"\n",
         )
         .unwrap();
         assert_eq!(c.verbosity, Verbosity::Quiet);
         assert_eq!(c.obs_log, "run.jsonl");
         assert!(c.profile);
+        assert_eq!(c.metrics_addr, "127.0.0.1:0");
+        assert!(RevolverConfig::default().metrics_addr.is_empty());
         assert!(RevolverConfig::from_toml_str("profile = maybe\n").is_err());
     }
 

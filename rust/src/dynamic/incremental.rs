@@ -73,6 +73,7 @@ pub struct IncrementalPartitioner {
     total_evaluated: u64,
     total_repair_steps: u32,
     total_wall_s: f64,
+    epochs_run: u64,
 }
 
 impl IncrementalPartitioner {
@@ -115,6 +116,7 @@ impl IncrementalPartitioner {
             total_evaluated: 0,
             total_repair_steps: 0,
             total_wall_s: 0.0,
+            epochs_run: 0,
         }
     }
 
@@ -160,6 +162,12 @@ impl IncrementalPartitioner {
         let k = self.cfg.parts;
         let sw = crate::util::Stopwatch::start();
         let _ep = crate::obs::span("dynamic_epoch");
+        self.epochs_run += 1;
+        if crate::obs::enabled() {
+            let p = crate::obs::progress();
+            p.set_phase("dynamic_epoch");
+            p.set_epoch(self.epochs_run);
+        }
         let mut stats = EpochStats::default();
 
         // 1. Mutate the overlay, collecting changed endpoints.

@@ -433,6 +433,9 @@ pub fn run_with_frontier<P: VertexProgram>(
     let obs_on = crate::obs::enabled();
     let _run_span = crate::obs::span("engine");
     let mut seg = crate::obs::span::Segments::start(obs_on);
+    if obs_on {
+        crate::obs::progress().set_phase("engine");
+    }
     let k = cfg.parts;
     let n = g.num_vertices();
     let sync = program.execution() == ExecutionModel::Synchronous;
@@ -745,6 +748,7 @@ pub fn run_with_frontier<P: VertexProgram>(
             last_migrations = totals.migrations;
             last_evaluated = totals.evaluated;
             if obs_on {
+                crate::obs::progress().set_step(step as u64);
                 crate::obs::observe("engine_frontier_size", totals.evaluated);
                 crate::obs::gauge_set("engine_mean_score", mean_score);
                 crate::obs::event(

@@ -107,6 +107,9 @@ const USAGE_BODY: &str =
     --verbosity <quiet|info|debug>  stderr progress chatter (default info)
     --obs-log file.jsonl  stream instrumentation events as JSONL
     --profile             print the hierarchical span timing tree after the run
+    --metrics-addr H:P    serve live telemetry for the run's lifetime:
+                          /metrics /healthz /profile /events?since=N
+                          (port 0 picks a free port, echoed on stderr)
     --config file.toml    load RevolverConfig from file";
 
 const USAGE_TAIL: &str =
@@ -176,14 +179,28 @@ fn config_from(args: &mut Args) -> Result<RevolverConfig> {
         cfg.obs_log = p;
     }
     cfg.profile = cfg.profile || args.get_bool("profile");
+    if let Some(addr) = args.get("metrics-addr") {
+        cfg.metrics_addr = addr;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
 
-/// Apply the verbosity knob and, when `--obs-log`/`--profile` ask for
-/// it, build + install the process-global recorder. The caller keeps
-/// the concrete handle for [`obs_finish`].
-fn obs_setup(cfg: &RevolverConfig) -> Result<Option<Arc<revolver::obs::RunRecorder>>> {
+/// A run's observability plumbing: the installed recorder (when any of
+/// `--obs-log`/`--profile`/`--metrics-addr` asked for one), the live
+/// telemetry server, and whether to print the profile tree at the end.
+/// Built by [`obs_setup`], closed out by [`obs_finish`].
+struct ObsSession {
+    rec: Option<Arc<revolver::obs::RunRecorder>>,
+    server: Option<revolver::obs::http::MetricsServer>,
+    profile: bool,
+}
+
+/// Apply the verbosity knob and, when `--obs-log`/`--profile`/
+/// `--metrics-addr` ask for it, build + install the process-global
+/// recorder (and start the telemetry server, echoing the bound address
+/// on stderr — parseable, so CI can use port 0).
+fn obs_setup(cfg: &RevolverConfig) -> Result<ObsSession> {
     use revolver::config::Verbosity;
     use revolver::obs::log::Level;
     revolver::obs::log::set_level(match cfg.verbosity {
@@ -191,8 +208,8 @@ fn obs_setup(cfg: &RevolverConfig) -> Result<Option<Arc<revolver::obs::RunRecord
         Verbosity::Info => Level::Info,
         Verbosity::Debug => Level::Debug,
     });
-    if cfg.obs_log.is_empty() && !cfg.profile {
-        return Ok(None);
+    if cfg.obs_log.is_empty() && !cfg.profile && cfg.metrics_addr.is_empty() {
+        return Ok(ObsSession { rec: None, server: None, profile: false });
     }
     let rec = if cfg.obs_log.is_empty() {
         revolver::obs::RunRecorder::new()
@@ -203,16 +220,30 @@ fn obs_setup(cfg: &RevolverConfig) -> Result<Option<Arc<revolver::obs::RunRecord
     };
     let rec = Arc::new(rec);
     revolver::obs::install(rec.clone());
+    let server = if cfg.metrics_addr.is_empty() {
+        None
+    } else {
+        let srv = revolver::obs::http::MetricsServer::start(&cfg.metrics_addr, rec.clone())
+            .with_context(|| format!("bind --metrics-addr {:?}", cfg.metrics_addr))?;
+        // Echoed unconditionally (not via log::info): with port 0 this
+        // line is the only way to learn the bound port.
+        eprintln!("metrics: serving http://{}/metrics", srv.local_addr());
+        Some(srv)
+    };
     revolver::obs::event("run_start", &[]);
-    Ok(Some(rec))
+    Ok(ObsSession { rec: Some(rec), server, profile: cfg.profile })
 }
 
-/// Close out a recorded run: terminal event, uninstall, flush the JSONL
-/// sink, and print the `--profile` tree if asked.
-fn obs_finish(rec: Option<Arc<revolver::obs::RunRecorder>>, profile: bool) {
+/// Close out a recorded run: terminal event (still scrapeable — the
+/// server shuts down *after* it, so a final `/metrics` or `/events`
+/// poll can observe the complete run), then server shutdown,
+/// uninstall, JSONL flush, and the `--profile` tree if asked.
+fn obs_finish(session: ObsSession) {
     use revolver::obs::Recorder as _;
+    let ObsSession { rec, server, profile } = session;
     let Some(rec) = rec else { return };
     revolver::obs::event("run_end", &[("wall_s", rec.elapsed_s())]);
+    drop(server); // graceful shutdown: drains scrapes, wakes long-polls
     revolver::obs::uninstall();
     rec.flush();
     if profile {
@@ -258,7 +289,6 @@ fn cmd_partition(mut args: Args) -> Result<()> {
 
     let k = cfg.parts;
     let obs = obs_setup(&cfg)?;
-    let profile = cfg.profile;
     revolver::obs::log::info(&format!(
         "partitioning {gname} (|V|={}, |E|={}) with {algorithm}, k={k}, engine={:?}",
         with_commas(g.num_vertices() as u64),
@@ -268,7 +298,7 @@ fn cmd_partition(mut args: Args) -> Result<()> {
     let p = by_name(&algorithm, cfg)?;
     let sw = Stopwatch::start();
     let out = p.partition(&g);
-    obs_finish(obs, profile);
+    obs_finish(obs);
     let q = quality::evaluate(&g, &out.labels, k);
     println!("graph:               {gname}");
     println!("algorithm:           {algorithm}");
@@ -314,7 +344,7 @@ fn cmd_stream(mut args: Args) -> Result<()> {
     let obs = obs_setup(&cfg)?;
     let sw = Stopwatch::start();
     let res = revolver::stream::partition_edge_list_file(&file, &cfg, algo)?;
-    obs_finish(obs, cfg.profile);
+    obs_finish(obs);
     let elapsed = sw.elapsed_s();
     let k = cfg.parts;
     let max_load = res.loads.iter().cloned().fold(0.0f64, f64::max);
@@ -402,7 +432,6 @@ fn cmd_dynamic(mut args: Args) -> Result<()> {
     let k = cfg.parts;
     let seed = cfg.seed;
     let obs = obs_setup(&cfg)?;
-    let profile = cfg.profile;
     revolver::obs::log::info(&format!(
         "dynamic: {gname} (|V|={}, |E|={}) repair={algorithm} k={k} epochs={epochs} {}",
         with_commas(g.num_vertices() as u64),
@@ -444,7 +473,7 @@ fn cmd_dynamic(mut args: Args) -> Result<()> {
         with_commas(inc.total_evaluated()),
         sw.elapsed_s()
     );
-    obs_finish(obs, profile);
+    obs_finish(obs);
     if let Some(out) = out.filter(|o| !o.is_empty()) {
         std::fs::write(&out, trace.to_csv())?;
         println!(
@@ -521,7 +550,7 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
             }
         }
     }
-    obs_finish(obs, base_cfg.profile);
+    obs_finish(obs);
     print!("{}", report.to_table());
     report.write_files(std::path::Path::new(&out_dir), "fig3_sweep")?;
     revolver::obs::log::info(&format!("wrote {out_dir}/fig3_sweep.csv and .json"));
@@ -553,7 +582,7 @@ fn cmd_convergence(mut args: Args) -> Result<()> {
             out.trace.steps()
         );
     }
-    obs_finish(obs, cfg.profile);
+    obs_finish(obs);
     Ok(())
 }
 

@@ -211,11 +211,15 @@ impl Partitioner for Multilevel {
     fn partition(&self, g: &Graph) -> PartitionOutput {
         let sw = Stopwatch::start();
         let _run = crate::obs::span("multilevel");
+        let obs_on = crate::obs::enabled();
         let cfg = &self.cfg;
         let k = cfg.parts;
 
         let h = {
             let _s = crate::obs::span("coarsen");
+            if obs_on {
+                crate::obs::progress().set_phase("multilevel/coarsen");
+            }
             hierarchy_for(g, cfg)
         };
         let coarsest: &Graph = h.coarsest().map(|c| c.graph()).unwrap_or(g);
@@ -224,6 +228,9 @@ impl Partitioner for Multilevel {
         // contribute no supersteps to the budget — they are one sweep).
         let coarse = {
             let _s = crate::obs::span("coarse_partition");
+            if obs_on {
+                crate::obs::progress().set_phase("multilevel/coarse_partition");
+            }
             by_name(&cfg.coarse_algo, cfg.clone())
                 .expect("coarse_algo is validated against the registry")
                 .partition(coarsest)

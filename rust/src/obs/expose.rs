@@ -1,12 +1,17 @@
-//! Prometheus text exposition (the snapshot format the future `serve`
-//! layer will put behind `/metrics`; until then `RunRecorder::
-//! prometheus` renders it on demand).
+//! Prometheus text exposition (`RunRecorder::prometheus` renders it on
+//! demand; `obs::http` serves it live behind `GET /metrics`).
 //!
 //! Counters and gauges render as `name value`; histograms as
-//! cumulative `_bucket{le="..."}` lines over the log2 bucket edges
-//! plus `_sum`/`_count`; span stats as two labelled counter families,
+//! cumulative `_bucket{le="..."}` lines over the log2 bucket edges,
+//! a terminal `+Inf` bucket, and the conventional `_sum`/`_count`
+//! series; span stats as two labelled counter families,
 //! `span_seconds_total{path="..."}` and `span_calls_total{path="..."}`
 //! (paths are label *values* and go through [`escape_label`]).
+//!
+//! Histogram snapshots arrive self-consistent — `Registry` derives the
+//! count from the bucket loads (see `registry::Histogram`) — so
+//! `+Inf == _count == Σ buckets` holds even for a scrape racing the
+//! run, which is exactly what scrapers validate.
 
 use std::fmt::Write as _;
 
@@ -124,5 +129,43 @@ mod tests {
     #[test]
     fn empty_snapshot_renders_empty() {
         assert_eq!(render(&[], &[], &[], &[]), "");
+    }
+
+    /// Every line of a small snapshot, checked by hand against the
+    /// Prometheus text-format spec (TYPE line per family, cumulative
+    /// buckets, terminal `+Inf` equal to `_count`).
+    #[test]
+    fn matches_a_hand_checked_exposition_snippet() {
+        let mut buckets = vec![0; crate::obs::registry::BUCKETS];
+        buckets[0] = 1; // one sample of value 0
+        buckets[2] = 2; // two samples in [2,3]
+        let h = HistogramSnapshot { buckets, sum: 5, count: 3 };
+        let text = render(
+            &[("engine_runs".to_string(), 1)],
+            &[("engine_mean_score".to_string(), 0.5)],
+            &[("engine_frontier_size".to_string(), h)],
+            &[(
+                "engine".to_string(),
+                SpanStat { total_ns: 1_500_000_000, count: 2, max_ns: 1_000_000_000 },
+            )],
+        );
+        let expected = "\
+# TYPE engine_runs counter
+engine_runs 1
+# TYPE engine_mean_score gauge
+engine_mean_score 0.5
+# TYPE engine_frontier_size histogram
+engine_frontier_size_bucket{le=\"0\"} 1
+engine_frontier_size_bucket{le=\"1\"} 1
+engine_frontier_size_bucket{le=\"3\"} 3
+engine_frontier_size_bucket{le=\"+Inf\"} 3
+engine_frontier_size_sum 5
+engine_frontier_size_count 3
+# TYPE span_seconds_total counter
+span_seconds_total{path=\"engine\"} 1.5
+# TYPE span_calls_total counter
+span_calls_total{path=\"engine\"} 2
+";
+        assert_eq!(text, expected);
     }
 }

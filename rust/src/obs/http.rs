@@ -1,0 +1,217 @@
+//! Live telemetry endpoints over [`super::httpd`]: the `--metrics-addr`
+//! server.
+//!
+//! | Endpoint | Payload |
+//! |---|---|
+//! | `/metrics` | live Prometheus snapshot ([`RunRecorder::prometheus`]) |
+//! | `/healthz` | JSON liveness + current phase/step/epoch ([`super::Progress`]) |
+//! | `/profile` | live `--profile` tree ([`RunRecorder::profile_report`]) |
+//! | `/events?since=N` | long-poll tail of the event ring buffer |
+//!
+//! Scrapes read the same lock-or-atomic snapshots the exit-time
+//! renderers use, so scrape-while-record needs no extra coordination
+//! beyond what `RunRecorder` already provides; the hot path is
+//! untouched (zero-overhead-off contract, pinned by `tests/obs.rs`).
+//!
+//! `/events` replies immediately when lines at or after `since` exist,
+//! otherwise parks up to [`LONG_POLL_MAX`] on the recorder's event
+//! condvar. The reply carries `X-Events-Start` (sequence number of the
+//! first returned line — larger than requested when the bounded ring
+//! already evicted older lines) and `X-Events-Next` (pass it back as
+//! the next `since`).
+
+use std::io;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::obs::httpd::{self, Handler, Request, Response};
+use crate::obs::RunRecorder;
+use crate::util::json::Json;
+
+/// Connection budget for the telemetry server: scrapers are few; a
+/// small budget keeps a curl-happy operator from spawning unbounded
+/// threads inside a partitioning run.
+pub const DEFAULT_MAX_CONNS: usize = 8;
+
+/// Upper bound on one `/events` long-poll before replying empty.
+pub const LONG_POLL_MAX: Duration = Duration::from_secs(10);
+
+/// Condvar wait slice inside a long-poll (bounds stop-flag latency).
+const LONG_POLL_WAIT: Duration = Duration::from_millis(250);
+
+/// The running telemetry server; owns the listener thread for the
+/// lifetime of a run. Dropping it shuts it down (and wakes parked
+/// long-polls via the shared stop flag).
+pub struct MetricsServer {
+    server: httpd::Server,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (`HOST:PORT`, port 0 allowed) and serve `rec` live.
+    pub fn start(addr: &str, rec: Arc<RunRecorder>) -> io::Result<MetricsServer> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let handler: Handler = {
+            let stop = stop.clone();
+            Arc::new(move |req: &Request| route(req, &rec, &stop))
+        };
+        let server = httpd::Server::bind(addr, DEFAULT_MAX_CONNS, stop, handler)?;
+        Ok(MetricsServer { server })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.server.local_addr()
+    }
+
+    /// Stop accepting, wake long-polls, drain in-flight connections.
+    pub fn shutdown(&mut self) {
+        self.server.shutdown();
+    }
+}
+
+fn route(req: &Request, rec: &RunRecorder, stop: &AtomicBool) -> Response {
+    match req.path.as_str() {
+        "/metrics" => {
+            Response::new(200, "text/plain; version=0.0.4; charset=utf-8", rec.prometheus())
+        }
+        "/healthz" => healthz(rec),
+        "/profile" => Response::text(200, rec.profile_report()),
+        "/events" => events(req, rec, stop),
+        _ => Response::not_found(),
+    }
+}
+
+fn healthz(rec: &RunRecorder) -> Response {
+    let p = crate::obs::progress().snapshot();
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("ok".to_string(), Json::Bool(true));
+    m.insert("uptime_s".to_string(), Json::Num(rec.elapsed_s()));
+    m.insert("phase".to_string(), Json::Str(p.phase.to_string()));
+    m.insert("step".to_string(), Json::Num(p.step as f64));
+    m.insert("epoch".to_string(), Json::Num(p.epoch as f64));
+    m.insert("events".to_string(), Json::Num(rec.events_end() as f64));
+    Response::json(200, Json::Obj(m).to_string())
+}
+
+fn events(req: &Request, rec: &RunRecorder, stop: &AtomicBool) -> Response {
+    let since: u64 = match req.query.get("since") {
+        None => 0,
+        Some(s) => match s.parse() {
+            Ok(n) => n,
+            Err(_) => return Response::text(400, "since must be a non-negative integer\n"),
+        },
+    };
+    let deadline = Instant::now() + LONG_POLL_MAX;
+    loop {
+        let (start, lines, next) = rec.events_since(since);
+        if !lines.is_empty() || stop.load(Ordering::SeqCst) || Instant::now() >= deadline {
+            let mut body = lines.join("\n");
+            if !body.is_empty() {
+                body.push('\n');
+            }
+            return Response::new(200, "application/x-ndjson", body)
+                .header("X-Events-Start", start.to_string())
+                .header("X-Events-Next", next.to_string());
+        }
+        rec.wait_events(since, LONG_POLL_WAIT);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Recorder as _;
+    use std::thread;
+
+    const T: Duration = Duration::from_secs(5);
+
+    fn populated() -> Arc<RunRecorder> {
+        let rec = Arc::new(RunRecorder::new());
+        rec.counter_add("engine_steps", 7);
+        rec.gauge_set("engine_mean_score", 0.5);
+        rec.observe("engine_frontier_size", 64);
+        rec.span_observe("engine", 2_000_000);
+        rec.event("run_start", &[]);
+        rec
+    }
+
+    fn body_str(resp: (u16, Vec<(String, String)>, Vec<u8>)) -> (u16, String) {
+        (resp.0, String::from_utf8(resp.2).unwrap())
+    }
+
+    #[test]
+    fn serves_metrics_profile_and_healthz() {
+        let rec = populated();
+        let srv = MetricsServer::start("127.0.0.1:0", rec.clone()).unwrap();
+        let addr = srv.local_addr();
+
+        let (status, prom) = body_str(httpd::get(addr, "/metrics", T).unwrap());
+        assert_eq!(status, 200);
+        // A scrape is exactly the in-process snapshot, rendered once.
+        assert_eq!(prom, rec.prometheus());
+        assert!(prom.contains("engine_steps 7"), "{prom}");
+
+        let (status, tree) = body_str(httpd::get(addr, "/profile", T).unwrap());
+        assert_eq!(status, 200);
+        assert!(tree.contains("top-level spans:"), "{tree}");
+
+        let (status, health) = body_str(httpd::get(addr, "/healthz", T).unwrap());
+        assert_eq!(status, 200);
+        let j = Json::parse(&health).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        assert!(j.get("uptime_s").and_then(Json::as_f64).unwrap() >= 0.0);
+        assert!(j.get("phase").and_then(Json::as_str).is_some(), "{health}");
+        assert_eq!(j.get("events").and_then(Json::as_f64), Some(1.0));
+
+        let (status, _) = body_str(httpd::get(addr, "/nope", T).unwrap());
+        assert_eq!(status, 404);
+    }
+
+    #[test]
+    fn events_tail_returns_lines_and_cursors() {
+        let rec = populated();
+        rec.event("run_end", &[("wall_s", 0.5)]);
+        let srv = MetricsServer::start("127.0.0.1:0", rec.clone()).unwrap();
+        let (status, headers, body) = httpd::get(srv.local_addr(), "/events?since=0", T).unwrap();
+        assert_eq!(status, 200);
+        let text = String::from_utf8(body).unwrap();
+        assert_eq!(text.lines().count(), 2, "{text}");
+        crate::obs::events::validate_events(&text).expect("tail must be schema-valid");
+        let hdr = |k: &str| headers.iter().find(|(n, _)| n == k).map(|(_, v)| v.clone());
+        assert_eq!(hdr("X-Events-Start").as_deref(), Some("0"));
+        assert_eq!(hdr("X-Events-Next").as_deref(), Some("2"));
+
+        // Tail from the cursor: only lines at or after it come back.
+        let (_, headers, body) = httpd::get(srv.local_addr(), "/events?since=1", T).unwrap();
+        let text = String::from_utf8(body).unwrap();
+        assert_eq!(text.lines().count(), 1, "{text}");
+        assert!(text.contains("run_end"), "{text}");
+        assert_eq!(
+            headers.iter().find(|(n, _)| n == "X-Events-Next").map(|(_, v)| v.as_str()),
+            Some("2")
+        );
+    }
+
+    #[test]
+    fn events_long_poll_wakes_on_new_event() {
+        let rec = Arc::new(RunRecorder::new());
+        let srv = MetricsServer::start("127.0.0.1:0", rec.clone()).unwrap();
+        let addr = srv.local_addr();
+        let poll = thread::spawn(move || body_str(httpd::get(addr, "/events?since=0", T).unwrap()));
+        thread::sleep(Duration::from_millis(100));
+        rec.event("run_start", &[]);
+        let (status, text) = poll.join().unwrap();
+        assert_eq!(status, 200);
+        assert!(text.contains("run_start"), "long-poll must deliver the new event: {text}");
+    }
+
+    #[test]
+    fn events_rejects_malformed_cursor() {
+        let rec = Arc::new(RunRecorder::new());
+        let srv = MetricsServer::start("127.0.0.1:0", rec).unwrap();
+        let (status, _) = body_str(httpd::get(srv.local_addr(), "/events?since=x", T).unwrap());
+        assert_eq!(status, 400);
+    }
+}

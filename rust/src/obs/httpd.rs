@@ -1,0 +1,437 @@
+//! Minimal std-only HTTP/1.1 server core over `std::net::TcpListener`.
+//!
+//! Deliberately a *substrate*, not a framework: one blocking accept
+//! loop on its own thread (shutdown wakes it with a loopback
+//! self-connect, so accepted requests pay no poll-interval latency),
+//! thread-per-connection bounded by a connection budget (excess
+//! requests get an immediate `503` instead of queueing behind a stuck
+//! handler), and graceful shutdown that joins the accept loop and
+//! drains in-flight connections with a deadline. `obs::http` mounts
+//! the telemetry endpoints on it today; ROADMAP item 1's
+//! partition-serving layer is the second intended tenant.
+//!
+//! Scope: `GET` only (anything else is `405`), request heads up to
+//! [`MAX_REQUEST_BYTES`], `Connection: close` on every response, no
+//! percent-decoding of query values (the telemetry query grammar is
+//! `since=<integer>`).
+
+use std::collections::BTreeMap;
+use std::io::{self, Read as _, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+/// Per-connection socket read/write timeout — a stalled peer cannot
+/// pin a connection slot forever.
+const IO_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Upper bound on the request head (request line + headers).
+const MAX_REQUEST_BYTES: usize = 8 * 1024;
+
+/// How long [`Server::shutdown`] waits for in-flight connections.
+const DRAIN_DEADLINE: Duration = Duration::from_secs(2);
+
+/// A parsed request: method, path, and query pairs (`a=b` split on
+/// `&`; keys without `=` map to the empty string; no percent-decoding).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: BTreeMap<String, String>,
+}
+
+/// A response the handler returns; the server adds `Content-Length`
+/// and `Connection: close`.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub headers: Vec<(&'static str, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn new(status: u16, content_type: &'static str, body: impl Into<Vec<u8>>) -> Response {
+        Response { status, content_type, headers: Vec::new(), body: body.into() }
+    }
+
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        Response::new(status, "text/plain; charset=utf-8", body.into().into_bytes())
+    }
+
+    pub fn json(status: u16, body: impl Into<String>) -> Response {
+        Response::new(status, "application/json", body.into().into_bytes())
+    }
+
+    pub fn not_found() -> Response {
+        Response::text(404, "not found\n")
+    }
+
+    /// Attach an extra header (e.g. the `/events` cursor headers).
+    pub fn header(mut self, name: &'static str, value: impl Into<String>) -> Response {
+        self.headers.push((name, value.into()));
+        self
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Status",
+    }
+}
+
+/// The request handler: called on a per-connection thread; must be
+/// `Sync` because the budget allows concurrent connections.
+pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+
+/// A running HTTP server. Dropping it shuts it down.
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    active: Arc<AtomicUsize>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (`HOST:PORT`; port 0 picks a free port — read the
+    /// result back via [`Server::local_addr`]) and start serving
+    /// `handler` with at most `max_conns` concurrent connections.
+    ///
+    /// `stop` is shared: the caller may hold a clone (long-poll
+    /// handlers check it to end waits early), and [`Server::shutdown`]
+    /// sets it.
+    pub fn bind(
+        addr: &str,
+        max_conns: usize,
+        stop: Arc<AtomicBool>,
+        handler: Handler,
+    ) -> io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let active = Arc::new(AtomicUsize::new(0));
+        let accept = {
+            let stop = stop.clone();
+            let active = active.clone();
+            thread::Builder::new()
+                .name("obs-httpd".into())
+                .spawn(move || accept_loop(listener, max_conns.max(1), stop, active, handler))?
+        };
+        Ok(Server { addr: local, stop, active, accept: Some(accept) })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Signal stop, wake the blocking accept with a loopback
+    /// self-connect, join the accept loop (closes the listener), then
+    /// wait up to [`DRAIN_DEADLINE`] for in-flight connections.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect_timeout(&wake_addr(self.addr), Duration::from_millis(250));
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let deadline = Instant::now() + DRAIN_DEADLINE;
+        while self.active.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(5));
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Loopback address that reaches `local`'s listener from this host —
+/// the shutdown wake target (an unspecified bind like `0.0.0.0` is not
+/// connectable as written; its loopback of the same family is).
+fn wake_addr(local: SocketAddr) -> SocketAddr {
+    let mut addr = local;
+    if addr.ip().is_unspecified() {
+        match addr {
+            SocketAddr::V4(_) => addr.set_ip(std::net::Ipv4Addr::LOCALHOST.into()),
+            SocketAddr::V6(_) => addr.set_ip(std::net::Ipv6Addr::LOCALHOST.into()),
+        }
+    }
+    addr
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    max_conns: usize,
+    stop: Arc<AtomicBool>,
+    active: Arc<AtomicUsize>,
+    handler: Handler,
+) {
+    loop {
+        let (stream, _) = match listener.accept() {
+            Ok(conn) => conn,
+            // Transient accept errors (EMFILE, aborted handshake):
+            // back off and keep serving.
+            Err(_) => {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        // A post-stop accept is the shutdown self-connect (or a client
+        // racing shutdown): drop it and exit.
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        if active.fetch_add(1, Ordering::SeqCst) >= max_conns {
+            active.fetch_sub(1, Ordering::SeqCst);
+            respond_busy(stream);
+            continue;
+        }
+        let handler = handler.clone();
+        let done = active.clone();
+        let spawned = thread::Builder::new().name("obs-http-conn".into()).spawn(move || {
+            handle_connection(stream, handler.as_ref());
+            done.fetch_sub(1, Ordering::SeqCst);
+        });
+        if spawned.is_err() {
+            // Spawn failure dropped (closed) the stream with the move.
+            active.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Over-budget path: a canned `503` written on the accept thread.
+fn respond_busy(mut stream: TcpStream) {
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(200)));
+    let body = "busy: connection budget exhausted\n";
+    let _ = write_response(&mut stream, &Response::text(503, body));
+}
+
+fn handle_connection(
+    mut stream: TcpStream,
+    handler: &(dyn Fn(&Request) -> Response + Send + Sync),
+) {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let resp = match read_request(&mut stream) {
+        Ok(req) if req.method == "GET" => handler(&req),
+        Ok(_) => Response::text(405, "method not allowed\n"),
+        Err(_) => Response::text(400, "bad request\n"),
+    };
+    let _ = write_response(&mut stream, &resp);
+}
+
+/// Read and parse one request head (up to the blank line). Any body is
+/// ignored — the served API is GET-only.
+fn read_request(stream: &mut TcpStream) -> io::Result<Request> {
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    loop {
+        if find_head_end(&buf).is_some() {
+            break;
+        }
+        if buf.len() >= MAX_REQUEST_BYTES {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "request head too large"));
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "eof before head end"));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    }
+    let head = String::from_utf8_lossy(&buf);
+    let line = head
+        .lines()
+        .next()
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "empty request"))?;
+    parse_request_line(line)
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "malformed request line"))
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|i| i + 4)
+}
+
+fn parse_request_line(line: &str) -> Option<Request> {
+    let mut parts = line.split_whitespace();
+    let method = parts.next()?.to_string();
+    let target = parts.next()?;
+    let version = parts.next()?;
+    if !version.starts_with("HTTP/1.") {
+        return None;
+    }
+    let (path, rawq) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    let mut query = BTreeMap::new();
+    for pair in rawq.split('&').filter(|p| !p.is_empty()) {
+        match pair.split_once('=') {
+            Some((k, v)) => query.insert(k.to_string(), v.to_string()),
+            None => query.insert(pair.to_string(), String::new()),
+        };
+    }
+    Some(Request { method, path: path.to_string(), query })
+}
+
+fn write_response(stream: &mut TcpStream, resp: &Response) -> io::Result<()> {
+    use std::fmt::Write as _;
+    let mut head = String::with_capacity(128);
+    let _ = write!(head, "HTTP/1.1 {} {}\r\n", resp.status, reason(resp.status));
+    let _ = write!(head, "Content-Type: {}\r\n", resp.content_type);
+    let _ = write!(head, "Content-Length: {}\r\n", resp.body.len());
+    head.push_str("Connection: close\r\n");
+    for (name, value) in &resp.headers {
+        let _ = write!(head, "{name}: {value}\r\n");
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()
+}
+
+/// Tiny blocking client for tests, benches, and loopback self-checks:
+/// one `GET target` with `Connection: close`, returning
+/// `(status, headers, body)`. Not a general client — it reads to EOF
+/// and assumes no transfer-encoding, which is exactly what [`Server`]
+/// produces.
+pub fn get(
+    addr: SocketAddr,
+    target: &str,
+    timeout: Duration,
+) -> io::Result<(u16, Vec<(String, String)>, Vec<u8>)> {
+    let mut stream = TcpStream::connect_timeout(&addr, timeout)?;
+    stream.set_read_timeout(Some(timeout.max(Duration::from_millis(1))))?;
+    stream.set_write_timeout(Some(timeout.max(Duration::from_millis(1))))?;
+    let req = format!("GET {target} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n");
+    stream.write_all(req.as_bytes())?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw)?;
+    let head_end = find_head_end(&raw)
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "no response head"))?;
+    let head = String::from_utf8_lossy(&raw[..head_end]);
+    let mut lines = head.lines();
+    let status_line =
+        lines.next().ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "empty response"))?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "bad status line"))?;
+    let headers = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(k, v)| (k.trim().to_string(), v.trim().to_string()))
+        .collect();
+    Ok((status, headers, raw[head_end..].to_vec()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const T: Duration = Duration::from_secs(5);
+
+    fn echo_server(max_conns: usize) -> Server {
+        let handler: Handler = Arc::new(|req: &Request| {
+            let q = req
+                .query
+                .iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect::<Vec<_>>()
+                .join("&");
+            Response::text(200, format!("{} {} [{}]", req.method, req.path, q))
+        });
+        Server::bind("127.0.0.1:0", max_conns, Arc::new(AtomicBool::new(false)), handler)
+            .expect("bind loopback")
+    }
+
+    #[test]
+    fn serves_get_with_path_and_query() {
+        let srv = echo_server(4);
+        let (status, headers, body) = get(srv.local_addr(), "/p?a=1&b=two&flag", T).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(String::from_utf8(body).unwrap(), "GET /p [a=1&b=two&flag=]");
+        let clen = headers.iter().find(|(k, _)| k == "Content-Length").unwrap();
+        assert_eq!(clen.1, "24");
+    }
+
+    #[test]
+    fn rejects_non_get_with_405() {
+        let srv = echo_server(4);
+        let mut s = TcpStream::connect(srv.local_addr()).unwrap();
+        s.write_all(b"POST /p HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut raw = Vec::new();
+        s.read_to_end(&mut raw).unwrap();
+        assert!(raw.starts_with(b"HTTP/1.1 405 "), "{}", String::from_utf8_lossy(&raw));
+    }
+
+    #[test]
+    fn malformed_request_line_gets_400() {
+        let srv = echo_server(4);
+        let mut s = TcpStream::connect(srv.local_addr()).unwrap();
+        s.write_all(b"garbage\r\n\r\n").unwrap();
+        let mut raw = Vec::new();
+        s.read_to_end(&mut raw).unwrap();
+        assert!(raw.starts_with(b"HTTP/1.1 400 "), "{}", String::from_utf8_lossy(&raw));
+    }
+
+    #[test]
+    fn over_budget_connections_get_503() {
+        // One slot; the first request parks inside the handler until
+        // released, so the second deterministically exceeds the budget.
+        let entered = Arc::new(AtomicUsize::new(0));
+        let release = Arc::new(AtomicBool::new(false));
+        let handler: Handler = {
+            let entered = entered.clone();
+            let release = release.clone();
+            Arc::new(move |_req: &Request| {
+                entered.fetch_add(1, Ordering::SeqCst);
+                while !release.load(Ordering::SeqCst) {
+                    thread::sleep(Duration::from_millis(2));
+                }
+                Response::text(200, "slow\n")
+            })
+        };
+        let srv =
+            Server::bind("127.0.0.1:0", 1, Arc::new(AtomicBool::new(false)), handler).unwrap();
+        let addr = srv.local_addr();
+        let slow = thread::spawn(move || get(addr, "/slow", T).unwrap().0);
+        while entered.load(Ordering::SeqCst) == 0 {
+            thread::sleep(Duration::from_millis(2));
+        }
+        let (status, _, _) = get(addr, "/busy", T).unwrap();
+        assert_eq!(status, 503);
+        release.store(true, Ordering::SeqCst);
+        assert_eq!(slow.join().unwrap(), 200);
+    }
+
+    #[test]
+    fn shutdown_closes_the_listener() {
+        let mut srv = echo_server(2);
+        let addr = srv.local_addr();
+        assert_eq!(get(addr, "/x", T).unwrap().0, 200);
+        srv.shutdown();
+        assert!(get(addr, "/x", Duration::from_millis(500)).is_err());
+    }
+
+    #[test]
+    fn request_line_parsing_covers_the_grammar() {
+        let r = parse_request_line("GET /events?since=12 HTTP/1.1").unwrap();
+        assert_eq!((r.method.as_str(), r.path.as_str()), ("GET", "/events"));
+        assert_eq!(r.query.get("since").map(String::as_str), Some("12"));
+        assert!(parse_request_line("GET /x").is_none(), "missing version");
+        assert!(parse_request_line("GET /x SMTP/1.0").is_none(), "wrong protocol");
+        assert!(parse_request_line("").is_none());
+    }
+}

@@ -15,8 +15,11 @@
 //!   [`span::SpanGuard`]s whose '/'-joined paths form the `--profile`
 //!   tree; JSONL [`events`] streamed to `--obs-log`.
 //! * Exports: [`RunRecorder::profile_report`] (hierarchical timing
-//!   tree), [`RunRecorder::prometheus`] ([`expose`], ready for the
-//!   future serve layer), and the validated event log.
+//!   tree), [`RunRecorder::prometheus`] ([`expose`]), and the validated
+//!   event log — all also served *live* over HTTP by [`http`] (the
+//!   `--metrics-addr` flag) from the same snapshots, plus a bounded
+//!   in-memory event ring ([`RunRecorder::events_since`]) so the
+//!   `/events` tail works without `--obs-log`.
 //!
 //! **Overhead contract.** Instrumentation must never change engine
 //! trajectories: recorders observe wall time and counts only — no
@@ -26,14 +29,17 @@
 
 pub mod events;
 pub mod expose;
+pub mod http;
+pub mod httpd;
 pub mod log;
 pub mod registry;
 pub mod span;
 
+use std::collections::VecDeque;
 use std::io::Write;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 use crate::obs::registry::Registry;
 use crate::obs::span::{SpanGuard, SpanSet, SpanStat};
@@ -70,7 +76,10 @@ pub fn enabled() -> bool {
 }
 
 /// Install `rec` as the process-global recorder and enable recording.
+/// Also resets the [`Progress`] readout, so `/healthz` reports this
+/// run, not a previous one.
 pub fn install(rec: Arc<dyn Recorder>) {
+    PROGRESS.reset();
     *RECORDER.write().unwrap() = Some(rec);
     ENABLED.store(true, Ordering::SeqCst);
 }
@@ -124,15 +133,99 @@ pub(crate) fn span_record_absolute(path: &str, ns: u64) {
     with_recorder(|r| r.span_observe(path, ns));
 }
 
+/// Live run progress for the `/healthz` endpoint: which phase the run
+/// is in plus the engine-step and dynamic-epoch counters. The engine,
+/// dynamic, and multilevel layers update it behind their captured
+/// `obs_on` / [`enabled`] gates, so the disabled path stays untouched.
+/// Step/epoch are relaxed atomics; the phase label is `&'static str`
+/// behind a `Mutex` (phase transitions are per-phase, not per-vertex —
+/// the lock is never on a hot path, and readers are rare `/healthz`
+/// hits).
+pub struct Progress {
+    phase: Mutex<&'static str>,
+    step: AtomicU64,
+    epoch: AtomicU64,
+}
+
+/// Point-in-time copy of [`Progress`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProgressSnapshot {
+    pub phase: &'static str,
+    pub step: u64,
+    pub epoch: u64,
+}
+
+impl Progress {
+    const fn new() -> Progress {
+        Progress { phase: Mutex::new("idle"), step: AtomicU64::new(0), epoch: AtomicU64::new(0) }
+    }
+
+    pub fn set_phase(&self, phase: &'static str) {
+        *self.phase.lock().unwrap() = phase;
+    }
+
+    pub fn set_step(&self, step: u64) {
+        self.step.store(step, Ordering::Relaxed);
+    }
+
+    pub fn set_epoch(&self, epoch: u64) {
+        self.epoch.store(epoch, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> ProgressSnapshot {
+        ProgressSnapshot {
+            phase: *self.phase.lock().unwrap(),
+            step: self.step.load(Ordering::Relaxed),
+            epoch: self.epoch.load(Ordering::Relaxed),
+        }
+    }
+
+    fn reset(&self) {
+        self.set_phase("idle");
+        self.set_step(0);
+        self.set_epoch(0);
+    }
+}
+
+static PROGRESS: Progress = Progress::new();
+
+/// The process-global progress readout (reset by [`install`]).
+pub fn progress() -> &'static Progress {
+    &PROGRESS
+}
+
+/// Capacity of the per-recorder event ring: at the engine's one event
+/// per superstep, 4096 lines is minutes of tail at full tilt, and the
+/// memory bound is a few hundred KiB of short JSON lines.
+pub const EVENT_RING_CAPACITY: usize = 4096;
+
+/// Bounded in-memory tail of rendered event lines. `first_seq` is the
+/// global sequence number of `lines[0]`; eviction advances it, so
+/// sequence numbers are stable cursors for `/events?since=N`.
+struct EventRing {
+    lines: VecDeque<String>,
+    first_seq: u64,
+}
+
+impl EventRing {
+    fn end(&self) -> u64 {
+        self.first_seq + self.lines.len() as u64
+    }
+}
+
 /// The concrete recorder the CLI installs: atomic registry + span set
-/// + optional JSONL sink. Callers keep the concrete `Arc<RunRecorder>`
-/// (and install a clone as `Arc<dyn Recorder>`) so they can render the
-/// profile tree and Prometheus snapshot after the run.
+/// + optional JSONL sink + bounded event ring. Callers keep the
+/// concrete `Arc<RunRecorder>` (and install a clone as
+/// `Arc<dyn Recorder>`) so they can render the profile tree and
+/// Prometheus snapshot after the run — and so `obs::http` can serve
+/// the same snapshots live while the run records.
 pub struct RunRecorder {
     start: Instant,
     registry: Registry,
     spans: SpanSet,
     sink: Option<Mutex<Box<dyn Write + Send>>>,
+    ring: Mutex<EventRing>,
+    ring_cv: Condvar,
 }
 
 impl RunRecorder {
@@ -152,6 +245,8 @@ impl RunRecorder {
             registry: Registry::default(),
             spans: SpanSet::default(),
             sink,
+            ring: Mutex::new(EventRing { lines: VecDeque::new(), first_seq: 0 }),
+            ring_cv: Condvar::new(),
         }
     }
 
@@ -183,6 +278,33 @@ impl RunRecorder {
     pub fn profile_report(&self) -> String {
         profile_tree(&self.spans.snapshot(), self.elapsed_s())
     }
+
+    /// Event lines at sequence numbers `>= since`, plus cursors:
+    /// `(start, lines, next)` where `start` is the sequence number of
+    /// `lines[0]` (greater than `since` when the bounded ring already
+    /// evicted older lines) and `next` is the cursor to resume from.
+    pub fn events_since(&self, since: u64) -> (u64, Vec<String>, u64) {
+        let ring = self.ring.lock().unwrap();
+        let end = ring.end();
+        let start = since.clamp(ring.first_seq, end);
+        let lines = ring.lines.iter().skip((start - ring.first_seq) as usize).cloned().collect();
+        (start, lines, end)
+    }
+
+    /// One past the newest event's sequence number.
+    pub fn events_end(&self) -> u64 {
+        self.ring.lock().unwrap().end()
+    }
+
+    /// Park until an event with sequence number `>= since` exists or
+    /// `timeout` elapses (the `/events` long-poll primitive).
+    pub fn wait_events(&self, since: u64, timeout: Duration) {
+        let ring = self.ring.lock().unwrap();
+        if ring.end() > since {
+            return;
+        }
+        let _ = self.ring_cv.wait_timeout(ring, timeout);
+    }
 }
 
 impl Default for RunRecorder {
@@ -209,10 +331,25 @@ impl Recorder for RunRecorder {
     }
 
     fn event(&self, kind: &'static str, fields: &[(&'static str, f64)]) {
-        let Some(sink) = &self.sink else { return };
         let line = events::render(kind, self.elapsed_s(), fields);
-        let mut w = sink.lock().unwrap();
-        let _ = writeln!(w, "{line}");
+        if let Some(sink) = &self.sink {
+            // Line-buffered contract: one `write_all` for the whole
+            // line, then an immediate flush — a killed run damages at
+            // most its final line, never the buffered tail.
+            let mut bytes = Vec::with_capacity(line.len() + 1);
+            bytes.extend_from_slice(line.as_bytes());
+            bytes.push(b'\n');
+            let mut w = sink.lock().unwrap();
+            let _ = w.write_all(&bytes);
+            let _ = w.flush();
+        }
+        let mut ring = self.ring.lock().unwrap();
+        if ring.lines.len() >= EVENT_RING_CAPACITY {
+            ring.lines.pop_front();
+            ring.first_seq += 1;
+        }
+        ring.lines.push_back(line);
+        self.ring_cv.notify_all();
     }
 
     fn flush(&self) {
@@ -304,6 +441,121 @@ mod tests {
         assert!(tree.contains("engine"));
         assert!(tree.contains("phase_a"));
         assert!(tree.contains("top-level spans:"));
+    }
+
+    #[test]
+    fn event_ring_keeps_a_bounded_cursor_stable_tail() {
+        let rec = RunRecorder::new();
+        rec.event("run_start", &[]);
+        rec.event("run_end", &[("wall_s", 0.1)]);
+        let (start, lines, next) = rec.events_since(0);
+        assert_eq!((start, next), (0, 2));
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("run_start") && lines[1].contains("run_end"));
+        // Resuming from the returned cursor yields nothing new.
+        let (start, lines, next) = rec.events_since(next);
+        assert_eq!((start, next), (2, 2));
+        assert!(lines.is_empty());
+        assert_eq!(rec.events_end(), 2);
+
+        // Overflow evicts oldest lines but keeps sequence numbers
+        // stable: a stale cursor resumes at the ring's first line.
+        let rec = RunRecorder::new();
+        for _ in 0..EVENT_RING_CAPACITY + 10 {
+            rec.event("run_start", &[]);
+        }
+        let (start, lines, next) = rec.events_since(0);
+        assert_eq!(start, 10);
+        assert_eq!(lines.len(), EVENT_RING_CAPACITY);
+        assert_eq!(next, (EVENT_RING_CAPACITY + 10) as u64);
+    }
+
+    #[test]
+    fn events_survive_without_a_sink_and_validate() {
+        let rec = RunRecorder::new();
+        rec.event("run_start", &[]);
+        rec.event(
+            "step",
+            &[("step", 0.0), ("frontier", 7.0), ("evaluated", 7.0), ("migrations", 1.0)],
+        );
+        let (_, lines, _) = rec.events_since(0);
+        let text = lines.join("\n");
+        assert_eq!(events::validate_events(&text), Ok(2), "{text}");
+    }
+
+    #[test]
+    fn progress_snapshot_reflects_last_writes() {
+        let p = Progress::new();
+        assert_eq!(p.snapshot(), ProgressSnapshot { phase: "idle", step: 0, epoch: 0 });
+        p.set_phase("engine");
+        p.set_step(12);
+        p.set_epoch(3);
+        assert_eq!(p.snapshot(), ProgressSnapshot { phase: "engine", step: 12, epoch: 3 });
+        p.reset();
+        assert_eq!(p.snapshot().phase, "idle");
+    }
+
+    /// The line-buffered sink contract (kill-safety): every event is
+    /// one `write_all` + `flush`, so a sink that dies after N lines
+    /// still holds N complete, schema-valid lines — and a sink that
+    /// truncates mid-line damages only the line it died on.
+    #[test]
+    fn failing_and_truncating_sinks_leave_a_valid_prefix() {
+        // Each event is exactly one `write` call (full acceptance), so
+        // the sink's behaviour is counted in calls, not bytes:
+        // `full_calls` lines land whole, then one call may land
+        // `partial_bytes` before the sink dies for good.
+        struct LimitedSink {
+            out: Arc<Mutex<Vec<u8>>>,
+            full_calls: usize,
+            partial_bytes: usize,
+        }
+        impl Write for LimitedSink {
+            fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+                if self.full_calls > 0 {
+                    self.full_calls -= 1;
+                    self.out.lock().unwrap().extend_from_slice(data);
+                    return Ok(data.len());
+                }
+                if self.partial_bytes > 0 {
+                    let n = self.partial_bytes.min(data.len().max(1) - 1);
+                    self.partial_bytes = 0;
+                    self.out.lock().unwrap().extend_from_slice(&data[..n]);
+                    if n == 0 {
+                        return Err(std::io::Error::other("sink died"));
+                    }
+                    return Ok(n);
+                }
+                Err(std::io::Error::other("sink died"))
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+
+        // Hard failure between lines: complete-line prefix survives.
+        let out = Arc::new(Mutex::new(Vec::new()));
+        let sink = LimitedSink { out: out.clone(), full_calls: 2, partial_bytes: 0 };
+        let rec = RunRecorder::with_sink(Box::new(sink));
+        for _ in 0..5 {
+            rec.event("run_start", &[]);
+        }
+        let text = String::from_utf8(out.lock().unwrap().clone()).unwrap();
+        assert_eq!(events::validate_events(&text), Ok(2), "{text}");
+        assert!(text.ends_with('\n'), "no partial line: {text:?}");
+
+        // Truncation mid-line: only the final line is damaged; the
+        // prefix up to the last newline stays schema-valid.
+        let out = Arc::new(Mutex::new(Vec::new()));
+        let sink = LimitedSink { out: out.clone(), full_calls: 2, partial_bytes: 3 };
+        let rec = RunRecorder::with_sink(Box::new(sink));
+        for _ in 0..5 {
+            rec.event("run_start", &[]);
+        }
+        let text = String::from_utf8(out.lock().unwrap().clone()).unwrap();
+        let (intact, partial) = text.rsplit_once('\n').unwrap();
+        assert_eq!(events::validate_events(intact), Ok(2), "{intact}");
+        assert!(!partial.is_empty(), "expected a truncated tail in {text:?}");
     }
 
     #[test]

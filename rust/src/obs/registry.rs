@@ -34,11 +34,18 @@ pub fn bucket_upper(i: usize) -> u64 {
 }
 
 /// Lock-free log2-bucketed histogram of `u64` samples.
+///
+/// There is deliberately no separate count cell: a snapshot derives
+/// `count` as the sum of the bucket loads it just took, so the
+/// Prometheus invariant `+Inf == _count == Σ buckets` holds in every
+/// snapshot — including live `/metrics` scrapes racing `observe` —
+/// instead of depending on the load order of independent atomics.
+/// (`sum` is still its own cell; a racing scrape's `mean` may lag by
+/// the in-flight samples, which is harmless.)
 #[derive(Debug)]
 pub struct Histogram {
     buckets: Vec<AtomicU64>,
     sum: AtomicU64,
-    count: AtomicU64,
 }
 
 impl Histogram {
@@ -46,22 +53,18 @@ impl Histogram {
         Histogram {
             buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
             sum: AtomicU64::new(0),
-            count: AtomicU64::new(0),
         }
     }
 
     pub fn observe(&self, v: u64) {
         self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
         self.sum.fetch_add(v, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> HistogramSnapshot {
-        HistogramSnapshot {
-            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
-            sum: self.sum.load(Ordering::Relaxed),
-            count: self.count.load(Ordering::Relaxed),
-        }
+        let buckets: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let count = buckets.iter().sum();
+        HistogramSnapshot { buckets, sum: self.sum.load(Ordering::Relaxed), count }
     }
 }
 
@@ -245,6 +248,33 @@ mod tests {
         // Max quantile is bounded by the top occupied bucket's edge.
         assert!(s.quantile_upper(1.0) >= 100);
         assert_eq!(HistogramSnapshot::default().quantile_upper(0.5), 0);
+    }
+
+    #[test]
+    fn snapshot_count_always_equals_bucket_sum() {
+        // The live-scrape invariant: however a snapshot races with
+        // observers, its count is by construction Σ buckets.
+        let h = Arc::new(Histogram::new());
+        let writers: Vec<_> = (0..4)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..5_000u64 {
+                        h.observe(i % (100 + t));
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..50 {
+            let s = h.snapshot();
+            assert_eq!(s.count, s.buckets.iter().sum::<u64>());
+        }
+        for w in writers {
+            w.join().unwrap();
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 20_000);
+        assert_eq!(s.count, s.buckets.iter().sum::<u64>());
     }
 
     #[test]

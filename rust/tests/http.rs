@@ -1,0 +1,146 @@
+//! Live telemetry integration: a real run scraped over HTTP while it
+//! executes — the acceptance path for `--metrics-addr`. Installs into
+//! the process-global recorder slot, so tests serialize behind one
+//! mutex (this binary runs in its own process; it cannot race
+//! `tests/obs.rs`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+use revolver::config::RevolverConfig;
+use revolver::graph::gen::{generate_dataset, Dataset};
+use revolver::obs::http::MetricsServer;
+use revolver::obs::{self, events, httpd, RunRecorder};
+use revolver::partitioners::revolver::Revolver;
+use revolver::partitioners::Partitioner;
+use revolver::util::json::Json;
+
+fn serialize() -> MutexGuard<'static, ()> {
+    static GUARD: OnceLock<Mutex<()>> = OnceLock::new();
+    GUARD.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+const T: Duration = Duration::from_secs(5);
+
+fn get_text(addr: std::net::SocketAddr, target: &str) -> (u16, String) {
+    let (status, _, body) = httpd::get(addr, target, T).expect("request must succeed");
+    (status, String::from_utf8(body).expect("utf-8 body"))
+}
+
+/// The ISSUE acceptance scenario: all four endpoints answer while
+/// steps execute, and the final in-process `prometheus()` snapshot
+/// equals the last scrape.
+#[test]
+fn live_endpoints_answer_mid_run_and_final_snapshot_matches_last_scrape() {
+    let _serial = serialize();
+    let g = generate_dataset(Dataset::So, 512, 4).unwrap();
+    let cfg = RevolverConfig { parts: 4, max_steps: 8, threads: 2, seed: 7, ..Default::default() };
+
+    let rec = Arc::new(RunRecorder::new());
+    obs::install(rec.clone());
+    let srv = MetricsServer::start("127.0.0.1:0", rec.clone()).expect("bind loopback");
+    let addr = srv.local_addr();
+
+    // Workload: back-to-back partition runs until the scrapes below are
+    // done, so "mid-run" needs no timing luck.
+    let stop = Arc::new(AtomicBool::new(false));
+    let worker = {
+        let stop = stop.clone();
+        let cfg = cfg.clone();
+        let g = g.clone();
+        std::thread::spawn(move || {
+            let mut runs = 0u64;
+            while !stop.load(Ordering::SeqCst) {
+                let out = Revolver::new(cfg.clone()).partition(&g);
+                assert_eq!(out.labels.len(), 512);
+                runs += 1;
+            }
+            runs
+        })
+    };
+
+    // Wait until the run has visibly recorded, then scrape everything.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (status, prom) = get_text(addr, "/metrics");
+        assert_eq!(status, 200);
+        if prom.contains("# TYPE engine_steps counter") {
+            break;
+        }
+        assert!(Instant::now() < deadline, "engine metrics never appeared:\n{prom}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    let (status, health) = get_text(addr, "/healthz");
+    assert_eq!(status, 200);
+    let j = Json::parse(&health).expect("healthz must be JSON");
+    assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{health}");
+    assert_eq!(j.get("phase").and_then(Json::as_str), Some("engine"), "{health}");
+    assert!(j.get("step").and_then(Json::as_f64).is_some(), "{health}");
+    assert!(j.get("epoch").and_then(Json::as_f64).is_some(), "{health}");
+    assert!(j.get("events").and_then(Json::as_f64).unwrap() >= 1.0, "{health}");
+
+    let (status, tree) = get_text(addr, "/profile");
+    assert_eq!(status, 200);
+    assert!(tree.contains("engine"), "{tree}");
+    assert!(tree.contains("top-level spans:"), "{tree}");
+
+    let (status, headers, body) = httpd::get(addr, "/events?since=0", T).unwrap();
+    assert_eq!(status, 200);
+    let tail = String::from_utf8(body).unwrap();
+    let n = events::validate_events(&tail).expect("event tail must be schema-valid");
+    assert!(n >= 1, "{tail}");
+    assert!(tail.contains("\"ev\":\"step\""), "{tail}");
+    let next: u64 = headers
+        .iter()
+        .find(|(k, _)| k == "X-Events-Next")
+        .and_then(|(_, v)| v.parse().ok())
+        .expect("cursor header");
+    // The run keeps emitting, so the scraped cursor is somewhere
+    // between the returned lines and the ring's current end.
+    assert!(next >= n as u64 && next <= rec.events_end(), "next={next}");
+
+    // Stop the workload; once it has joined, nothing records anymore,
+    // so one more scrape must equal the in-process snapshot exactly.
+    stop.store(true, Ordering::SeqCst);
+    let runs = worker.join().expect("workload thread");
+    assert!(runs >= 1);
+    let (status, scrape) = get_text(addr, "/metrics");
+    assert_eq!(status, 200);
+    assert_eq!(scrape, rec.prometheus(), "final snapshot must equal the last scrape");
+    assert!(scrape.contains(&format!("engine_runs {runs}")), "{scrape}");
+
+    drop(srv);
+    obs::uninstall();
+    // After shutdown the port no longer answers.
+    assert!(httpd::get(addr, "/metrics", Duration::from_millis(300)).is_err());
+}
+
+/// `--metrics-addr` without `--obs-log` still serves events (the ring
+/// does not depend on a sink), and a cursor past the tail long-polls
+/// until the next event instead of replying stale data.
+#[test]
+fn events_endpoint_works_without_a_sink_and_honours_cursors() {
+    let _serial = serialize();
+    let rec = Arc::new(RunRecorder::new());
+    obs::install(rec.clone());
+    obs::event("run_start", &[]);
+    let srv = MetricsServer::start("127.0.0.1:0", rec.clone()).unwrap();
+    let addr = srv.local_addr();
+
+    let (_, tail) = get_text(addr, "/events?since=0");
+    assert!(tail.contains("run_start"), "{tail}");
+
+    // A long-poll from the current end parks until the next event.
+    let end = rec.events_end();
+    let poll = std::thread::spawn(move || get_text(addr, &format!("/events?since={end}")));
+    std::thread::sleep(Duration::from_millis(100));
+    obs::event("run_end", &[("wall_s", 0.01)]);
+    let (status, tail) = poll.join().unwrap();
+    assert_eq!(status, 200);
+    assert!(tail.contains("run_end"), "long-poll must deliver the new event: {tail}");
+
+    drop(srv);
+    obs::uninstall();
+}

@@ -136,6 +136,45 @@ fn installed_recorder_never_changes_labels() {
     assert_eq!(plain, noop, "no-op recorder must not perturb the run");
 }
 
+/// Registry contention property: N threads hammering the *same*
+/// counter and histogram names through the global `obs::` entry points
+/// must sum exactly — creation-on-first-use races, `Arc` handle
+/// sharing, and relaxed `fetch_add`s lose nothing.
+#[test]
+fn concurrent_hammering_of_shared_names_sums_exactly() {
+    let _serial = serialize();
+    const THREADS: u64 = 8;
+    const PER_THREAD: u64 = 10_000;
+    let rec = Arc::new(RunRecorder::new());
+    obs::install(rec.clone());
+    std::thread::scope(|s| {
+        for _ in 0..THREADS {
+            s.spawn(|| {
+                for i in 0..PER_THREAD {
+                    obs::counter_add("hammer_total", 1);
+                    obs::counter_add("hammer_weighted", i % 7 + 1);
+                    obs::observe("hammer_hist", i % 1000);
+                }
+            });
+        }
+    });
+    obs::uninstall();
+
+    let counters = rec.registry().counters();
+    let counter = |n: &str| counters.iter().find(|(k, _)| k == n).map(|(_, v)| *v).unwrap();
+    assert_eq!(counter("hammer_total"), THREADS * PER_THREAD);
+    let weighted_per_thread: u64 = (0..PER_THREAD).map(|i| i % 7 + 1).sum();
+    assert_eq!(counter("hammer_weighted"), THREADS * weighted_per_thread);
+
+    let hists = rec.registry().histograms();
+    let h = &hists.iter().find(|(k, _)| k == "hammer_hist").unwrap().1;
+    assert_eq!(h.count, THREADS * PER_THREAD);
+    let sum_per_thread: u64 = (0..PER_THREAD).map(|i| i % 1000).sum();
+    assert_eq!(h.sum, THREADS * sum_per_thread);
+    // The live-scrape invariant: count ≡ Σ buckets (S1 consistency).
+    assert_eq!(h.count, h.buckets.iter().sum::<u64>());
+}
+
 #[test]
 fn dynamic_epochs_emit_epoch_events() {
     let _serial = serialize();

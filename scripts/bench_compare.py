@@ -1,0 +1,245 @@
+#!/usr/bin/env python3
+"""Diff the last two recorded runs in BENCH_hotpath.json.
+
+Rows from the two runs are matched by identity — the `bench` section
+tag plus every non-measurement field (string tags and structural
+numeric keys like threads/vertices/parts). For each matched pair the
+primary timing metric (median_ns, else mean_ns, else repair_ns) is
+compared and the delta reported; regressions beyond --threshold PCT
+(default 10%) fail the script. Rows present in only one run are listed
+as added/removed but never fail.
+
+CI runs this as an advisory step: a regression prints a loud table and
+a non-zero exit, but the workflow marks the step continue-on-error —
+bench noise on shared runners must not block merges. Locally:
+
+    scripts/bench_hotpath.sh            # record a run
+    scripts/bench_compare.py            # diff the last two
+
+Usage: bench_compare.py [--file PATH] [--threshold PCT] [--self-test]
+Stdlib only.
+"""
+
+import json
+import sys
+
+DEFAULT_FILE = "BENCH_hotpath.json"
+DEFAULT_THRESHOLD = 10.0
+
+# Measurement keys never take part in row identity; everything else
+# (strings + structural numerics) does.
+MEASUREMENT_KEYS = {
+    "median_ns",
+    "mean_ns",
+    "min_ns",
+    "repair_ns",
+    "iters",
+    "evaluated",
+    "evaluations_saved",
+    "local_edges",
+    "max_normalized_load",
+    "mean_communication_volume",
+    "stamp_reads",
+    "scan_steps",
+    "worklist_steps",
+    "chunk_reuses",
+    "placed",
+    "seeds",
+}
+
+# Primary timing metric, in preference order.
+TIMING_KEYS = ("median_ns", "mean_ns", "repair_ns")
+
+
+def fail(msg):
+    print(f"bench_compare: {msg}", file=sys.stderr)
+    sys.exit(2)
+
+
+def row_identity(row):
+    return tuple(
+        sorted((k, v) for k, v in row.items() if k not in MEASUREMENT_KEYS)
+    )
+
+
+def timing(row):
+    for key in TIMING_KEYS:
+        v = row.get(key)
+        if isinstance(v, (int, float)) and v > 0:
+            return key, float(v)
+    return None, None
+
+
+def human_ns(ns):
+    for unit, scale in (("s", 1e9), ("ms", 1e6), ("us", 1e3)):
+        if ns >= scale:
+            return f"{ns / scale:.2f}{unit}"
+    return f"{ns:.0f}ns"
+
+
+def identity_label(ident):
+    parts = []
+    for k, v in ident:
+        if k == "bench":
+            parts.insert(0, str(v))
+        else:
+            parts.append(f"{k}={v}")
+    return " ".join(parts)
+
+
+def compare(old_run, new_run, threshold):
+    """Return (report_lines, regressions) comparing two run objects."""
+    old_rows = {row_identity(r): r for r in old_run.get("rows", [])}
+    new_rows = {row_identity(r): r for r in new_run.get("rows", [])}
+
+    lines = []
+    regressions = []
+    shared = [i for i in old_rows if i in new_rows]
+    for ident in sorted(shared, key=identity_label):
+        key_o, old_ns = timing(old_rows[ident])
+        key_n, new_ns = timing(new_rows[ident])
+        label = identity_label(ident)
+        if old_ns is None or new_ns is None or key_o != key_n:
+            lines.append(f"  ?          {label}  (no comparable timing metric)")
+            continue
+        delta = (new_ns - old_ns) / old_ns * 100.0
+        mark = " "
+        if delta > threshold:
+            mark = "!"
+            regressions.append((label, key_n, old_ns, new_ns, delta))
+        elif delta < -threshold:
+            mark = "+"
+        lines.append(
+            f"  {mark} {delta:+7.1f}%  {label}  "
+            f"[{key_n} {human_ns(old_ns)} -> {human_ns(new_ns)}]"
+        )
+    for ident in sorted(set(old_rows) - set(new_rows), key=identity_label):
+        lines.append(f"  - removed   {identity_label(ident)}")
+    for ident in sorted(set(new_rows) - set(old_rows), key=identity_label):
+        lines.append(f"  + added     {identity_label(ident)}")
+    return lines, regressions
+
+
+def run_note(run):
+    commit = str(run.get("git_commit", "?"))[:12]
+    note = run.get("note") or ""
+    stamp = run.get("recorded_at", "?")
+    suffix = f" ({note})" if note else ""
+    return f"{stamp} @{commit}{suffix}"
+
+
+def main_compare(path, threshold):
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"cannot load {path}: {e}")
+    runs = doc.get("runs", [])
+    if len(runs) < 2:
+        print(
+            f"bench_compare: nothing to compare ({len(runs)} run(s) in {path}; "
+            "need 2 — record with scripts/bench_hotpath.sh)"
+        )
+        return 0
+    old_run, new_run = runs[-2], runs[-1]
+    print(f"bench_compare: {path}, threshold {threshold:.1f}%")
+    print(f"  old: {run_note(old_run)}")
+    print(f"  new: {run_note(new_run)}")
+    lines, regressions = compare(old_run, new_run, threshold)
+    for line in lines:
+        print(line)
+    if regressions:
+        print(f"bench_compare: {len(regressions)} regression(s) over {threshold:.1f}%:")
+        for label, key, old_ns, new_ns, delta in regressions:
+            print(
+                f"  ! {label}: {key} {human_ns(old_ns)} -> {human_ns(new_ns)} "
+                f"({delta:+.1f}%)"
+            )
+        return 1
+    print("bench_compare: OK (no regressions)")
+    return 0
+
+
+def self_test():
+    def row(bench, median, **tags):
+        return {"bench": bench, "median_ns": median, "mean_ns": median, **tags}
+
+    old_run = {
+        "recorded_at": "2026-01-01T00:00:00Z",
+        "git_commit": "aaaaaaaaaaaa",
+        "rows": [
+            row("schedule_rmat", 1000, threads=1, vertices=4096),
+            row("schedule_rmat", 1000, threads=4, vertices=4096),
+            row("hotpath_micro", 500, mode="f32"),
+            row("stream_rmat", 2000, parts=8),  # removed in new
+        ],
+    }
+    new_run = {
+        "recorded_at": "2026-01-02T00:00:00Z",
+        "git_commit": "bbbbbbbbbbbb",
+        "note": "after change",
+        "rows": [
+            row("schedule_rmat", 1500, threads=1, vertices=4096),  # +50% regression
+            row("schedule_rmat", 700, threads=4, vertices=4096),  # -30% improvement
+            row("hotpath_micro", 505, mode="f32"),  # +1% within threshold
+            row("dynamic_rmat", 3000, parts=8),  # added
+        ],
+    }
+    lines, regressions = compare(old_run, new_run, 10.0)
+    assert len(regressions) == 1, regressions
+    label, key, old_ns, new_ns, delta = regressions[0]
+    assert "threads=1" in label and key == "median_ns", regressions
+    assert abs(delta - 50.0) < 1e-9, delta
+    text = "\n".join(lines)
+    assert "+   -30.0%" in text, text
+    assert "+1.0%" in text and "!   +1.0%" not in text, text
+    assert "- removed   stream_rmat parts=8" in text, text
+    assert "+ added     dynamic_rmat parts=8" in text, text
+
+    # A looser threshold clears the regression.
+    _, none = compare(old_run, new_run, 60.0)
+    assert none == [], none
+
+    # repair_ns rows (dynamic section has no median/mean) still compare.
+    o = {"rows": [{"bench": "dynamic_rmat", "epoch": 1, "repair_ns": 100}]}
+    n = {"rows": [{"bench": "dynamic_rmat", "epoch": 1, "repair_ns": 150}]}
+    _, regs = compare(o, n, 10.0)
+    assert len(regs) == 1 and regs[0][1] == "repair_ns", regs
+
+    # Identity uses structural keys: same bench, different vertices ->
+    # no match, reported as removed+added, never compared.
+    o = {"rows": [{"bench": "stream_rmat", "vertices": 1024, "median_ns": 100}]}
+    n = {"rows": [{"bench": "stream_rmat", "vertices": 2048, "median_ns": 900}]}
+    lines, regs = compare(o, n, 10.0)
+    assert regs == [] and any("removed" in l for l in lines), lines
+
+    assert human_ns(950) == "950ns" and human_ns(1500) == "1.50us"
+    assert human_ns(2.5e6) == "2.50ms" and human_ns(3e9) == "3.00s"
+    print("bench_compare: self-test OK")
+
+
+def main():
+    argv = sys.argv[1:]
+    if "--self-test" in argv:
+        self_test()
+        return 0
+    path = DEFAULT_FILE
+    threshold = DEFAULT_THRESHOLD
+    i = 0
+    while i < len(argv):
+        if argv[i] == "--file" and i + 1 < len(argv):
+            path = argv[i + 1]
+            i += 2
+        elif argv[i] == "--threshold" and i + 1 < len(argv):
+            try:
+                threshold = float(argv[i + 1])
+            except ValueError:
+                fail(f"bad --threshold {argv[i + 1]!r}")
+            i += 2
+        else:
+            fail("usage: bench_compare.py [--file PATH] [--threshold PCT] [--self-test]")
+    return main_compare(path, threshold)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

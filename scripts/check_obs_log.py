@@ -3,11 +3,17 @@
 
 Mirrors rust/src/obs/events.rs EVENT_SPEC: every line is a flat JSON
 object with an "ev" kind from the spec, a finite t_s >= 0, the kind's
-required numeric fields, and only string/number values. Additionally
-enforces run shape: non-empty, starts with run_start, contains at least
-one step, ends with run_end.
+required numeric fields, and only string/number values. Event times
+must be non-decreasing, and run_end — when present — must be the final
+event (the recorder emits it exactly once, at the very end).
+Additionally enforces run shape: non-empty, starts with run_start,
+contains at least one step, ends with run_end.
 
 Usage: check_obs_log.py <file.jsonl>
+       check_obs_log.py --partial <file.jsonl>   # killed-run prefix:
+           per-line schema + ordering only, no run-shape requirements
+           (the line-buffered sink contract guarantees complete lines)
+       check_obs_log.py --self-test
 Exits non-zero with a message on the first violation.
 
 Stdlib only.
@@ -36,51 +42,153 @@ def is_finite_number(v):
     return isinstance(v, (int, float)) and not isinstance(v, bool) and math.isfinite(v)
 
 
-def main():
-    if len(sys.argv) != 2:
-        fail("usage: check_obs_log.py <file.jsonl>")
-    path = sys.argv[1]
-    try:
-        with open(path, encoding="utf-8") as f:
-            lines = f.read().splitlines()
-    except OSError as e:
-        fail(f"cannot read {path}: {e}")
-
+def validate(lines, partial=False):
+    """Return (kinds, step_count) or raise ValueError on violation."""
     kinds = []
+    prev_t = None
     for i, line in enumerate(lines, 1):
         if not line.strip():
             continue
         try:
             ev = json.loads(line)
         except json.JSONDecodeError as e:
-            fail(f"line {i}: invalid JSON: {e}")
+            raise ValueError(f"line {i}: invalid JSON: {e}")
         if not isinstance(ev, dict):
-            fail(f"line {i}: not an object")
+            raise ValueError(f"line {i}: not an object")
         kind = ev.get("ev")
         if not isinstance(kind, str):
-            fail(f"line {i}: missing string \"ev\"")
+            raise ValueError(f"line {i}: missing string \"ev\"")
         if kind not in EVENT_SPEC:
-            fail(f"line {i}: unknown event kind {kind!r}")
+            raise ValueError(f"line {i}: unknown event kind {kind!r}")
         t_s = ev.get("t_s")
         if not is_finite_number(t_s) or t_s < 0:
-            fail(f"line {i} ({kind}): t_s must be a finite number >= 0, got {t_s!r}")
+            raise ValueError(
+                f"line {i} ({kind}): t_s must be a finite number >= 0, got {t_s!r}"
+            )
+        if prev_t is not None and t_s < prev_t:
+            raise ValueError(
+                f"line {i} ({kind}): t_s went backwards ({t_s} after {prev_t})"
+            )
+        prev_t = t_s
         for key in EVENT_SPEC[kind]:
             if not is_finite_number(ev.get(key)):
-                fail(f"line {i} ({kind}): missing/non-finite required field {key!r}")
+                raise ValueError(
+                    f"line {i} ({kind}): missing/non-finite required field {key!r}"
+                )
         for key, val in ev.items():
             if not (isinstance(val, str) or is_finite_number(val)):
-                fail(f"line {i} ({kind}): field {key!r} must be string/finite number")
+                raise ValueError(
+                    f"line {i} ({kind}): field {key!r} must be string/finite number"
+                )
+        # run_end is terminal whenever it appears at all — even in a
+        # partial (killed-run) log, nothing may follow it.
+        if kinds and kinds[-1] == "run_end":
+            raise ValueError(f"line {i} ({kind}): events after run_end")
         kinds.append(kind)
 
-    if not kinds:
-        fail(f"{path}: no events")
-    if kinds[0] != "run_start":
-        fail(f"first event must be run_start, got {kinds[0]!r}")
-    if kinds[-1] != "run_end":
-        fail(f"last event must be run_end, got {kinds[-1]!r}")
-    if "step" not in kinds:
-        fail("no step events recorded")
-    print(f"check_obs_log: OK ({len(kinds)} events, {kinds.count('step')} steps)")
+    if not partial:
+        if not kinds:
+            raise ValueError("no events")
+        if kinds[0] != "run_start":
+            raise ValueError(f"first event must be run_start, got {kinds[0]!r}")
+        if kinds[-1] != "run_end":
+            raise ValueError(f"last event must be run_end, got {kinds[-1]!r}")
+        if "step" not in kinds:
+            raise ValueError("no step events recorded")
+    return kinds, kinds.count("step")
+
+
+def self_test():
+    step = '{"ev":"step","t_s":0.5,"step":0,"frontier":9,"evaluated":9,"migrations":2}'
+    good = [
+        '{"ev":"run_start","t_s":0.0}',
+        step,
+        "",  # blank lines are permitted
+        '{"ev":"run_end","t_s":1.0,"wall_s":1.0}',
+    ]
+    kinds, steps = validate(good)
+    assert kinds == ["run_start", "step", "run_end"] and steps == 1, kinds
+
+    # Partial mode: a killed-run prefix without run_end passes, and an
+    # empty log is fine.
+    validate(good[:2], partial=True)
+    validate([], partial=True)
+
+    bad_cases = [
+        ("invalid JSON", ["not json"]),
+        ("not an object", ["[1,2]"]),
+        ('missing string "ev"', ['{"t_s":0.0}']),
+        ("unknown event kind", ['{"ev":"mystery","t_s":0.0}']),
+        ("t_s must be", ['{"ev":"run_start"}']),
+        ("t_s must be", ['{"ev":"run_start","t_s":-1.0}']),
+        ("required field", ['{"ev":"run_end","t_s":0.0}']),
+        ("string/finite number", ['{"ev":"run_start","t_s":0.0,"x":{"y":1}}']),
+        (
+            "t_s went backwards",
+            ['{"ev":"run_start","t_s":2.0}', '{"ev":"run_end","t_s":1.0,"wall_s":1.0}'],
+        ),
+        (
+            "events after run_end",
+            [
+                '{"ev":"run_start","t_s":0.0}',
+                step,
+                '{"ev":"run_end","t_s":1.0,"wall_s":1.0}',
+                '{"ev":"run_start","t_s":2.0}',
+            ],
+        ),
+        ("no events", []),
+        ("first event must be run_start", [step]),
+        ("last event must be run_end", ['{"ev":"run_start","t_s":0.0}', step]),
+        (
+            "no step events",
+            ['{"ev":"run_start","t_s":0.0}', '{"ev":"run_end","t_s":1.0,"wall_s":1.0}'],
+        ),
+    ]
+    for expect, lines in bad_cases:
+        try:
+            validate(lines)
+        except ValueError as e:
+            assert expect in str(e), f"expected {expect!r} in {e!r}"
+        else:
+            raise AssertionError(f"case {expect!r} did not fail: {lines}")
+
+    # Ordering violations are caught even in partial mode.
+    for expect, lines in bad_cases[:10]:
+        if not lines:
+            continue
+        try:
+            validate(lines, partial=True)
+        except ValueError:
+            pass
+        else:
+            raise AssertionError(f"partial mode missed {expect!r}: {lines}")
+    print("check_obs_log: self-test OK")
+
+
+def main():
+    argv = sys.argv[1:]
+    if argv == ["--self-test"]:
+        self_test()
+        return
+    partial = False
+    if argv and argv[0] == "--partial":
+        partial = True
+        argv = argv[1:]
+    if len(argv) != 1:
+        fail("usage: check_obs_log.py [--partial] <file.jsonl> | --self-test")
+    path = argv[0]
+    try:
+        with open(path, encoding="utf-8") as f:
+            lines = f.read().splitlines()
+    except OSError as e:
+        fail(f"cannot read {path}: {e}")
+
+    try:
+        kinds, steps = validate(lines, partial=partial)
+    except ValueError as e:
+        fail(str(e))
+    mode = " (partial)" if partial else ""
+    print(f"check_obs_log: OK{mode} ({len(kinds)} events, {steps} steps)")
 
 
 if __name__ == "__main__":

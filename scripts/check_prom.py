@@ -1,0 +1,225 @@
+#!/usr/bin/env python3
+"""Validate a Prometheus text-format scrape (/metrics smoke gate).
+
+Checks the exposition the obs HTTP server emits (rust/src/obs/expose.rs):
+ - every non-comment line is `name[{labels}] value` with a finite value,
+ - every sample family has a preceding `# TYPE family <counter|gauge|histogram>`,
+ - histograms carry `_bucket`/`_sum`/`_count` series, bucket counts are
+   cumulative non-decreasing in `le` order, the last bucket is
+   `le="+Inf"`, and its count equals `_count` (the live-scrape
+   invariant: count is derived from the buckets, see registry.rs).
+
+Usage: check_prom.py <file>          # or `-` for stdin
+       check_prom.py --require NAME  # additionally assert NAME present
+       check_prom.py --self-test
+Exits non-zero with a message on the first violation. Stdlib only.
+"""
+
+import math
+import re
+import sys
+
+SAMPLE_RE = re.compile(
+    r'^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)'
+    r'(?P<labels>\{[^}]*\})?'
+    r' (?P<value>\S+)$'
+)
+LE_RE = re.compile(r'le="([^"]*)"')
+TYPES = {"counter", "gauge", "histogram"}
+
+
+def fail(msg):
+    print(f"check_prom: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def parse_value(text):
+    if text == "+Inf":
+        return math.inf
+    if text == "-Inf":
+        return -math.inf
+    try:
+        return float(text)
+    except ValueError:
+        return None
+
+
+def family_of(name):
+    for suffix in ("_bucket", "_sum", "_count"):
+        if name.endswith(suffix):
+            return name[: -len(suffix)]
+    return name
+
+
+def validate(text):
+    """Return {family: type} of validated samples; raise ValueError."""
+    types = {}
+    samples = []  # (line_no, name, labels_text, value)
+    for i, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) != 4 or parts[3] not in TYPES:
+                raise ValueError(f"line {i}: malformed TYPE comment: {line!r}")
+            if parts[2] in types:
+                raise ValueError(f"line {i}: duplicate TYPE for {parts[2]!r}")
+            types[parts[2]] = parts[3]
+            continue
+        if line.startswith("#"):
+            continue  # HELP or free comment
+        m = SAMPLE_RE.match(line)
+        if not m:
+            raise ValueError(f"line {i}: malformed sample line: {line!r}")
+        value = parse_value(m.group("value"))
+        if value is None or math.isnan(value):
+            raise ValueError(f"line {i}: bad value {m.group('value')!r}")
+        samples.append((i, m.group("name"), m.group("labels") or "", value))
+
+    hist = {}  # family -> {"buckets": [(le, v)], "sum": v, "count": v}
+    for i, name, labels, value in samples:
+        family = family_of(name)
+        ftype = types.get(family) or types.get(name)
+        if ftype is None:
+            raise ValueError(f"line {i}: sample {name!r} has no TYPE comment")
+        if ftype != "histogram":
+            if family != name:
+                # e.g. a counter literally named foo_count: fine, but
+                # only if declared under its own full name.
+                if name not in types:
+                    raise ValueError(f"line {i}: sample {name!r} has no TYPE comment")
+            continue
+        h = hist.setdefault(family, {"buckets": [], "sum": None, "count": None})
+        if name.endswith("_bucket"):
+            le = LE_RE.search(labels)
+            if not le:
+                raise ValueError(f"line {i}: {name} without le label")
+            h["buckets"].append((le.group(1), value))
+        elif name.endswith("_sum"):
+            h["sum"] = value
+        elif name.endswith("_count"):
+            h["count"] = value
+        else:
+            raise ValueError(f"line {i}: bare sample {name!r} for histogram family")
+
+    for family, ftype in types.items():
+        if ftype != "histogram" or family not in hist:
+            continue
+        h = hist[family]
+        if not h["buckets"]:
+            raise ValueError(f"histogram {family}: no _bucket series")
+        if h["sum"] is None or h["count"] is None:
+            raise ValueError(f"histogram {family}: missing _sum or _count")
+        prev = -1.0
+        for le, v in h["buckets"]:
+            if v < prev:
+                raise ValueError(
+                    f"histogram {family}: bucket le={le} count {v:g} < previous {prev:g}"
+                )
+            prev = v
+        last_le, last_v = h["buckets"][-1]
+        if last_le != "+Inf":
+            raise ValueError(f"histogram {family}: last bucket le={last_le!r}, not +Inf")
+        if last_v != h["count"]:
+            raise ValueError(
+                f"histogram {family}: +Inf bucket {last_v:g} != _count {h['count']:g}"
+            )
+    return types
+
+
+GOOD = """\
+# TYPE engine_runs counter
+engine_runs 1
+# TYPE engine_mean_score gauge
+engine_mean_score 0.5
+# TYPE engine_frontier_size histogram
+engine_frontier_size_bucket{le="0"} 1
+engine_frontier_size_bucket{le="1"} 1
+engine_frontier_size_bucket{le="3"} 3
+engine_frontier_size_bucket{le="+Inf"} 3
+engine_frontier_size_sum 5
+engine_frontier_size_count 3
+# TYPE span_seconds_total counter
+span_seconds_total{path="engine"} 1.5
+"""
+
+
+def self_test():
+    types = validate(GOOD)
+    assert types["engine_frontier_size"] == "histogram", types
+    assert types["engine_runs"] == "counter", types
+    validate("")  # an empty scrape is structurally valid
+
+    bad_cases = [
+        ("malformed TYPE", "# TYPE engine_runs\nengine_runs 1\n"),
+        ("malformed TYPE", "# TYPE engine_runs summary\nengine_runs 1\n"),
+        ("duplicate TYPE", "# TYPE x counter\n# TYPE x counter\nx 1\n"),
+        ("no TYPE comment", "engine_runs 1\n"),
+        ("malformed sample", "# TYPE x counter\nx 1 2 3\n"),
+        ("bad value", "# TYPE x counter\nx abc\n"),
+        ("bad value", "# TYPE x counter\nx NaN\n"),
+        (
+            "no _bucket series",
+            "# TYPE h histogram\nh_sum 1\nh_count 1\n",
+        ),
+        (
+            "missing _sum or _count",
+            '# TYPE h histogram\nh_bucket{le="+Inf"} 1\nh_count 1\n',
+        ),
+        (
+            "bucket le=2 count",
+            '# TYPE h histogram\nh_bucket{le="1"} 5\nh_bucket{le="2"} 3\n'
+            'h_bucket{le="+Inf"} 5\nh_sum 9\nh_count 5\n',
+        ),
+        (
+            "not +Inf",
+            '# TYPE h histogram\nh_bucket{le="1"} 5\nh_sum 9\nh_count 5\n',
+        ),
+        (
+            "+Inf bucket 4 != _count",
+            '# TYPE h histogram\nh_bucket{le="+Inf"} 4\nh_sum 9\nh_count 5\n',
+        ),
+        ("without le label", "# TYPE h histogram\nh_bucket 4\n"),
+        ("bare sample", "# TYPE h histogram\nh 4\n"),
+    ]
+    for expect, text in bad_cases:
+        try:
+            validate(text)
+        except ValueError as e:
+            assert expect in str(e), f"expected {expect!r} in {e!r}"
+        else:
+            raise AssertionError(f"case {expect!r} did not fail")
+    print("check_prom: self-test OK")
+
+
+def main():
+    argv = sys.argv[1:]
+    if argv == ["--self-test"]:
+        self_test()
+        return
+    required = []
+    while len(argv) >= 2 and argv[0] == "--require":
+        required.append(argv[1])
+        argv = argv[2:]
+    if len(argv) != 1:
+        fail("usage: check_prom.py [--require NAME ...] <file|-> | --self-test")
+    try:
+        if argv[0] == "-":
+            text = sys.stdin.read()
+        else:
+            with open(argv[0], encoding="utf-8") as f:
+                text = f.read()
+    except OSError as e:
+        fail(f"cannot read {argv[0]}: {e}")
+    try:
+        types = validate(text)
+    except ValueError as e:
+        fail(str(e))
+    for name in required:
+        if name not in types:
+            fail(f"required family {name!r} not present in scrape")
+    print(f"check_prom: OK ({len(types)} families)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+#!/usr/bin/env bash
+# Live telemetry smoke: launch a release-mode `dynamic` run with
+# `--metrics-addr 127.0.0.1:0`, scrape all four HTTP endpoints while
+# epochs are still executing, and validate every payload with the
+# stdlib checkers. Exercises the whole plane end to end:
+#
+#   stderr   `metrics: serving http://127.0.0.1:PORT/metrics` (port 0
+#            resolution — this line is the only place the port appears)
+#   /healthz JSON liveness: ok=true + phase/step/epoch progress
+#   /metrics Prometheus text, validated by scripts/check_prom.py
+#   /profile live span tree
+#   /events  NDJSON ring tail, validated by check_obs_log.py --partial
+#            (mid-run prefix: schema + ordering, no run_end yet)
+#
+# The run then finishes normally and its --obs-log file must pass the
+# strict (full-run) validator. Requires cargo, curl, python3.
+#
+#   scripts/ci_http_smoke.sh [--vertices N] [--epochs N]
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+VERTICES=32768
+EPOCHS=24
+while [ $# -gt 0 ]; do
+    case "$1" in
+        --vertices) VERTICES="$2"; shift ;;
+        --epochs) EPOCHS="$2"; shift ;;
+        *) echo "unknown flag: $1" >&2; exit 2 ;;
+    esac
+    shift
+done
+
+WORK="$(mktemp -d)"
+RUN_PID=""
+cleanup() {
+    [ -n "$RUN_PID" ] && kill "$RUN_PID" 2>/dev/null || true
+    rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+# Build first so the serving line isn't delayed behind compilation.
+(cd rust && cargo build --release --quiet)
+
+echo "== launching dynamic run with --metrics-addr 127.0.0.1:0 ==" >&2
+(cd rust && exec cargo run --release --quiet -- dynamic \
+    --graph so --vertices "$VERTICES" --parts 8 \
+    --churn uniform:0.05 --epochs "$EPOCHS" --repair-steps 8 \
+    --obs-log "$WORK/run.jsonl" \
+    --metrics-addr 127.0.0.1:0) >"$WORK/stdout.txt" 2>"$WORK/stderr.txt" &
+RUN_PID=$!
+
+# The kernel-assigned port is echoed on stderr once the listener binds.
+BASE=""
+for _ in $(seq 1 300); do
+    BASE="$(sed -n 's#^metrics: serving \(http://[^/]*\)/metrics$#\1#p' \
+        "$WORK/stderr.txt" | head -n 1)"
+    [ -n "$BASE" ] && break
+    if ! kill -0 "$RUN_PID" 2>/dev/null; then
+        echo "error: run exited before announcing the metrics address" >&2
+        cat "$WORK/stderr.txt" >&2
+        exit 1
+    fi
+    sleep 0.1
+done
+if [ -z "$BASE" ]; then
+    echo "error: no 'metrics: serving' line on stderr after 30s" >&2
+    cat "$WORK/stderr.txt" >&2
+    exit 1
+fi
+echo "== serving at $BASE ==" >&2
+
+# The server answers from the moment it binds — before the first span
+# lands in the registry. Poll /metrics until real engine output shows
+# up, then hit the remaining endpoints in the same breath (mid-run).
+SEEN=0
+for _ in $(seq 1 300); do
+    curl -fsS --max-time 10 "$BASE/metrics" >"$WORK/metrics.txt"
+    if grep -q 'span_seconds_total{path=' "$WORK/metrics.txt"; then
+        SEEN=1
+        break
+    fi
+    sleep 0.1
+done
+if [ "$SEEN" != 1 ]; then
+    echo "error: no spans appeared in /metrics after 30s of scraping" >&2
+    exit 1
+fi
+curl -fsS --max-time 10 "$BASE/healthz" >"$WORK/healthz.json"
+curl -fsS --max-time 10 "$BASE/profile" >"$WORK/profile.txt"
+curl -fsS --max-time 10 "$BASE/events?since=0" >"$WORK/events.jsonl"
+
+kill -0 "$RUN_PID" 2>/dev/null || {
+    echo "error: run was already finished when the endpoints answered" >&2
+    exit 1
+}
+
+python3 - "$WORK/healthz.json" <<'PY'
+import json, sys
+h = json.load(open(sys.argv[1]))
+assert h["ok"] is True, h
+assert isinstance(h["phase"], str) and h["phase"], h
+for key in ("uptime_s", "step", "epoch", "events"):
+    assert isinstance(h[key], (int, float)), (key, h)
+print(f"healthz: ok phase={h['phase']} step={h['step']} epoch={h['epoch']}")
+PY
+
+python3 scripts/check_prom.py --require span_seconds_total \
+    --require span_calls_total "$WORK/metrics.txt"
+grep -q "top-level spans:" "$WORK/profile.txt"
+python3 scripts/check_obs_log.py --partial "$WORK/events.jsonl"
+head -n 1 "$WORK/events.jsonl" | grep -q '"ev":"run_start"'
+
+wait "$RUN_PID"
+RUN_PID=""
+
+# After a clean exit the full --obs-log must satisfy the strict
+# validator (run_start .. run_end, steps present, t_s monotone).
+python3 scripts/check_obs_log.py "$WORK/run.jsonl"
+echo "ok: live telemetry plane answered all endpoints mid-run" >&2
