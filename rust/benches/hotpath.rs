@@ -493,13 +493,13 @@ fn main() {
             repair_steps: 5,
             ..Default::default()
         };
-        let mut inc = IncrementalPartitioner::new(dg, cfg, Refiner::Spinner);
+        let mut inc = IncrementalPartitioner::new(dg, cfg, Refiner::Spinner).unwrap();
         let recipe = ChurnRecipe::Uniform { frac: 0.02 };
         let epochs = if full_scale() { 5u64 } else { 3 };
         for epoch in 0..epochs {
             let batch = recipe.generate(inc.current(), 900 + epoch);
             let sw = revolver::util::Stopwatch::start();
-            let stats = inc.epoch(&batch);
+            let stats = inc.epoch(&batch).unwrap();
             let repair_ns = sw.elapsed_s() * 1e9;
             let q = quality::evaluate(inc.current(), inc.labels(), k8);
             println!(

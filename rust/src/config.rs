@@ -234,6 +234,32 @@ impl std::str::FromStr for Verbosity {
     }
 }
 
+/// Ingest strictness of the text readers (`--ingest`): edge lists,
+/// update logs, and the streaming file adapter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IngestMode {
+    /// The first malformed line aborts the load with a
+    /// path/line/snippet diagnostic (the safe default).
+    #[default]
+    Strict,
+    /// Malformed lines are skipped and counted
+    /// (`ingest_skipped_lines`), each logged with its path, 1-based
+    /// line number and a truncated snippet — for dirty real-world
+    /// dumps where one torn line should not kill an hours-long run.
+    Lenient,
+}
+
+impl std::str::FromStr for IngestMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_lowercase().as_str() {
+            "strict" => Ok(IngestMode::Strict),
+            "lenient" => Ok(IngestMode::Lenient),
+            other => bail!("unknown ingest mode {other:?} (expected strict|lenient)"),
+        }
+    }
+}
+
 /// Initial assignment policy for the iterative partitioners
 /// (Revolver / Spinner).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -357,6 +383,22 @@ pub struct RevolverConfig {
     /// (`--metrics-addr`); empty = off. Port 0 picks a free port — the
     /// bound address is echoed on stderr. Also installs a run recorder.
     pub metrics_addr: String,
+    /// Ingest strictness for edge-list / update-log text readers
+    /// (`--ingest`): strict aborts on the first malformed line,
+    /// lenient skips-and-counts it with a line-numbered diagnostic.
+    pub ingest: IngestMode,
+    /// Checkpoint directory (`--checkpoint`); empty = checkpointing
+    /// off. `partition` writes at step cadence, `dynamic` at epoch
+    /// cadence (see [`crate::fault::checkpoint`]).
+    pub checkpoint_dir: String,
+    /// Write a checkpoint every this many steps (`partition`) or
+    /// epochs (`dynamic`); must be >= 1 when checkpointing is on.
+    pub checkpoint_every: u32,
+    /// Resume from the newest checkpoint in `checkpoint_dir`
+    /// (`--resume`); starting fresh when the directory is empty.
+    pub resume: bool,
+    /// Deterministic fault-injection plan (`--faults`); empty = none.
+    pub faults: crate::fault::FaultPlan,
 }
 
 impl Default for RevolverConfig {
@@ -394,6 +436,11 @@ impl Default for RevolverConfig {
             obs_log: String::new(),
             profile: false,
             metrics_addr: String::new(),
+            ingest: IngestMode::Strict,
+            checkpoint_dir: String::new(),
+            checkpoint_every: 10,
+            resume: false,
+            faults: crate::fault::FaultPlan::default(),
         }
     }
 }
@@ -444,6 +491,15 @@ impl RevolverConfig {
             self.compact_ratio
         );
         anyhow::ensure!(self.repair_steps >= 1, "repair_steps must be >= 1");
+        anyhow::ensure!(
+            self.checkpoint_every >= 1,
+            "checkpoint_every must be >= 1, got {}",
+            self.checkpoint_every
+        );
+        anyhow::ensure!(
+            !self.resume || !self.checkpoint_dir.is_empty(),
+            "resume requires a checkpoint directory (--checkpoint dir/)"
+        );
         // The coarsest-level algorithm must itself be a registered
         // non-multilevel partitioner (a multilevel coarse_algo would
         // recurse forever). The family list lives next to the registry
@@ -522,6 +578,13 @@ impl RevolverConfig {
                 "obs_log" => cfg.obs_log = value.clone(),
                 "profile" => cfg.profile = value.parse().context("profile")?,
                 "metrics_addr" => cfg.metrics_addr = value.clone(),
+                "ingest" => cfg.ingest = value.parse()?,
+                "checkpoint_dir" => cfg.checkpoint_dir = value.clone(),
+                "checkpoint_every" => {
+                    cfg.checkpoint_every = value.parse().context("checkpoint_every")?
+                }
+                "resume" => cfg.resume = value.parse().context("resume")?,
+                "faults" => cfg.faults = value.parse()?,
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -799,5 +862,44 @@ mod tests {
         let c =
             RevolverConfig::from_toml_str("artifacts_dir = \"my#dir\"\n").unwrap();
         assert_eq!(c.artifacts_dir, "my#dir");
+    }
+
+    #[test]
+    fn ingest_mode_parse() {
+        assert_eq!("strict".parse::<IngestMode>().unwrap(), IngestMode::Strict);
+        assert_eq!("LENIENT".parse::<IngestMode>().unwrap(), IngestMode::Lenient);
+        assert!("yolo".parse::<IngestMode>().is_err());
+        assert_eq!(IngestMode::default(), IngestMode::Strict);
+    }
+
+    #[test]
+    fn fault_tolerance_keys_parse_and_validate() {
+        let c = RevolverConfig::from_toml_str(
+            "ingest = \"lenient\"\n\
+             checkpoint_dir = \"ckpt\"\n\
+             checkpoint_every = 3\n\
+             resume = true\n\
+             faults = \"panic@step:7,io@checkpoint:2\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.ingest, IngestMode::Lenient);
+        assert_eq!(c.checkpoint_dir, "ckpt");
+        assert_eq!(c.checkpoint_every, 3);
+        assert!(c.resume);
+        assert_eq!(c.faults.panic_at_step, Some(7));
+        assert_eq!(c.faults.io_at_checkpoint, Some(2));
+
+        let d = RevolverConfig::default();
+        assert_eq!(d.ingest, IngestMode::Strict);
+        assert!(d.checkpoint_dir.is_empty());
+        assert_eq!(d.checkpoint_every, 10);
+        assert!(!d.resume);
+        assert!(d.faults.is_empty());
+
+        assert!(RevolverConfig::from_toml_str("checkpoint_every = 0\n").is_err());
+        // resume without a checkpoint dir is a config error.
+        assert!(RevolverConfig::from_toml_str("resume = true\n").is_err());
+        assert!(RevolverConfig::from_toml_str("faults = \"explode@heap:1\"\n").is_err());
+        assert!(RevolverConfig::from_toml_str("ingest = \"sloppy\"\n").is_err());
     }
 }

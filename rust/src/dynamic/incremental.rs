@@ -82,7 +82,11 @@ impl IncrementalPartitioner {
     /// incrementally. The cold run's cost is *not* counted into
     /// [`IncrementalPartitioner::total_evaluated`] — that tracks epoch
     /// work only, which is what restart comparisons meter.
-    pub fn new(g: Graph, cfg: RevolverConfig, refiner: Refiner) -> Self {
+    pub fn new(
+        g: Graph,
+        cfg: RevolverConfig,
+        refiner: Refiner,
+    ) -> Result<Self, crate::engine::EngineError> {
         cfg.validate().expect("invalid config");
         let algo = match refiner {
             Refiner::Spinner => "spinner",
@@ -90,8 +94,8 @@ impl IncrementalPartitioner {
         };
         let out = by_name(algo, cfg.clone())
             .expect("refiner algorithms are registered")
-            .partition(&g);
-        Self::from_assignment(g, cfg, refiner, out.labels)
+            .try_partition(&g)?;
+        Ok(Self::from_assignment(g, cfg, refiner, out.labels))
     }
 
     /// Adopt an existing assignment (warm handoff from any partitioner).
@@ -158,7 +162,13 @@ impl IncrementalPartitioner {
     }
 
     /// Apply one update batch and repair the assignment around it.
-    pub fn epoch(&mut self, batch: &UpdateBatch) -> EpochStats {
+    /// `Err` means a repair-pass worker panicked (contained,
+    /// [`crate::engine::EngineError`]); the overlay is already compacted
+    /// but the labels are the pre-repair assignment.
+    pub fn epoch(
+        &mut self,
+        batch: &UpdateBatch,
+    ) -> Result<EpochStats, crate::engine::EngineError> {
         let k = self.cfg.parts;
         let sw = crate::util::Stopwatch::start();
         let _ep = crate::obs::span("dynamic_epoch");
@@ -211,12 +221,17 @@ impl IncrementalPartitioner {
             let rsw = crate::util::Stopwatch::start();
             let mut rcfg = self.cfg.clone();
             rcfg.max_steps = self.cfg.repair_steps;
+            // Checkpoint cadence belongs to the dynamic driver (epoch
+            // granularity), never to the inner bounded repair pass —
+            // interleaved step-level snapshots would corrupt the
+            // resume cursor ordering.
+            rcfg.checkpoint_dir.clear();
             let out = match self.refiner {
                 Refiner::Spinner => {
-                    spinner::refine_seeded(g, &rcfg, self.labels.clone(), seeds)
+                    spinner::refine_seeded(g, &rcfg, self.labels.clone(), seeds)?
                 }
                 Refiner::Revolver => {
-                    revolver::refine_seeded(g, &rcfg, self.labels.clone(), seeds)
+                    revolver::refine_seeded(g, &rcfg, self.labels.clone(), seeds)?
                 }
             };
             stats.repair_steps = out.trace.steps();
@@ -235,7 +250,7 @@ impl IncrementalPartitioner {
         self.total_evaluated += stats.evaluated;
         self.total_repair_steps += stats.repair_steps;
         self.total_wall_s += sw.elapsed_s();
-        stats
+        Ok(stats)
     }
 
     /// Build a per-epoch quality trace point — the quality-over-time
@@ -368,7 +383,7 @@ mod tests {
         let (g, labels) = two_cliques();
         let mut inc =
             IncrementalPartitioner::from_assignment(g, cfg(2), Refiner::Spinner, labels.clone());
-        let stats = inc.epoch(&UpdateBatch::default());
+        let stats = inc.epoch(&UpdateBatch::default()).unwrap();
         assert_eq!(stats, EpochStats::default());
         assert_eq!(inc.labels(), labels.as_slice());
         assert_eq!(inc.total_evaluated(), 0);
@@ -384,7 +399,7 @@ mod tests {
         let mut inc =
             IncrementalPartitioner::from_assignment(g, cfg(2), Refiner::Spinner, labels.clone());
         let batch = UpdateBatch { updates: vec![Update::RemoveEdge(0, 1)] };
-        let stats = inc.epoch(&batch);
+        let stats = inc.epoch(&batch).unwrap();
         assert_eq!(stats.applied, 1);
         assert!(stats.seeds <= 6, "seeds confined to the touched clique: {stats:?}");
         assert!(
@@ -409,7 +424,7 @@ mod tests {
                 Update::AddEdge(8, 12),
             ],
         };
-        let stats = inc.epoch(&batch);
+        let stats = inc.epoch(&batch).unwrap();
         assert_eq!(stats.placed, 1);
         assert_eq!(inc.labels().len(), 13);
         assert_eq!(inc.labels()[12], 1, "neighbour majority must win placement");
@@ -420,11 +435,11 @@ mod tests {
         let g = rmat::rmat(1 << 10, 8 << 10, 0.57, 0.19, 0.19, 3);
         let k = 4;
         for refiner in [Refiner::Spinner, Refiner::Revolver] {
-            let mut inc = IncrementalPartitioner::new(g.clone(), cfg(k), refiner);
+            let mut inc = IncrementalPartitioner::new(g.clone(), cfg(k), refiner).unwrap();
             let recipe = ChurnRecipe::Uniform { frac: 0.03 };
             for e in 0..3u64 {
                 let batch = recipe.generate(inc.current(), 100 + e);
-                let stats = inc.epoch(&batch);
+                let stats = inc.epoch(&batch).unwrap();
                 assert!(stats.applied > 0, "{refiner:?} epoch {e}: churn applied");
                 let gq = inc.current();
                 assert_eq!(inc.labels().len(), gq.num_vertices());
@@ -439,11 +454,11 @@ mod tests {
     #[test]
     fn arrivals_epochs_grow_the_assignment() {
         let g = rmat::rmat(1 << 9, 8 << 9, 0.57, 0.19, 0.19, 5);
-        let mut inc = IncrementalPartitioner::new(g, cfg(4), Refiner::Spinner);
+        let mut inc = IncrementalPartitioner::new(g, cfg(4), Refiner::Spinner).unwrap();
         let n0 = inc.current().num_vertices();
         let recipe = ChurnRecipe::Arrivals { count: 32, edges_per: 3 };
         let batch = recipe.generate(inc.current(), 7);
-        let stats = inc.epoch(&batch);
+        let stats = inc.epoch(&batch).unwrap();
         assert_eq!(stats.placed, 32);
         assert_eq!(inc.current().num_vertices(), n0 + 32);
         assert_eq!(inc.labels().len(), n0 + 32);
@@ -454,11 +469,11 @@ mod tests {
     fn deterministic_across_reconstructions() {
         let g = rmat::rmat(1 << 9, 8 << 9, 0.57, 0.19, 0.19, 8);
         let run = || {
-            let mut inc = IncrementalPartitioner::new(g.clone(), cfg(4), Refiner::Spinner);
+            let mut inc = IncrementalPartitioner::new(g.clone(), cfg(4), Refiner::Spinner).unwrap();
             for e in 0..2u64 {
                 let batch =
                     ChurnRecipe::Uniform { frac: 0.05 }.generate(inc.current(), 50 + e);
-                inc.epoch(&batch);
+                inc.epoch(&batch).unwrap();
             }
             (inc.labels().to_vec(), inc.total_evaluated())
         };
@@ -472,7 +487,7 @@ mod tests {
             IncrementalPartitioner::from_assignment(g, cfg(2), Refiner::Spinner, labels);
         let mut trace = RunTrace::default();
         let batch = UpdateBatch { updates: vec![Update::RemoveEdge(0, 1)] };
-        let stats = inc.epoch(&batch);
+        let stats = inc.epoch(&batch).unwrap();
         inc.record_epoch(&mut trace, 0, &stats);
         assert_eq!(trace.points.len(), 1);
         assert_eq!(trace.points[0].step, 0);

@@ -38,4 +38,4 @@ pub mod updates;
 
 pub use delta::{ApplyStats, DynamicGraph};
 pub use incremental::{EpochStats, IncrementalPartitioner};
-pub use updates::{read_update_log, ChurnRecipe, Update, UpdateBatch};
+pub use updates::{read_update_log, read_update_log_named, ChurnRecipe, Update, UpdateBatch};

@@ -33,7 +33,8 @@ use std::io::BufRead;
 
 use anyhow::{bail, Context, Result};
 
-use crate::graph::parse::{densify, parse_edge_line};
+use crate::config::IngestMode;
+use crate::graph::parse::{densify, line_err, parse_edge_line, read_raw_line, snippet};
 use crate::graph::Graph;
 use crate::util::rng::Rng;
 use crate::VertexId;
@@ -72,92 +73,140 @@ impl UpdateBatch {
 /// over `0..base_vertices` (pass 0 to build a graph from scratch out
 /// of a pure-add log). A trailing unterminated batch is kept; empty
 /// batches (consecutive `commit`s) are dropped.
-pub fn read_update_log<R: BufRead>(mut r: R, base_vertices: usize) -> Result<Vec<UpdateBatch>> {
+pub fn read_update_log<R: BufRead>(r: R, base_vertices: usize) -> Result<Vec<UpdateBatch>> {
+    read_update_log_named(r, base_vertices, "<update log>", IngestMode::Strict)
+}
+
+/// [`read_update_log`] with a source label for diagnostics and an
+/// explicit [`IngestMode`]. Lines are read under the same
+/// [`crate::graph::parse::MAX_LINE_BYTES`] cap as every other text
+/// reader; in `Lenient` mode malformed lines are skipped-and-counted
+/// (`ingest_skipped_lines`) without densifying any of their ids, so a
+/// skipped line can never mint phantom vertices.
+pub fn read_update_log_named<R: BufRead>(
+    mut r: R,
+    base_vertices: usize,
+    label: &str,
+    mode: IngestMode,
+) -> Result<Vec<UpdateBatch>> {
     let mut ids: HashMap<u64, VertexId> = HashMap::with_capacity(base_vertices);
     for v in 0..base_vertices as u64 {
         ids.insert(v, v as VertexId);
     }
     let mut batches = Vec::new();
     let mut cur = UpdateBatch::default();
-    let mut line = String::new();
+    let mut buf = Vec::new();
     let mut lineno = 0usize;
-    loop {
-        line.clear();
-        if r.read_line(&mut line)? == 0 {
-            break;
-        }
+    let mut skipped = 0u64;
+    while let Some(fits) = read_raw_line(&mut r, &mut buf)? {
         lineno += 1;
-        let t = line.trim();
-        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
-            continue;
-        }
-        if t == "commit" {
-            if !cur.is_empty() {
-                batches.push(std::mem::take(&mut cur));
+        let parsed: Result<Option<Update>> = if !fits {
+            Err(line_err(label, lineno, "line exceeds the 1 MiB length cap", &buf))
+        } else if let Ok(text) = std::str::from_utf8(&buf) {
+            let t = text.trim();
+            if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+                continue;
             }
-            continue;
-        }
-        let mut words = t.split_whitespace();
-        let op = words.next().expect("non-empty line has a first token");
-        let parse_one_id = |words: &mut std::str::SplitWhitespace<'_>| -> Result<u64> {
-            let w = words
-                .next()
-                .with_context(|| format!("line {lineno}: expected `{op} <id>`"))?;
-            w.parse::<u64>().with_context(|| format!("line {lineno}: bad vertex id"))
+            if t == "commit" {
+                if !cur.is_empty() {
+                    batches.push(std::mem::take(&mut cur));
+                }
+                continue;
+            }
+            parse_update_line(t, lineno, &mut ids)
+                .map_err(|e| e.context(format!("{label}: line {lineno}: {:?}", snippet(&buf))))
+        } else {
+            Err(line_err(label, lineno, "invalid UTF-8", &buf))
         };
-        let up = match op {
-            "a" | "d" => {
-                // The rest of the line is a plain `src dst` pair.
-                let rest = t[1..].trim_start();
-                let (a, b) = parse_edge_line(rest, lineno)?
-                    .with_context(|| format!("line {lineno}: expected `{op} src dst`"))?;
-                if op == "a" {
-                    Update::AddEdge(densify(a, &mut ids), densify(b, &mut ids))
-                } else {
-                    // Deletes only *look up* ids: an edge with an
-                    // unseen endpoint cannot exist, so the op is a
-                    // guaranteed no-op — minting a dense id for it
-                    // would permanently skew the map and materialize
-                    // phantom vertices on the next arrival.
-                    match (ids.get(&a), ids.get(&b)) {
-                        (Some(&s), Some(&d)) => Update::RemoveEdge(s, d),
-                        _ => continue,
-                    }
+        match (parsed, mode) {
+            (Ok(Some(up)), _) => cur.updates.push(up),
+            (Ok(None), _) => {}
+            (Err(e), IngestMode::Strict) => return Err(e),
+            (Err(e), IngestMode::Lenient) => {
+                skipped += 1;
+                crate::obs::counter_add("ingest_skipped_lines", 1);
+                if skipped <= 8 {
+                    crate::obs::log::debug(&format!("ingest: skipping {e:#}"));
                 }
             }
-            "av" | "dv" => {
-                let raw = parse_one_id(&mut words)?;
-                anyhow::ensure!(
-                    words.next().is_none(),
-                    "line {lineno}: trailing tokens after `{op} <id>`"
-                );
-                if op == "av" {
-                    Update::AddVertex(densify(raw, &mut ids))
-                } else {
-                    // Same lookup-only rule as `d` (see above).
-                    match ids.get(&raw) {
-                        Some(&v) => Update::RemoveVertex(v),
-                        None => continue,
-                    }
-                }
-            }
-            _ => {
-                // Bare `src dst` line: an add, same as an edge list.
-                match parse_edge_line(t, lineno)? {
-                    Some((a, b)) => {
-                        let (s, d) = (densify(a, &mut ids), densify(b, &mut ids));
-                        Update::AddEdge(s, d)
-                    }
-                    None => continue,
-                }
-            }
-        };
-        cur.updates.push(up);
+        }
+    }
+    if skipped > 0 {
+        crate::obs::log::info(&format!(
+            "ingest: {label}: skipped {skipped} malformed line(s) (lenient mode)"
+        ));
     }
     if !cur.is_empty() {
         batches.push(cur);
     }
     Ok(batches)
+}
+
+/// Parse one non-comment, non-`commit` update-log line (module docs).
+/// `Ok(None)` = a structurally valid no-op (a delete naming unseen
+/// ids); ids are densified only on fully-parsed adding ops, so an `Err`
+/// never mutates the map.
+fn parse_update_line(
+    t: &str,
+    lineno: usize,
+    ids: &mut HashMap<u64, VertexId>,
+) -> Result<Option<Update>> {
+    let mut words = t.split_whitespace();
+    let op = words.next().expect("non-empty line has a first token");
+    let parse_one_id = |words: &mut std::str::SplitWhitespace<'_>| -> Result<u64> {
+        let w = words
+            .next()
+            .with_context(|| format!("line {lineno}: expected `{op} <id>`"))?;
+        w.parse::<u64>().with_context(|| format!("line {lineno}: bad vertex id"))
+    };
+    let up = match op {
+        "a" | "d" => {
+            // The rest of the line is a plain `src dst` pair.
+            let rest = t[1..].trim_start();
+            let (a, b) = parse_edge_line(rest, lineno)?
+                .with_context(|| format!("line {lineno}: expected `{op} src dst`"))?;
+            if op == "a" {
+                Update::AddEdge(densify(a, ids), densify(b, ids))
+            } else {
+                // Deletes only *look up* ids: an edge with an
+                // unseen endpoint cannot exist, so the op is a
+                // guaranteed no-op — minting a dense id for it
+                // would permanently skew the map and materialize
+                // phantom vertices on the next arrival.
+                match (ids.get(&a), ids.get(&b)) {
+                    (Some(&s), Some(&d)) => Update::RemoveEdge(s, d),
+                    _ => return Ok(None),
+                }
+            }
+        }
+        "av" | "dv" => {
+            let raw = parse_one_id(&mut words)?;
+            anyhow::ensure!(
+                words.next().is_none(),
+                "line {lineno}: trailing tokens after `{op} <id>`"
+            );
+            if op == "av" {
+                Update::AddVertex(densify(raw, ids))
+            } else {
+                // Same lookup-only rule as `d` (see above).
+                match ids.get(&raw) {
+                    Some(&v) => Update::RemoveVertex(v),
+                    None => return Ok(None),
+                }
+            }
+        }
+        _ => {
+            // Bare `src dst` line: an add, same as an edge list.
+            match parse_edge_line(t, lineno)? {
+                Some((a, b)) => {
+                    let (s, d) = (densify(a, ids), densify(b, ids));
+                    Update::AddEdge(s, d)
+                }
+                None => return Ok(None),
+            }
+        }
+    };
+    Ok(Some(up))
 }
 
 /// A named synthetic churn workload, parseable from the CLI
@@ -418,6 +467,36 @@ mod tests {
         assert!(format!("{err:#}").contains("line 1"), "{err:#}");
         let err = read_update_log(Cursor::new("dv 1 2\n"), 4).unwrap_err();
         assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+    }
+
+    #[test]
+    fn log_reader_lenient_mode_skips_without_minting_ids() {
+        // Malformed lines (bad int, invalid UTF-8, truncated op) are
+        // skipped in lenient mode, and the ids they *partially* named
+        // never enter the map: raw id 1234 still gets dense id 4.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"0 1\n");
+        bytes.extend_from_slice(b"a x 7\nav\n");
+        bytes.extend_from_slice(&[0xC0, 0xAF, b'\n']);
+        bytes.extend_from_slice(b"a 0 1234\ncommit\n");
+        let batches = read_update_log_named(
+            Cursor::new(&bytes),
+            4,
+            "log.txt",
+            IngestMode::Lenient,
+        )
+        .unwrap();
+        assert_eq!(batches.len(), 1);
+        assert_eq!(
+            batches[0].updates,
+            vec![Update::AddEdge(0, 1), Update::AddEdge(0, 4)]
+        );
+        // Strict mode aborts on the same input, naming the source file.
+        let err =
+            read_update_log_named(Cursor::new(&bytes), 4, "log.txt", IngestMode::Strict)
+                .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("log.txt") && msg.contains("line 2"), "{msg}");
     }
 
     #[test]

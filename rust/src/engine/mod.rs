@@ -79,6 +79,52 @@ use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 use crate::VertexId;
 
+/// A run-level failure the engine *contains* and reports instead of
+/// letting it deadlock the barrier protocol. Today the only variant is
+/// a worker panic: every phase hook runs under `catch_unwind`, the
+/// first panic is recorded here, and the run unwinds through the
+/// normal stop/barrier shutdown with all threads joined.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EngineError {
+    /// A worker's phase hook (or scratch constructor) panicked. The
+    /// run's labels/loads may be mid-migration inconsistent, so no
+    /// partial output is returned.
+    WorkerPanic {
+        /// Worker index in `0..threads`.
+        worker: usize,
+        /// Superstep the panic surfaced in (0-based).
+        step: u32,
+        /// `"scratch"`, `"A"`, or `"B"`.
+        phase: &'static str,
+        /// The panic payload, when it was a string.
+        message: String,
+    },
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::WorkerPanic { worker, step, phase, message } => write!(
+                f,
+                "worker {worker} panicked in phase {phase} at step {step}: {message}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// Extract a human-readable message from a caught panic payload.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Per-worker aggregates reported from the phase hooks and reduced by
 /// the coordinator each step (replaces ad-hoc bit-cast atomics).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -334,6 +380,15 @@ pub trait VertexProgram: Sync {
         work: &[VertexId],
         rng: &mut Rng,
     ) -> StepStats;
+
+    /// Learning-state snapshot for checkpointing, called on the
+    /// coordinator between steps (workers parked at W1, so shared
+    /// program state is quiescent). Programs with no state beyond the
+    /// assignment return `None` (the default); Revolver dumps its LA
+    /// slab so a resumed run keeps its learned action probabilities.
+    fn la_checkpoint(&self) -> Option<crate::fault::LaSlab> {
+        None
+    }
 }
 
 /// Build the full-graph chunk layout `cfg` asks for.
@@ -385,7 +440,11 @@ pub enum InitialFrontier {
 /// Run `program` over `g` to completion: max_steps, convergence-driven
 /// halt (§IV-D.9), or an empty active frontier, whichever first. The
 /// initial assignment comes from `cfg.init` (see [`initial_assignment`]).
-pub fn run<P: VertexProgram>(g: &Graph, cfg: &RevolverConfig, program: &P) -> PartitionOutput {
+pub fn run<P: VertexProgram>(
+    g: &Graph,
+    cfg: &RevolverConfig,
+    program: &P,
+) -> Result<PartitionOutput, EngineError> {
     let init = initial_assignment(g, cfg);
     run_with_init(g, cfg, program, init)
 }
@@ -406,7 +465,7 @@ pub fn run_with_init<P: VertexProgram>(
     cfg: &RevolverConfig,
     program: &P,
     init: InitialAssignment,
-) -> PartitionOutput {
+) -> Result<PartitionOutput, EngineError> {
     run_with_frontier(g, cfg, program, init, InitialFrontier::All)
 }
 
@@ -424,7 +483,7 @@ pub fn run_with_frontier<P: VertexProgram>(
     program: &P,
     init: InitialAssignment,
     initial_frontier: InitialFrontier,
-) -> PartitionOutput {
+) -> Result<PartitionOutput, EngineError> {
     let sw = Stopwatch::start();
     // Observability: `obs_on` is captured once and gates every clock
     // read below, so the disabled path adds only dead branches (the
@@ -479,6 +538,20 @@ pub fn run_with_frontier<P: VertexProgram>(
 
     let barrier = Barrier::new(t + 1);
     let stop = AtomicBool::new(false);
+    // ── Panic containment ──
+    // A worker whose phase hook panics sets `poisoned` and records the
+    // first panic here, then keeps participating in every barrier and
+    // the full channel protocol (default stats, empty wake lists) so
+    // no recv loop ever blocks. The coordinator checks the flag each
+    // step after the reduce and breaks into the normal stop/barrier
+    // shutdown — bounded drain of at most the in-flight step, never a
+    // barrier hang.
+    let poisoned = AtomicBool::new(false);
+    let first_panic: Mutex<Option<EngineError>> = Mutex::new(None);
+    // Step-cadence durability (`--checkpoint dir/`): written by the
+    // coordinator between steps, when workers are parked at W1.
+    let mut checkpointer = (!cfg.checkpoint_dir.is_empty())
+        .then(|| crate::fault::Checkpointer::new(cfg.checkpoint_dir.as_str(), &cfg.faults));
     // Coordinator → worker hand-off slots. With the frontier off, one
     // identity plan (the `cfg.schedule` layout) serves the whole run;
     // with it on, the coordinator republishes a fresh frontier plan
@@ -542,11 +615,41 @@ pub fn run_with_frontier<P: VertexProgram>(
             let (barrier, stop) = (&barrier, &stop);
             let (plan_slot, snap_slot, a_slot, b_slot) =
                 (&plan_slot, &snap_slot, &a_slot, &b_slot);
+            let (poisoned, first_panic) = (&poisoned, &first_panic);
             let stats_tx = stats_tx.clone();
             let wake_tx = wake_tx.clone();
             let base_rng = base_rng.clone();
+            // Deterministic fault injection: `panic@step:N` arms
+            // worker 0 to panic inside phase A of superstep N,
+            // exercising exactly the containment path a real bug would.
+            let inject_at: Option<u32> =
+                if c == 0 { cfg.faults.panic_at_step } else { None };
             scope.spawn(move || {
-                let mut scratch = program.make_scratch();
+                // Record the first panic and poison the run. The worker
+                // then degrades to a barrier/channel ghost: it keeps the
+                // protocol alive so nobody blocks, but does no work.
+                let report = |step: u32, phase: &'static str, payload: Box<dyn std::any::Any + Send>| {
+                    let mut slot = first_panic.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(EngineError::WorkerPanic {
+                            worker: c,
+                            step,
+                            phase,
+                            message: panic_message(payload),
+                        });
+                    }
+                    drop(slot);
+                    poisoned.store(true, Ordering::Release);
+                };
+                use std::panic::{catch_unwind, AssertUnwindSafe};
+                let mut scratch: Option<P::Scratch> =
+                    match catch_unwind(AssertUnwindSafe(|| program.make_scratch())) {
+                        Ok(s) => Some(s),
+                        Err(payload) => {
+                            report(0, "scratch", payload);
+                            None
+                        }
+                    };
                 let mut step: u64 = 0;
                 // This worker's wake worklist (drained every recording
                 // step; allocation reused via the swap below).
@@ -574,8 +677,25 @@ pub fn run_with_frontier<P: VertexProgram>(
                     };
                     let mut rng = base_rng.fork(step * 2 * t as u64 + c as u64);
                     let t_a = obs_on.then(Stopwatch::start);
-                    let stats_a =
-                        program.phase_a(&ctx, &frozen_a, &mut scratch, work, &mut rng);
+                    let stats_a = match scratch.as_mut() {
+                        Some(sc) if !poisoned.load(Ordering::Acquire) => {
+                            match catch_unwind(AssertUnwindSafe(|| {
+                                if inject_at == Some(step as u32) {
+                                    crate::obs::counter_add("faults_injected", 1);
+                                    crate::obs::event("fault", &[("step", step as f64)]);
+                                    panic!("injected fault: panic@step:{step}");
+                                }
+                                program.phase_a(&ctx, &frozen_a, sc, work, &mut rng)
+                            })) {
+                                Ok(s) => s,
+                                Err(payload) => {
+                                    report(step as u32, "A", payload);
+                                    StepStats::default()
+                                }
+                            }
+                        }
+                        _ => StepStats::default(),
+                    };
                     let busy_a = t_a.map_or(0.0, |w| w.elapsed_s());
                     barrier.wait(); // W2: all demand registered
                     barrier.wait(); // W2b: coordinator froze phase-B data
@@ -583,8 +703,20 @@ pub fn run_with_frontier<P: VertexProgram>(
                         b_slot.lock().unwrap().clone().expect("phase-B data published");
                     let mut rng = base_rng.fork((step * 2 + 1) * t as u64 + c as u64);
                     let t_b = obs_on.then(Stopwatch::start);
-                    let stats_b =
-                        program.phase_b(&ctx, &frozen_b, &mut scratch, work, &mut rng);
+                    let stats_b = match scratch.as_mut() {
+                        Some(sc) if !poisoned.load(Ordering::Acquire) => {
+                            match catch_unwind(AssertUnwindSafe(|| {
+                                program.phase_b(&ctx, &frozen_b, sc, work, &mut rng)
+                            })) {
+                                Ok(s) => s,
+                                Err(payload) => {
+                                    report(step as u32, "B", payload);
+                                    StepStats::default()
+                                }
+                            }
+                        }
+                        _ => StepStats::default(),
+                    };
                     let mut stats = stats_a.merged(stats_b);
                     stats.evaluated = work.len() as u64;
                     if obs_on {
@@ -777,6 +909,41 @@ pub fn run_with_frontier<P: VertexProgram>(
             }
             seg.cut("reduce"); // worklist merge + stats fold + trace
 
+            // Containment: a poisoned step's aggregates are garbage and
+            // its state may be mid-migration — stop the run through the
+            // normal shutdown (workers are parked at W1 by the time the
+            // barrier below releases them into the stop check).
+            if poisoned.load(Ordering::Acquire) {
+                break;
+            }
+
+            // Step-cadence checkpoint. Workers are past phase B and
+            // about to park at W1, so labels/loads/LA state are
+            // quiescent. A failed write (including the injected
+            // `io@checkpoint` fault) only widens the replay window —
+            // log and continue.
+            if let Some(ck) = checkpointer.as_mut() {
+                if (step + 1) % cfg.checkpoint_every.max(1) == 0 {
+                    let labels = state.labels_snapshot();
+                    let loads = quality::partition_loads(g, &labels, k);
+                    let snap = crate::fault::Snapshot {
+                        seed: cfg.seed,
+                        step: step + 1,
+                        epoch: 0,
+                        k: k as u32,
+                        labels,
+                        loads,
+                        la: program.la_checkpoint(),
+                    };
+                    if let Err(e) = ck.write(&snap) {
+                        crate::obs::log::info(&format!(
+                            "checkpoint at step {} failed (continuing): {e:#}",
+                            step + 1
+                        ));
+                    }
+                }
+            }
+
             if detector.observe(mean_score) {
                 trace.converged_at = Some(step);
                 break;
@@ -785,6 +952,13 @@ pub fn run_with_frontier<P: VertexProgram>(
         stop.store(true, Ordering::Release);
         barrier.wait(); // release workers into the stop check
     });
+
+    // A contained panic invalidates the output: loads may be
+    // mid-migration inconsistent, so surface the error before any
+    // invariant is asserted over them.
+    if let Some(err) = first_panic.into_inner().unwrap() {
+        return Err(err);
+    }
 
     let labels = state.labels_snapshot();
     debug_assert!(state.check_load_invariant().is_ok());
@@ -825,7 +999,7 @@ pub fn run_with_frontier<P: VertexProgram>(
         crate::obs::counter_add("engine_chunk_builds", chunk_builds as u64);
         crate::obs::counter_add("engine_chunk_reuses", chunk_reuses as u64);
     }
-    PartitionOutput { labels, trace }
+    Ok(PartitionOutput { labels, trace })
 }
 
 #[cfg(test)]
@@ -1059,7 +1233,7 @@ mod tests {
     fn engine_visits_every_vertex_each_phase() {
         let g = ring_graph(103);
         let p = ProbeProgram::new(ExecutionModel::Asynchronous, 103);
-        let out = run(&g, &cfg(3, 4), &p);
+        let out = run(&g, &cfg(3, 4), &p).unwrap();
         assert_eq!(p.a_visits.load(Ordering::Relaxed), 4 * 103);
         assert_eq!(p.b_visits.load(Ordering::Relaxed), 4 * 103);
         assert_eq!(out.labels.len(), 103);
@@ -1073,7 +1247,7 @@ mod tests {
         let p = ProbeProgram::new(ExecutionModel::Synchronous, 64);
         // The assertions live inside phase_b; 2 workers force real
         // cross-chunk interleavings.
-        run(&g, &cfg(2, 5), &p);
+        run(&g, &cfg(2, 5), &p).unwrap();
         assert_eq!(p.b_visits.load(Ordering::Relaxed), 5 * 64);
     }
 
@@ -1083,7 +1257,7 @@ mod tests {
         let p = ProbeProgram::new(ExecutionModel::Asynchronous, 97);
         let mut c = cfg(4, 2);
         c.schedule = Schedule::Degree;
-        run(&g, &c, &p);
+        run(&g, &c, &p).unwrap();
         assert_eq!(p.a_visits.load(Ordering::Relaxed), 2 * 97);
         assert_eq!(p.b_visits.load(Ordering::Relaxed), 2 * 97);
     }
@@ -1095,7 +1269,7 @@ mod tests {
         let p = ProbeProgram::new(ExecutionModel::Asynchronous, 64);
         let mut c = cfg(2, 2);
         c.init = Init::Stream(StreamAlgo::Fennel);
-        let out = run(&g, &c, &p);
+        let out = run(&g, &c, &p).unwrap();
         // ProbeProgram never migrates, so the output labels are exactly
         // the streaming warm start.
         let expect = crate::stream::stream_labels(&g, StreamAlgo::Fennel, &c);
@@ -1112,7 +1286,7 @@ mod tests {
         let p = ProbeProgram::new(ExecutionModel::Asynchronous, 32);
         let mut c = cfg(2, 6);
         c.trace_every = 2;
-        let out = run(&g, &c, &p);
+        let out = run(&g, &c, &p).unwrap();
         assert_eq!(out.trace.steps(), 6, "sparse tracing must not hide executed steps");
         assert_eq!(out.trace.points.last().unwrap().step, 5);
     }
@@ -1121,7 +1295,7 @@ mod tests {
     fn single_worker_runs_all_chunks_inline() {
         let g = ring_graph(50);
         let p = ProbeProgram::new(ExecutionModel::Asynchronous, 50);
-        let out = run(&g, &cfg(1, 3), &p);
+        let out = run(&g, &cfg(1, 3), &p).unwrap();
         assert_eq!(p.a_visits.load(Ordering::Relaxed), 3 * 50);
         assert!(out.labels.iter().all(|&l| l < 4));
     }
@@ -1132,7 +1306,7 @@ mod tests {
         // step 1: the run must halt immediately, regardless of the
         // (disabled) score-window detector.
         let g = ring_graph(40);
-        let out = run(&g, &cfg(2, 50), &SettledProgram);
+        let out = run(&g, &cfg(2, 50), &SettledProgram).unwrap();
         assert_eq!(out.trace.steps(), 1, "one full step, then empty-frontier halt");
         assert_eq!(out.trace.converged_at, Some(0));
         assert_eq!(out.trace.total_evaluated, 40);
@@ -1143,7 +1317,7 @@ mod tests {
         let g = ring_graph(40);
         let mut c = cfg(2, 7);
         c.frontier = Frontier::Off;
-        let out = run(&g, &c, &SettledProgram);
+        let out = run(&g, &c, &SettledProgram).unwrap();
         assert_eq!(out.trace.steps(), 7, "escape hatch must keep full sweeps");
         assert_eq!(out.trace.total_evaluated, 7 * 40);
     }
@@ -1156,7 +1330,7 @@ mod tests {
         let n = 103usize;
         let g = ring_graph(n);
         let steps = 5u32;
-        let out = run(&g, &cfg(3, steps), &SingleHotProgram);
+        let out = run(&g, &cfg(3, steps), &SingleHotProgram).unwrap();
         let expect = n as u64 + (steps as u64 - 1) * 3;
         assert_eq!(out.trace.total_evaluated, expect);
         assert_eq!(out.trace.steps(), steps, "hot vertex keeps the run alive");
@@ -1169,7 +1343,7 @@ mod tests {
         // Frontier smaller than the worker count: surplus workers get
         // empty slices but the protocol still completes every barrier.
         let g = ring_graph(16);
-        let out = run(&g, &cfg(8, 4), &SingleHotProgram);
+        let out = run(&g, &cfg(8, 4), &SingleHotProgram).unwrap();
         assert_eq!(out.trace.steps(), 4);
         assert_eq!(out.trace.total_evaluated, 16 + 3 * 3);
     }
@@ -1187,7 +1361,7 @@ mod tests {
             &SettledProgram,
             InitialAssignment::Random(5),
             InitialFrontier::Seeds(vec![7, 3, 7, 99]),
-        );
+        ).unwrap();
         assert_eq!(out.trace.total_evaluated, 2, "only the two valid seeds run");
         assert_eq!(out.trace.steps(), 1, "one seeded step, then empty-frontier halt");
     }
@@ -1206,7 +1380,7 @@ mod tests {
             &SingleHotProgram,
             InitialAssignment::Random(5),
             InitialFrontier::Seeds(vec![0]),
-        );
+        ).unwrap();
         assert_eq!(out.trace.total_evaluated, 1 + (steps as u64 - 1) * 3);
         assert_eq!(out.trace.steps(), steps);
     }
@@ -1221,7 +1395,7 @@ mod tests {
         let run_frac = |frac: f64| {
             let mut c = cfg(3, 6);
             c.frontier_dense_frac = frac;
-            run(&g, &c, &SingleHotProgram)
+            run(&g, &c, &SingleHotProgram).unwrap()
         };
         let scan = run_frac(0.0);
         let wl = run_frac(1.0);
@@ -1265,7 +1439,7 @@ mod tests {
                 let g = ring_graph(64);
                 let mut c = cfg(threads, 4);
                 c.frontier_dense_frac = frac;
-                let out = run(&g, &c, &p);
+                let out = run(&g, &c, &p).unwrap();
                 (out, p.a_visits.load(Ordering::Relaxed), p.b_visits.load(Ordering::Relaxed))
             };
             let (scan, sa, sb) = mk(0.0);
@@ -1292,7 +1466,7 @@ mod tests {
             &SingleHotProgram,
             InitialAssignment::Random(5),
             InitialFrontier::Seeds(vec![0]),
-        );
+        ).unwrap();
         assert_eq!(out.trace.total_evaluated, 1 + (steps as u64 - 1) * 3);
         assert_eq!(out.trace.stamp_reads, 0);
         assert_eq!(out.trace.scan_steps, 0);
@@ -1303,7 +1477,7 @@ mod tests {
     fn run_with_frontier_all_is_bit_identical_to_run_with_init() {
         let g = ring_graph(64);
         let pa = ProbeProgram::new(ExecutionModel::Asynchronous, 64);
-        let a = run_with_init(&g, &cfg(2, 4), &pa, InitialAssignment::Random(9));
+        let a = run_with_init(&g, &cfg(2, 4), &pa, InitialAssignment::Random(9)).unwrap();
         let pb = ProbeProgram::new(ExecutionModel::Asynchronous, 64);
         let b = run_with_frontier(
             &g,
@@ -1311,7 +1485,7 @@ mod tests {
             &pb,
             InitialAssignment::Random(9),
             InitialFrontier::All,
-        );
+        ).unwrap();
         assert_eq!(a.labels, b.labels);
         assert_eq!(a.trace.total_evaluated, b.trace.total_evaluated);
     }
@@ -1327,7 +1501,7 @@ mod tests {
             &SettledProgram,
             InitialAssignment::Random(5),
             InitialFrontier::Seeds(vec![1]),
-        );
+        ).unwrap();
         assert_eq!(out.trace.total_evaluated, 7 * 40, "off-mode ignores the seed list");
     }
 
@@ -1340,8 +1514,214 @@ mod tests {
             &SettledProgram,
             InitialAssignment::Random(1),
             InitialFrontier::Seeds(Vec::new()),
-        );
+        ).unwrap();
         assert_eq!(out.trace.total_evaluated, 0);
         assert_eq!(out.labels.len(), 16, "labels still come from the init");
+    }
+
+    // ── Fault containment ──
+
+    /// ProbeProgram wired to panic in the chosen phase at the chosen
+    /// step — a *real* program bug, not the injection path.
+    struct PanickyProgram {
+        panic_step: u32,
+        in_phase_b: bool,
+    }
+
+    impl VertexProgram for PanickyProgram {
+        type Scratch = ();
+        type PhaseA = ();
+        type PhaseB = ();
+        fn execution(&self) -> ExecutionModel {
+            ExecutionModel::Asynchronous
+        }
+        fn rng_salt(&self) -> u64 {
+            0xBAD
+        }
+        fn init_published(&self, _v: VertexId, _state: &PartitionState) -> u32 {
+            0
+        }
+        fn make_scratch(&self) {}
+        fn prepare_phase_a(&self, _g: &Graph, _state: &PartitionState, _step: u32) {}
+        fn prepare_phase_b(
+            &self,
+            _g: &Graph,
+            _state: &PartitionState,
+            _demand: &DemandTracker,
+            _step: u32,
+        ) {
+        }
+        fn phase_a(
+            &self,
+            ctx: &StepCtx<'_>,
+            _f: &(),
+            _s: &mut (),
+            work: &[VertexId],
+            _rng: &mut Rng,
+        ) -> StepStats {
+            if !self.in_phase_b && ctx.step == self.panic_step && !work.is_empty() {
+                panic!("probe bug in A");
+            }
+            for &v in work {
+                ctx.publish(v, ctx.step + 1); // keep the frontier full
+            }
+            StepStats::default()
+        }
+        fn phase_b(
+            &self,
+            ctx: &StepCtx<'_>,
+            _f: &(),
+            _s: &mut (),
+            work: &[VertexId],
+            _rng: &mut Rng,
+        ) -> StepStats {
+            if self.in_phase_b && ctx.step == self.panic_step && !work.is_empty() {
+                panic!("probe bug in B");
+            }
+            StepStats::default()
+        }
+    }
+
+    #[test]
+    fn injected_panic_returns_err_with_all_threads_joined() {
+        // The acceptance criterion: `panic@step` must surface as an
+        // `Err` with every thread joined (thread::scope guarantees the
+        // join; the stopwatch guarantees the bounded drain).
+        let g = ring_graph(64);
+        let mut c = cfg(4, 50);
+        c.faults = "panic@step:1".parse().unwrap();
+        let sw = Stopwatch::start();
+        let err = run(&g, &c, &ProbeProgram::new(ExecutionModel::Asynchronous, 64))
+            .unwrap_err();
+        assert!(sw.elapsed_s() < 5.0, "drain must be bounded, took {}s", sw.elapsed_s());
+        match err {
+            EngineError::WorkerPanic { worker, step, phase, ref message } => {
+                assert_eq!(worker, 0, "injection arms worker 0");
+                assert_eq!(step, 1);
+                assert_eq!(phase, "A");
+                assert!(message.contains("injected fault"), "{message}");
+            }
+        }
+        let msg = err.to_string();
+        assert!(msg.contains("worker 0") && msg.contains("step 1"), "{msg}");
+    }
+
+    #[test]
+    fn real_phase_panics_are_contained_in_both_phases() {
+        let g = ring_graph(64);
+        for in_phase_b in [false, true] {
+            let p = PanickyProgram { panic_step: 2, in_phase_b };
+            let err = run(&g, &cfg(3, 50), &p).unwrap_err();
+            let EngineError::WorkerPanic { step, phase, .. } = err;
+            assert_eq!(step, 2, "in_phase_b={in_phase_b}");
+            assert_eq!(phase, if in_phase_b { "B" } else { "A" });
+        }
+    }
+
+    #[test]
+    fn single_threaded_panic_is_contained_too() {
+        let g = ring_graph(32);
+        let mut c = cfg(1, 10);
+        c.faults = "panic@step:0".parse().unwrap();
+        let err = run(&g, &c, &SettledProgram).unwrap_err();
+        let EngineError::WorkerPanic { worker, step, .. } = err;
+        assert_eq!((worker, step), (0, 0));
+    }
+
+    #[test]
+    fn scratch_panic_is_contained() {
+        struct BadScratch;
+        impl VertexProgram for BadScratch {
+            type Scratch = ();
+            type PhaseA = ();
+            type PhaseB = ();
+            fn execution(&self) -> ExecutionModel {
+                ExecutionModel::Asynchronous
+            }
+            fn rng_salt(&self) -> u64 {
+                1
+            }
+            fn init_published(&self, _v: VertexId, _state: &PartitionState) -> u32 {
+                0
+            }
+            fn make_scratch(&self) {
+                panic!("no scratch for you");
+            }
+            fn prepare_phase_a(&self, _g: &Graph, _s: &PartitionState, _step: u32) {}
+            fn prepare_phase_b(
+                &self,
+                _g: &Graph,
+                _s: &PartitionState,
+                _d: &DemandTracker,
+                _step: u32,
+            ) {
+            }
+            fn phase_a(
+                &self,
+                _c: &StepCtx<'_>,
+                _f: &(),
+                _s: &mut (),
+                _w: &[VertexId],
+                _r: &mut Rng,
+            ) -> StepStats {
+                StepStats::default()
+            }
+            fn phase_b(
+                &self,
+                _c: &StepCtx<'_>,
+                _f: &(),
+                _s: &mut (),
+                _w: &[VertexId],
+                _r: &mut Rng,
+            ) -> StepStats {
+                StepStats::default()
+            }
+        }
+        let g = ring_graph(16);
+        let err = run(&g, &cfg(2, 5), &BadScratch).unwrap_err();
+        let EngineError::WorkerPanic { phase, .. } = err;
+        assert_eq!(phase, "scratch");
+    }
+
+    // ── Step-cadence checkpointing ──
+
+    #[test]
+    fn checkpoints_written_at_step_cadence_and_resumable() {
+        let dir = std::env::temp_dir().join("revolver_engine_ckpt_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let g = ring_graph(64);
+        let p = ProbeProgram::new(ExecutionModel::Asynchronous, 64);
+        let mut c = cfg(2, 5);
+        c.checkpoint_dir = dir.to_string_lossy().into_owned();
+        c.checkpoint_every = 2;
+        let out = run(&g, &c, &p).unwrap();
+        // Steps 2 and 4 hit the cadence; the newest snapshot carries
+        // the exact final assignment (ProbeProgram never migrates, so
+        // intermediate and final labels coincide) and matching loads.
+        let snap = crate::fault::load_latest(&dir).unwrap().expect("checkpoint written");
+        assert_eq!(snap.step, 4);
+        assert_eq!(snap.epoch, 0);
+        assert_eq!(snap.seed, c.seed);
+        assert_eq!(snap.k as usize, c.parts);
+        assert_eq!(snap.labels, out.labels);
+        assert_eq!(snap.loads, quality::partition_loads(&g, &out.labels, c.parts));
+        assert!(snap.la.is_none(), "ProbeProgram exposes no LA state");
+    }
+
+    #[test]
+    fn injected_checkpoint_io_fault_does_not_kill_the_run() {
+        let dir = std::env::temp_dir().join("revolver_engine_ckpt_iofault");
+        let _ = std::fs::remove_dir_all(&dir);
+        let g = ring_graph(64);
+        let p = ProbeProgram::new(ExecutionModel::Asynchronous, 64);
+        let mut c = cfg(2, 6);
+        c.checkpoint_dir = dir.to_string_lossy().into_owned();
+        c.checkpoint_every = 2;
+        c.faults = "io@checkpoint:1".parse().unwrap();
+        let out = run(&g, &c, &p).unwrap();
+        assert_eq!(out.trace.steps(), 6, "a failed checkpoint must not stop the run");
+        // Attempt 1 (step 2) failed; steps 4 and 6 made it to disk.
+        let snap = crate::fault::load_latest(&dir).unwrap().expect("later attempts succeed");
+        assert_eq!(snap.step, 6);
     }
 }

@@ -1,0 +1,537 @@
+//! The `RVCK` checkpoint format: a versioned, checksummed binary
+//! snapshot of everything a run needs to restart — assignment labels,
+//! per-partition load masses, the RNG/step/epoch cursors, and
+//! (optionally) Revolver's learning-automata slab so a resumed run
+//! keeps its learned action probabilities instead of re-warming them.
+//!
+//! ## Layout (little-endian throughout)
+//!
+//! ```text
+//! "RVCK"  magic            4 bytes
+//! version u32              currently 1
+//! seed    u64              the run's RNG seed (per-step RNGs are pure
+//!                          functions of (seed, salt, step, worker), so
+//!                          no raw generator state is stored)
+//! step    u32              next engine superstep to execute
+//! epoch   u64              next dynamic epoch to apply
+//! k       u32              partition count
+//! n       u64              vertex count
+//! labels  n × u32          the assignment
+//! loads   k × u64          per-partition load masses b(l)
+//! slab    u8 tag           0 = none, 1 = f32, 2 = q16
+//!         [rows u64, cols u32, rows×cols payload]   when tag != 0
+//! fnv     u64              FNV-1a-64 over every preceding byte
+//! ```
+//!
+//! The checksum is verified *before* any field is parsed: FNV-1a's
+//! per-byte transform (xor then odd multiply) is injective in the
+//! hash state, so any single-byte corruption is guaranteed to change
+//! the digest — the corrupt-one-byte property test relies on this.
+//!
+//! Writes are atomic: encode to a sibling `*.tmp`, `sync_all`, then
+//! `rename` into place — a crash mid-write leaves at most a stale tmp
+//! file, never a torn checkpoint that [`load_latest`] could pick up.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::FaultPlan;
+use crate::Label;
+
+const MAGIC: &[u8; 4] = b"RVCK";
+const VERSION: u32 = 1;
+
+/// A captured learning-automata slab, in whichever storage format the
+/// run used (`--prob-format`). Restoring checks shape, not format:
+/// the slab round-trips bit-identically into the same `ProbSlab`
+/// variant it was dumped from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LaSlab {
+    F32 { cols: u32, data: Vec<f32> },
+    Q16 { cols: u32, data: Vec<u16> },
+}
+
+impl LaSlab {
+    /// Row count (vertices covered by the slab).
+    pub fn rows(&self) -> usize {
+        match self {
+            LaSlab::F32 { cols, data } => data.len() / (*cols).max(1) as usize,
+            LaSlab::Q16 { cols, data } => data.len() / (*cols).max(1) as usize,
+        }
+    }
+
+    /// Column count (actions per row = partitions).
+    pub fn cols(&self) -> u32 {
+        match self {
+            LaSlab::F32 { cols, .. } | LaSlab::Q16 { cols, .. } => *cols,
+        }
+    }
+}
+
+/// One durable restart point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    /// The run's RNG seed — per-step RNGs are derived, never stored.
+    pub seed: u64,
+    /// Next engine superstep to execute (0-based).
+    pub step: u32,
+    /// Next dynamic epoch to apply (0-based).
+    pub epoch: u64,
+    /// Partition count.
+    pub k: u32,
+    /// The assignment, `labels[v]` in `0..k`.
+    pub labels: Vec<Label>,
+    /// Per-partition load masses, `loads.len() == k`.
+    pub loads: Vec<u64>,
+    /// Revolver's LA slab, when the program exposes one.
+    pub la: Option<LaSlab>,
+}
+
+impl Snapshot {
+    /// The monotone cursor a filename encodes: dynamic checkpoints
+    /// advance by epoch, partition checkpoints by step. A run uses one
+    /// cadence or the other, so the max is strictly increasing within
+    /// a run and `load_latest`'s lexicographic pick is the newest.
+    pub fn cursor(&self) -> u64 {
+        self.epoch.max(self.step as u64)
+    }
+}
+
+/// FNV-1a 64-bit. The per-byte update `h = (h ^ b) * PRIME` is a
+/// bijection on the 64-bit state for fixed `b` (xor is, and the prime
+/// is odd hence invertible mod 2^64), so two payloads differing in
+/// exactly one byte can never collide.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Serialize a snapshot, checksum included.
+pub fn encode(s: &Snapshot) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64 + s.labels.len() * 4 + s.loads.len() * 8);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&s.seed.to_le_bytes());
+    out.extend_from_slice(&s.step.to_le_bytes());
+    out.extend_from_slice(&s.epoch.to_le_bytes());
+    out.extend_from_slice(&s.k.to_le_bytes());
+    out.extend_from_slice(&(s.labels.len() as u64).to_le_bytes());
+    for &l in &s.labels {
+        out.extend_from_slice(&l.to_le_bytes());
+    }
+    for &m in &s.loads {
+        out.extend_from_slice(&m.to_le_bytes());
+    }
+    match &s.la {
+        None => out.push(0),
+        Some(LaSlab::F32 { cols, data }) => {
+            out.push(1);
+            out.extend_from_slice(&(data.len() as u64 / (*cols).max(1) as u64).to_le_bytes());
+            out.extend_from_slice(&cols.to_le_bytes());
+            for &x in data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Some(LaSlab::Q16 { cols, data }) => {
+            out.push(2);
+            out.extend_from_slice(&(data.len() as u64 / (*cols).max(1) as u64).to_le_bytes());
+            out.extend_from_slice(&cols.to_le_bytes());
+            for &x in data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+    let sum = fnv1a64(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Bounds-checked little-endian cursor — every read is validated, so
+/// a truncated or hostile payload yields a structured error, never a
+/// panic or an unbounded allocation.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.bytes.len());
+        match end {
+            Some(end) => {
+                let s = &self.bytes[self.pos..end];
+                self.pos = end;
+                Ok(s)
+            }
+            None => bail!("checkpoint truncated at byte {}", self.pos),
+        }
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+}
+
+/// Deserialize and verify a snapshot. The checksum is checked before
+/// any field is trusted; all counts are validated against the actual
+/// payload size before allocation.
+pub fn decode(bytes: &[u8]) -> Result<Snapshot> {
+    if bytes.len() < MAGIC.len() + 8 {
+        bail!("checkpoint too short ({} bytes)", bytes.len());
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(tail.try_into().unwrap());
+    let computed = fnv1a64(body);
+    if stored != computed {
+        bail!("checkpoint checksum mismatch (stored {stored:#018x}, computed {computed:#018x})");
+    }
+    let mut c = Cursor { bytes: body, pos: 0 };
+    if c.take(4)? != MAGIC {
+        bail!("not a revolver checkpoint (bad magic)");
+    }
+    let version = c.u32()?;
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let seed = c.u64()?;
+    let step = c.u32()?;
+    let epoch = c.u64()?;
+    let k = c.u32()?;
+    let n = c.u64()? as usize;
+    if n.checked_mul(4).map_or(true, |b| b > c.remaining()) {
+        bail!("checkpoint claims {n} labels but only {} bytes remain", c.remaining());
+    }
+    let mut labels = Vec::with_capacity(n);
+    for chunk in c.take(n * 4)?.chunks_exact(4) {
+        labels.push(u32::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    let kk = k as usize;
+    if kk.checked_mul(8).map_or(true, |b| b > c.remaining()) {
+        bail!("checkpoint claims {k} loads but only {} bytes remain", c.remaining());
+    }
+    let mut loads = Vec::with_capacity(kk);
+    for chunk in c.take(kk * 8)?.chunks_exact(8) {
+        loads.push(u64::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    let la = match c.u8()? {
+        0 => None,
+        tag @ (1 | 2) => {
+            let rows = c.u64()? as usize;
+            let cols = c.u32()?;
+            let cells = rows
+                .checked_mul(cols as usize)
+                .with_context(|| format!("slab shape overflow ({rows}×{cols})"))?;
+            let width = if tag == 1 { 4 } else { 2 };
+            if cells.checked_mul(width).map_or(true, |b| b > c.remaining()) {
+                bail!(
+                    "checkpoint claims a {rows}×{cols} slab but only {} bytes remain",
+                    c.remaining()
+                );
+            }
+            let raw = c.take(cells * width)?;
+            Some(if tag == 1 {
+                LaSlab::F32 {
+                    cols,
+                    data: raw
+                        .chunks_exact(4)
+                        .map(|ch| f32::from_le_bytes(ch.try_into().unwrap()))
+                        .collect(),
+                }
+            } else {
+                LaSlab::Q16 {
+                    cols,
+                    data: raw
+                        .chunks_exact(2)
+                        .map(|ch| u16::from_le_bytes(ch.try_into().unwrap()))
+                        .collect(),
+                }
+            })
+        }
+        other => bail!("unknown slab tag {other}"),
+    };
+    if c.remaining() != 0 {
+        bail!("{} trailing bytes after checkpoint payload", c.remaining());
+    }
+    anyhow::ensure!(
+        loads.len() == k as usize,
+        "checkpoint has {} loads for k={k}",
+        loads.len()
+    );
+    Ok(Snapshot { seed, step, epoch, k, labels, loads, la })
+}
+
+/// Write `bytes` to `path` atomically: sibling tmp + fsync + rename.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = fs::File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
+        f.write_all(bytes).with_context(|| format!("write {tmp:?}"))?;
+        f.sync_all().with_context(|| format!("sync {tmp:?}"))?;
+    }
+    fs::rename(&tmp, path).with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
+    Ok(())
+}
+
+/// Periodic checkpoint writer with deterministic IO-fault injection.
+///
+/// `write` is infallible from the run's point of view in the sense
+/// that the caller decides whether a failed checkpoint is fatal — the
+/// engine and the dynamic loop both log-and-continue (a lost
+/// checkpoint widens the replay window, it doesn't corrupt state).
+pub struct Checkpointer {
+    dir: PathBuf,
+    /// 1-based write attempts so far (successful or not).
+    attempts: u64,
+    /// Inject an IO error on this attempt (`io@checkpoint:N`).
+    io_fault_at: Option<u64>,
+}
+
+impl Checkpointer {
+    pub fn new<P: Into<PathBuf>>(dir: P, faults: &FaultPlan) -> Self {
+        Checkpointer {
+            dir: dir.into(),
+            attempts: 0,
+            io_fault_at: faults.io_at_checkpoint,
+        }
+    }
+
+    /// Write one snapshot as `ckpt-{cursor:012}.rvck`. Counts the
+    /// attempt, injects the planned IO fault, and emits the
+    /// `checkpoint` obs event + counters on success.
+    pub fn write(&mut self, snap: &Snapshot) -> Result<PathBuf> {
+        self.attempts += 1;
+        if self.io_at_fault() {
+            crate::obs::counter_add("checkpoint_failures", 1);
+            bail!("injected fault: io@checkpoint:{}", self.attempts);
+        }
+        fs::create_dir_all(&self.dir).with_context(|| format!("create {:?}", self.dir))?;
+        let path = self.dir.join(format!("ckpt-{:012}.rvck", snap.cursor()));
+        write_atomic(&path, &encode(snap))?;
+        crate::obs::counter_add("checkpoint_writes", 1);
+        crate::obs::event(
+            "checkpoint",
+            &[("step", snap.step as f64), ("epoch", snap.epoch as f64)],
+        );
+        crate::obs::log::debug(&format!(
+            "checkpoint: wrote {path:?} (step {}, epoch {})",
+            snap.step, snap.epoch
+        ));
+        Ok(path)
+    }
+
+    fn io_at_fault(&self) -> bool {
+        self.io_fault_at == Some(self.attempts)
+    }
+}
+
+/// Load the newest checkpoint in `dir`, or `None` when the directory
+/// is missing/empty. Filenames encode a zero-padded monotone cursor,
+/// so the lexicographically greatest `ckpt-*.rvck` is the newest; a
+/// corrupt newest checkpoint is a hard error (silently falling back
+/// to an older one would hide data loss).
+pub fn load_latest(dir: &Path) -> Result<Option<Snapshot>> {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(ref e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e).with_context(|| format!("read {dir:?}")),
+    };
+    let mut newest: Option<PathBuf> = None;
+    for entry in entries {
+        let path = entry?.path();
+        let name = match path.file_name().and_then(|n| n.to_str()) {
+            Some(n) => n,
+            None => continue,
+        };
+        if name.starts_with("ckpt-") && name.ends_with(".rvck") {
+            if newest.as_ref().map_or(true, |cur| path > *cur) {
+                newest = Some(path);
+            }
+        }
+    }
+    match newest {
+        None => Ok(None),
+        Some(path) => {
+            let bytes = fs::read(&path).with_context(|| format!("read {path:?}"))?;
+            let snap = decode(&bytes).with_context(|| format!("decode {path:?}"))?;
+            Ok(Some(snap))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample(seed: u64, n: usize, k: u32, la: Option<LaSlab>) -> Snapshot {
+        let mut rng = Rng::new(seed);
+        Snapshot {
+            seed,
+            step: rng.below(1000) as u32,
+            epoch: rng.below(50),
+            k,
+            labels: (0..n).map(|_| rng.below(k as u64) as Label).collect(),
+            loads: (0..k).map(|_| rng.below(1 << 20)).collect(),
+            la,
+        }
+    }
+
+    fn slab_f32(seed: u64, rows: usize, cols: u32) -> LaSlab {
+        let mut rng = Rng::new(seed ^ 0xF32);
+        LaSlab::F32 {
+            cols,
+            data: (0..rows * cols as usize).map(|_| rng.next_f32()).collect(),
+        }
+    }
+
+    fn slab_q16(seed: u64, rows: usize, cols: u32) -> LaSlab {
+        let mut rng = Rng::new(seed ^ 0x916);
+        LaSlab::Q16 {
+            cols,
+            data: (0..rows * cols as usize).map(|_| rng.below(65536) as u16).collect(),
+        }
+    }
+
+    #[test]
+    fn round_trip_is_bit_identical() {
+        for seed in [1u64, 7, 42, 1234] {
+            for la in [
+                None,
+                Some(slab_f32(seed, 33, 4)),
+                Some(slab_q16(seed, 33, 4)),
+            ] {
+                let snap = sample(seed, 33, 4, la);
+                let back = decode(&encode(&snap)).unwrap();
+                assert_eq!(back, snap, "seed={seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_any_single_byte_is_rejected() {
+        // Property: flipping any one byte of the encoding — header,
+        // labels, loads, slab payload, or the checksum itself — must
+        // make decode fail. FNV-1a's injective per-byte transform
+        // guarantees the digest moves; a flipped trailer byte changes
+        // the stored sum instead.
+        for seed in [3u64, 99, 2024] {
+            for la in [None, Some(slab_f32(seed, 9, 3)), Some(slab_q16(seed, 9, 3))] {
+                let snap = sample(seed, 17, 3, la);
+                let clean = encode(&snap);
+                assert!(decode(&clean).is_ok());
+                let mut rng = Rng::new(seed ^ 0xC0);
+                // Exhaustive would be O(len²) comparisons; 64 random
+                // positions per layout plus the first/last bytes cover
+                // every section across seeds.
+                let mut positions: Vec<usize> =
+                    (0..64).map(|_| rng.below(clean.len() as u64) as usize).collect();
+                positions.push(0);
+                positions.push(clean.len() - 1);
+                for pos in positions {
+                    let mut bad = clean.clone();
+                    let flip = 1u8 << rng.below(8);
+                    bad[pos] ^= flip;
+                    let err = decode(&bad);
+                    assert!(err.is_err(), "seed={seed} pos={pos} flip={flip:#x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_and_garbage_are_structured_errors() {
+        let snap = sample(5, 10, 2, Some(slab_q16(5, 10, 2)));
+        let clean = encode(&snap);
+        for cut in [0, 3, 11, clean.len() / 2, clean.len() - 1] {
+            assert!(decode(&clean[..cut]).is_err(), "cut={cut}");
+        }
+        assert!(decode(b"").is_err());
+        assert!(decode(b"RVCKxxxxxxxxxxxx").is_err());
+        // A huge claimed label count must not allocate: craft a valid
+        // checksum over a hostile body.
+        let mut body = Vec::new();
+        body.extend_from_slice(MAGIC);
+        body.extend_from_slice(&VERSION.to_le_bytes());
+        body.extend_from_slice(&7u64.to_le_bytes()); // seed
+        body.extend_from_slice(&0u32.to_le_bytes()); // step
+        body.extend_from_slice(&0u64.to_le_bytes()); // epoch
+        body.extend_from_slice(&2u32.to_le_bytes()); // k
+        body.extend_from_slice(&u64::MAX.to_le_bytes()); // n — hostile
+        let sum = fnv1a64(&body);
+        body.extend_from_slice(&sum.to_le_bytes());
+        let err = decode(&body).unwrap_err();
+        assert!(format!("{err:#}").contains("labels"), "{err:#}");
+    }
+
+    #[test]
+    fn checkpointer_writes_and_load_latest_picks_newest() {
+        let dir = std::env::temp_dir().join("revolver_ckpt_test_latest");
+        let _ = fs::remove_dir_all(&dir);
+        let mut ck = Checkpointer::new(&dir, &FaultPlan::default());
+        let mut older = sample(11, 20, 4, None);
+        older.step = 0;
+        older.epoch = 2;
+        let mut newer = older.clone();
+        newer.epoch = 5;
+        ck.write(&older).unwrap();
+        ck.write(&newer).unwrap();
+        let got = load_latest(&dir).unwrap().expect("checkpoint present");
+        assert_eq!(got, newer);
+        // Missing directory is a clean None, not an error.
+        let missing = dir.join("nope");
+        assert!(load_latest(&missing).unwrap().is_none());
+    }
+
+    #[test]
+    fn injected_io_fault_fails_exactly_the_nth_attempt() {
+        let dir = std::env::temp_dir().join("revolver_ckpt_test_iofault");
+        let _ = fs::remove_dir_all(&dir);
+        let faults: FaultPlan = "io@checkpoint:2".parse().unwrap();
+        let mut ck = Checkpointer::new(&dir, &faults);
+        let mut snap = sample(13, 8, 2, None);
+        snap.epoch = 1;
+        assert!(ck.write(&snap).is_ok(), "attempt 1 succeeds");
+        snap.epoch = 2;
+        let err = ck.write(&snap).unwrap_err();
+        assert!(format!("{err}").contains("injected fault"), "{err}");
+        snap.epoch = 3;
+        assert!(ck.write(&snap).is_ok(), "attempt 3 succeeds");
+        // The failed epoch-2 write left no file; latest is epoch 3.
+        let got = load_latest(&dir).unwrap().unwrap();
+        assert_eq!(got.epoch, 3);
+    }
+
+    #[test]
+    fn corrupt_newest_checkpoint_is_a_hard_error() {
+        let dir = std::env::temp_dir().join("revolver_ckpt_test_corrupt");
+        let _ = fs::remove_dir_all(&dir);
+        let mut ck = Checkpointer::new(&dir, &FaultPlan::default());
+        let snap = sample(17, 6, 2, None);
+        let path = ck.write(&snap).unwrap();
+        let mut bytes = fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        fs::write(&path, &bytes).unwrap();
+        let err = load_latest(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+    }
+}

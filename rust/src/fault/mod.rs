@@ -1,0 +1,209 @@
+//! Fault tolerance: deterministic fault injection, checkpoint/resume.
+//!
+//! Cloud partitioning runs on preemptible, failure-prone machines
+//! (PAPER.md §I; Spinner's deployment story). This module makes those
+//! failure modes *first-class and reproducible*:
+//!
+//! * [`FaultPlan`] — a parsed `--faults` spec that injects worker
+//!   panics, checkpoint IO errors and truncated update logs at exact,
+//!   seeded points, so every crash-recovery path in the test suite and
+//!   the CI crash smoke exercises the same code a real preemption
+//!   would, deterministically.
+//! * [`checkpoint`] — the versioned, checksummed `RVCK` snapshot
+//!   format plus the atomic [`checkpoint::Checkpointer`] writer and
+//!   [`checkpoint::load_latest`] resume entry point.
+//!
+//! The containment half of the story — `catch_unwind` around worker
+//! phases, the poison flag checked at every barrier — lives in
+//! [`crate::engine`] (it is inseparable from the barrier protocol);
+//! this module only owns the injection spec and the durable state.
+
+pub mod checkpoint;
+
+pub use checkpoint::{load_latest, Checkpointer, LaSlab, Snapshot};
+
+use anyhow::{bail, Result};
+
+/// A deterministic fault-injection plan, parsed from
+/// `--faults "panic@step:7,io@checkpoint:2,truncate@log:40%"`.
+///
+/// Each clause arms one failure site:
+///
+/// * `panic@step:N` — worker 0 panics inside phase A of superstep `N`
+///   (0-based), exercising the engine's containment protocol.
+/// * `io@checkpoint:N` — the `N`-th checkpoint write attempt (1-based)
+///   fails with an injected IO error; the run continues and counts it.
+/// * `truncate@log:P%` — the update log is truncated to the first `P`
+///   percent of its lines before parsing, simulating a torn write.
+///
+/// The empty string parses to the empty plan (nothing armed).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Panic worker 0 in phase A of this superstep.
+    pub panic_at_step: Option<u32>,
+    /// Fail this (1-based) checkpoint write attempt.
+    pub io_at_checkpoint: Option<u64>,
+    /// Truncate the update log to this fraction of its lines, in
+    /// percent (0..=100).
+    pub truncate_log_pct: Option<f64>,
+}
+
+impl FaultPlan {
+    /// True when no fault is armed — the common production case.
+    pub fn is_empty(&self) -> bool {
+        self.panic_at_step.is_none()
+            && self.io_at_checkpoint.is_none()
+            && self.truncate_log_pct.is_none()
+    }
+}
+
+impl std::str::FromStr for FaultPlan {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let mut plan = FaultPlan::default();
+        for clause in s.split(',') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (site, arg) = match clause.split_once(':') {
+                Some(pair) => pair,
+                None => bail!(
+                    "fault clause {clause:?} needs an argument, e.g. panic@step:7"
+                ),
+            };
+            match site.to_lowercase().as_str() {
+                "panic@step" => {
+                    let step: u32 = arg
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad step in {clause:?}"))?;
+                    plan.panic_at_step = Some(step);
+                }
+                "io@checkpoint" => {
+                    let nth: u64 = arg
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad attempt index in {clause:?}"))?;
+                    anyhow::ensure!(nth >= 1, "io@checkpoint attempt is 1-based, got {nth}");
+                    plan.io_at_checkpoint = Some(nth);
+                }
+                "truncate@log" => {
+                    let pct_str = arg.strip_suffix('%').unwrap_or(arg);
+                    let pct: f64 = pct_str
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad percentage in {clause:?}"))?;
+                    anyhow::ensure!(
+                        (0.0..=100.0).contains(&pct),
+                        "truncate@log percentage must be in 0..=100, got {pct}"
+                    );
+                    plan.truncate_log_pct = Some(pct);
+                }
+                other => bail!(
+                    "unknown fault site {other:?} (expected panic@step|io@checkpoint|truncate@log)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    /// Canonical form: clauses in `panic@step, io@checkpoint,
+    /// truncate@log` order — round-trips through [`FromStr`].
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut sep = "";
+        if let Some(s) = self.panic_at_step {
+            write!(f, "panic@step:{s}")?;
+            sep = ",";
+        }
+        if let Some(n) = self.io_at_checkpoint {
+            write!(f, "{sep}io@checkpoint:{n}")?;
+            sep = ",";
+        }
+        if let Some(p) = self.truncate_log_pct {
+            write!(f, "{sep}truncate@log:{p}%")?;
+        }
+        Ok(())
+    }
+}
+
+/// Truncate `text` to the first `pct`% of its lines (rounding down) —
+/// the `truncate@log` fault applied to an in-memory update log.
+pub fn truncate_lines(text: &str, pct: f64) -> String {
+    let lines: Vec<&str> = text.lines().collect();
+    let keep = ((lines.len() as f64) * pct / 100.0).floor() as usize;
+    let mut out = String::with_capacity(text.len());
+    for line in &lines[..keep.min(lines.len())] {
+        out.push_str(line);
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_parses_and_is_empty() {
+        let p: FaultPlan = "".parse().unwrap();
+        assert!(p.is_empty());
+        assert_eq!(p, FaultPlan::default());
+    }
+
+    #[test]
+    fn full_plan_parses_all_clauses() {
+        let p: FaultPlan = "panic@step:7,io@checkpoint:2,truncate@log:40%".parse().unwrap();
+        assert_eq!(p.panic_at_step, Some(7));
+        assert_eq!(p.io_at_checkpoint, Some(2));
+        assert_eq!(p.truncate_log_pct, Some(40.0));
+        assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn display_round_trips_canonical_order() {
+        for spec in [
+            "panic@step:0",
+            "io@checkpoint:1",
+            "truncate@log:12.5%",
+            "panic@step:3,io@checkpoint:9",
+            "panic@step:7,io@checkpoint:2,truncate@log:40%",
+        ] {
+            let p: FaultPlan = spec.parse().unwrap();
+            assert_eq!(p.to_string(), spec);
+            let back: FaultPlan = p.to_string().parse().unwrap();
+            assert_eq!(back, p, "{spec}");
+        }
+    }
+
+    #[test]
+    fn clause_order_and_case_are_forgiving() {
+        let p: FaultPlan = " TRUNCATE@LOG:50 , panic@step:1 ".parse().unwrap();
+        assert_eq!(p.panic_at_step, Some(1));
+        assert_eq!(p.truncate_log_pct, Some(50.0));
+    }
+
+    #[test]
+    fn malformed_plans_are_rejected() {
+        for bad in [
+            "panic@step",          // no argument
+            "panic@step:x",        // non-numeric
+            "io@checkpoint:0",     // 1-based
+            "truncate@log:101%",   // out of range
+            "truncate@log:-1",     // out of range
+            "explode@heap:1",      // unknown site
+        ] {
+            assert!(bad.parse::<FaultPlan>().is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn truncate_lines_keeps_prefix() {
+        let text = "a\nb\nc\nd\n";
+        assert_eq!(truncate_lines(text, 50.0), "a\nb\n");
+        assert_eq!(truncate_lines(text, 100.0), text);
+        assert_eq!(truncate_lines(text, 0.0), "");
+        // 40% of 4 lines floors to 1.
+        assert_eq!(truncate_lines(text, 40.0), "a\n");
+    }
+}

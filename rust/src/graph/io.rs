@@ -15,40 +15,86 @@ use anyhow::{bail, Context, Result};
 
 use super::builder::GraphBuilder;
 use super::csr::Graph;
-use super::parse::{densify, parse_edge_line};
+use super::parse::{densify, line_err, parse_edge_line, read_raw_line, snippet};
+use crate::config::IngestMode;
 use crate::VertexId;
 
-/// Load a whitespace-separated edge-list text file.
+/// Load a whitespace-separated edge-list text file (strict: the first
+/// malformed line aborts the load).
 ///
 /// Unknown ids are densified in first-appearance order, so partition
 /// labels index into 0..n. Lines starting with `#` or `%` are comments.
 pub fn load_edge_list<P: AsRef<Path>>(path: P) -> Result<Graph> {
-    let f = File::open(path.as_ref())
-        .with_context(|| format!("open {:?}", path.as_ref()))?;
-    read_edge_list(BufReader::new(f))
+    load_edge_list_with(path, IngestMode::Strict)
 }
 
-/// Parse an edge list from any reader (unit-testable without files).
+/// [`load_edge_list`] with an explicit [`IngestMode`]: `Strict` aborts
+/// on the first malformed line, `Lenient` skips-and-counts malformed
+/// lines (reported via the `ingest_skipped_lines` counter and a log
+/// line) and loads whatever parsed.
+pub fn load_edge_list_with<P: AsRef<Path>>(path: P, mode: IngestMode) -> Result<Graph> {
+    let label = path.as_ref().display().to_string();
+    let f = File::open(path.as_ref())
+        .with_context(|| format!("open {:?}", path.as_ref()))?;
+    read_edge_list_named(BufReader::new(f), &label, mode)
+}
+
+/// Parse an edge list from any reader, strictly (unit-testable without
+/// files; diagnostics use a placeholder source label).
+pub fn read_edge_list<R: BufRead>(r: R) -> Result<Graph> {
+    read_edge_list_named(r, "<edge list>", IngestMode::Strict)
+}
+
+/// The edge-list reader behind every text path: `label` names the
+/// source in diagnostics (file path or a placeholder), `mode` picks the
+/// strict/lenient malformed-line contract.
 ///
-/// Lines are read into one reusable buffer (`read_line`) and parsed in
-/// place — the per-line `String` allocation `r.lines()` would make is
-/// measurable on multi-million-edge lists.
-pub fn read_edge_list<R: BufRead>(mut r: R) -> Result<Graph> {
+/// Lines are read as raw bytes into one reusable buffer under the
+/// [`crate::graph::parse::MAX_LINE_BYTES`] cap — a hostile unbounded
+/// line is truncated and drained, never buffered whole — and parsed in
+/// place (the per-line `String` allocation `r.lines()` would make is
+/// measurable on multi-million-edge lists). Ids are densified only
+/// after a line fully parses, so skipped or failed lines can never
+/// mint phantom vertices.
+pub fn read_edge_list_named<R: BufRead>(mut r: R, label: &str, mode: IngestMode) -> Result<Graph> {
     let mut ids: std::collections::HashMap<u64, VertexId> = std::collections::HashMap::new();
     let mut edges: Vec<(VertexId, VertexId)> = Vec::new();
-    let mut line = String::new();
+    let mut buf = Vec::new();
     let mut lineno = 0usize;
-    loop {
-        line.clear();
-        if r.read_line(&mut line)? == 0 {
-            break;
-        }
+    let mut skipped = 0u64;
+    while let Some(fits) = read_raw_line(&mut r, &mut buf)? {
         lineno += 1;
-        if let Some((a, b)) = parse_edge_line(&line, lineno)? {
-            let s = densify(a, &mut ids);
-            let d = densify(b, &mut ids);
-            edges.push((s, d));
+        let parsed = if !fits {
+            Err(line_err(label, lineno, "line exceeds the 1 MiB length cap", &buf))
+        } else {
+            match std::str::from_utf8(&buf) {
+                Ok(text) => parse_edge_line(text, lineno).map_err(|e| {
+                    e.context(format!("{label}: line {lineno}: {:?}", snippet(&buf)))
+                }),
+                Err(_) => Err(line_err(label, lineno, "invalid UTF-8", &buf)),
+            }
+        };
+        match (parsed, mode) {
+            (Ok(Some((a, b))), _) => {
+                let s = densify(a, &mut ids);
+                let d = densify(b, &mut ids);
+                edges.push((s, d));
+            }
+            (Ok(None), _) => {}
+            (Err(e), IngestMode::Strict) => return Err(e),
+            (Err(e), IngestMode::Lenient) => {
+                skipped += 1;
+                crate::obs::counter_add("ingest_skipped_lines", 1);
+                if skipped <= 8 {
+                    crate::obs::log::debug(&format!("ingest: skipping {e:#}"));
+                }
+            }
         }
+    }
+    if skipped > 0 {
+        crate::obs::log::info(&format!(
+            "ingest: {label}: skipped {skipped} malformed line(s) (lenient mode)"
+        ));
     }
     if ids.is_empty() {
         bail!("edge list contains no edges");
@@ -105,8 +151,14 @@ pub fn save_binary<P: AsRef<Path>>(g: &Graph, path: P) -> Result<()> {
 }
 
 /// Load the fast binary format.
+///
+/// Header counts are untrusted: `m` is validated against the actual
+/// file size and `n` against the `u32` vertex-id space *before* any
+/// count-sized allocation, so a corrupted or hostile header (e.g.
+/// `m = u64::MAX`) fails with a structured error instead of an OOM.
 pub fn load_binary<P: AsRef<Path>>(path: P) -> Result<Graph> {
     let f = File::open(path.as_ref())?;
+    let file_len = f.metadata()?.len();
     let mut r = BufReader::new(f);
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
@@ -121,9 +173,22 @@ pub fn load_binary<P: AsRef<Path>>(path: P) -> Result<Graph> {
     }
     let mut u64buf = [0u8; 8];
     r.read_exact(&mut u64buf)?;
-    let n = u64::from_le_bytes(u64buf) as usize;
+    let n64 = u64::from_le_bytes(u64buf);
     r.read_exact(&mut u64buf)?;
-    let m = u64::from_le_bytes(u64buf) as usize;
+    let m64 = u64::from_le_bytes(u64buf);
+
+    // Header: magic (4) + version (4) + n (8) + m (8).
+    const HEADER: u64 = 24;
+    anyhow::ensure!(
+        n64 <= u64::from(u32::MAX),
+        "corrupt binary graph: vertex count {n64} exceeds the u32 id space"
+    );
+    let payload = m64.checked_mul(8).filter(|p| HEADER.checked_add(*p) == Some(file_len));
+    anyhow::ensure!(
+        payload.is_some(),
+        "corrupt binary graph: edge count {m64} does not match file size {file_len}"
+    );
+    let (n, m) = (n64 as usize, m64 as usize);
 
     let mut builder = GraphBuilder::with_capacity(n, m);
     let mut buf = vec![0u8; 8 * 4096];
@@ -135,6 +200,10 @@ pub fn load_binary<P: AsRef<Path>>(path: P) -> Result<Graph> {
         for i in 0..take {
             let s = u32::from_le_bytes(buf[i * 8..i * 8 + 4].try_into().unwrap());
             let d = u32::from_le_bytes(buf[i * 8 + 4..i * 8 + 8].try_into().unwrap());
+            anyhow::ensure!(
+                u64::from(s) < n64 && u64::from(d) < n64,
+                "corrupt binary graph: edge ({s}, {d}) references a vertex >= {n64}"
+            );
             builder.edge(s, d);
         }
         need -= take;
@@ -202,6 +271,45 @@ mod tests {
         // Bad dst.
         let err = read_edge_list(Cursor::new("0 y\n")).unwrap_err();
         assert!(format!("{err:#}").contains("bad dst"), "{err:#}");
+    }
+
+    #[test]
+    fn lenient_mode_skips_and_counts_malformed_lines() {
+        // Garbage lines of every flavour between two good edges: bad
+        // ints, missing tokens, trailing tokens, invalid UTF-8 — all
+        // skipped, never densified into phantom vertices.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"0 1\n");
+        bytes.extend_from_slice(b"x 1\n7\n1 2 3\n");
+        bytes.extend_from_slice(&[0xff, 0xfe, b' ', b'5', b'\n']);
+        bytes.extend_from_slice(b"1 2\n");
+        let g =
+            read_edge_list_named(Cursor::new(&bytes), "t.txt", IngestMode::Lenient).unwrap();
+        assert_eq!(g.num_vertices(), 3, "skipped lines must not mint vertices");
+        assert_eq!(g.num_edges(), 2);
+        // Strict mode aborts on the first malformed line, naming the
+        // source.
+        let err = read_edge_list_named(Cursor::new(&bytes), "t.txt", IngestMode::Strict)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("t.txt") && msg.contains("line 2"), "{msg}");
+    }
+
+    #[test]
+    fn oversized_line_is_capped_not_buffered() {
+        use crate::graph::parse::MAX_LINE_BYTES;
+        let mut bytes = b"0 1\n".to_vec();
+        bytes.extend(std::iter::repeat(b'9').take(MAX_LINE_BYTES + 100));
+        bytes.extend_from_slice(b"\n1 2\n");
+        // Strict: structured error naming the cap.
+        let err =
+            read_edge_list_named(Cursor::new(&bytes), "big.txt", IngestMode::Strict).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("1 MiB") && msg.contains("line 2"), "{msg}");
+        // Lenient: the capped line is skipped, the rest loads.
+        let g =
+            read_edge_list_named(Cursor::new(&bytes), "big.txt", IngestMode::Lenient).unwrap();
+        assert_eq!(g.num_edges(), 2);
     }
 
     #[test]
@@ -293,6 +401,46 @@ mod tests {
         let e1: Vec<_> = g.edges().collect();
         let e2: Vec<_> = g2.edges().collect();
         assert_eq!(e1, e2);
+    }
+
+    #[test]
+    fn binary_rejects_hostile_counts_without_allocating() {
+        let dir = std::env::temp_dir().join("revolver_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        // A 24-byte header claiming u64::MAX edges: must error on the
+        // size mismatch, not attempt a count-sized allocation.
+        let p = dir.join("hostile_m.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&4u64.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load_binary(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("edge count"), "{err:#}");
+        // A vertex count past the u32 id space is equally structural.
+        let p = dir.join("hostile_n.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&(u64::from(u32::MAX) + 2).to_le_bytes());
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load_binary(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("vertex count"), "{err:#}");
+        // An edge referencing a vertex past n is rejected, not pushed
+        // into the builder.
+        let p = dir.join("hostile_edge.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&2u64.to_le_bytes());
+        bytes.extend_from_slice(&1u64.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.extend_from_slice(&9u32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load_binary(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("references"), "{err:#}");
     }
 
     #[test]

@@ -8,10 +8,81 @@
 //! line up with a graph loaded by another.
 
 use std::collections::HashMap;
+use std::io::BufRead;
 
 use anyhow::{bail, Context, Result};
 
 use crate::VertexId;
+
+/// Hard per-line byte cap for every text ingest path. A hostile input
+/// whose "line" never ends (multi-GB of bytes with no `\n`) must not
+/// buffer unboundedly: [`read_raw_line`] stops accumulating at this cap
+/// and drains the remainder, so the worst case costs one bounded buffer
+/// plus streaming I/O, never resident memory proportional to the line.
+pub const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// Read one newline-terminated line as raw bytes into `buf` (reused
+/// across calls), stripping the trailing `\r` if present.
+///
+/// Returns `Ok(None)` at EOF, `Ok(Some(true))` for a line within
+/// [`MAX_LINE_BYTES`], and `Ok(Some(false))` for an oversized line —
+/// `buf` then holds the first `MAX_LINE_BYTES` bytes and the rest of
+/// the physical line has been consumed from the reader, so the caller
+/// can report or skip it and continue at the next line.
+pub fn read_raw_line<R: BufRead>(r: &mut R, buf: &mut Vec<u8>) -> std::io::Result<Option<bool>> {
+    buf.clear();
+    let mut oversized = false;
+    loop {
+        let chunk = r.fill_buf()?;
+        if chunk.is_empty() {
+            // EOF: a partial final line (no trailing newline) is a line.
+            if buf.is_empty() && !oversized {
+                return Ok(None);
+            }
+            break;
+        }
+        let (take, done) = match chunk.iter().position(|&b| b == b'\n') {
+            Some(i) => (i, true),
+            None => (chunk.len(), false),
+        };
+        if !oversized {
+            let room = MAX_LINE_BYTES - buf.len();
+            if take <= room {
+                buf.extend_from_slice(&chunk[..take]);
+            } else {
+                buf.extend_from_slice(&chunk[..room]);
+                oversized = true;
+            }
+        }
+        r.consume(take + usize::from(done));
+        if done {
+            break;
+        }
+    }
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    Ok(Some(!oversized))
+}
+
+/// A human-safe ≤64-byte excerpt of a raw line for diagnostics: lossy
+/// UTF-8 (invalid bytes render as U+FFFD) with an ellipsis marking the
+/// cut, so hostile bytes can't explode an error message.
+pub fn snippet(bytes: &[u8]) -> String {
+    const MAX: usize = 64;
+    let cut = bytes.len().min(MAX);
+    let mut s = String::from_utf8_lossy(&bytes[..cut]).into_owned();
+    if bytes.len() > MAX {
+        s.push('…');
+    }
+    s
+}
+
+/// The uniform ingest diagnostic every text reader emits:
+/// `<path>: line <lineno>: <why>: "<snippet>"`.
+pub fn line_err(path: &str, lineno: usize, why: &str, bytes: &[u8]) -> anyhow::Error {
+    anyhow::anyhow!("{path}: line {lineno}: {why}: {:?}", snippet(bytes))
+}
 
 /// Parse one `src<ws>dst` edge-list line. `Ok(None)` for comment
 /// (`#` / `%`) and blank lines.
@@ -25,6 +96,9 @@ pub fn parse_edge_line(line: &str, lineno: usize) -> Result<Option<(u64, u64)>> 
         (Some(a), Some(b)) => (a, b),
         _ => bail!("line {lineno}: expected `src dst`, got {t:?}"),
     };
+    if it.next().is_some() {
+        bail!("line {lineno}: trailing tokens after `src dst`, got {:?}", snippet(t.as_bytes()));
+    }
     let a: u64 = a.parse().with_context(|| format!("line {lineno}: bad src"))?;
     let b: u64 = b.parse().with_context(|| format!("line {lineno}: bad dst"))?;
     Ok(Some((a, b)))
@@ -58,6 +132,59 @@ mod tests {
         assert!(format!("{err:#}").contains("line 4"), "{err:#}");
         let err = parse_edge_line("1 y", 9).unwrap_err();
         assert!(format!("{err:#}").contains("bad dst"), "{err:#}");
+    }
+
+    #[test]
+    fn trailing_tokens_are_rejected() {
+        let err = parse_edge_line("0 1 2", 5).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 5") && msg.contains("trailing"), "{msg}");
+    }
+
+    #[test]
+    fn raw_line_reader_caps_hostile_lines() {
+        use std::io::Cursor;
+        // Normal lines round-trip with \r\n stripped.
+        let mut r = Cursor::new(b"ab\r\ncd\nef".to_vec());
+        let mut buf = Vec::new();
+        assert_eq!(read_raw_line(&mut r, &mut buf).unwrap(), Some(true));
+        assert_eq!(buf, b"ab");
+        assert_eq!(read_raw_line(&mut r, &mut buf).unwrap(), Some(true));
+        assert_eq!(buf, b"cd");
+        // Final partial line (no trailing newline) still counts.
+        assert_eq!(read_raw_line(&mut r, &mut buf).unwrap(), Some(true));
+        assert_eq!(buf, b"ef");
+        assert_eq!(read_raw_line(&mut r, &mut buf).unwrap(), None);
+
+        // A line past the cap is truncated at MAX_LINE_BYTES, reported
+        // as oversized, and fully drained so the next line still parses.
+        let mut hostile = vec![b'x'; MAX_LINE_BYTES + 4096];
+        hostile.push(b'\n');
+        hostile.extend_from_slice(b"7 9\n");
+        let mut r = Cursor::new(hostile);
+        assert_eq!(read_raw_line(&mut r, &mut buf).unwrap(), Some(false));
+        assert_eq!(buf.len(), MAX_LINE_BYTES);
+        assert_eq!(read_raw_line(&mut r, &mut buf).unwrap(), Some(true));
+        assert_eq!(buf, b"7 9");
+    }
+
+    #[test]
+    fn snippets_are_bounded_and_lossy() {
+        assert_eq!(snippet(b"0 1"), "0 1");
+        let long = vec![b'a'; 200];
+        let s = snippet(&long);
+        assert!(s.starts_with("aaaa") && s.ends_with('…'));
+        assert_eq!(s.chars().count(), 65);
+        // Invalid UTF-8 renders as replacement chars, never panics.
+        let s = snippet(&[0xff, 0xfe, b'z']);
+        assert!(s.contains('z'));
+        // The uniform diagnostic carries path, line and snippet.
+        let err = line_err("edges.txt", 12, "bad src", b"x 1");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("edges.txt") && msg.contains("line 12") && msg.contains("x 1"),
+            "{msg}"
+        );
     }
 
     #[test]

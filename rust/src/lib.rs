@@ -135,6 +135,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dynamic;
 pub mod engine;
+pub mod fault;
 pub mod graph;
 pub mod la;
 pub mod lp;

@@ -24,25 +24,72 @@
 
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use revolver::config::{ExecutionModel, RevolverConfig, StreamAlgo};
+use revolver::config::{ExecutionModel, IngestMode, RevolverConfig, StreamAlgo};
+use revolver::engine::EngineError;
 use revolver::graph::gen::{generate_dataset, Dataset};
 use revolver::graph::{io, stats, Graph};
 use revolver::metrics::quality;
 use revolver::metrics::report::{Report, ResultRow};
 use revolver::partitioners::{by_name, Partitioner};
-use revolver::util::args::Args;
+use revolver::util::args::{ArgError, Args};
 use revolver::util::{with_commas, Stopwatch};
 
-fn main() {
-    if let Err(e) = run() {
-        eprintln!("error: {e:#}");
-        std::process::exit(1);
+/// A CLI failure carrying its process exit code. The code partitions
+/// failures the way scripts need to react to them:
+///
+/// * `2` — usage / config errors (bad flags, unknown subcommand,
+///   invalid config values): fix the invocation.
+/// * `1` — runtime failures (missing files, IO errors, corrupt
+///   inputs): fix the environment.
+/// * `3` — a contained worker panic aborted the run
+///   ([`EngineError::WorkerPanic`]): a crash that the engine unwound
+///   cleanly; retry / resume is reasonable.
+struct CliError {
+    code: i32,
+    err: anyhow::Error,
+}
+
+impl CliError {
+    fn usage(err: anyhow::Error) -> Self {
+        CliError { code: 2, err }
+    }
+
+    fn aborted(err: EngineError) -> Self {
+        CliError { code: 3, err: anyhow!("{err}") }
     }
 }
 
-fn run() -> Result<()> {
+/// Plain `?` on an anyhow error is a runtime failure (exit 1).
+impl From<anyhow::Error> for CliError {
+    fn from(err: anyhow::Error) -> Self {
+        CliError { code: 1, err }
+    }
+}
+
+/// Bare IO errors (fs writes, thread queries) are runtime failures.
+impl From<std::io::Error> for CliError {
+    fn from(err: std::io::Error) -> Self {
+        CliError { code: 1, err: err.into() }
+    }
+}
+
+/// Flag-parse errors are usage errors wherever they surface (exit 2).
+impl From<ArgError> for CliError {
+    fn from(err: ArgError) -> Self {
+        CliError { code: 2, err: err.into() }
+    }
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {:#}", e.err);
+        std::process::exit(e.code);
+    }
+}
+
+fn run() -> Result<(), CliError> {
     let mut args = Args::from_env()?;
     match args.subcommand() {
         Some("partition") => cmd_partition(args),
@@ -53,7 +100,9 @@ fn run() -> Result<()> {
         Some("stats") => cmd_stats(args),
         Some("generate") => cmd_generate(args),
         Some("info") => cmd_info(args),
-        Some(other) => bail!("unknown subcommand {other:?}\n{}", usage()),
+        Some(other) => {
+            Err(CliError::usage(anyhow!("unknown subcommand {other:?}\n{}", usage())))
+        }
         None => {
             // Help path: consume nothing, print usage.
             let _ = args.get_bool("help");
@@ -110,6 +159,17 @@ const USAGE_BODY: &str =
     --metrics-addr H:P    serve live telemetry for the run's lifetime:
                           /metrics /healthz /profile /events?since=N
                           (port 0 picks a free port, echoed on stderr)
+    --ingest <strict|lenient>  text-reader strictness: strict aborts on
+                          the first malformed line, lenient skips and
+                          counts it with a line-numbered diagnostic
+                          (default strict)
+    --checkpoint dir/     write durable RVCK snapshots into dir
+                          (partition: step cadence; dynamic: epoch cadence)
+    --checkpoint-every N  snapshot cadence in steps/epochs (default 10)
+    --resume              continue from the newest snapshot in the
+                          --checkpoint dir (fresh start when empty)
+    --faults SPEC         deterministic fault injection, e.g.
+                          \"panic@step:7,io@checkpoint:2,truncate@log:40%\"
     --config file.toml    load RevolverConfig from file";
 
 const USAGE_TAIL: &str =
@@ -122,7 +182,9 @@ const USAGE_TAIL: &str =
               | --update-log file.log   (batches separated by `commit`)
               [--algorithm <spinner|revolver>] [--out trace.csv]
   stats:      --all | --graph g
-  generate:   --graph g --out file [--format txt|bin]";
+  generate:   --graph g --out file [--format txt|bin]
+  exit codes: 0 ok | 1 runtime failure | 2 usage/config error
+              | 3 contained worker panic";
 
 /// Shared flag parsing: build a RevolverConfig from --config + overrides.
 fn config_from(args: &mut Args) -> Result<RevolverConfig> {
@@ -181,6 +243,15 @@ fn config_from(args: &mut Args) -> Result<RevolverConfig> {
     cfg.profile = cfg.profile || args.get_bool("profile");
     if let Some(addr) = args.get("metrics-addr") {
         cfg.metrics_addr = addr;
+    }
+    cfg.ingest = args.get_or("ingest", cfg.ingest)?;
+    if let Some(dir) = args.get("checkpoint") {
+        cfg.checkpoint_dir = dir;
+    }
+    cfg.checkpoint_every = args.get_or("checkpoint-every", cfg.checkpoint_every)?;
+    cfg.resume = cfg.resume || args.get_bool("resume");
+    if let Some(spec) = args.get("faults") {
+        cfg.faults = spec.parse()?;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -252,10 +323,15 @@ fn obs_finish(session: ObsSession) {
 }
 
 /// Load a graph: surrogate dataset name, or a file path (.txt/.bin).
+///
+/// Reads `--ingest` directly (besides [`config_from`], which runs
+/// *after* this in every command): [`Args::get`] marks a flag consumed
+/// without removing it, so both reads see the same value.
 fn load_graph(args: &mut Args) -> Result<(String, Graph)> {
     let name = args.get("graph").unwrap_or_else(|| "lj".to_string());
     let vertices: usize = args.get_or("vertices", 16384)?;
     let seed: u64 = args.get_or("graph-seed", 7)?;
+    let ingest: IngestMode = args.get_or("ingest", IngestMode::default())?;
     if let Some(ds) = Dataset::from_name(&name) {
         let g = generate_dataset(ds, vertices, seed)?;
         return Ok((ds.name().to_string(), g));
@@ -270,13 +346,13 @@ fn load_graph(args: &mut Args) -> Result<(String, Graph)> {
     let g = if name.ends_with(".bin") {
         io::load_binary(path)?
     } else {
-        io::load_edge_list(path)?
+        io::load_edge_list_with(path, ingest)?
     };
     let stem = path.file_stem().unwrap_or_default().to_string_lossy().to_string();
     Ok((stem, g))
 }
 
-fn cmd_partition(mut args: Args) -> Result<()> {
+fn cmd_partition(mut args: Args) -> Result<(), CliError> {
     // `--algo` is accepted as a short alias of `--algorithm`.
     let algorithm = args
         .get("algorithm")
@@ -284,7 +360,7 @@ fn cmd_partition(mut args: Args) -> Result<()> {
         .unwrap_or_else(|| "revolver".to_string());
     let evaluate = args.get_bool("evaluate");
     let (gname, g) = load_graph(&mut args)?;
-    let cfg = config_from(&mut args)?;
+    let cfg = config_from(&mut args).map_err(CliError::usage)?;
     args.finish()?;
 
     let k = cfg.parts;
@@ -295,15 +371,84 @@ fn cmd_partition(mut args: Args) -> Result<()> {
         with_commas(g.num_edges() as u64),
         cfg.engine,
     ));
-    let p = by_name(&algorithm, cfg)?;
     let sw = Stopwatch::start();
-    let out = p.partition(&g);
+    let mut resumed_from = None;
+    let resume_snap = match cfg.resume {
+        true => revolver::fault::load_latest(std::path::Path::new(&cfg.checkpoint_dir))?,
+        false => None,
+    };
+    let out = match resume_snap {
+        Some(snap) => {
+            // Continue an interrupted iterative run from its last
+            // durable superstep: same assignment, same (or warm-start
+            // degraded) LA state, and only the remaining step budget.
+            // One-shot algorithms never checkpoint, so resume is an
+            // iterative-family affair.
+            if snap.seed != cfg.seed || snap.k as usize != k {
+                return Err(anyhow!(
+                    "checkpoint mismatch: snapshot has seed={} k={}, run has seed={} k={k}",
+                    snap.seed,
+                    snap.k,
+                    cfg.seed
+                )
+                .into());
+            }
+            if snap.labels.len() != g.num_vertices() {
+                return Err(anyhow!(
+                    "checkpoint mismatch: snapshot covers {} vertices, graph has {}",
+                    snap.labels.len(),
+                    g.num_vertices()
+                )
+                .into());
+            }
+            resumed_from = Some(snap.step);
+            revolver::obs::log::info(&format!(
+                "resuming from checkpoint at step {} ({})",
+                snap.step,
+                if snap.la.is_some() { "exact LA slab" } else { "warm-start LA" },
+            ));
+            let mut rcfg = cfg.clone();
+            rcfg.max_steps = cfg.max_steps.saturating_sub(snap.step).max(1);
+            match algorithm.to_lowercase().as_str() {
+                "revolver" => {
+                    revolver::partitioners::revolver::resume(
+                        &g,
+                        &rcfg,
+                        snap.labels,
+                        snap.la.as_ref(),
+                    )
+                    .map_err(CliError::aborted)?
+                }
+                "spinner" => revolver::partitioners::spinner::refine(&g, &rcfg, snap.labels)
+                    .map_err(CliError::aborted)?,
+                other => {
+                    return Err(CliError::usage(anyhow!(
+                        "--resume supports the iterative algorithms (spinner|revolver), \
+                         got {other:?}"
+                    )))
+                }
+            }
+        }
+        None => {
+            if cfg.resume {
+                revolver::obs::log::info(&format!(
+                    "no checkpoint in {:?}; starting fresh",
+                    cfg.checkpoint_dir
+                ));
+            }
+            let p = by_name(&algorithm, cfg.clone()).map_err(CliError::usage)?;
+            p.try_partition(&g).map_err(CliError::aborted)?
+        }
+    };
     obs_finish(obs);
     let q = quality::evaluate(&g, &out.labels, k);
     println!("graph:               {gname}");
     println!("algorithm:           {algorithm}");
     println!("partitions:          {k}");
     println!("steps:               {}", out.trace.steps());
+    if let Some(step) = resumed_from {
+        println!("resumed from step:   {step}");
+    }
     println!("converged at:        {:?}", out.trace.converged_at);
     println!("vertex evals:        {}", with_commas(out.trace.total_evaluated));
     println!("local edges:         {:.4}", q.local_edges);
@@ -329,17 +474,17 @@ fn cmd_partition(mut args: Args) -> Result<()> {
 /// N restreaming passes). `--evaluate` additionally loads the graph
 /// afterwards to report cut quality; `--out` writes one label per
 /// dense vertex id.
-fn cmd_stream(mut args: Args) -> Result<()> {
+fn cmd_stream(mut args: Args) -> Result<(), CliError> {
     let file = args
         .get("file")
         .filter(|f| !f.is_empty())
-        .context("stream requires --file <edges.txt>")?;
+        .ok_or_else(|| CliError::usage(anyhow!("stream requires --file <edges.txt>")))?;
     let algorithm = args.get("algorithm").unwrap_or_else(|| "fennel".to_string());
     let evaluate = args.get_bool("evaluate");
     let out = args.get("out");
-    let cfg = config_from(&mut args)?;
+    let cfg = config_from(&mut args).map_err(CliError::usage)?;
     args.finish()?;
-    let algo: StreamAlgo = algorithm.parse()?;
+    let algo: StreamAlgo = algorithm.parse().map_err(CliError::usage)?;
 
     let obs = obs_setup(&cfg)?;
     let sw = Stopwatch::start();
@@ -377,7 +522,7 @@ fn cmd_stream(mut args: Args) -> Result<()> {
     if evaluate {
         // The loader densifies ids in the same first-appearance order
         // as the stream, so the labels line up with this CSR.
-        let g = io::load_edge_list(&file)?;
+        let g = io::load_edge_list_with(&file, cfg.ingest)?;
         let q = quality::evaluate(&g, &res.labels, k);
         println!("local edges:         {:.4}", q.local_edges);
         println!("edge cuts:           {:.4}", 1.0 - q.local_edges);
@@ -392,8 +537,10 @@ fn cmd_stream(mut args: Args) -> Result<()> {
 /// placement plus a frontier-seeded repair pass per epoch. Reports
 /// per-epoch quality and evaluated vertices; `--out` writes the
 /// quality-over-time trace as CSV (step column = epoch).
-fn cmd_dynamic(mut args: Args) -> Result<()> {
-    use revolver::dynamic::{read_update_log, ChurnRecipe, IncrementalPartitioner, UpdateBatch};
+fn cmd_dynamic(mut args: Args) -> Result<(), CliError> {
+    use revolver::dynamic::{
+        read_update_log_named, ChurnRecipe, DynamicGraph, IncrementalPartitioner, UpdateBatch,
+    };
     use revolver::metrics::trace::RunTrace;
     use revolver::multilevel::Refiner;
 
@@ -406,24 +553,57 @@ fn cmd_dynamic(mut args: Args) -> Result<()> {
     let epochs: u32 = args.get_or("epochs", 5)?;
     let out = args.get("out");
     let (gname, g) = load_graph(&mut args)?;
-    let cfg = config_from(&mut args)?;
+    let cfg = config_from(&mut args).map_err(CliError::usage)?;
     args.finish()?;
 
     let refiner = match algorithm.to_lowercase().as_str() {
         "spinner" => Refiner::Spinner,
         "revolver" => Refiner::Revolver,
-        other => bail!("dynamic repairs with spinner|revolver, got {other:?}"),
+        other => {
+            return Err(CliError::usage(anyhow!(
+                "dynamic repairs with spinner|revolver, got {other:?}"
+            )))
+        }
     };
     let recipe: Option<ChurnRecipe> = match (&churn, &log) {
-        (Some(c), None) => Some(c.parse()?),
+        (Some(c), None) => Some(c.parse().map_err(CliError::usage)?),
         (None, Some(_)) => None,
-        (Some(_), Some(_)) => bail!("--churn and --update-log are mutually exclusive"),
-        (None, None) => bail!("dynamic requires --churn <recipe> or --update-log <file>"),
+        (Some(_), Some(_)) => {
+            return Err(CliError::usage(anyhow!(
+                "--churn and --update-log are mutually exclusive"
+            )))
+        }
+        (None, None) => {
+            return Err(CliError::usage(anyhow!(
+                "dynamic requires --churn <recipe> or --update-log <file>"
+            )))
+        }
     };
     let log_batches: Vec<UpdateBatch> = match &log {
         Some(path) => {
-            let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
-            read_update_log(std::io::BufReader::new(f), g.num_vertices())?
+            let bytes = std::fs::read(path).with_context(|| format!("open {path:?}"))?;
+            // `truncate@log` fault: keep only the first P% of lines
+            // before parsing, simulating a torn write. The lossy UTF-8
+            // round-trip only happens on this injected path.
+            let bytes = match cfg.faults.truncate_log_pct {
+                Some(pct) => {
+                    let text = String::from_utf8_lossy(&bytes);
+                    let total = text.lines().count();
+                    let kept = revolver::fault::truncate_lines(&text, pct);
+                    revolver::obs::log::info(&format!(
+                        "fault truncate@log: {path} cut to {} of {total} lines ({pct}%)",
+                        kept.lines().count(),
+                    ));
+                    kept.into_bytes()
+                }
+                None => bytes,
+            };
+            read_update_log_named(
+                std::io::Cursor::new(bytes),
+                g.num_vertices(),
+                path,
+                cfg.ingest,
+            )?
         }
         None => Vec::new(),
     };
@@ -439,21 +619,135 @@ fn cmd_dynamic(mut args: Args) -> Result<()> {
         churn.as_deref().unwrap_or("update-log"),
     ));
     let sw = Stopwatch::start();
-    let mut inc = IncrementalPartitioner::new(g, cfg, refiner);
-    let q0 = quality::evaluate(inc.current(), inc.labels(), k);
-    println!(
-        "epoch {:>3}: local={:.4} mnl={:.4} (cold partition)",
-        "-", q0.local_edges, q0.max_normalized_load
-    );
 
+    // The dynamic driver owns the checkpoint stream at epoch cadence;
+    // the cold-start partitioner and the per-epoch repair passes must
+    // not interleave their own step-cadence snapshots into the same
+    // directory (resume keys off the newest cursor).
+    let mut inner_cfg = cfg.clone();
+    inner_cfg.checkpoint_dir.clear();
+    inner_cfg.resume = false;
+
+    let resume_snap = match cfg.resume {
+        true => revolver::fault::load_latest(std::path::Path::new(&cfg.checkpoint_dir))?,
+        false => None,
+    };
+    let (mut inc, start_epoch) = match resume_snap {
+        Some(snap) => {
+            if snap.seed != seed || snap.k as usize != k {
+                return Err(anyhow!(
+                    "checkpoint mismatch: snapshot has seed={} k={}, run has seed={seed} k={k}",
+                    snap.seed,
+                    snap.k
+                )
+                .into());
+            }
+            if snap.epoch > epochs as u64 {
+                return Err(anyhow!(
+                    "checkpoint mismatch: snapshot is at epoch {}, run has only {epochs}",
+                    snap.epoch
+                )
+                .into());
+            }
+            let start = snap.epoch as u32;
+            // Replay the update stream (not the repairs) up to the
+            // snapshot epoch: batches are deterministic — seeded churn
+            // over the evolving CSR, or the recorded log — so applying
+            // them rebuilds exactly the graph the snapshot labelled.
+            let mut dg = DynamicGraph::new(g, cfg.compact_ratio);
+            let mut touched = Vec::new();
+            for e in 0..start {
+                // Epochs always leave the overlay compacted, so churn
+                // generation must see the compacted CSR to reproduce
+                // the original batches bit-for-bit.
+                dg.compact();
+                let batch = match &recipe {
+                    Some(r) => r.generate(dg.base(), seed ^ (e as u64 + 1)),
+                    None => log_batches[e as usize].clone(),
+                };
+                dg.apply(&batch, &mut touched);
+            }
+            dg.compact();
+            let evolved = dg.to_graph();
+            if snap.labels.len() != evolved.num_vertices() {
+                return Err(anyhow!(
+                    "checkpoint mismatch: snapshot covers {} vertices, epoch-{start} graph \
+                     has {} (different churn/log inputs?)",
+                    snap.labels.len(),
+                    evolved.num_vertices()
+                )
+                .into());
+            }
+            revolver::obs::log::info(&format!(
+                "resuming from checkpoint at epoch {start} (|V|={})",
+                with_commas(evolved.num_vertices() as u64)
+            ));
+            let inc = IncrementalPartitioner::from_assignment(
+                evolved,
+                inner_cfg.clone(),
+                refiner,
+                snap.labels,
+            );
+            let q0 = quality::evaluate(inc.current(), inc.labels(), k);
+            println!(
+                "epoch {start:>3}: local={:.4} mnl={:.4} (resumed from checkpoint)",
+                q0.local_edges, q0.max_normalized_load
+            );
+            (inc, start)
+        }
+        None => {
+            if cfg.resume {
+                revolver::obs::log::info(&format!(
+                    "no checkpoint in {:?}; starting fresh",
+                    cfg.checkpoint_dir
+                ));
+            }
+            let inc = IncrementalPartitioner::new(g, inner_cfg.clone(), refiner)
+                .map_err(CliError::aborted)?;
+            let q0 = quality::evaluate(inc.current(), inc.labels(), k);
+            println!(
+                "epoch {:>3}: local={:.4} mnl={:.4} (cold partition)",
+                "-", q0.local_edges, q0.max_normalized_load
+            );
+            (inc, 0)
+        }
+    };
+
+    let mut checkpointer = (!cfg.checkpoint_dir.is_empty())
+        .then(|| revolver::fault::Checkpointer::new(cfg.checkpoint_dir.as_str(), &cfg.faults));
     let mut trace = RunTrace::default();
-    for e in 0..epochs {
+    for e in start_epoch..epochs {
         let batch = match &recipe {
             Some(r) => r.generate(inc.current(), seed ^ (e as u64 + 1)),
             None => log_batches[e as usize].clone(),
         };
-        let stats = inc.epoch(&batch);
+        let stats = inc.epoch(&batch).map_err(CliError::aborted)?;
         inc.record_epoch(&mut trace, e, &stats);
+        // Epoch-cadence durability: the overlay is compacted and the
+        // repair pass has joined, so labels/loads are quiescent. A
+        // failed write (including the injected `io@checkpoint` fault)
+        // only widens the replay window — log and continue.
+        if let Some(ck) = checkpointer.as_mut() {
+            if (e + 1) % cfg.checkpoint_every.max(1) == 0 || e + 1 == epochs {
+                let labels = inc.labels().to_vec();
+                let loads = quality::partition_loads(inc.current(), &labels, k);
+                let snap = revolver::fault::Snapshot {
+                    seed,
+                    step: 0,
+                    epoch: (e + 1) as u64,
+                    k: k as u32,
+                    labels,
+                    loads,
+                    la: None,
+                };
+                if let Err(err) = ck.write(&snap) {
+                    revolver::obs::log::info(&format!(
+                        "checkpoint at epoch {} failed (continuing): {err:#}",
+                        e + 1
+                    ));
+                }
+            }
+        }
         let p = trace.final_point().expect("record_epoch pushed a point");
         println!(
             "epoch {e:>3}: local={:.4} mnl={:.4} placed={} seeds={} steps={} evaluated={}",
@@ -485,7 +779,7 @@ fn cmd_dynamic(mut args: Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_sweep(mut args: Args) -> Result<()> {
+fn cmd_sweep(mut args: Args) -> Result<(), CliError> {
     let graphs: Vec<String> =
         args.get_list("graphs", &["lj".to_string()])?;
     let algorithms: Vec<String> = args.get_list(
@@ -501,7 +795,7 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
     let runs: u32 = args.get_or("runs", 1)?;
     let out_dir = args.get("out").unwrap_or_else(|| "results".to_string());
     let vertices: usize = args.get_or("vertices", 16384)?;
-    let base_cfg = config_from(&mut args)?;
+    let base_cfg = config_from(&mut args).map_err(CliError::usage)?;
     args.finish()?;
     let obs = obs_setup(&base_cfg)?;
 
@@ -525,8 +819,8 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
                     let mut cfg = base_cfg.clone();
                     cfg.parts = k;
                     cfg.seed = base_cfg.seed + run as u64;
-                    let p = by_name(algo, cfg)?;
-                    let out = p.partition(&g);
+                    let p = by_name(algo, cfg).map_err(CliError::usage)?;
+                    let out = p.try_partition(&g).map_err(CliError::aborted)?;
                     let q = quality::evaluate(&g, &out.labels, k);
                     le_sum += q.local_edges;
                     mnl_sum += q.max_normalized_load;
@@ -557,10 +851,10 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_convergence(mut args: Args) -> Result<()> {
+fn cmd_convergence(mut args: Args) -> Result<(), CliError> {
     let (gname, g) = load_graph(&mut args)?;
     let out_dir = args.get("out").unwrap_or_else(|| "results".to_string());
-    let mut cfg = config_from(&mut args)?;
+    let mut cfg = config_from(&mut args).map_err(CliError::usage)?;
     args.finish()?;
     cfg.trace_every = cfg.trace_every.max(1);
     // Figure 4 runs the full step budget without early halting.
@@ -569,9 +863,9 @@ fn cmd_convergence(mut args: Args) -> Result<()> {
     std::fs::create_dir_all(&out_dir)?;
     let obs = obs_setup(&cfg)?;
     for algo in ["revolver", "spinner"] {
-        let p = by_name(algo, cfg.clone())?;
+        let p = by_name(algo, cfg.clone()).map_err(CliError::usage)?;
         revolver::obs::log::info(&format!("convergence: {algo} on {gname} k={}", cfg.parts));
-        let out = p.partition(&g);
+        let out = p.try_partition(&g).map_err(CliError::aborted)?;
         let path = format!("{out_dir}/fig4_{algo}_{gname}_k{}.csv", cfg.parts);
         std::fs::write(&path, out.trace.to_csv())?;
         let last = out.trace.final_point().unwrap();
@@ -586,7 +880,7 @@ fn cmd_convergence(mut args: Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_stats(mut args: Args) -> Result<()> {
+fn cmd_stats(mut args: Args) -> Result<(), CliError> {
     let all = args.get_bool("all");
     let vertices: usize = args.get_or("vertices", 16384)?;
     let seed: u64 = args.get_or("graph-seed", 7)?;
@@ -622,7 +916,7 @@ fn cmd_stats(mut args: Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_generate(mut args: Args) -> Result<()> {
+fn cmd_generate(mut args: Args) -> Result<(), CliError> {
     let name = args.get("graph").unwrap_or_else(|| "lj".to_string());
     let vertices: usize = args.get_or("vertices", 16384)?;
     let seed: u64 = args.get_or("graph-seed", 7)?;
@@ -640,7 +934,9 @@ fn cmd_generate(mut args: Args) -> Result<()> {
     match format.as_str() {
         "bin" => io::save_binary(&g, &out)?,
         "txt" => io::save_edge_list(&g, &out)?,
-        other => bail!("unknown format {other:?} (txt|bin)"),
+        other => {
+            return Err(CliError::usage(anyhow!("unknown format {other:?} (txt|bin)")))
+        }
     }
     println!(
         "wrote {out}: |V|={} |E|={}",
@@ -650,7 +946,7 @@ fn cmd_generate(mut args: Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_info(mut args: Args) -> Result<()> {
+fn cmd_info(mut args: Args) -> Result<(), CliError> {
     let artifacts = args.get("artifacts").unwrap_or_else(|| "artifacts".to_string());
     args.finish()?;
     println!("revolver {} ({})", env!("CARGO_PKG_VERSION"), env!("CARGO_PKG_NAME"));

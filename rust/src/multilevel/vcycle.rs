@@ -189,14 +189,14 @@ impl Multilevel {
         cfg: &RevolverConfig,
         total_steps: &mut u32,
         total_evaluated: &mut u64,
-    ) -> Vec<Label> {
+    ) -> Result<Vec<Label>, crate::engine::EngineError> {
         let out = match self.refiner {
-            Refiner::Spinner => crate::partitioners::spinner::refine(g, cfg, labels),
-            Refiner::Revolver => crate::partitioners::revolver::refine(g, cfg, labels),
+            Refiner::Spinner => crate::partitioners::spinner::refine(g, cfg, labels)?,
+            Refiner::Revolver => crate::partitioners::revolver::refine(g, cfg, labels)?,
         };
         *total_steps = total_steps.saturating_add(out.trace.steps());
         *total_evaluated = total_evaluated.saturating_add(out.trace.total_evaluated);
-        out.labels
+        Ok(out.labels)
     }
 }
 
@@ -208,7 +208,7 @@ impl Partitioner for Multilevel {
         }
     }
 
-    fn partition(&self, g: &Graph) -> PartitionOutput {
+    fn try_partition(&self, g: &Graph) -> Result<PartitionOutput, crate::engine::EngineError> {
         let sw = Stopwatch::start();
         let _run = crate::obs::span("multilevel");
         let obs_on = crate::obs::enabled();
@@ -233,7 +233,7 @@ impl Partitioner for Multilevel {
             }
             by_name(&cfg.coarse_algo, cfg.clone())
                 .expect("coarse_algo is validated against the registry")
-                .partition(coarsest)
+                .try_partition(coarsest)?
         };
         let mut labels = coarse.labels;
         let mut total_steps = coarse.trace.steps();
@@ -246,6 +246,10 @@ impl Partitioner for Multilevel {
         // refinement is exactly the few-vertices-still-moving regime).
         let mut refine_cfg = cfg.clone();
         refine_cfg.max_steps = cfg.refine_steps;
+        // Per-level refinement passes must never interleave their own
+        // snapshots with an outer run's checkpoint stream: resume
+        // semantics belong to the top-level run only.
+        refine_cfg.checkpoint_dir.clear();
 
         crate::obs::event(
             "ml_level",
@@ -259,7 +263,7 @@ impl Partitioner for Multilevel {
                 &refine_cfg,
                 &mut total_steps,
                 &mut total_evaluated,
-            );
+            )?;
         }
         {
             let _s = crate::obs::span("rebalance");
@@ -284,7 +288,7 @@ impl Partitioner for Multilevel {
                     &refine_cfg,
                     &mut total_steps,
                     &mut total_evaluated,
-                );
+                )?;
             }
             {
                 let _s = crate::obs::span("rebalance");
@@ -305,7 +309,7 @@ impl Partitioner for Multilevel {
         });
         trace.total_evaluated = total_evaluated;
         trace.wall_time_s = sw.elapsed_s();
-        PartitionOutput { labels, trace }
+        Ok(PartitionOutput { labels, trace })
     }
 }
 

@@ -20,6 +20,8 @@ pub const EVENT_SPEC: &[(&str, &[&str])] = &[
     ("stream_pass", &["pass", "edges"]),
     ("ml_level", &["level", "vertices"]),
     ("epoch", &["epoch", "placed", "seeds", "evaluated", "repair_s"]),
+    ("fault", &["step"]),
+    ("checkpoint", &["step", "epoch"]),
     ("run_end", &["wall_s"]),
 ];
 

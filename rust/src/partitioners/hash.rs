@@ -24,9 +24,9 @@ impl Partitioner for HashPartitioner {
         "hash"
     }
 
-    fn partition(&self, g: &Graph) -> PartitionOutput {
+    fn try_partition(&self, g: &Graph) -> Result<PartitionOutput, crate::engine::EngineError> {
         let labels = (0..g.num_vertices()).map(|v| (v % self.k) as u32).collect();
-        PartitionOutput { labels, trace: RunTrace::default() }
+        Ok(PartitionOutput { labels, trace: RunTrace::default() })
     }
 }
 

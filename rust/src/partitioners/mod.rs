@@ -29,8 +29,20 @@ pub trait Partitioner {
     fn name(&self) -> &'static str;
 
     /// Partition `g`; `k` and all other knobs come from the
-    /// implementation's config.
-    fn partition(&self, g: &Graph) -> PartitionOutput;
+    /// implementation's config. A contained worker panic (see
+    /// [`crate::engine::EngineError`]) is the only error: the one-shot
+    /// and streaming partitioners are infallible and always `Ok`.
+    fn try_partition(&self, g: &Graph) -> Result<PartitionOutput, crate::engine::EngineError>;
+
+    /// [`Partitioner::try_partition`], panicking on a contained worker
+    /// panic — the ergonomic entry point for benches, tests and callers
+    /// that have no recovery story anyway. The CLI and the incremental
+    /// partitioner use `try_partition` so an aborted run maps to a
+    /// distinct exit code instead of a panic.
+    fn partition(&self, g: &Graph) -> PartitionOutput {
+        self.try_partition(g)
+            .unwrap_or_else(|e| panic!("{}: {e}", self.name()))
+    }
 }
 
 /// The multilevel V-cycle family: names that may never be used as a

@@ -25,13 +25,13 @@ impl Partitioner for RangePartitioner {
         "range"
     }
 
-    fn partition(&self, g: &Graph) -> PartitionOutput {
+    fn try_partition(&self, g: &Graph) -> Result<PartitionOutput, crate::engine::EngineError> {
         let n = g.num_vertices() as u128;
         let k = self.k as u128;
         let labels = (0..g.num_vertices())
             .map(|v| ((v as u128 * k) / n) as u32)
             .collect();
-        PartitionOutput { labels, trace: RunTrace::default() }
+        Ok(PartitionOutput { labels, trace: RunTrace::default() })
     }
 }
 

@@ -277,6 +277,46 @@ impl ProbSlab {
         unsafe { self.read_row(v, &mut out) };
         out
     }
+
+    /// Snapshot the whole slab into a checkpointable [`crate::fault::LaSlab`],
+    /// preserving the storage format exactly (no quantization round-trip,
+    /// so a resumed Q16 run restarts from bit-identical rows).
+    ///
+    /// Called from [`VertexProgram::la_checkpoint`] between supersteps:
+    /// the coordinator snapshots while every worker is parked at the W1
+    /// barrier, and rows are only mutated inside phases, so the
+    /// `UnsafeCell` reads observe a quiescent slab.
+    pub fn dump(&self) -> crate::fault::LaSlab {
+        match &self.data {
+            SlabData::F32(cells) => crate::fault::LaSlab::F32 {
+                cols: self.k as u32,
+                data: cells.iter().map(|c| unsafe { *c.get() }).collect(),
+            },
+            SlabData::Q16(cells) => crate::fault::LaSlab::Q16 {
+                cols: self.k as u32,
+                data: cells.iter().map(|c| unsafe { *c.get() }).collect(),
+            },
+        }
+    }
+
+    /// Rebuild a slab from a checkpointed [`crate::fault::LaSlab`].
+    /// Returns `None` on a shape mismatch (wrong n or k — e.g. resuming
+    /// against a different graph), letting the caller fall back to a
+    /// warm start instead of resuming from nonsense rows.
+    pub fn from_checkpoint(n: usize, k: usize, la: &crate::fault::LaSlab) -> Option<Self> {
+        if la.rows() != n || la.cols() as usize != k {
+            return None;
+        }
+        let data = match la {
+            crate::fault::LaSlab::F32 { data, .. } => {
+                SlabData::F32(data.iter().map(|&p| UnsafeCell::new(p)).collect())
+            }
+            crate::fault::LaSlab::Q16 { data, .. } => {
+                SlabData::Q16(data.iter().map(|&q| UnsafeCell::new(q)).collect())
+            }
+        };
+        Some(ProbSlab { k, data })
+    }
 }
 
 /// Per-worker mutable scratch: the k-sized scoring buffers plus the
@@ -401,6 +441,12 @@ impl VertexProgram for RevolverProgram<'_> {
         (ChunkState::new(self.cfg.parts), eng)
     }
 
+    fn la_checkpoint(&self) -> Option<crate::fault::LaSlab> {
+        // Coordinator-side, workers parked at the W1 barrier — the slab
+        // is quiescent (see [`ProbSlab::dump`]).
+        Some(self.probs.dump())
+    }
+
     fn prepare_phase_a(&self, _g: &Graph, _state: &PartitionState, _step: u32) {}
 
     fn prepare_phase_b(
@@ -508,11 +554,12 @@ impl Partitioner for Revolver {
         "revolver"
     }
 
-    fn partition(&self, g: &Graph) -> PartitionOutput {
+    fn try_partition(&self, g: &Graph) -> Result<PartitionOutput, engine::EngineError> {
         // Probe the XLA engine on the main thread first: a worker panic
-        // behind the barrier protocol would deadlock the coordinator, so
-        // surface configuration errors (missing artifacts, wrong k,
-        // mismatched alpha/beta) eagerly and cleanly here.
+        // behind the barrier protocol used to deadlock the coordinator;
+        // containment now turns it into an `Err`, but configuration
+        // errors (missing artifacts, wrong k, mismatched alpha/beta)
+        // still surface more usefully eagerly and cleanly here.
         if self.cfg.engine == Engine::Xla {
             XlaStepEngine::load(
                 &self.cfg.artifacts_dir,
@@ -550,11 +597,36 @@ impl Partitioner for Revolver {
 /// streaming bridge uses), and on graphs with vertex weights the
 /// demand/migration mass is the coarse vertex weight
 /// ([`Graph::load_mass`]).
-pub fn refine(g: &Graph, cfg: &RevolverConfig, init: Vec<crate::Label>) -> PartitionOutput {
+pub fn refine(
+    g: &Graph,
+    cfg: &RevolverConfig,
+    init: Vec<crate::Label>,
+) -> Result<PartitionOutput, engine::EngineError> {
     let program = RevolverProgram {
         cfg,
         probs: ProbSlab::new(g.num_vertices(), cfg.parts, Some(&init), cfg.prob_format),
     };
+    engine::run_with_init(g, cfg, &program, InitialAssignment::Given(init))
+}
+
+/// Resume a Revolver run from a checkpointed assignment and (when the
+/// snapshot carried one with matching shape) the exact LA probability
+/// slab — the `--resume` continuation path. A missing or shape-mismatched
+/// slab degrades to the standard warm start biased toward the
+/// checkpointed labels: strictly worse than the exact rows, strictly
+/// better than restarting cold.
+pub fn resume(
+    g: &Graph,
+    cfg: &RevolverConfig,
+    init: Vec<crate::Label>,
+    la: Option<&crate::fault::LaSlab>,
+) -> Result<PartitionOutput, engine::EngineError> {
+    let probs = la
+        .and_then(|slab| ProbSlab::from_checkpoint(g.num_vertices(), cfg.parts, slab))
+        .unwrap_or_else(|| {
+            ProbSlab::new(g.num_vertices(), cfg.parts, Some(&init), cfg.prob_format)
+        });
+    let program = RevolverProgram { cfg, probs };
     engine::run_with_init(g, cfg, &program, InitialAssignment::Given(init))
 }
 
@@ -567,7 +639,7 @@ pub fn refine_seeded(
     cfg: &RevolverConfig,
     init: Vec<crate::Label>,
     seeds: Vec<crate::VertexId>,
-) -> PartitionOutput {
+) -> Result<PartitionOutput, engine::EngineError> {
     let program = RevolverProgram {
         cfg,
         probs: ProbSlab::new(g.num_vertices(), cfg.parts, Some(&init), cfg.prob_format),
@@ -1075,6 +1147,45 @@ mod tests {
     // The warm-vs-cold convergence assertion (stream:fennel init
     // reaches the halting threshold in <= the steps of random init)
     // lives in tests/integration.rs at acceptance scale.
+
+    #[test]
+    fn slab_dump_and_restore_are_bit_identical() {
+        use crate::util::rng::Rng;
+        let (n, k) = (16usize, 4usize);
+        for format in [ProbFormat::F32, ProbFormat::Q16] {
+            // Train a few rows so the slab is not trivially uniform.
+            let mut slab = ProbSlab::new(n, k, None, format);
+            let mut w = vec![0.25f32; k];
+            let mut s = vec![Signal::Penalty; k];
+            w[1] = 1.0;
+            s[1] = Signal::Reward;
+            let mut scratch = vec![0.0f32; k];
+            for v in 0..n / 2 {
+                for _ in 0..5 {
+                    slab.update_row_mut(v, &mut scratch, &w, &s, 0.4, 0.1);
+                }
+            }
+            let snap = slab.dump();
+            assert_eq!(snap.rows(), n);
+            assert_eq!(snap.cols() as usize, k);
+            let mut back = ProbSlab::from_checkpoint(n, k, &snap).expect("shape matches");
+            for v in 0..n {
+                assert_eq!(
+                    slab.row_vec(v),
+                    back.row_vec(v),
+                    "row {v} must survive dump/restore bit-identically"
+                );
+            }
+            // Draws from the restored slab match the original exactly.
+            let (mut ra, mut rb) = (Rng::new(9), Rng::new(9));
+            for v in 0..n {
+                assert_eq!(slab.spin_mut(v, &mut ra), back.spin_mut(v, &mut rb));
+            }
+            // Shape mismatches degrade to None, never a bogus slab.
+            assert!(ProbSlab::from_checkpoint(n + 1, k, &snap).is_none());
+            assert!(ProbSlab::from_checkpoint(n, k + 1, &snap).is_none());
+        }
+    }
 
     #[test]
     fn trace_enabled_records_improvement() {

@@ -205,7 +205,7 @@ impl Partitioner for Spinner {
         "spinner"
     }
 
-    fn partition(&self, g: &Graph) -> PartitionOutput {
+    fn try_partition(&self, g: &Graph) -> Result<PartitionOutput, engine::EngineError> {
         engine::run(g, &self.cfg, &SpinnerProgram { cfg: &self.cfg })
     }
 }
@@ -215,7 +215,11 @@ impl Partitioner for Spinner {
 /// come from `cfg` (`max_steps` is the bound); on graphs with vertex
 /// weights the capacity gate works in coarse-vertex-weight units via
 /// [`Graph::load_mass`].
-pub fn refine(g: &Graph, cfg: &RevolverConfig, init: Vec<crate::Label>) -> PartitionOutput {
+pub fn refine(
+    g: &Graph,
+    cfg: &RevolverConfig,
+    init: Vec<crate::Label>,
+) -> Result<PartitionOutput, engine::EngineError> {
     engine::run_with_init(
         g,
         cfg,
@@ -233,7 +237,7 @@ pub fn refine_seeded(
     cfg: &RevolverConfig,
     init: Vec<crate::Label>,
     seeds: Vec<crate::VertexId>,
-) -> PartitionOutput {
+) -> Result<PartitionOutput, engine::EngineError> {
     engine::run_with_frontier(
         g,
         cfg,

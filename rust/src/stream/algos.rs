@@ -30,11 +30,11 @@ impl Partitioner for Ldg {
         "ldg"
     }
 
-    fn partition(&self, g: &Graph) -> PartitionOutput {
-        PartitionOutput {
+    fn try_partition(&self, g: &Graph) -> Result<PartitionOutput, crate::engine::EngineError> {
+        Ok(PartitionOutput {
             labels: one_pass_labels(g, &self.cfg, Objective::Ldg),
             trace: RunTrace::default(),
-        }
+        })
     }
 }
 
@@ -55,12 +55,12 @@ impl Partitioner for Fennel {
         "fennel"
     }
 
-    fn partition(&self, g: &Graph) -> PartitionOutput {
+    fn try_partition(&self, g: &Graph) -> Result<PartitionOutput, crate::engine::EngineError> {
         let obj = Objective::Fennel { gamma: self.cfg.fennel_gamma };
-        PartitionOutput {
+        Ok(PartitionOutput {
             labels: one_pass_labels(g, &self.cfg, obj),
             trace: RunTrace::default(),
-        }
+        })
     }
 }
 
@@ -89,8 +89,8 @@ impl Partitioner for Restream {
         "restream"
     }
 
-    fn partition(&self, g: &Graph) -> PartitionOutput {
-        PartitionOutput { labels: restream_labels(g, &self.cfg), trace: RunTrace::default() }
+    fn try_partition(&self, g: &Graph) -> Result<PartitionOutput, crate::engine::EngineError> {
+        Ok(PartitionOutput { labels: restream_labels(g, &self.cfg), trace: RunTrace::default() })
     }
 }
 

@@ -3,13 +3,13 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::fs::File;
-use std::io::{BufRead, BufReader};
+use std::io::BufReader;
 use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
 use crate::config::StreamOrder;
-use crate::graph::parse::{densify, parse_edge_line};
+use crate::graph::parse::{densify, line_err, parse_edge_line, read_raw_line, snippet};
 use crate::graph::Graph;
 use crate::util::rng::Rng;
 use crate::VertexId;
@@ -193,7 +193,7 @@ pub struct FileEdgeStream {
     path: PathBuf,
     reader: BufReader<File>,
     ids: HashMap<u64, VertexId>,
-    line: String,
+    line: Vec<u8>,
     lineno: usize,
     /// First edge of the next group (read-ahead past a run boundary).
     pending: Option<(VertexId, VertexId)>,
@@ -209,7 +209,7 @@ impl FileEdgeStream {
             path,
             reader: BufReader::new(f),
             ids: HashMap::new(),
-            line: String::new(),
+            line: Vec::new(),
             lineno: 0,
             pending: None,
             edges_this_pass: 0,
@@ -217,16 +217,33 @@ impl FileEdgeStream {
         })
     }
 
+    /// Next parsed edge. Lines are read as raw bytes under the
+    /// [`crate::graph::parse::MAX_LINE_BYTES`] cap (hostile unbounded
+    /// lines cost one bounded buffer, never line-proportional memory),
+    /// and every diagnostic names the file.
     fn next_edge(&mut self) -> Result<Option<(VertexId, VertexId)>> {
+        let label = self.path.display().to_string();
         loop {
-            self.line.clear();
-            if self.reader.read_line(&mut self.line)? == 0 {
+            let Some(fits) = read_raw_line(&mut self.reader, &mut self.line)? else {
                 // Pass complete: the edge count is now exact.
                 self.known_edges = Some(self.edges_this_pass);
                 return Ok(None);
-            }
+            };
             self.lineno += 1;
-            if let Some((a, b)) = parse_edge_line(&self.line, self.lineno)? {
+            if !fits {
+                return Err(line_err(
+                    &label,
+                    self.lineno,
+                    "line exceeds the 1 MiB length cap",
+                    &self.line,
+                ));
+            }
+            let text = std::str::from_utf8(&self.line)
+                .map_err(|_| line_err(&label, self.lineno, "invalid UTF-8", &self.line))?;
+            let parsed = parse_edge_line(text, self.lineno).map_err(|e| {
+                e.context(format!("{label}: line {}: {:?}", self.lineno, snippet(&self.line)))
+            })?;
+            if let Some((a, b)) = parsed {
                 // Densify before the self-loop check so a vertex that
                 // only ever self-loops still gets an id — exactly what
                 // `read_edge_list` + `GraphBuilder` (which drops the

@@ -16,6 +16,18 @@ fn run(args: &[&str]) -> (bool, String, String) {
     )
 }
 
+/// Like [`run`], but returns the raw exit code (the fault-tolerance
+/// contract: 0 ok, 1 runtime failure, 2 usage error, 3 contained
+/// worker panic).
+fn run_code(args: &[&str]) -> (i32, String, String) {
+    let out = revolver().args(args).output().expect("spawn revolver");
+    (
+        out.status.code().expect("no exit code (killed by signal?)"),
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+    )
+}
+
 #[test]
 fn no_args_prints_usage() {
     let (ok, stdout, _) = run(&[]);
@@ -563,6 +575,222 @@ fn obs_flags_profile_log_and_quiet() {
     ]);
     assert!(!ok);
     assert!(stderr.contains("unknown verbosity"), "{stderr}");
+}
+
+// ── Fault-tolerance layer: exit codes, checkpoint/resume, ingest ──
+
+#[test]
+fn exit_code_2_for_usage_errors() {
+    let (code, _, stderr) = run_code(&["frobnicate"]);
+    assert_eq!(code, 2, "unknown subcommand: {stderr}");
+
+    let (code, _, stderr) =
+        run_code(&["stats", "--graph", "lj", "--vertices", "256", "--bogus", "1"]);
+    assert_eq!(code, 2, "unknown flag: {stderr}");
+
+    let (code, _, stderr) = run_code(&[
+        "partition", "--graph", "so", "--vertices", "256", "--faults", "explode@heap:1",
+    ]);
+    assert_eq!(code, 2, "bad fault spec is a config error: {stderr}");
+
+    // --resume without --checkpoint is a config error.
+    let (code, _, stderr) =
+        run_code(&["partition", "--graph", "so", "--vertices", "256", "--resume"]);
+    assert_eq!(code, 2, "{stderr}");
+    assert!(stderr.contains("resume requires"), "{stderr}");
+}
+
+#[test]
+fn exit_code_1_for_runtime_failures() {
+    // A missing input file is an environment problem, not a usage one.
+    let (code, _, stderr) = run_code(&["partition", "--graph", "no_such_edges.txt"]);
+    assert_eq!(code, 1, "{stderr}");
+
+    let (code, _, stderr) = run_code(&[
+        "dynamic",
+        "--graph",
+        "so",
+        "--vertices",
+        "256",
+        "--update-log",
+        "/nonexistent/updates.log",
+    ]);
+    assert_eq!(code, 1, "{stderr}");
+    assert!(stderr.contains("open"), "{stderr}");
+}
+
+#[test]
+fn exit_code_3_for_contained_worker_panic() {
+    let (code, _, stderr) = run_code(&[
+        "partition",
+        "--graph",
+        "so",
+        "--vertices",
+        "256",
+        "--parts",
+        "2",
+        "--steps",
+        "5",
+        "--threads",
+        "2",
+        "--algorithm",
+        "spinner",
+        "--faults",
+        "panic@step:1",
+    ]);
+    assert_eq!(code, 3, "injected worker panic must abort with code 3: {stderr}");
+    assert!(stderr.contains("panicked in phase"), "{stderr}");
+    assert!(stderr.contains("injected fault"), "{stderr}");
+}
+
+#[test]
+fn partition_checkpoint_then_resume() {
+    let dir = std::env::temp_dir().join("revolver_cli_ckpt_partition");
+    let _ = std::fs::remove_dir_all(&dir);
+    let base: &[&str] = &[
+        "--graph",
+        "so",
+        "--vertices",
+        "512",
+        "--parts",
+        "4",
+        "--steps",
+        "6",
+        "--threads",
+        "1",
+        "--algorithm",
+        "revolver",
+        "--checkpoint",
+    ];
+    let mut first: Vec<&str> = vec!["partition"];
+    first.extend_from_slice(base);
+    first.extend_from_slice(&[dir.to_str().unwrap(), "--checkpoint-every", "2"]);
+    let (ok, stdout, stderr) = run(&first);
+    assert!(ok, "{stderr}\n{stdout}");
+    let snapshots = std::fs::read_dir(&dir)
+        .expect("checkpoint dir created")
+        .filter_map(|e| e.ok())
+        .filter(|e| e.file_name().to_string_lossy().ends_with(".rvck"))
+        .count();
+    assert!(snapshots >= 1, "step cadence 2 over 6 steps must write snapshots");
+
+    let mut second: Vec<&str> = vec!["partition"];
+    second.extend_from_slice(base);
+    second.extend_from_slice(&[dir.to_str().unwrap(), "--resume"]);
+    let (ok, stdout, stderr) = run(&second);
+    assert!(ok, "{stderr}\n{stdout}");
+    assert!(stdout.contains("resumed from step:"), "{stdout}");
+    assert!(stdout.contains("local edges:"), "{stdout}");
+
+    // Resuming with a different seed must refuse the checkpoint.
+    let mut third: Vec<&str> = vec!["partition"];
+    third.extend_from_slice(base);
+    third.extend_from_slice(&[dir.to_str().unwrap(), "--resume", "--seed", "7"]);
+    let (code, _, stderr) = run_code(&third);
+    assert_eq!(code, 1, "{stderr}");
+    assert!(stderr.contains("checkpoint mismatch"), "{stderr}");
+}
+
+#[test]
+fn dynamic_checkpoint_then_resume_extends_the_run() {
+    let dir = std::env::temp_dir().join("revolver_cli_ckpt_dynamic");
+    let _ = std::fs::remove_dir_all(&dir);
+    let base: &[&str] = &[
+        "--graph",
+        "so",
+        "--vertices",
+        "512",
+        "--parts",
+        "4",
+        "--threads",
+        "1",
+        "--steps",
+        "10",
+        "--repair-steps",
+        "3",
+        "--churn",
+        "uniform:0.05",
+        "--checkpoint",
+    ];
+    let mut first: Vec<&str> = vec!["dynamic"];
+    first.extend_from_slice(base);
+    first.extend_from_slice(&[dir.to_str().unwrap(), "--epochs", "2"]);
+    let (ok, stdout, stderr) = run(&first);
+    assert!(ok, "{stderr}\n{stdout}");
+    assert!(stdout.contains("cold partition"), "{stdout}");
+
+    // The final epoch is always snapshotted, so a resumed run with a
+    // larger budget replays the churn stream to epoch 2 and only
+    // executes epochs 2..4.
+    let mut second: Vec<&str> = vec!["dynamic"];
+    second.extend_from_slice(base);
+    second.extend_from_slice(&[dir.to_str().unwrap(), "--epochs", "4", "--resume"]);
+    let (ok, stdout, stderr) = run(&second);
+    assert!(ok, "{stderr}\n{stdout}");
+    assert!(stdout.contains("resumed from checkpoint"), "{stdout}");
+    assert!(!stdout.contains("cold partition"), "resume must skip the cold start: {stdout}");
+    assert!(!stdout.contains("epoch   1:"), "epochs before the snapshot replay: {stdout}");
+    assert!(stdout.contains("epoch   2:"), "{stdout}");
+    assert!(stdout.contains("epoch   3:"), "{stdout}");
+    assert!(stdout.contains("totals:"), "{stdout}");
+}
+
+#[test]
+fn ingest_mode_gates_dirty_edge_lists() {
+    let dir = std::env::temp_dir().join("revolver_cli_ingest");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("dirty.txt");
+    std::fs::write(&path, "0 1\n1 2\nthis line is garbage\n2 0\n").unwrap();
+
+    let (code, _, stderr) = run_code(&[
+        "partition", "--graph", path.to_str().unwrap(), "--parts", "2", "--steps", "3",
+    ]);
+    assert_eq!(code, 1, "strict ingest aborts on the malformed line: {stderr}");
+    assert!(stderr.contains("line 3"), "{stderr}");
+
+    let (ok, stdout, stderr) = run(&[
+        "partition",
+        "--graph",
+        path.to_str().unwrap(),
+        "--parts",
+        "2",
+        "--steps",
+        "3",
+        "--ingest",
+        "lenient",
+    ]);
+    assert!(ok, "lenient ingest skips the malformed line: {stderr}");
+    assert!(stdout.contains("local edges:"), "{stdout}");
+}
+
+#[test]
+fn dynamic_truncate_log_fault_drops_tail_batches() {
+    let dir = std::env::temp_dir().join("revolver_cli_truncate");
+    std::fs::create_dir_all(&dir).unwrap();
+    let log = dir.join("updates.log");
+    std::fs::write(&log, "d 0 1\ncommit\na 0 2\ncommit\nd 1 2\ncommit\na 1 3\ncommit\n")
+        .unwrap();
+    let (ok, stdout, stderr) = run(&[
+        "dynamic",
+        "--graph",
+        "so",
+        "--vertices",
+        "256",
+        "--parts",
+        "4",
+        "--threads",
+        "1",
+        "--steps",
+        "5",
+        "--update-log",
+        log.to_str().unwrap(),
+        "--faults",
+        "truncate@log:50%",
+    ]);
+    // 8 lines cut to 4 = two surviving commits = two epochs.
+    assert!(ok, "{stderr}\n{stdout}");
+    assert!(stdout.contains("epoch   1:"), "{stdout}");
+    assert!(!stdout.contains("epoch   2:"), "the truncated tail must be gone: {stdout}");
 }
 
 #[test]

@@ -1,0 +1,265 @@
+//! Seeded mutation fuzzing of every ingest surface (ISSUE 9 tentpole,
+//! hardened-ingest leg): edge-list text, update-log text, the `RVLB`
+//! binary graph format and the `RVCK` checkpoint format.
+//!
+//! Std-only by necessity (no fuzzer crates offline) and deterministic
+//! by design: each iteration derives a mutation from the repo's own
+//! xoshiro [`Rng`] seeded with the iteration index, so a failure
+//! reproduces from the printed seed alone. Mutations are the classic
+//! torn-input catalogue — bit flips, truncation, NUL / invalid-UTF-8
+//! splices, huge integer tokens, duplicated and deleted chunks.
+//!
+//! The contract under test:
+//!
+//! * parsers only ever return structured errors — no panic (asserted
+//!   via `catch_unwind`), no abort, no unbounded allocation;
+//! * lenient text ingest *always* returns `Ok` (a malformed line is
+//!   skipped, never fatal);
+//! * parsed graphs never mint phantom vertices: every edge endpoint
+//!   stays inside the id space the parser reports.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use revolver::config::IngestMode;
+use revolver::dynamic::read_update_log_named;
+use revolver::graph::io::{read_edge_list_named, save_binary};
+use revolver::util::rng::Rng;
+
+/// Mutations per corpus. The ISSUE 9 acceptance floor is 10k.
+const ITERS: u64 = 10_000;
+
+/// Apply one seeded mutation to `base`. Always changes something
+/// (possibly a no-op flip on pathological inputs, which is fine — the
+/// clean corpus must parse too).
+fn mutate(base: &[u8], rng: &mut Rng) -> Vec<u8> {
+    let mut buf = base.to_vec();
+    // 1-3 stacked mutations per iteration: single-site fuzzing misses
+    // interactions like "truncate, then flip a byte in the new tail".
+    for _ in 0..=rng.below(3) {
+        if buf.is_empty() {
+            buf = base.to_vec();
+        }
+        match rng.below(6) {
+            // Bit flips: 1-8 random bits anywhere.
+            0 => {
+                for _ in 0..=rng.below(8) {
+                    let i = rng.below_usize(buf.len());
+                    buf[i] ^= 1 << rng.below(8) as u8;
+                }
+            }
+            // Truncation at a random offset (torn write).
+            1 => {
+                buf.truncate(rng.below_usize(buf.len()));
+            }
+            // NUL / invalid-UTF-8 splices.
+            2 => {
+                let garbage: &[&[u8]] =
+                    &[&[0x00], &[0xC0, 0xAF], &[0xFF, 0xFE], &[0xED, 0xA0, 0x80]];
+                let g = garbage[rng.below_usize(garbage.len())];
+                let at = rng.below_usize(buf.len() + 1);
+                buf.splice(at..at, g.iter().copied());
+            }
+            // Huge integer tokens (u64 overflow, count bombs).
+            3 => {
+                let token: &[u8] = match rng.below(3) {
+                    0 => b" 99999999999999999999999999 ",
+                    1 => b" 18446744073709551616 ",
+                    _ => b" -1 ",
+                };
+                let at = rng.below_usize(buf.len() + 1);
+                buf.splice(at..at, token.iter().copied());
+            }
+            // Duplicate a random chunk (repeated region / double write).
+            4 => {
+                let a = rng.below_usize(buf.len());
+                let b = (a + 1 + rng.below_usize(64)).min(buf.len());
+                let chunk: Vec<u8> = buf[a..b].to_vec();
+                let at = rng.below_usize(buf.len() + 1);
+                buf.splice(at..at, chunk);
+            }
+            // Delete a random chunk (lost region).
+            _ => {
+                let a = rng.below_usize(buf.len());
+                let b = (a + 1 + rng.below_usize(64)).min(buf.len());
+                buf.drain(a..b);
+            }
+        }
+    }
+    buf
+}
+
+fn mode_for(seed: u64) -> IngestMode {
+    if seed % 2 == 0 {
+        IngestMode::Strict
+    } else {
+        IngestMode::Lenient
+    }
+}
+
+/// A small clean edge-list corpus: comments, blank lines, sparse ids.
+fn edge_list_corpus() -> Vec<u8> {
+    let mut text = String::from("# fuzz corpus\n% percent comments too\n\n");
+    let mut rng = Rng::new(11);
+    for i in 0..30u64 {
+        let s = rng.below(50);
+        let d = rng.below(50);
+        match i % 3 {
+            0 => text.push_str(&format!("{s} {d}\n")),
+            1 => text.push_str(&format!("{s}\t{d}\n")),
+            _ => text.push_str(&format!("  {s}   {d}  \n")),
+        }
+    }
+    text.into_bytes()
+}
+
+fn update_log_corpus() -> Vec<u8> {
+    let mut text = String::from("# update-log fuzz corpus\n");
+    let mut rng = Rng::new(13);
+    for batch in 0..6u64 {
+        for _ in 0..4 {
+            let u = rng.below(40);
+            let v = rng.below(40);
+            match rng.below(4) {
+                0 => text.push_str(&format!("a {u} {v}\n")),
+                1 => text.push_str(&format!("d {u} {v}\n")),
+                2 => text.push_str(&format!("av {}\n", 100 + batch)),
+                _ => text.push_str(&format!("dv {u}\n")),
+            }
+        }
+        text.push_str("commit\n");
+    }
+    text.into_bytes()
+}
+
+#[test]
+fn fuzz_edge_list_reader_never_panics() {
+    let corpus = edge_list_corpus();
+    for seed in 0..ITERS {
+        let mut rng = Rng::new(seed);
+        let input = mutate(&corpus, &mut rng);
+        let mode = mode_for(seed);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            read_edge_list_named(std::io::Cursor::new(input.clone()), "<fuzz>", mode)
+        }));
+        let parsed = match result {
+            Ok(r) => r,
+            Err(_) => panic!("edge-list reader panicked (seed {seed}, mode {mode:?})"),
+        };
+        match parsed {
+            Ok(g) => {
+                // No phantom vertices: the CSR's id space covers every
+                // edge endpoint it reports.
+                let n = g.num_vertices() as u32;
+                for (s, d) in g.edges() {
+                    assert!(s < n && d < n, "edge ({s},{d}) outside 0..{n} (seed {seed})");
+                }
+            }
+            Err(e) => {
+                assert!(
+                    mode == IngestMode::Strict,
+                    "lenient ingest must skip, not fail (seed {seed}): {e:#}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fuzz_update_log_reader_never_panics() {
+    let corpus = update_log_corpus();
+    for seed in 0..ITERS {
+        let mut rng = Rng::new(seed ^ 0x5EED_1062);
+        let input = mutate(&corpus, &mut rng);
+        let mode = mode_for(seed);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            read_update_log_named(std::io::Cursor::new(input.clone()), 64, "<fuzz>", mode)
+        }));
+        let parsed = match result {
+            Ok(r) => r,
+            Err(_) => panic!("update-log reader panicked (seed {seed}, mode {mode:?})"),
+        };
+        if let Err(e) = parsed {
+            assert!(
+                mode == IngestMode::Strict,
+                "lenient ingest must skip, not fail (seed {seed}): {e:#}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fuzz_binary_graph_loader_never_panics() {
+    // Clean corpus: a real RVLB file's bytes.
+    let g = revolver::graph::gen::generate_dataset(
+        revolver::graph::gen::Dataset::from_name("so").unwrap(),
+        128,
+        7,
+    )
+    .unwrap();
+    let dir = std::env::temp_dir().join("revolver_fuzz_rvlb");
+    std::fs::create_dir_all(&dir).unwrap();
+    let clean_path = dir.join("clean.bin");
+    save_binary(&g, &clean_path).unwrap();
+    let corpus = std::fs::read(&clean_path).unwrap();
+    let path = dir.join("mutant.bin");
+
+    for seed in 0..ITERS {
+        let mut rng = Rng::new(seed ^ 0xB1AB_10AD);
+        let input = mutate(&corpus, &mut rng);
+        std::fs::write(&path, &input).unwrap();
+        let result =
+            catch_unwind(AssertUnwindSafe(|| revolver::graph::io::load_binary(&path)));
+        let parsed = match result {
+            Ok(r) => r,
+            Err(_) => panic!("binary loader panicked (seed {seed})"),
+        };
+        if let Ok(g) = parsed {
+            let n = g.num_vertices() as u32;
+            for (s, d) in g.edges() {
+                assert!(s < n && d < n, "edge ({s},{d}) outside 0..{n} (seed {seed})");
+            }
+        }
+    }
+}
+
+#[test]
+fn fuzz_checkpoint_decoder_never_panics() {
+    use revolver::fault::checkpoint::{decode, encode};
+    use revolver::fault::{LaSlab, Snapshot};
+
+    // Two clean corpora: one per LA slab format (plus one slab-free).
+    let base = |la: Option<LaSlab>| Snapshot {
+        seed: 42,
+        step: 17,
+        epoch: 3,
+        k: 4,
+        labels: (0..96u32).map(|v| v % 4).collect(),
+        loads: vec![11, 7, 5, 3],
+        la,
+    };
+    let corpora: Vec<Vec<u8>> = vec![
+        encode(&base(None)),
+        encode(&base(Some(LaSlab::F32 { cols: 4, data: vec![0.25; 96 * 4] }))),
+        encode(&base(Some(LaSlab::Q16 { cols: 4, data: vec![16384; 96 * 4] }))),
+    ];
+
+    for seed in 0..ITERS {
+        let corpus = &corpora[(seed % corpora.len() as u64) as usize];
+        let mut rng = Rng::new(seed ^ 0xC4EC_4B01);
+        let input = mutate(corpus, &mut rng);
+        let result = catch_unwind(AssertUnwindSafe(|| decode(&input)));
+        let parsed = match result {
+            Ok(r) => r,
+            Err(_) => panic!("checkpoint decoder panicked (seed {seed})"),
+        };
+        if let Ok(snap) = parsed {
+            // A surviving decode must be internally consistent: the
+            // trailing checksum makes silent corruption astronomically
+            // unlikely, so anything that decodes looks like a snapshot.
+            assert_eq!(snap.loads.len(), snap.k as usize, "seed {seed}");
+            if let Some(la) = &snap.la {
+                assert_eq!(la.rows(), snap.labels.len(), "seed {seed}");
+            }
+        }
+    }
+}

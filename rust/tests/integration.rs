@@ -322,11 +322,11 @@ fn empty_frontier_halts_preconverged_run() {
     c.epsilon = 0.0;
     c.halt_window = u32::MAX;
 
-    let sp = revolver::partitioners::spinner::refine(&g, &c, init.clone());
+    let sp = revolver::partitioners::spinner::refine(&g, &c, init.clone()).unwrap();
     assert_eq!(sp.labels, init, "spinner must not disturb the converged cut");
     assert!(sp.trace.steps() <= 2, "spinner ran {} supersteps", sp.trace.steps());
 
-    let rv = revolver::partitioners::revolver::refine(&g, &c, init.clone());
+    let rv = revolver::partitioners::revolver::refine(&g, &c, init.clone()).unwrap();
     assert_eq!(rv.labels, init, "revolver must not disturb the converged cut");
     assert!(rv.trace.steps() <= 2, "revolver ran {} supersteps", rv.trace.steps());
 }
@@ -352,8 +352,8 @@ fn isolated_vertices_never_migrate_or_stay_active_under_frontier() {
 
     for algo in ["spinner", "revolver"] {
         let out = match algo {
-            "spinner" => revolver::partitioners::spinner::refine(&g, &c, init.clone()),
-            _ => revolver::partitioners::revolver::refine(&g, &c, init.clone()),
+            "spinner" => revolver::partitioners::spinner::refine(&g, &c, init.clone()).unwrap(),
+            _ => revolver::partitioners::revolver::refine(&g, &c, init.clone()).unwrap(),
         };
         for v in 4..12 {
             assert_eq!(
@@ -392,14 +392,14 @@ fn dynamic_repair_matches_restart_quality_with_fewer_evaluations() {
     c.threads = 1; // deterministic: zero-slack statistical margins
     c.repair_steps = repair;
 
-    let mut inc = IncrementalPartitioner::new(g, c.clone(), Refiner::Spinner);
+    let mut inc = IncrementalPartitioner::new(g, c.clone(), Refiner::Spinner).unwrap();
     let recipe = ChurnRecipe::Uniform { frac: 0.02 };
 
     let mut cold_evaluated = 0u64;
     let mut cold_final_le = 0.0f64;
     for e in 0..5u64 {
         let batch = recipe.generate(inc.current(), 1000 + e);
-        let stats = inc.epoch(&batch);
+        let stats = inc.epoch(&batch).unwrap();
         assert!(stats.applied > 0, "epoch {e}: churn must apply");
 
         // Cold restart on the identical evolved graph, same per-epoch
@@ -449,11 +449,11 @@ fn dynamic_arrivals_grow_partition_within_envelope() {
     let mut c = cfg(k, 40);
     c.threads = 1;
     c.repair_steps = 5;
-    let mut inc = IncrementalPartitioner::new(g, c, Refiner::Spinner);
+    let mut inc = IncrementalPartitioner::new(g, c, Refiner::Spinner).unwrap();
     let recipe = ChurnRecipe::Arrivals { count: 256, edges_per: 4 };
     for e in 0..3u64 {
         let batch = recipe.generate(inc.current(), 70 + e);
-        let stats = inc.epoch(&batch);
+        let stats = inc.epoch(&batch).unwrap();
         assert_eq!(stats.placed, 256, "epoch {e}");
     }
     assert_eq!(inc.current().num_vertices(), n0 + 3 * 256);

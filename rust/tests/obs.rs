@@ -189,11 +189,11 @@ fn dynamic_epochs_emit_epoch_events() {
     let rec = Arc::new(RunRecorder::with_sink(Box::new(SharedBuf(buf.clone()))));
     obs::install(rec.clone());
     let recipe: ChurnRecipe = "uniform:0.05".parse().unwrap();
-    let mut inc = IncrementalPartitioner::new(g, cfg, Refiner::Spinner);
+    let mut inc = IncrementalPartitioner::new(g, cfg, Refiner::Spinner).unwrap();
     let mut trace = RunTrace::default();
     for e in 0..2u32 {
         let batch = recipe.generate(inc.current(), 100 + e as u64);
-        let stats = inc.epoch(&batch);
+        let stats = inc.epoch(&batch).unwrap();
         inc.record_epoch(&mut trace, e, &stats);
     }
     obs::uninstall();

@@ -29,6 +29,8 @@ EVENT_SPEC = {
     "stream_pass": ["pass", "edges"],
     "ml_level": ["level", "vertices"],
     "epoch": ["epoch", "placed", "seeds", "evaluated", "repair_s"],
+    "fault": ["step"],
+    "checkpoint": ["step", "epoch"],
     "run_end": ["wall_s"],
 }
 

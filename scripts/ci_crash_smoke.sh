@@ -1,0 +1,153 @@
+#!/usr/bin/env bash
+# Crash/resume smoke: run the same seeded dynamic workload twice —
+# once uninterrupted as the reference, once SIGKILLed mid-run and then
+# resumed from its newest RVCK checkpoint — and require the resumed
+# run to land on the reference's quality:
+#
+#   |local_edges(resumed) - local_edges(reference)| <= 3% (relative)
+#   mnl(resumed) <= 1.10 x mnl(reference)
+#
+# kill -9 is deliberate: no atexit, no flush, no graceful shutdown —
+# durability must come entirely from the atomic tmp+rename checkpoint
+# writes. Mid-run progress is read from the live /healthz endpoint
+# (the PR-8 telemetry plane), not from buffered stdout. Requires
+# cargo, curl, python3.
+#
+#   scripts/ci_crash_smoke.sh [--vertices N] [--epochs N]
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+VERTICES=16384
+EPOCHS=20
+while [ $# -gt 0 ]; do
+    case "$1" in
+        --vertices) VERTICES="$2"; shift ;;
+        --epochs) EPOCHS="$2"; shift ;;
+        *) echo "unknown flag: $1" >&2; exit 2 ;;
+    esac
+    shift
+done
+
+WORK="$(mktemp -d)"
+RUN_PID=""
+cleanup() {
+    [ -n "$RUN_PID" ] && kill "$RUN_PID" 2>/dev/null || true
+    rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+# All three runs share the exact same workload: seeded churn over the
+# same surrogate graph, so batches replay bit-for-bit on resume.
+run_dynamic() {
+    (cd rust && cargo run --release --quiet -- dynamic \
+        --graph so --vertices "$VERTICES" --parts 8 --seed 42 \
+        --churn uniform:0.05 --epochs "$EPOCHS" --repair-steps 8 \
+        "$@")
+}
+
+(cd rust && cargo build --release --quiet)
+
+echo "== reference: uninterrupted run ==" >&2
+run_dynamic >"$WORK/ref.txt" 2>"$WORK/ref.err"
+grep '^epoch ' "$WORK/ref.txt" | tail -n 1 >&2
+
+echo "== victim: same run, checkpointed, killed -9 mid-flight ==" >&2
+run_dynamic --checkpoint "$WORK/ckpt" --checkpoint-every 2 \
+    --metrics-addr 127.0.0.1:0 \
+    >"$WORK/victim.txt" 2>"$WORK/victim.err" &
+RUN_PID=$!
+
+# The kernel-assigned telemetry port is echoed on stderr once bound.
+BASE=""
+for _ in $(seq 1 600); do
+    BASE="$(sed -n 's#^metrics: serving \(http://[^/]*\)/metrics$#\1#p' \
+        "$WORK/victim.err" | head -n 1)"
+    [ -n "$BASE" ] && break
+    if ! kill -0 "$RUN_PID" 2>/dev/null; then
+        echo "error: victim exited before announcing the metrics address" >&2
+        cat "$WORK/victim.err" >&2
+        exit 1
+    fi
+    sleep 0.05
+done
+[ -n "$BASE" ] || { echo "error: no 'metrics: serving' line after 30s" >&2; exit 1; }
+
+# Poll live /healthz progress until mid-run (epoch >= 5) AND at least
+# one epoch-cadence snapshot is durable, then yank with SIGKILL.
+MID_SEEN=0
+for _ in $(seq 1 600); do
+    EPOCH="$(curl -fsS --max-time 5 "$BASE/healthz" 2>/dev/null \
+        | python3 -c 'import json,sys; print(json.load(sys.stdin).get("epoch", 0))' \
+        2>/dev/null || echo 0)"
+    if [ "${EPOCH:-0}" -ge 5 ] && ls "$WORK/ckpt"/ckpt-*.rvck >/dev/null 2>&1; then
+        MID_SEEN=1
+        break
+    fi
+    if ! kill -0 "$RUN_PID" 2>/dev/null; then
+        echo "error: victim run finished before it could be killed;" \
+             "raise --epochs or --vertices" >&2
+        cat "$WORK/victim.err" >&2
+        exit 1
+    fi
+    sleep 0.05
+done
+if [ "$MID_SEEN" != 1 ]; then
+    echo "error: victim never reached epoch 5 with a durable checkpoint in 30s" >&2
+    cat "$WORK/victim.err" >&2
+    exit 1
+fi
+echo "== /healthz reports epoch $EPOCH; killing -9 ==" >&2
+kill -9 "$RUN_PID"
+wait "$RUN_PID" 2>/dev/null || true
+RUN_PID=""
+
+ls "$WORK/ckpt"/ckpt-*.rvck >/dev/null 2>&1 || {
+    echo "error: no checkpoint files survived the kill" >&2
+    exit 1
+}
+echo "== checkpoints on disk: $(ls "$WORK/ckpt" | tr '\n' ' ')==" >&2
+
+echo "== resume: finishing the victim's run from its checkpoint ==" >&2
+run_dynamic --checkpoint "$WORK/ckpt" --checkpoint-every 2 --resume \
+    >"$WORK/resumed.txt" 2>"$WORK/resumed.err"
+grep -q 'resumed from checkpoint' "$WORK/resumed.txt" || {
+    echo "error: resumed run did not pick up the checkpoint" >&2
+    cat "$WORK/resumed.txt" "$WORK/resumed.err" >&2
+    exit 1
+}
+grep '^epoch ' "$WORK/resumed.txt" | tail -n 1 >&2
+
+python3 - "$WORK/ref.txt" "$WORK/resumed.txt" <<'PY'
+import re, sys
+
+def final_quality(path):
+    """(local_edges, mnl) from the last per-epoch progress line."""
+    last = None
+    for line in open(path, encoding="utf-8"):
+        m = re.match(r"epoch\s+\d+: local=([0-9.]+) mnl=([0-9.]+)", line)
+        if m:
+            last = (float(m.group(1)), float(m.group(2)))
+    if last is None:
+        sys.exit(f"no epoch lines in {path}")
+    return last
+
+ref_local, ref_mnl = final_quality(sys.argv[1])
+res_local, res_mnl = final_quality(sys.argv[2])
+print(f"reference: local={ref_local:.4f} mnl={ref_mnl:.4f}")
+print(f"resumed:   local={res_local:.4f} mnl={res_mnl:.4f}")
+
+# 3% relative band on locality (floor the denominator so a degenerate
+# reference can't make the band vanish), 1.10x ceiling on imbalance.
+band = 0.03 * max(ref_local, 0.1)
+assert abs(res_local - ref_local) <= band, (
+    f"resumed local_edges {res_local:.4f} deviates from reference "
+    f"{ref_local:.4f} by more than 3%"
+)
+assert res_mnl <= 1.10 * ref_mnl, (
+    f"resumed mnl {res_mnl:.4f} exceeds 1.10x reference {ref_mnl:.4f}"
+)
+print("ok: resumed run converged to the reference quality")
+PY
+
+echo "ok: kill -9 + --resume round trip preserved run quality" >&2
