@@ -685,6 +685,37 @@ fn main() {
             rows.push(row);
         }
 
+        // diag_overhead: the learning-dynamics observatory priced the
+        // same way — a full RunRecorder installed both times, the same
+        // 5-step run with per-step tracing, `--diag` off vs on. The
+        // delta is the flow matrix, the frontier decisiveness reads,
+        // the oscillation scan, and the partition samples together.
+        for (mode, diag) in [("diag_off", false), ("diag_on", true)] {
+            let cfg = RevolverConfig {
+                parts: k8,
+                max_steps: 5,
+                halt_window: u32::MAX,
+                threads: 1,
+                seed: 3,
+                trace_every: 1,
+                diag,
+                ..Default::default()
+            };
+            let p = Revolver::new(cfg);
+            revolver::obs::install(std::sync::Arc::new(revolver::obs::RunRecorder::new()));
+            let r = bench(&format!("revolver 5 steps {mode}"), 1, 3, || {
+                p.partition(&og).labels.len()
+            });
+            revolver::obs::uninstall();
+            println!("{r}");
+            let mut row = micro_row(mode, &r);
+            if let Json::Obj(m) = &mut row {
+                m.insert("bench".to_string(), Json::Str("obs_overhead".to_string()));
+                m.insert("mode".to_string(), Json::Str(mode.to_string()));
+            }
+            rows.push(row);
+        }
+
         // obs_http: `/metrics` scrape latency under write load — a
         // populated recorder served live while writer threads keep
         // hammering the registry, timed end to end through a real TCP

@@ -383,6 +383,12 @@ pub struct RevolverConfig {
     /// (`--metrics-addr`); empty = off. Port 0 picks a free port — the
     /// bound address is echoed on stderr. Also installs a run recorder.
     pub metrics_addr: String,
+    /// Learning-dynamics observatory (`--diag`): per-step migration
+    /// flow matrix, per-partition gauges, LA decisiveness and
+    /// oscillation probes. Only active while a recorder is installed;
+    /// installs one itself when set. Off by default — the probes cost
+    /// one labels snapshot per step plus O(|frontier|·k) entropy work.
+    pub diag: bool,
     /// Ingest strictness for edge-list / update-log text readers
     /// (`--ingest`): strict aborts on the first malformed line,
     /// lenient skips-and-counts it with a line-numbered diagnostic.
@@ -436,6 +442,7 @@ impl Default for RevolverConfig {
             obs_log: String::new(),
             profile: false,
             metrics_addr: String::new(),
+            diag: false,
             ingest: IngestMode::Strict,
             checkpoint_dir: String::new(),
             checkpoint_every: 10,
@@ -578,6 +585,7 @@ impl RevolverConfig {
                 "obs_log" => cfg.obs_log = value.clone(),
                 "profile" => cfg.profile = value.parse().context("profile")?,
                 "metrics_addr" => cfg.metrics_addr = value.clone(),
+                "diag" => cfg.diag = value.parse().context("diag")?,
                 "ingest" => cfg.ingest = value.parse()?,
                 "checkpoint_dir" => cfg.checkpoint_dir = value.clone(),
                 "checkpoint_every" => {
@@ -698,15 +706,18 @@ mod tests {
         assert!("loud".parse::<Verbosity>().is_err());
         let c = RevolverConfig::from_toml_str(
             "verbosity = \"quiet\"\nobs_log = \"run.jsonl\"\nprofile = true\n\
-             metrics_addr = \"127.0.0.1:0\"\n",
+             metrics_addr = \"127.0.0.1:0\"\ndiag = true\n",
         )
         .unwrap();
         assert_eq!(c.verbosity, Verbosity::Quiet);
         assert_eq!(c.obs_log, "run.jsonl");
         assert!(c.profile);
         assert_eq!(c.metrics_addr, "127.0.0.1:0");
+        assert!(c.diag);
+        assert!(!RevolverConfig::default().diag);
         assert!(RevolverConfig::default().metrics_addr.is_empty());
         assert!(RevolverConfig::from_toml_str("profile = maybe\n").is_err());
+        assert!(RevolverConfig::from_toml_str("diag = sometimes\n").is_err());
     }
 
     #[test]

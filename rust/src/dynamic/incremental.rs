@@ -74,6 +74,14 @@ pub struct IncrementalPartitioner {
     total_repair_steps: u32,
     total_wall_s: f64,
     epochs_run: u64,
+    /// Learning-dynamics observatory (`cfg.diag`): the last epoch's
+    /// k×k label-diff flow cells (moves, mass), ready for
+    /// [`IncrementalPartitioner::record_epoch`] to emit. `None` when
+    /// diag is off or no epoch ran yet.
+    diag_flow: Option<(Vec<u64>, Vec<u64>)>,
+    /// Epoch-granularity 2-cycle detector over the full assignment.
+    diag_osc: crate::obs::diag::OscillationDetector,
+    diag_oscillating: u64,
 }
 
 impl IncrementalPartitioner {
@@ -121,6 +129,9 @@ impl IncrementalPartitioner {
             total_repair_steps: 0,
             total_wall_s: 0.0,
             epochs_run: 0,
+            diag_flow: None,
+            diag_osc: crate::obs::diag::OscillationDetector::new(),
+            diag_oscillating: 0,
         }
     }
 
@@ -179,6 +190,13 @@ impl IncrementalPartitioner {
             p.set_epoch(self.epochs_run);
         }
         let mut stats = EpochStats::default();
+        // Diag flow at the dynamic layer is an epoch-granularity label
+        // diff (placement + repair + rebalance combined), so the
+        // pre-epoch assignment is the baseline. Arrivals placed this
+        // epoch sit past the stashed length and are excluded — they
+        // arrive, they don't migrate.
+        let diag_on = crate::obs::enabled() && self.cfg.diag;
+        let pre_labels = if diag_on { Some(self.labels.clone()) } else { None };
 
         // 1. Mutate the overlay, collecting changed endpoints.
         let mut touched: Vec<VertexId> = Vec::new();
@@ -226,6 +244,11 @@ impl IncrementalPartitioner {
             // interleaved step-level snapshots would corrupt the
             // resume cursor ordering.
             rcfg.checkpoint_dir.clear();
+            // Same ownership split for diag: the epoch-level label
+            // diff below is the single flow accounting; the inner
+            // pass emitting per-step flow too would double-count
+            // every repair move.
+            rcfg.diag = false;
             let out = match self.refiner {
                 Refiner::Spinner => {
                     spinner::refine_seeded(g, &rcfg, self.labels.clone(), seeds)?
@@ -246,6 +269,21 @@ impl IncrementalPartitioner {
             let _s = crate::obs::span("rebalance");
             stats.rebalance_moves = rebalance(g, &mut self.labels, k, self.cfg.epsilon);
         }
+
+        self.diag_flow = pre_labels.map(|pre| {
+            let k = self.cfg.parts;
+            let mut moves = vec![0u64; k * k];
+            let mut mass = vec![0u64; k * k];
+            for v in 0..pre.len().min(self.labels.len()) {
+                let (from, to) = (pre[v] as usize, self.labels[v] as usize);
+                if from != to && from < k && to < k {
+                    moves[from * k + to] += 1;
+                    mass[from * k + to] += u64::from(g.load_mass(v as VertexId));
+                }
+            }
+            self.diag_oscillating = self.diag_osc.observe(&self.labels);
+            (moves, mass)
+        });
 
         self.total_evaluated += stats.evaluated;
         self.total_repair_steps += stats.repair_steps;
@@ -290,6 +328,61 @@ impl IncrementalPartitioner {
                 ("repair_s", stats.repair_wall_s),
             ],
         );
+        // Observatory lines at epoch granularity: `step` carries the
+        // epoch index (the extra `epoch` field disambiguates them from
+        // an engine run's per-step lines in the same log).
+        if let Some((moves, mass)) = &self.diag_flow {
+            let k = self.cfg.parts;
+            for from in 0..k {
+                for to in 0..k {
+                    let m = moves[from * k + to];
+                    if m != 0 {
+                        crate::obs::event(
+                            "flow",
+                            &[
+                                ("step", epoch as f64),
+                                ("epoch", epoch as f64),
+                                ("from", from as f64),
+                                ("to", to as f64),
+                                ("moves", m as f64),
+                                ("mass", mass[from * k + to] as f64),
+                            ],
+                        );
+                    }
+                }
+            }
+            let g = self.current();
+            let samples = crate::obs::diag::partition_samples(g, &self.labels, k);
+            for (p, s) in samples.iter().enumerate() {
+                crate::obs::event(
+                    "partition",
+                    &[
+                        ("step", epoch as f64),
+                        ("part", p as f64),
+                        ("load", s.load as f64),
+                        ("boundary", s.boundary as f64),
+                        ("local_frac", s.local_frac),
+                    ],
+                );
+            }
+            crate::obs::event(
+                "diag",
+                &[
+                    ("step", epoch as f64),
+                    ("epoch", epoch as f64),
+                    ("oscillating", self.diag_oscillating as f64),
+                ],
+            );
+            crate::obs::diag_update(&crate::obs::diag::DiagUpdate {
+                step: epoch as u64,
+                k,
+                flow_moves: Some(moves.clone()),
+                flow_mass: Some(mass.clone()),
+                partitions: Some(samples),
+                oscillating: Some(self.diag_oscillating),
+                ..Default::default()
+            });
+        }
     }
 
     /// Assign every not-yet-labelled vertex (arrivals, including ids

@@ -213,6 +213,10 @@ pub struct StepCtx<'a> {
     /// next-step frontier, with the monotone stamps retained as the
     /// correctness oracle (debug builds re-scan and compare).
     wake_sink: Option<&'a RefCell<Vec<VertexId>>>,
+    /// k×k migration flow accumulator (`--diag` only; `None` = diag
+    /// off, the default — [`StepCtx::migrate`] stays branch-plus-load
+    /// on the disabled path).
+    flow: Option<&'a crate::obs::diag::FlowMatrix>,
 }
 
 impl StepCtx<'_> {
@@ -260,9 +264,17 @@ impl StepCtx<'_> {
     /// Migrate `v` to `to` with load mass `mass` (see
     /// [`PartitionState::migrate`]). An actual move is a wake event for
     /// `v` and its undirected neighbourhood. Returns the previous label.
+    ///
+    /// Under `--diag` every call lands in the flow matrix — including
+    /// degenerate `from == to` calls — so the matrix's cell total
+    /// equals the programs' per-call `migrations` counters exactly
+    /// (the row-sum equality `tests/diag.rs` pins).
     #[inline]
     pub fn migrate(&self, v: VertexId, to: u32, mass: u32) -> u32 {
         let from = self.state.migrate(v, to, mass);
+        if let Some(fm) = self.flow {
+            fm.record(from, to, mass as u64);
+        }
         if from != to {
             self.wake_neighborhood(v);
         }
@@ -389,6 +401,16 @@ pub trait VertexProgram: Sync {
     fn la_checkpoint(&self) -> Option<crate::fault::LaSlab> {
         None
     }
+
+    /// Aggregate decisiveness of the program's learning state over
+    /// `verts` (the step's frontier), for the `--diag` observatory.
+    /// Called on the coordinator while workers are parked at W1 — the
+    /// same quiescence window as [`VertexProgram::la_checkpoint`], so
+    /// reading shared learning state needs no extra coordination.
+    /// Programs without probability rows return `None` (the default).
+    fn la_decisiveness(&self, _verts: &[VertexId]) -> Option<crate::obs::diag::Decisiveness> {
+        None
+    }
 }
 
 /// Build the full-graph chunk layout `cfg` asks for.
@@ -499,6 +521,19 @@ pub fn run_with_frontier<P: VertexProgram>(
     let n = g.num_vertices();
     let sync = program.execution() == ExecutionModel::Synchronous;
     let frontier_on = cfg.frontier == Frontier::On;
+    // Learning-dynamics observatory (`--diag`): flow matrix, LA
+    // decisiveness, oscillation detection, per-partition samples. All
+    // of it hangs off this one captured bool, so the default path
+    // (diag off) allocates nothing and emits none of the diag events.
+    let diag_on = obs_on && cfg.diag;
+    let flow = diag_on.then(|| crate::obs::diag::FlowMatrix::new(k));
+    let mut osc = diag_on.then(crate::obs::diag::OscillationDetector::new);
+    // Why the run's step loop ended, for the terminal `diag` event:
+    // 1 = converged (halting window), 2 = empty frontier,
+    // 3 = step budget exhausted, 4 = contained worker panic.
+    let mut halt_code = 3u32;
+    let mut last_oscillating = 0u64;
+    let mut last_part_sample_step: Option<u32> = None;
 
     let state = PartitionState::new(g, k, cfg.epsilon, init);
     // Worker count: both full-graph chunk constructors produce exactly
@@ -572,8 +607,11 @@ pub fn run_with_frontier<P: VertexProgram>(
     let snap_slot: Mutex<Arc<StepSnapshots>> = Mutex::new(Arc::new(StepSnapshots::default()));
     let a_slot: Mutex<Option<Arc<P::PhaseA>>> = Mutex::new(None);
     let b_slot: Mutex<Option<Arc<P::PhaseB>>> = Mutex::new(None);
-    // Worker → coordinator aggregates (one message per worker per step).
-    let (stats_tx, stats_rx) = mpsc::channel::<(usize, StepStats)>();
+    // Worker → coordinator aggregates (one message per worker per
+    // step). The third element is the worker's busy seconds — the raw
+    // sample behind the `engine_worker_skew` gauge (0.0 when obs is
+    // off: the clocks are never read).
+    let (stats_tx, stats_rx) = mpsc::channel::<(usize, StepStats, f64)>();
     // Worker → coordinator wake worklists: exactly one message per
     // worker on recording steps, none otherwise.
     let (wake_tx, wake_rx) = mpsc::channel::<Vec<VertexId>>();
@@ -619,6 +657,7 @@ pub fn run_with_frontier<P: VertexProgram>(
             let stats_tx = stats_tx.clone();
             let wake_tx = wake_tx.clone();
             let base_rng = base_rng.clone();
+            let flow_ref = flow.as_ref();
             // Deterministic fault injection: `panic@step:N` arms
             // worker 0 to panic inside phase A of superstep N,
             // exercising exactly the containment path a real bug would.
@@ -674,6 +713,7 @@ pub fn run_with_frontier<P: VertexProgram>(
                         sync,
                         stamps: stamps_ref,
                         wake_sink: if plan.record { Some(&wake_buf) } else { None },
+                        flow: flow_ref,
                     };
                     let mut rng = base_rng.fork(step * 2 * t as u64 + c as u64);
                     let t_a = obs_on.then(Stopwatch::start);
@@ -719,14 +759,15 @@ pub fn run_with_frontier<P: VertexProgram>(
                     };
                     let mut stats = stats_a.merged(stats_b);
                     stats.evaluated = work.len() as u64;
+                    // Per-worker busy time: the straggler / utilization
+                    // signal behind degree-balanced scheduling. 0.0
+                    // with obs off (both stopwatches are `None` — no
+                    // clock is ever read on the disabled path).
+                    let busy_s = busy_a + t_b.map_or(0.0, |w| w.elapsed_s());
                     if obs_on {
-                        // Per-worker busy time: the straggler /
-                        // utilization signal behind degree-balanced
-                        // scheduling (max/median across workers).
-                        let busy_s = busy_a + t_b.map_or(0.0, |w| w.elapsed_s());
                         crate::obs::observe("engine_worker_busy_us", (busy_s * 1e6) as u64);
                     }
-                    stats_tx.send((c, stats)).expect("coordinator alive");
+                    stats_tx.send((c, stats, busy_s)).expect("coordinator alive");
                     if plan.record {
                         wake_tx
                             .send(std::mem::take(&mut *wake_buf.borrow_mut()))
@@ -795,6 +836,7 @@ pub fn run_with_frontier<P: VertexProgram>(
                     // construction, so the run is converged — halt
                     // without executing the step.
                     trace.converged_at = Some(executed_steps.saturating_sub(1));
+                    halt_code = 2;
                     break;
                 }
                 // Record wakes whenever the frontier sits below the
@@ -831,6 +873,17 @@ pub fn run_with_frontier<P: VertexProgram>(
                     published: published.iter().map(|p| p.load(Ordering::Relaxed)).collect(),
                 });
             }
+            // LA decisiveness over this step's work list (`--diag`):
+            // workers are parked at W1, so the program's shared
+            // learning state is quiescent (same argument as
+            // `la_checkpoint`). O(|frontier| · k) — proportional to
+            // the phase work the step already does.
+            let decisiveness = if diag_on {
+                let plan = plan_slot.lock().unwrap().clone();
+                program.la_decisiveness(&plan.verts)
+            } else {
+                None
+            };
             *a_slot.lock().unwrap() = Some(Arc::new(program.prepare_phase_a(g, &state, step)));
             // Coordinator-clock phase segments: consecutive cuts tile
             // the step exactly, so the profile tree's engine children
@@ -863,9 +916,11 @@ pub fn run_with_frontier<P: VertexProgram>(
             // Deterministic reduction: fill per-worker slots, then fold
             // in chunk order (f64 addition order is fixed run-to-run).
             let mut parts = vec![StepStats::default(); t];
+            let mut busy = vec![0.0f64; t];
             for _ in 0..t {
-                let (c, s) = stats_rx.recv().expect("worker alive");
+                let (c, s, b) = stats_rx.recv().expect("worker alive");
                 parts[c] = s;
+                busy[c] = b;
             }
             let totals = parts
                 .into_iter()
@@ -883,6 +938,10 @@ pub fn run_with_frontier<P: VertexProgram>(
                 crate::obs::progress().set_step(step as u64);
                 crate::obs::observe("engine_frontier_size", totals.evaluated);
                 crate::obs::gauge_set("engine_mean_score", mean_score);
+                crate::obs::gauge_set(
+                    "engine_worker_skew",
+                    crate::obs::diag::worker_skew(&busy),
+                );
                 crate::obs::event(
                     "step",
                     &[
@@ -909,11 +968,92 @@ pub fn run_with_frontier<P: VertexProgram>(
             }
             seg.cut("reduce"); // worklist merge + stats fold + trace
 
+            if diag_on {
+                // Post-W3 quiescence: workers are parked ahead of the
+                // next W1, so labels/loads are stable — the same window
+                // the step-cadence checkpoint below relies on.
+                let dlabels = state.labels_snapshot();
+                last_oscillating = osc.as_mut().map_or(0, |o| o.observe(&dlabels));
+                let mut upd = crate::obs::diag::DiagUpdate {
+                    step: step as u64,
+                    k,
+                    oscillating: Some(last_oscillating),
+                    ..Default::default()
+                };
+                if let Some(fm) = flow.as_ref() {
+                    // Swap-to-zero drain: the matrix is empty again
+                    // before workers resume, so each step's cells are
+                    // disjoint and row sums add up to the run's
+                    // migration counters exactly.
+                    let (moves, mass) = fm.drain();
+                    for from in 0..k {
+                        for to in 0..k {
+                            let m = moves[from * k + to];
+                            if m != 0 {
+                                crate::obs::event(
+                                    "flow",
+                                    &[
+                                        ("step", step as f64),
+                                        ("from", from as f64),
+                                        ("to", to as f64),
+                                        ("moves", m as f64),
+                                        ("mass", mass[from * k + to] as f64),
+                                    ],
+                                );
+                            }
+                        }
+                    }
+                    upd.flow_moves = Some(moves);
+                    upd.flow_mass = Some(mass);
+                }
+                if cfg.trace_every > 0 && step % cfg.trace_every == 0 {
+                    let samples = crate::obs::diag::partition_samples(g, &dlabels, k);
+                    for (p, s) in samples.iter().enumerate() {
+                        crate::obs::event(
+                            "partition",
+                            &[
+                                ("step", step as f64),
+                                ("part", p as f64),
+                                ("load", s.load as f64),
+                                ("boundary", s.boundary as f64),
+                                ("local_frac", s.local_frac),
+                            ],
+                        );
+                    }
+                    upd.partitions = Some(samples);
+                    last_part_sample_step = Some(step);
+                }
+                let (maxp_mean, entropy_mean) = decisiveness
+                    .map_or((f64::NAN, f64::NAN), |d| (d.maxp_mean(), d.entropy_mean()));
+                if maxp_mean.is_finite() {
+                    crate::obs::gauge_set("la_maxp_mean", maxp_mean);
+                    crate::obs::gauge_set("la_entropy_mean", entropy_mean);
+                    upd.maxp_mean = Some(maxp_mean);
+                    upd.entropy_mean = Some(entropy_mean);
+                }
+                crate::obs::gauge_set("la_oscillating_vertices", last_oscillating as f64);
+                // Non-finite means are dropped by the event renderer,
+                // so an LP program (no probability rows) emits a diag
+                // line without them.
+                crate::obs::event(
+                    "diag",
+                    &[
+                        ("step", step as f64),
+                        ("oscillating", last_oscillating as f64),
+                        ("frontier", totals.evaluated as f64),
+                        ("maxp_mean", maxp_mean),
+                        ("entropy_mean", entropy_mean),
+                    ],
+                );
+                crate::obs::diag_update(&upd);
+            }
+
             // Containment: a poisoned step's aggregates are garbage and
             // its state may be mid-migration — stop the run through the
             // normal shutdown (workers are parked at W1 by the time the
             // barrier below releases them into the stop check).
             if poisoned.load(Ordering::Acquire) {
+                halt_code = 4;
                 break;
             }
 
@@ -946,6 +1086,7 @@ pub fn run_with_frontier<P: VertexProgram>(
 
             if detector.observe(mean_score) {
                 trace.converged_at = Some(step);
+                halt_code = 1;
                 break;
             }
         }
@@ -988,6 +1129,40 @@ pub fn run_with_frontier<P: VertexProgram>(
     trace.chunk_reuses = chunk_reuses;
     trace.wall_time_s = sw.elapsed_s();
     seg.cut("finish"); // scope teardown + terminal trace point
+    if diag_on {
+        // Terminal partition sample (mirrors the terminal trace point:
+        // with a sparse cadence the loop's last sample can sit early),
+        // then a final diag line carrying the halt attribution.
+        if last_part_sample_step != Some(final_step) {
+            let samples = crate::obs::diag::partition_samples(g, &labels, k);
+            for (p, s) in samples.iter().enumerate() {
+                crate::obs::event(
+                    "partition",
+                    &[
+                        ("step", final_step as f64),
+                        ("part", p as f64),
+                        ("load", s.load as f64),
+                        ("boundary", s.boundary as f64),
+                        ("local_frac", s.local_frac),
+                    ],
+                );
+            }
+            crate::obs::diag_update(&crate::obs::diag::DiagUpdate {
+                step: final_step as u64,
+                k,
+                partitions: Some(samples),
+                ..Default::default()
+            });
+        }
+        crate::obs::event(
+            "diag",
+            &[
+                ("step", final_step as f64),
+                ("oscillating", last_oscillating as f64),
+                ("halt", halt_code as f64),
+            ],
+        );
+    }
     if obs_on {
         crate::obs::counter_add("engine_runs", 1);
         crate::obs::counter_add("engine_steps", executed_steps as u64);

@@ -10,6 +10,7 @@
 //!   stats        Table-I statistics for the surrogate datasets
 //!   generate     materialize a surrogate dataset to disk
 //!   info         toolchain / artifact diagnostics
+//!   report       render a text report from an --obs-log JSONL file
 //!
 //! Examples:
 //!   revolver partition --graph lj --vertices 16384 --algorithm revolver --parts 8
@@ -100,6 +101,7 @@ fn run() -> Result<(), CliError> {
         Some("stats") => cmd_stats(args),
         Some("generate") => cmd_generate(args),
         Some("info") => cmd_info(args),
+        Some("report") => cmd_report(args),
         Some(other) => {
             Err(CliError::usage(anyhow!("unknown subcommand {other:?}\n{}", usage())))
         }
@@ -122,7 +124,7 @@ fn usage() -> String {
 }
 
 const USAGE_BODY: &str =
-    "usage: revolver <partition|sweep|convergence|stream|dynamic|stats|generate|info> [flags]
+    "usage: revolver <partition|sweep|convergence|stream|dynamic|stats|generate|info|report> [flags]
   common flags:
     --graph <wiki|uk|usa|so|lj|en|ok|hlwd|eu|path/to/edges.txt>
     --vertices N          surrogate scale (default 16384)
@@ -157,8 +159,12 @@ const USAGE_BODY: &str =
     --obs-log file.jsonl  stream instrumentation events as JSONL
     --profile             print the hierarchical span timing tree after the run
     --metrics-addr H:P    serve live telemetry for the run's lifetime:
-                          /metrics /healthz /profile /events?since=N
+                          /metrics /healthz /profile /events?since=N /state
                           (port 0 picks a free port, echoed on stderr)
+    --diag                learning-dynamics observatory: migration flow
+                          matrix, per-partition gauges, LA decisiveness
+                          and oscillation probes (adds flow/partition/
+                          diag events; installs a recorder by itself)
     --ingest <strict|lenient>  text-reader strictness: strict aborts on
                           the first malformed line, lenient skips and
                           counts it with a line-numbered diagnostic
@@ -183,6 +189,8 @@ const USAGE_TAIL: &str =
               [--algorithm <spinner|revolver>] [--out trace.csv]
   stats:      --all | --graph g
   generate:   --graph g --out file [--format txt|bin]
+  report:     --obs-log run.jsonl [--partial]   (text report: flow
+              matrix, partition trajectories, halt attribution)
   exit codes: 0 ok | 1 runtime failure | 2 usage/config error
               | 3 contained worker panic";
 
@@ -244,6 +252,7 @@ fn config_from(args: &mut Args) -> Result<RevolverConfig> {
     if let Some(addr) = args.get("metrics-addr") {
         cfg.metrics_addr = addr;
     }
+    cfg.diag = cfg.diag || args.get_bool("diag");
     cfg.ingest = args.get_or("ingest", cfg.ingest)?;
     if let Some(dir) = args.get("checkpoint") {
         cfg.checkpoint_dir = dir;
@@ -279,7 +288,7 @@ fn obs_setup(cfg: &RevolverConfig) -> Result<ObsSession> {
         Verbosity::Info => Level::Info,
         Verbosity::Debug => Level::Debug,
     });
-    if cfg.obs_log.is_empty() && !cfg.profile && cfg.metrics_addr.is_empty() {
+    if cfg.obs_log.is_empty() && !cfg.profile && cfg.metrics_addr.is_empty() && !cfg.diag {
         return Ok(ObsSession { rec: None, server: None, profile: false });
     }
     let rec = if cfg.obs_log.is_empty() {
@@ -943,6 +952,23 @@ fn cmd_generate(mut args: Args) -> Result<(), CliError> {
         with_commas(g.num_vertices() as u64),
         with_commas(g.num_edges() as u64)
     );
+    Ok(())
+}
+
+/// `report`: render a text report from an `--obs-log` JSONL file —
+/// flow matrix, per-partition trajectories, convergence attribution.
+/// `--partial` accepts the prefix a killed run left behind.
+fn cmd_report(mut args: Args) -> Result<(), CliError> {
+    let path = args
+        .get("obs-log")
+        .filter(|p| !p.is_empty())
+        .ok_or_else(|| CliError::usage(anyhow!("report requires --obs-log <file.jsonl>")))?;
+    let partial = args.get_bool("partial");
+    args.finish()?;
+    let text = std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?;
+    let report =
+        revolver::obs::report::render_report(&text, partial).map_err(|e| anyhow!("{path}: {e}"))?;
+    print!("{report}");
     Ok(())
 }
 

@@ -1,0 +1,479 @@
+//! Learning-dynamics diagnostics (the `--diag` observatory).
+//!
+//! The rest of `obs` watches the *machinery* (spans, counters, worker
+//! time); this module watches the *learning dynamics* the paper's
+//! claims are actually about — who exchanges vertices with whom, how
+//! decided the LA rows are, and why a run stopped:
+//!
+//! * [`FlowMatrix`] — a k×k matrix of u64 atomics recording every
+//!   [`StepCtx::migrate`](crate::engine::StepCtx::migrate) call as a
+//!   `from → to` cell (move count + load mass). Workers add with
+//!   relaxed `fetch_add` during phase B; the coordinator drains with
+//!   swap-to-zero between W3 and the next W1, when every worker is
+//!   parked — the same quiescence window the checkpointer uses — so
+//!   per-step cells are exact, and row sums equal the programs'
+//!   migration counters because both increment once per call.
+//! * [`partition_samples`] — per-partition load / boundary-vertex /
+//!   local-edge-fraction gauges, sampled at trace cadence.
+//! * [`Decisiveness`] — aggregate max-probability and entropy over the
+//!   LA rows of the step's frontier (computed by
+//!   `VertexProgram::la_decisiveness`, coordinator-side, pre-W1).
+//! * [`OscillationDetector`] — vertices whose label 2-cycles
+//!   (`A → B → A`) across a 3-step sliding window, the classic
+//!   thrashing signature of an undecided LA.
+//! * [`worker_skew`] — max/mean of per-worker busy time, the one-number
+//!   scheduling-imbalance gauge.
+//! * [`DiagStore`] — the recorder-side cumulative snapshot behind the
+//!   `/state` endpoint and the labelled Prometheus families.
+//!
+//! Everything here is gated twice: behind the process-global
+//! [`enabled`](crate::obs::enabled) check *and* the `--diag` config
+//! knob, so the default path (diag off) emits none of the new events
+//! and the disabled path stays bit-identical (`tests/obs.rs`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::graph::Graph;
+use crate::Label;
+
+/// k×k migration flow accumulator: cell `(from, to)` counts the
+/// migrate calls (and their total load mass) that moved a vertex from
+/// partition `from` to partition `to` since the last [`drain`].
+///
+/// Every [`StepCtx::migrate`](crate::engine::StepCtx::migrate) call is
+/// recorded — including degenerate `from == to` calls — so `Σ cells`
+/// equals the engine's `migrations` counter exactly (the programs
+/// increment it once per call too).
+///
+/// [`drain`]: FlowMatrix::drain
+pub struct FlowMatrix {
+    k: usize,
+    moves: Vec<AtomicU64>,
+    mass: Vec<AtomicU64>,
+}
+
+impl FlowMatrix {
+    pub fn new(k: usize) -> FlowMatrix {
+        FlowMatrix {
+            k,
+            moves: (0..k * k).map(|_| AtomicU64::new(0)).collect(),
+            mass: (0..k * k).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Record one migration `from → to` carrying `mass`. Relaxed adds:
+    /// cells are independent monotone counters, merged only at the
+    /// drain point where no writer is live.
+    #[inline]
+    pub fn record(&self, from: u32, to: u32, mass: u64) {
+        let i = from as usize * self.k + to as usize;
+        self.moves[i].fetch_add(1, Ordering::Relaxed);
+        self.mass[i].fetch_add(mass, Ordering::Relaxed);
+    }
+
+    /// Take the accumulated `(moves, mass)` matrices, resetting every
+    /// cell to zero. Must only be called while workers are quiescent
+    /// (coordinator, between W3 and the next W1).
+    pub fn drain(&self) -> (Vec<u64>, Vec<u64>) {
+        let moves = self.moves.iter().map(|c| c.swap(0, Ordering::Relaxed)).collect();
+        let mass = self.mass.iter().map(|c| c.swap(0, Ordering::Relaxed)).collect();
+        (moves, mass)
+    }
+}
+
+/// Total off-diagonal moves of a k×k cell matrix — the churn summary
+/// (diagonal cells are denied/degenerate moves that changed nothing).
+pub fn churn(moves: &[u64], k: usize) -> u64 {
+    debug_assert_eq!(moves.len(), k * k);
+    let mut total = 0u64;
+    for from in 0..k {
+        for to in 0..k {
+            if from != to {
+                total += moves[from * k + to];
+            }
+        }
+    }
+    total
+}
+
+/// Per-partition net mass flow (inflow − outflow) of a k×k mass
+/// matrix: positive = the partition grew, negative = it shed load.
+/// Sums to zero over all partitions.
+pub fn net_flow(mass: &[u64], k: usize) -> Vec<i64> {
+    debug_assert_eq!(mass.len(), k * k);
+    let mut net = vec![0i64; k];
+    for from in 0..k {
+        for to in 0..k {
+            if from != to {
+                let m = mass[from * k + to] as i64;
+                net[to] += m;
+                net[from] -= m;
+            }
+        }
+    }
+    net
+}
+
+/// Aggregate LA decisiveness over a set of probability rows: how
+/// peaked the per-vertex action distributions are. `maxp → 1` and
+/// `entropy → 0` as the automata converge.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Decisiveness {
+    /// Rows measured (the frontier size at the sampling step).
+    pub rows: u64,
+    /// Σ over rows of `max_a p(a)`.
+    pub maxp_sum: f64,
+    /// Σ over rows of `−Σ_a p(a) ln p(a)` (nats).
+    pub entropy_sum: f64,
+}
+
+impl Decisiveness {
+    /// Mean max-probability per row (NaN when no rows were measured —
+    /// the event renderer drops non-finite fields).
+    pub fn maxp_mean(&self) -> f64 {
+        if self.rows == 0 {
+            f64::NAN
+        } else {
+            self.maxp_sum / self.rows as f64
+        }
+    }
+
+    /// Mean row entropy in nats (NaN when no rows were measured).
+    pub fn entropy_mean(&self) -> f64 {
+        if self.rows == 0 {
+            f64::NAN
+        } else {
+            self.entropy_sum / self.rows as f64
+        }
+    }
+}
+
+/// One partition's health sample at a trace-cadence step.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PartSample {
+    /// Partition load in [`Graph::load_mass`] units (Σ = |E| on plain
+    /// graphs) — the same units the capacity gate enforces.
+    pub load: u64,
+    /// Vertices with at least one undirected neighbour in another
+    /// partition (the communication surface).
+    pub boundary: u64,
+    /// Fraction of the partition's out-edges staying internal (1.0 for
+    /// an empty partition — nothing is cut).
+    pub local_frac: f64,
+}
+
+/// One O(|E|) pass producing every partition's [`PartSample`].
+pub fn partition_samples(g: &Graph, labels: &[Label], k: usize) -> Vec<PartSample> {
+    debug_assert_eq!(labels.len(), g.num_vertices());
+    let mut out = vec![PartSample::default(); k];
+    let mut out_edges = vec![0u64; k];
+    let mut local = vec![0u64; k];
+    for v in 0..g.num_vertices() {
+        let l = labels[v] as usize;
+        debug_assert!(l < k, "label {l} out of range {k}");
+        out[l].load += g.load_mass(v as u32) as u64;
+        for &u in g.out_neighbors(v as u32) {
+            out_edges[l] += 1;
+            if labels[u as usize] as usize == l {
+                local[l] += 1;
+            }
+        }
+        if g.neighbors(v as u32).iter().any(|&u| labels[u as usize] as usize != l) {
+            out[l].boundary += 1;
+        }
+    }
+    for l in 0..k {
+        out[l].local_frac =
+            if out_edges[l] > 0 { local[l] as f64 / out_edges[l] as f64 } else { 1.0 };
+    }
+    out
+}
+
+/// Scheduling imbalance: max/mean of per-worker busy times. 1.0 is a
+/// perfectly balanced step; also 1.0 for degenerate inputs (no
+/// workers, or an all-idle step where the ratio is meaningless).
+pub fn worker_skew(busy: &[f64]) -> f64 {
+    if busy.is_empty() {
+        return 1.0;
+    }
+    let max = busy.iter().cloned().fold(0.0f64, f64::max);
+    let mean = busy.iter().sum::<f64>() / busy.len() as f64;
+    if mean > 0.0 {
+        max / mean
+    } else {
+        1.0
+    }
+}
+
+/// Label 2-cycle detector over a 3-observation sliding window: vertex
+/// `v` oscillates at observation `t` when `label_t(v) == label_{t-2}(v)
+/// != label_{t-1}(v)` — it went somewhere and came straight back, the
+/// thrashing signature of an undecided LA row (or two vertices swapping
+/// places across a cut edge forever).
+#[derive(Default)]
+pub struct OscillationDetector {
+    prev: Vec<Label>,
+    prev2: Vec<Label>,
+    seen: u32,
+}
+
+impl OscillationDetector {
+    pub fn new() -> OscillationDetector {
+        OscillationDetector::default()
+    }
+
+    /// Feed one label snapshot; returns the number of vertices that
+    /// 2-cycled at this observation (0 until the window is primed, and
+    /// 0 when |V| changed — dynamic epochs grow the graph, making the
+    /// window incomparable).
+    pub fn observe(&mut self, labels: &[Label]) -> u64 {
+        let count = if self.seen >= 2
+            && self.prev.len() == labels.len()
+            && self.prev2.len() == labels.len()
+        {
+            labels
+                .iter()
+                .zip(self.prev.iter())
+                .zip(self.prev2.iter())
+                .filter(|((cur, prev), prev2)| cur == prev2 && cur != prev)
+                .count() as u64
+        } else {
+            0
+        };
+        // Slide the window, reusing the oldest buffer's allocation.
+        std::mem::swap(&mut self.prev2, &mut self.prev);
+        self.prev.clear();
+        self.prev.extend_from_slice(labels);
+        self.seen = self.seen.saturating_add(1);
+        count
+    }
+}
+
+/// One step's (or epoch's) diagnostics batch, handed to
+/// [`Recorder::diag_update`](crate::obs::Recorder::diag_update).
+/// `None` fields were not measured this step (e.g. partition samples
+/// off trace cadence, decisiveness from a program without LA rows).
+#[derive(Debug, Clone, Default)]
+pub struct DiagUpdate {
+    pub step: u64,
+    pub k: usize,
+    /// This step's k×k move-count cells (row-major `from * k + to`).
+    pub flow_moves: Option<Vec<u64>>,
+    /// This step's k×k load-mass cells.
+    pub flow_mass: Option<Vec<u64>>,
+    pub partitions: Option<Vec<PartSample>>,
+    pub oscillating: Option<u64>,
+    pub maxp_mean: Option<f64>,
+    pub entropy_mean: Option<f64>,
+}
+
+/// Point-in-time copy of a [`DiagStore`]: cumulative flow matrices
+/// plus the latest value of every sampled series.
+#[derive(Debug, Clone, Default)]
+pub struct DiagSnapshot {
+    pub step: u64,
+    pub k: usize,
+    pub flow_moves: Vec<u64>,
+    pub flow_mass: Vec<u64>,
+    pub partitions: Vec<PartSample>,
+    pub oscillating: u64,
+    pub maxp_mean: f64,
+    pub entropy_mean: f64,
+}
+
+/// Recorder-side diagnostics state: flow cells accumulate across
+/// steps, everything else keeps its last sample. Mutex'd — updates
+/// arrive once per step from the coordinator, reads are rare `/state`
+/// and `/metrics` scrapes, so the lock is never on a hot path.
+#[derive(Default)]
+pub struct DiagStore {
+    inner: Mutex<DiagSnapshot>,
+}
+
+impl DiagStore {
+    /// Fold one update in. A `k` change (a new run on the same
+    /// recorder, e.g. a sweep) resets the accumulated state.
+    pub fn apply(&self, u: &DiagUpdate) {
+        let mut s = self.inner.lock().unwrap();
+        if s.k != u.k {
+            *s = DiagSnapshot { k: u.k, ..DiagSnapshot::default() };
+            s.maxp_mean = f64::NAN;
+            s.entropy_mean = f64::NAN;
+        }
+        s.step = u.step;
+        if let Some(m) = &u.flow_moves {
+            if s.flow_moves.len() != m.len() {
+                s.flow_moves = vec![0; m.len()];
+            }
+            for (acc, &v) in s.flow_moves.iter_mut().zip(m.iter()) {
+                *acc += v;
+            }
+        }
+        if let Some(m) = &u.flow_mass {
+            if s.flow_mass.len() != m.len() {
+                s.flow_mass = vec![0; m.len()];
+            }
+            for (acc, &v) in s.flow_mass.iter_mut().zip(m.iter()) {
+                *acc += v;
+            }
+        }
+        if let Some(p) = &u.partitions {
+            s.partitions = p.clone();
+        }
+        if let Some(o) = u.oscillating {
+            s.oscillating = o;
+        }
+        if let Some(m) = u.maxp_mean {
+            s.maxp_mean = m;
+        }
+        if let Some(e) = u.entropy_mean {
+            s.entropy_mean = e;
+        }
+    }
+
+    pub fn snapshot(&self) -> DiagSnapshot {
+        self.inner.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn flow_matrix_records_and_drains_exactly() {
+        let fm = FlowMatrix::new(3);
+        fm.record(0, 1, 5);
+        fm.record(0, 1, 2);
+        fm.record(2, 0, 1);
+        fm.record(1, 1, 9); // degenerate from==to still counted
+        let (moves, mass) = fm.drain();
+        assert_eq!(moves[0 * 3 + 1], 2);
+        assert_eq!(mass[0 * 3 + 1], 7);
+        assert_eq!(moves[2 * 3], 1);
+        assert_eq!(moves[1 * 3 + 1], 1);
+        assert_eq!(moves.iter().sum::<u64>(), 4);
+        // Drain resets: a second drain is all zeros.
+        let (moves, mass) = fm.drain();
+        assert!(moves.iter().all(|&m| m == 0) && mass.iter().all(|&m| m == 0));
+    }
+
+    #[test]
+    fn churn_and_net_flow_summarize_the_matrix() {
+        let k = 3;
+        let mut moves = vec![0u64; k * k];
+        moves[0 * k + 1] = 4; // 0 → 1
+        moves[1 * k + 0] = 1; // 1 → 0
+        moves[2 * k + 2] = 7; // diagonal: not churn
+        assert_eq!(churn(&moves, k), 5);
+        let net = net_flow(&moves, k);
+        assert_eq!(net, vec![-3, 3, 0]);
+        assert_eq!(net.iter().sum::<i64>(), 0);
+    }
+
+    #[test]
+    fn worker_skew_is_max_over_mean() {
+        assert_eq!(worker_skew(&[]), 1.0);
+        assert_eq!(worker_skew(&[0.0, 0.0]), 1.0);
+        assert_eq!(worker_skew(&[2.0, 2.0, 2.0]), 1.0);
+        // max 6 / mean 3 = 2.
+        assert!((worker_skew(&[6.0, 2.0, 1.0]) - 2.0).abs() < 1e-12);
+        // One straggler among idlers: max 4 / mean 1 = 4.
+        assert!((worker_skew(&[4.0, 0.0, 0.0, 0.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn oscillation_detector_counts_two_cycles_only() {
+        let mut d = OscillationDetector::new();
+        assert_eq!(d.observe(&[0, 1, 2]), 0); // priming
+        assert_eq!(d.observe(&[1, 1, 2]), 0); // priming
+        // v0 returned to 0 (2-cycle), v1/v2 never moved.
+        assert_eq!(d.observe(&[0, 1, 2]), 1);
+        // v0 keeps flapping 0↔1: still exactly one oscillator.
+        assert_eq!(d.observe(&[1, 1, 2]), 1);
+        // v0 settles on 1: window [0,1,1] is not a 2-cycle.
+        assert_eq!(d.observe(&[1, 1, 2]), 0);
+        // A size change (dynamic growth) resets comparability.
+        assert_eq!(d.observe(&[1, 1, 2, 0]), 0);
+    }
+
+    #[test]
+    fn oscillation_ignores_monotone_progress() {
+        // A vertex that keeps moving forward (0 → 1 → 2) is exploring,
+        // not oscillating.
+        let mut d = OscillationDetector::new();
+        d.observe(&[0]);
+        d.observe(&[1]);
+        assert_eq!(d.observe(&[2]), 0);
+    }
+
+    #[test]
+    fn partition_samples_measure_load_boundary_and_locality() {
+        // Two triangles plus one bridge (quality.rs's two_cliques).
+        let mut b = GraphBuilder::new(6);
+        for &(i, j) in &[(0, 1), (1, 2), (2, 0), (3, 4), (4, 5), (5, 3)] {
+            b.edge(i, j);
+        }
+        b.edge(0, 3);
+        let g = b.build();
+        let labels = vec![0, 0, 0, 1, 1, 1];
+        let s = partition_samples(&g, &labels, 2);
+        // Loads match quality::partition_loads (same units).
+        let loads = crate::metrics::quality::partition_loads(&g, &labels, 2);
+        assert_eq!(s[0].load, loads[0]);
+        assert_eq!(s[1].load, loads[1]);
+        // Only the bridge endpoints (0 and 3) are boundary vertices.
+        assert_eq!(s[0].boundary, 1);
+        assert_eq!(s[1].boundary, 1);
+        // Partition 0 owns 4 out-edges, 3 internal; partition 1 owns 3,
+        // all internal.
+        assert!((s[0].local_frac - 3.0 / 4.0).abs() < 1e-12);
+        assert!((s[1].local_frac - 1.0).abs() < 1e-12);
+        // An empty partition is perfectly local by convention.
+        let s3 = partition_samples(&g, &labels, 3);
+        assert_eq!(s3[2], PartSample { load: 0, boundary: 0, local_frac: 1.0 });
+    }
+
+    #[test]
+    fn diag_store_accumulates_flow_and_keeps_latest_samples() {
+        let store = DiagStore::default();
+        store.apply(&DiagUpdate {
+            step: 0,
+            k: 2,
+            flow_moves: Some(vec![0, 3, 1, 0]),
+            flow_mass: Some(vec![0, 6, 2, 0]),
+            partitions: Some(vec![PartSample { load: 10, boundary: 2, local_frac: 0.5 }]),
+            oscillating: Some(4),
+            maxp_mean: Some(0.5),
+            entropy_mean: Some(0.9),
+        });
+        store.apply(&DiagUpdate {
+            step: 1,
+            k: 2,
+            flow_moves: Some(vec![0, 1, 0, 0]),
+            flow_mass: Some(vec![0, 2, 0, 0]),
+            partitions: None, // off trace cadence: keep the last sample
+            oscillating: Some(1),
+            maxp_mean: Some(0.8),
+            entropy_mean: Some(0.3),
+        });
+        let s = store.snapshot();
+        assert_eq!(s.step, 1);
+        assert_eq!(s.flow_moves, vec![0, 4, 1, 0]); // cumulative
+        assert_eq!(s.flow_mass, vec![0, 8, 2, 0]);
+        assert_eq!(s.partitions.len(), 1);
+        assert_eq!(s.oscillating, 1);
+        assert_eq!(s.maxp_mean, 0.8);
+        // A different k (new run on the same recorder) resets.
+        store.apply(&DiagUpdate { step: 0, k: 4, ..DiagUpdate::default() });
+        let s = store.snapshot();
+        assert_eq!((s.k, s.flow_moves.len()), (4, 0));
+        assert!(s.maxp_mean.is_nan());
+    }
+}

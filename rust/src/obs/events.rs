@@ -22,6 +22,14 @@ pub const EVENT_SPEC: &[(&str, &[&str])] = &[
     ("epoch", &["epoch", "placed", "seeds", "evaluated", "repair_s"]),
     ("fault", &["step"]),
     ("checkpoint", &["step", "epoch"]),
+    // Learning-dynamics observatory (`--diag`; see `obs::diag`): one
+    // `flow` line per nonzero k×k cell per step, one `partition` line
+    // per partition at trace cadence, one `diag` summary per step
+    // (optional extras: `maxp_mean`, `entropy_mean`, `frontier`,
+    // `halt`, `epoch`).
+    ("flow", &["step", "from", "to", "moves", "mass"]),
+    ("partition", &["step", "part", "load", "boundary", "local_frac"]),
+    ("diag", &["step", "oscillating"]),
     ("run_end", &["wall_s"]),
 ];
 
@@ -103,6 +111,50 @@ mod tests {
         log.push('\n');
         assert_eq!(validate_events(&log), Ok(3));
         assert_eq!(validate_events(""), Ok(0));
+    }
+
+    #[test]
+    fn diag_kinds_render_and_validate() {
+        let mut log = String::new();
+        log.push_str(&render(
+            "flow",
+            0.2,
+            &[("step", 1.0), ("from", 0.0), ("to", 3.0), ("moves", 17.0), ("mass", 45.0)],
+        ));
+        log.push('\n');
+        log.push_str(&render(
+            "partition",
+            0.3,
+            &[
+                ("step", 1.0),
+                ("part", 3.0),
+                ("load", 2048.0),
+                ("boundary", 31.0),
+                ("local_frac", 0.91),
+            ],
+        ));
+        log.push('\n');
+        log.push_str(&render(
+            "diag",
+            0.4,
+            &[
+                ("step", 1.0),
+                ("oscillating", 5.0),
+                ("frontier", 96.0),
+                ("maxp_mean", 0.7),
+                ("entropy_mean", 0.4),
+            ],
+        ));
+        log.push('\n');
+        assert_eq!(validate_events(&log), Ok(3), "{log}");
+        // Missing required fields in each new kind are rejected.
+        for bad in [
+            r#"{"ev":"flow","t_s":0.1,"step":1,"from":0,"to":3,"moves":17}"#,
+            r#"{"ev":"partition","t_s":0.1,"step":1,"part":3,"load":1,"boundary":0}"#,
+            r#"{"ev":"diag","t_s":0.1,"step":1}"#,
+        ] {
+            assert!(validate_events(bad).is_err(), "{bad}");
+        }
     }
 
     #[test]

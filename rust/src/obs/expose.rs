@@ -82,6 +82,57 @@ pub fn render(
     out
 }
 
+/// Render the learning-dynamics observatory snapshot (`--diag`) as
+/// labelled Prometheus families: the accumulated migration flow matrix
+/// as a counter family (`from`/`to` labels, nonzero cells only) and
+/// the latest per-partition sample as three gauge families (`part`
+/// label). Empty (no diag data yet) renders as the empty string so
+/// `/metrics` is unchanged when the observatory is off.
+pub fn render_diag(d: &crate::obs::diag::DiagSnapshot) -> String {
+    let mut out = String::new();
+    let k = d.k;
+    if k == 0 {
+        return out;
+    }
+    if d.flow_moves.iter().any(|&m| m != 0) {
+        let _ = writeln!(out, "# TYPE engine_flow_moves_total counter");
+        for from in 0..k {
+            for to in 0..k {
+                let m = d.flow_moves[from * k + to];
+                if m != 0 {
+                    let _ =
+                        writeln!(out, "engine_flow_moves_total{{from=\"{from}\",to=\"{to}\"}} {m}");
+                }
+            }
+        }
+        let _ = writeln!(out, "# TYPE engine_flow_mass_total counter");
+        for from in 0..k {
+            for to in 0..k {
+                let m = d.flow_mass[from * k + to];
+                if m != 0 {
+                    let _ =
+                        writeln!(out, "engine_flow_mass_total{{from=\"{from}\",to=\"{to}\"}} {m}");
+                }
+            }
+        }
+    }
+    if !d.partitions.is_empty() {
+        let _ = writeln!(out, "# TYPE partition_load gauge");
+        for (p, s) in d.partitions.iter().enumerate() {
+            let _ = writeln!(out, "partition_load{{part=\"{p}\"}} {}", s.load);
+        }
+        let _ = writeln!(out, "# TYPE partition_boundary_vertices gauge");
+        for (p, s) in d.partitions.iter().enumerate() {
+            let _ = writeln!(out, "partition_boundary_vertices{{part=\"{p}\"}} {}", s.boundary);
+        }
+        let _ = writeln!(out, "# TYPE partition_local_edge_frac gauge");
+        for (p, s) in d.partitions.iter().enumerate() {
+            let _ = writeln!(out, "partition_local_edge_frac{{part=\"{p}\"}} {}", s.local_frac);
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

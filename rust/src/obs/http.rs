@@ -7,6 +7,7 @@
 //! | `/healthz` | JSON liveness + current phase/step/epoch ([`super::Progress`]) |
 //! | `/profile` | live `--profile` tree ([`RunRecorder::profile_report`]) |
 //! | `/events?since=N` | long-poll tail of the event ring buffer |
+//! | `/state` | JSON learning-dynamics snapshot (`--diag`; [`super::diag::DiagStore`]) |
 //!
 //! Scrapes read the same lock-or-atomic snapshots the exit-time
 //! renderers use, so scrape-while-record needs no extra coordination
@@ -79,6 +80,7 @@ fn route(req: &Request, rec: &RunRecorder, stop: &AtomicBool) -> Response {
         "/healthz" => healthz(rec),
         "/profile" => Response::text(200, rec.profile_report()),
         "/events" => events(req, rec, stop),
+        "/state" => state(rec),
         _ => Response::not_found(),
     }
 }
@@ -95,6 +97,39 @@ fn healthz(rec: &RunRecorder) -> Response {
     Response::json(200, Json::Obj(m).to_string())
 }
 
+/// `/state`: the learning-dynamics observatory snapshot as nested JSON
+/// (the flat number/string constraint applies to event *lines*, not
+/// here). Serves zeroed fields until a `--diag` run reports in.
+fn state(rec: &RunRecorder) -> Response {
+    let d = rec.diag().snapshot();
+    let num = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+    let arr_u64 = |v: &[u64]| Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect());
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("step".to_string(), Json::Num(d.step as f64));
+    m.insert("k".to_string(), Json::Num(d.k as f64));
+    m.insert("flow_moves".to_string(), arr_u64(&d.flow_moves));
+    m.insert("flow_mass".to_string(), arr_u64(&d.flow_mass));
+    m.insert(
+        "partitions".to_string(),
+        Json::Arr(
+            d.partitions
+                .iter()
+                .map(|s| {
+                    let mut p = std::collections::BTreeMap::new();
+                    p.insert("load".to_string(), Json::Num(s.load as f64));
+                    p.insert("boundary".to_string(), Json::Num(s.boundary as f64));
+                    p.insert("local_frac".to_string(), Json::Num(s.local_frac));
+                    Json::Obj(p)
+                })
+                .collect(),
+        ),
+    );
+    m.insert("oscillating".to_string(), Json::Num(d.oscillating as f64));
+    m.insert("maxp_mean".to_string(), num(d.maxp_mean));
+    m.insert("entropy_mean".to_string(), num(d.entropy_mean));
+    Response::json(200, Json::Obj(m).to_string())
+}
+
 fn events(req: &Request, rec: &RunRecorder, stop: &AtomicBool) -> Response {
     let since: u64 = match req.query.get("since") {
         None => 0,
@@ -103,10 +138,21 @@ fn events(req: &Request, rec: &RunRecorder, stop: &AtomicBool) -> Response {
             Err(_) => return Response::text(400, "since must be a non-negative integer\n"),
         },
     };
+    // A cursor past the ring's end can never be satisfied by any line
+    // that existed at request time, and a client holding one has
+    // skipped ahead of the stream (a stale cursor from a previous run,
+    // say) — reply empty immediately with the real resume cursor
+    // (`X-Events-Next == end`) instead of parking the full long-poll.
+    // `since == end` is the normal tail position and still parks.
+    let horizon = rec.events_end();
     let deadline = Instant::now() + LONG_POLL_MAX;
     loop {
         let (start, lines, next) = rec.events_since(since);
-        if !lines.is_empty() || stop.load(Ordering::SeqCst) || Instant::now() >= deadline {
+        if since > horizon
+            || !lines.is_empty()
+            || stop.load(Ordering::SeqCst)
+            || Instant::now() >= deadline
+        {
             let mut body = lines.join("\n");
             if !body.is_empty() {
                 body.push('\n');
@@ -213,5 +259,80 @@ mod tests {
         let srv = MetricsServer::start("127.0.0.1:0", rec).unwrap();
         let (status, _) = body_str(httpd::get(srv.local_addr(), "/events?since=x", T).unwrap());
         assert_eq!(status, 400);
+    }
+
+    /// Regression: a cursor past the ring's end must reply empty
+    /// immediately with `X-Events-Next == end`, not park the full
+    /// 10 s long-poll (the pre-fix behaviour).
+    #[test]
+    fn events_cursor_past_end_replies_empty_immediately() {
+        let rec = populated(); // one event -> end == 1
+        let srv = MetricsServer::start("127.0.0.1:0", rec).unwrap();
+        let t0 = Instant::now();
+        let (status, headers, body) =
+            httpd::get(srv.local_addr(), "/events?since=101", T).unwrap();
+        let elapsed = t0.elapsed();
+        assert_eq!(status, 200);
+        assert!(body.is_empty(), "{:?}", String::from_utf8_lossy(&body));
+        let hdr = |k: &str| headers.iter().find(|(n, _)| n == k).map(|(_, v)| v.clone());
+        assert_eq!(hdr("X-Events-Start").as_deref(), Some("1"));
+        assert_eq!(hdr("X-Events-Next").as_deref(), Some("1"));
+        assert!(
+            elapsed < LONG_POLL_MAX / 2,
+            "past-end cursor must not long-poll: took {elapsed:?}"
+        );
+    }
+
+    /// `/healthz` with no run active: a stable idle phase with step 0 /
+    /// epoch 0 — never a torn or stale pair.
+    #[test]
+    fn healthz_idle_reports_idle_phase() {
+        crate::obs::progress().reset();
+        let rec = Arc::new(RunRecorder::new());
+        let srv = MetricsServer::start("127.0.0.1:0", rec).unwrap();
+        let (status, health) = body_str(httpd::get(srv.local_addr(), "/healthz", T).unwrap());
+        assert_eq!(status, 200);
+        let j = Json::parse(&health).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("phase").and_then(Json::as_str), Some("idle"));
+        assert_eq!(j.get("step").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(j.get("epoch").and_then(Json::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn state_serves_diag_snapshot() {
+        let rec = Arc::new(RunRecorder::new());
+        rec.diag_update(&crate::obs::diag::DiagUpdate {
+            step: 3,
+            k: 2,
+            flow_moves: Some(vec![0, 5, 2, 0]),
+            flow_mass: Some(vec![0, 50, 20, 0]),
+            partitions: Some(vec![
+                crate::obs::diag::PartSample { load: 10, boundary: 2, local_frac: 0.8 },
+                crate::obs::diag::PartSample { load: 12, boundary: 3, local_frac: 0.75 },
+            ]),
+            oscillating: Some(4),
+            maxp_mean: Some(0.9),
+            entropy_mean: Some(0.2),
+        });
+        let srv = MetricsServer::start("127.0.0.1:0", rec).unwrap();
+        let (status, text) = body_str(httpd::get(srv.local_addr(), "/state", T).unwrap());
+        assert_eq!(status, 200);
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("step").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(j.get("k").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(j.get("oscillating").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(j.get("maxp_mean").and_then(Json::as_f64), Some(0.9));
+        match j.get("flow_moves") {
+            Some(Json::Arr(v)) => assert_eq!(v.len(), 4, "{text}"),
+            other => panic!("flow_moves not an array: {other:?}"),
+        }
+        match j.get("partitions") {
+            Some(Json::Arr(v)) => {
+                assert_eq!(v.len(), 2, "{text}");
+                assert_eq!(v[1].get("load").and_then(Json::as_f64), Some(12.0));
+            }
+            other => panic!("partitions not an array: {other:?}"),
+        }
     }
 }

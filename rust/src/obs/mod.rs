@@ -27,12 +27,14 @@
 //! barrier reordering. `tests/obs.rs` asserts label-for-label equality
 //! with and without a recorder installed.
 
+pub mod diag;
 pub mod events;
 pub mod expose;
 pub mod http;
 pub mod httpd;
 pub mod log;
 pub mod registry;
+pub mod report;
 pub mod span;
 
 use std::collections::VecDeque;
@@ -53,6 +55,10 @@ pub trait Recorder: Send + Sync {
     fn observe(&self, _name: &'static str, _value: u64) {}
     fn span_observe(&self, _path: &str, _ns: u64) {}
     fn event(&self, _kind: &'static str, _fields: &[(&'static str, f64)]) {}
+    /// One step's learning-dynamics batch (`--diag`; see [`diag`]).
+    /// Carries structured per-partition data that the flat
+    /// `&'static str`-named instrument calls cannot express.
+    fn diag_update(&self, _u: &diag::DiagUpdate) {}
     fn flush(&self) {}
 }
 
@@ -117,6 +123,11 @@ pub fn event(kind: &'static str, fields: &[(&'static str, f64)]) {
     with_recorder(|r| r.event(kind, fields));
 }
 
+/// Hand one diagnostics batch to the recorder (`--diag`; see [`diag`]).
+pub fn diag_update(u: &diag::DiagUpdate) {
+    with_recorder(|r| r.diag_update(u));
+}
+
 /// Open a nested span; records on drop. Inert (no clock read, no stack
 /// push) when recording is disabled at the call.
 pub fn span(name: &'static str) -> SpanGuard {
@@ -137,14 +148,15 @@ pub(crate) fn span_record_absolute(path: &str, ns: u64) {
 /// is in plus the engine-step and dynamic-epoch counters. The engine,
 /// dynamic, and multilevel layers update it behind their captured
 /// `obs_on` / [`enabled`] gates, so the disabled path stays untouched.
-/// Step/epoch are relaxed atomics; the phase label is `&'static str`
-/// behind a `Mutex` (phase transitions are per-phase, not per-vertex —
-/// the lock is never on a hot path, and readers are rare `/healthz`
-/// hits).
+/// Step and epoch are packed into one relaxed atomic (step in the high
+/// 32 bits, epoch in the low 32) so a snapshot is a single load and a
+/// scraper can never observe a torn step/epoch pair, no matter how the
+/// writers interleave. The phase label is `&'static str` behind a
+/// `Mutex` (phase transitions are per-phase, not per-vertex — the lock
+/// is never on a hot path, and readers are rare `/healthz` hits).
 pub struct Progress {
     phase: Mutex<&'static str>,
-    step: AtomicU64,
-    epoch: AtomicU64,
+    step_epoch: AtomicU64,
 }
 
 /// Point-in-time copy of [`Progress`].
@@ -157,33 +169,41 @@ pub struct ProgressSnapshot {
 
 impl Progress {
     const fn new() -> Progress {
-        Progress { phase: Mutex::new("idle"), step: AtomicU64::new(0), epoch: AtomicU64::new(0) }
+        Progress { phase: Mutex::new("idle"), step_epoch: AtomicU64::new(0) }
     }
 
     pub fn set_phase(&self, phase: &'static str) {
         *self.phase.lock().unwrap() = phase;
     }
 
+    /// Values saturate at `u32::MAX` — both counters are step/epoch
+    /// indices, far below 2^32 in any real run.
     pub fn set_step(&self, step: u64) {
-        self.step.store(step, Ordering::Relaxed);
+        let hi = step.min(u32::MAX as u64) << 32;
+        let _ = self.step_epoch.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+            Some((cur & u32::MAX as u64) | hi)
+        });
     }
 
     pub fn set_epoch(&self, epoch: u64) {
-        self.epoch.store(epoch, Ordering::Relaxed);
+        let lo = epoch.min(u32::MAX as u64);
+        let _ = self.step_epoch.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+            Some((cur & !(u32::MAX as u64)) | lo)
+        });
     }
 
     pub fn snapshot(&self) -> ProgressSnapshot {
+        let se = self.step_epoch.load(Ordering::Relaxed);
         ProgressSnapshot {
             phase: *self.phase.lock().unwrap(),
-            step: self.step.load(Ordering::Relaxed),
-            epoch: self.epoch.load(Ordering::Relaxed),
+            step: se >> 32,
+            epoch: se & u32::MAX as u64,
         }
     }
 
     fn reset(&self) {
         self.set_phase("idle");
-        self.set_step(0);
-        self.set_epoch(0);
+        self.step_epoch.store(0, Ordering::Relaxed);
     }
 }
 
@@ -226,6 +246,7 @@ pub struct RunRecorder {
     sink: Option<Mutex<Box<dyn Write + Send>>>,
     ring: Mutex<EventRing>,
     ring_cv: Condvar,
+    diag: diag::DiagStore,
 }
 
 impl RunRecorder {
@@ -247,6 +268,7 @@ impl RunRecorder {
             sink,
             ring: Mutex::new(EventRing { lines: VecDeque::new(), first_seq: 0 }),
             ring_cv: Condvar::new(),
+            diag: diag::DiagStore::default(),
         }
     }
 
@@ -263,14 +285,24 @@ impl RunRecorder {
         self.spans.snapshot()
     }
 
-    /// Prometheus text snapshot of everything recorded so far.
+    /// The learning-dynamics store behind `/state` (`--diag` runs
+    /// populate it; otherwise it stays empty).
+    pub fn diag(&self) -> &diag::DiagStore {
+        &self.diag
+    }
+
+    /// Prometheus text snapshot of everything recorded so far,
+    /// including the labelled diagnostics families when a `--diag` run
+    /// populated them.
     pub fn prometheus(&self) -> String {
-        expose::render(
+        let mut out = expose::render(
             &self.registry.counters(),
             &self.registry.gauges(),
             &self.registry.histograms(),
             &self.spans.snapshot(),
-        )
+        );
+        out.push_str(&expose::render_diag(&self.diag.snapshot()));
+        out
     }
 
     /// The `--profile` timing tree, percentages relative to this
@@ -350,6 +382,10 @@ impl Recorder for RunRecorder {
         }
         ring.lines.push_back(line);
         self.ring_cv.notify_all();
+    }
+
+    fn diag_update(&self, u: &diag::DiagUpdate) {
+        self.diag.apply(u);
     }
 
     fn flush(&self) {
@@ -493,6 +529,37 @@ mod tests {
         assert_eq!(p.snapshot(), ProgressSnapshot { phase: "engine", step: 12, epoch: 3 });
         p.reset();
         assert_eq!(p.snapshot().phase, "idle");
+    }
+
+    /// The packed step/epoch atomic makes snapshots untearable: the
+    /// writer always advances step *before* epoch, so `epoch <= step`
+    /// holds at every instant — a reader racing the two separate
+    /// stores of the old representation could observe the fresh epoch
+    /// with the stale step and break it.
+    #[test]
+    fn progress_snapshot_is_never_torn() {
+        let p = Progress::new();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for j in 0..20_000u64 {
+                    p.set_step(j);
+                    p.set_epoch(j);
+                }
+            });
+            s.spawn(|| {
+                for _ in 0..20_000 {
+                    let snap = p.snapshot();
+                    assert!(
+                        snap.epoch <= snap.step,
+                        "torn pair: step={} epoch={}",
+                        snap.step,
+                        snap.epoch
+                    );
+                }
+            });
+        });
+        let snap = p.snapshot();
+        assert_eq!((snap.step, snap.epoch), (19_999, 19_999));
     }
 
     /// The line-buffered sink contract (kill-safety): every event is

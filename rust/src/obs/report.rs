@@ -1,0 +1,436 @@
+//! Post-hoc run report: `revolver report --obs-log run.jsonl`.
+//!
+//! Renders a self-contained text report from an `--obs-log` JSONL
+//! stream (see [`super::events::EVENT_SPEC`]): the aggregated
+//! migration flow matrix, per-partition trajectories, and a
+//! convergence-attribution section (halt reason, oscillator count,
+//! frontier decay). Stdlib-only — the input is parsed with
+//! [`crate::util::json::Json`], the same parser that validates the
+//! stream in-process.
+//!
+//! With `partial = true` the renderer accepts the prefix a killed run
+//! left behind: a torn final line is dropped instead of rejected, and
+//! a missing `run_end` is reported as the halt reason rather than an
+//! error. Everything the report states is computed from the lines that
+//! did land — the kill-safe sink contract (`obs::mod`) guarantees each
+//! is complete and schema-valid.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+/// One partition's sampled series from `partition` events.
+#[derive(Default, Clone)]
+struct PartSeries {
+    /// (step, load, boundary, local_frac), in stream order.
+    samples: Vec<(u64, u64, u64, f64)>,
+}
+
+/// Everything the report needs, folded out of the event stream.
+#[derive(Default)]
+struct Digest {
+    kind_counts: BTreeMap<String, usize>,
+    /// (step, frontier, migrations) per `step` event.
+    steps: Vec<(u64, u64, u64)>,
+    /// (from, to) → (moves, mass), aggregated over all `flow` events.
+    flow: BTreeMap<(usize, usize), (u64, u64)>,
+    flow_k: usize,
+    parts: BTreeMap<usize, PartSeries>,
+    last_oscillating: Option<u64>,
+    halt: Option<u64>,
+    has_run_end: bool,
+    torn_tail: bool,
+}
+
+fn num(j: &Json, key: &str) -> Option<f64> {
+    j.get(key).and_then(Json::as_f64)
+}
+
+fn req(j: &Json, key: &str, lineno: usize, kind: &str) -> Result<f64, String> {
+    num(j, key).ok_or_else(|| format!("line {lineno}: {kind} event missing {key:?}"))
+}
+
+fn digest(text: &str, partial: bool) -> Result<Digest, String> {
+    let mut d = Digest::default();
+    let nonempty: Vec<(usize, &str)> =
+        text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty()).collect();
+    let last = nonempty.len().saturating_sub(1);
+    for (i, &(idx, line)) in nonempty.iter().enumerate() {
+        let lineno = idx + 1;
+        let j = match Json::parse(line) {
+            Ok(j) => j,
+            Err(e) => {
+                if partial && i == last {
+                    // The kill landed mid-line; every earlier line is
+                    // complete by the sink's write_all-per-line contract.
+                    d.torn_tail = true;
+                    break;
+                }
+                return Err(format!("line {lineno}: {e}"));
+            }
+        };
+        let kind = match j.get("ev").and_then(Json::as_str) {
+            Some(k) => k.to_string(),
+            None => return Err(format!("line {lineno}: missing \"ev\" tag")),
+        };
+        *d.kind_counts.entry(kind.clone()).or_insert(0) += 1;
+        match kind.as_str() {
+            "step" => {
+                let step = req(&j, "step", lineno, "step")? as u64;
+                let frontier = req(&j, "frontier", lineno, "step")? as u64;
+                let migrations = req(&j, "migrations", lineno, "step")? as u64;
+                d.steps.push((step, frontier, migrations));
+            }
+            "flow" => {
+                let from = req(&j, "from", lineno, "flow")? as usize;
+                let to = req(&j, "to", lineno, "flow")? as usize;
+                let moves = req(&j, "moves", lineno, "flow")? as u64;
+                let mass = req(&j, "mass", lineno, "flow")? as u64;
+                let cell = d.flow.entry((from, to)).or_insert((0, 0));
+                cell.0 += moves;
+                cell.1 += mass;
+                d.flow_k = d.flow_k.max(from + 1).max(to + 1);
+            }
+            "partition" => {
+                let step = req(&j, "step", lineno, "partition")? as u64;
+                let part = req(&j, "part", lineno, "partition")? as usize;
+                let load = req(&j, "load", lineno, "partition")? as u64;
+                let boundary = req(&j, "boundary", lineno, "partition")? as u64;
+                let local_frac = req(&j, "local_frac", lineno, "partition")?;
+                d.parts.entry(part).or_default().samples.push((step, load, boundary, local_frac));
+            }
+            "diag" => {
+                d.last_oscillating = Some(req(&j, "oscillating", lineno, "diag")? as u64);
+                if let Some(h) = num(&j, "halt") {
+                    d.halt = Some(h as u64);
+                }
+            }
+            "run_end" => d.has_run_end = true,
+            _ => {}
+        }
+    }
+    Ok(d)
+}
+
+fn halt_reason(d: &Digest, partial: bool) -> String {
+    match d.halt {
+        Some(1) => "converged (halting window)".to_string(),
+        Some(2) => "converged (empty frontier)".to_string(),
+        Some(3) => "step budget exhausted".to_string(),
+        Some(4) => "worker panic (contained)".to_string(),
+        Some(x) => format!("unknown halt code {x}"),
+        None if !d.has_run_end && (partial || d.torn_tail) => {
+            "run interrupted (partial log, no run_end)".to_string()
+        }
+        None => "not recorded (run without --diag)".to_string(),
+    }
+}
+
+/// A proportional text bar, `width` columns at full scale.
+fn bar(value: u64, max: u64, width: usize) -> String {
+    let n = if max == 0 { 0 } else { ((value as f64 / max as f64) * width as f64).round() as usize };
+    "#".repeat(n.min(width))
+}
+
+fn render_flow_section(out: &mut String, d: &Digest) {
+    let _ = writeln!(out, "flow matrix (vertex moves, from -> to)");
+    let _ = writeln!(out, "--------------------------------------");
+    let k = d.flow_k;
+    if k == 0 {
+        let _ = writeln!(out, "no flow events (run without --diag, or no migrations)");
+        let _ = writeln!(out);
+        return;
+    }
+    let cell = |from: usize, to: usize| d.flow.get(&(from, to)).copied().unwrap_or((0, 0));
+    let row_total = |from: usize| (0..k).map(|to| cell(from, to).0).sum::<u64>();
+    let col_total = |to: usize| (0..k).map(|from| cell(from, to).0).sum::<u64>();
+    let grand: u64 = (0..k).map(row_total).sum();
+    let w = format!("{grand}").len().max(format!("to {}", k - 1).len()).max(5);
+    let mut head = format!("{:>8}", "");
+    for to in 0..k {
+        let _ = write!(head, " {:>w$}", format!("to {to}"));
+    }
+    let _ = write!(head, " {:>w$}", "total");
+    let _ = writeln!(out, "{head}");
+    for from in 0..k {
+        let mut row = format!("{:>8}", format!("from {from}"));
+        for to in 0..k {
+            let m = cell(from, to).0;
+            let _ = write!(row, " {:>w$}", if m == 0 { "-".to_string() } else { m.to_string() });
+        }
+        let _ = write!(row, " {:>w$}", row_total(from));
+        let _ = writeln!(out, "{row}");
+    }
+    let mut foot = format!("{:>8}", "total");
+    for to in 0..k {
+        let _ = write!(foot, " {:>w$}", col_total(to));
+    }
+    let _ = write!(foot, " {:>w$}", grand);
+    let _ = writeln!(out, "{foot}");
+    let churn: u64 = d.flow.iter().filter(|((f, t), _)| f != t).map(|(_, (m, _))| *m).sum();
+    let _ = writeln!(out, "churn (off-diagonal moves): {churn}");
+    // Net mass flow per partition: inflow - outflow; sums to zero.
+    let mut net = String::from("net mass flow:");
+    for p in 0..k {
+        let inflow: i64 = (0..k).map(|from| cell(from, p).1 as i64).sum();
+        let outflow: i64 = (0..k).map(|to| cell(p, to).1 as i64).sum();
+        let _ = write!(net, " p{p} {:+}", inflow - outflow);
+    }
+    let _ = writeln!(out, "{net}");
+    let _ = writeln!(out);
+}
+
+fn render_partition_section(out: &mut String, d: &Digest) {
+    let _ = writeln!(out, "per-partition trajectories");
+    let _ = writeln!(out, "--------------------------");
+    if d.parts.is_empty() {
+        let _ = writeln!(out, "no partition events (run without --diag)");
+        let _ = writeln!(out);
+        return;
+    }
+    let _ = writeln!(
+        out,
+        "{:>4} {:>21} {:>21} {:>23}",
+        "part", "load first->last", "boundary first->last", "local_frac first->last"
+    );
+    for (p, series) in &d.parts {
+        let first = series.samples.first().copied().unwrap_or_default();
+        let last = series.samples.last().copied().unwrap_or_default();
+        let _ = writeln!(
+            out,
+            "{:>4} {:>21} {:>21} {:>23}",
+            p,
+            format!("{} -> {}", first.1, last.1),
+            format!("{} -> {}", first.2, last.2),
+            format!("{:.3} -> {:.3}", first.3, last.3),
+        );
+    }
+    let mut loads = String::from("final loads:");
+    for series in d.parts.values() {
+        let _ = write!(loads, " {}", series.samples.last().map_or(0, |s| s.1));
+    }
+    let _ = writeln!(out, "{loads}");
+    let _ = writeln!(out);
+}
+
+fn render_convergence_section(out: &mut String, d: &Digest, partial: bool) {
+    let _ = writeln!(out, "convergence");
+    let _ = writeln!(out, "-----------");
+    let _ = writeln!(out, "halt reason: {}", halt_reason(d, partial));
+    let total_migrations: u64 = d.steps.iter().map(|&(_, _, m)| m).sum();
+    let _ = writeln!(out, "total migrations: {total_migrations}");
+    match d.last_oscillating {
+        Some(n) => {
+            let _ = writeln!(out, "oscillating vertices at halt: {n}");
+        }
+        None => {
+            let _ = writeln!(out, "oscillating vertices at halt: not recorded");
+        }
+    }
+    if !d.steps.is_empty() {
+        let _ = writeln!(out, "frontier decay:");
+        let max_frontier = d.steps.iter().map(|&(_, f, _)| f).max().unwrap_or(0);
+        // At most 24 sampled rows, always including the final step.
+        let n = d.steps.len();
+        let stride = ((n + 23) / 24).max(1);
+        let stepw = format!("{}", d.steps.last().unwrap().0).len().max(1);
+        for (i, &(step, frontier, _)) in d.steps.iter().enumerate() {
+            if i % stride != 0 && i + 1 != n {
+                continue;
+            }
+            let _ = writeln!(
+                out,
+                "  step {step:>stepw$} |{:<30}| {frontier}",
+                bar(frontier, max_frontier, 30)
+            );
+        }
+    }
+}
+
+/// Render the full report. `partial` relaxes the parser for the prefix
+/// a killed run leaves behind (torn final line, missing `run_end`).
+pub fn render_report(text: &str, partial: bool) -> Result<String, String> {
+    let d = digest(text, partial)?;
+    let total: usize = d.kind_counts.values().sum();
+    if total == 0 {
+        return Err("no events in log".to_string());
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "revolver run report");
+    let _ = writeln!(out, "===================");
+    let mut counts = String::new();
+    for (kind, n) in &d.kind_counts {
+        let _ = write!(counts, " {kind}={n}");
+    }
+    let _ = writeln!(out, "events: {total} total;{counts}");
+    let src = match (partial, d.torn_tail) {
+        (true, true) => "partial log (torn final line dropped)",
+        (true, false) => "partial log (clean prefix)",
+        _ => "complete log",
+    };
+    let _ = writeln!(out, "source: {src}");
+    let _ = writeln!(out);
+    render_flow_section(&mut out, &d);
+    render_partition_section(&mut out, &d);
+    render_convergence_section(&mut out, &d, partial);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::events::render;
+
+    fn sample_log() -> String {
+        let mut log = String::new();
+        let mut push = |line: String| {
+            log.push_str(&line);
+            log.push('\n');
+        };
+        push(render("run_start", 0.0, &[]));
+        push(render(
+            "step",
+            0.1,
+            &[("step", 0.0), ("frontier", 6.0), ("evaluated", 6.0), ("migrations", 3.0)],
+        ));
+        push(render(
+            "flow",
+            0.1,
+            &[("step", 0.0), ("from", 0.0), ("to", 1.0), ("moves", 2.0), ("mass", 20.0)],
+        ));
+        push(render(
+            "flow",
+            0.1,
+            &[("step", 0.0), ("from", 1.0), ("to", 0.0), ("moves", 1.0), ("mass", 5.0)],
+        ));
+        push(render(
+            "partition",
+            0.1,
+            &[
+                ("step", 0.0),
+                ("part", 0.0),
+                ("load", 10.0),
+                ("boundary", 4.0),
+                ("local_frac", 0.5),
+            ],
+        ));
+        push(render(
+            "partition",
+            0.1,
+            &[
+                ("step", 0.0),
+                ("part", 1.0),
+                ("load", 12.0),
+                ("boundary", 4.0),
+                ("local_frac", 0.6),
+            ],
+        ));
+        push(render("diag", 0.1, &[("step", 0.0), ("oscillating", 1.0)]));
+        push(render(
+            "step",
+            0.2,
+            &[("step", 1.0), ("frontier", 2.0), ("evaluated", 2.0), ("migrations", 1.0)],
+        ));
+        push(render(
+            "flow",
+            0.2,
+            &[("step", 1.0), ("from", 0.0), ("to", 1.0), ("moves", 1.0), ("mass", 10.0)],
+        ));
+        push(render(
+            "partition",
+            0.2,
+            &[
+                ("step", 1.0),
+                ("part", 0.0),
+                ("load", 8.0),
+                ("boundary", 2.0),
+                ("local_frac", 0.7),
+            ],
+        ));
+        push(render(
+            "partition",
+            0.2,
+            &[
+                ("step", 1.0),
+                ("part", 1.0),
+                ("load", 14.0),
+                ("boundary", 2.0),
+                ("local_frac", 0.8),
+            ],
+        ));
+        push(render("diag", 0.2, &[("step", 1.0), ("oscillating", 0.0), ("halt", 1.0)]));
+        push(render("run_end", 0.3, &[("wall_s", 0.3)]));
+        log
+    }
+
+    #[test]
+    fn renders_all_sections_from_a_complete_log() {
+        let report = render_report(&sample_log(), false).unwrap();
+        assert!(report.contains("flow matrix"), "{report}");
+        assert!(report.contains("per-partition trajectories"), "{report}");
+        assert!(report.contains("halt reason: converged (halting window)"), "{report}");
+        assert!(report.contains("total migrations: 4"), "{report}");
+        assert!(report.contains("oscillating vertices at halt: 0"), "{report}");
+        assert!(report.contains("final loads: 8 14"), "{report}");
+        assert!(report.contains("churn (off-diagonal moves): 4"), "{report}");
+        // Net mass flow: p0 out 30 in 5 -> -25; p1 +25; sums to zero.
+        assert!(report.contains("net mass flow: p0 -25 p1 +25"), "{report}");
+        assert!(report.contains("frontier decay:"), "{report}");
+        assert!(report.contains("source: complete log"), "{report}");
+    }
+
+    #[test]
+    fn partial_tolerates_a_torn_tail_and_attributes_the_kill() {
+        let log = sample_log();
+        // Cut mid-way through the final diag/run_end lines: keep a clean
+        // prefix plus a torn last line.
+        let keep = log.lines().take(8).collect::<Vec<_>>().join("\n");
+        let torn = format!("{keep}\n{{\"ev\":\"flow\",\"t_s\":0.2,\"from\":0,");
+        let report = render_report(&torn, true).unwrap();
+        assert!(report.contains("source: partial log (torn final line dropped)"), "{report}");
+        assert!(report.contains("halt reason: run interrupted (partial log"), "{report}");
+        // The same torn input is an error without --partial.
+        assert!(render_report(&torn, false).is_err());
+    }
+
+    #[test]
+    fn clean_prefix_without_run_end_is_interrupted_too() {
+        let log = sample_log();
+        let keep = log.lines().take(7).collect::<Vec<_>>().join("\n");
+        let report = render_report(&keep, true).unwrap();
+        assert!(report.contains("source: partial log (clean prefix)"), "{report}");
+        assert!(report.contains("halt reason: run interrupted"), "{report}");
+        assert!(report.contains("oscillating vertices at halt: 1"), "{report}");
+    }
+
+    #[test]
+    fn diagless_log_reports_missing_probes_not_errors() {
+        let mut log = String::new();
+        log.push_str(&render("run_start", 0.0, &[]));
+        log.push('\n');
+        log.push_str(&render(
+            "step",
+            0.1,
+            &[("step", 0.0), ("frontier", 5.0), ("evaluated", 5.0), ("migrations", 2.0)],
+        ));
+        log.push('\n');
+        log.push_str(&render("run_end", 0.2, &[("wall_s", 0.2)]));
+        log.push('\n');
+        let report = render_report(&log, false).unwrap();
+        assert!(report.contains("no flow events"), "{report}");
+        assert!(report.contains("no partition events"), "{report}");
+        assert!(report.contains("halt reason: not recorded (run without --diag)"), "{report}");
+        assert!(report.contains("total migrations: 2"), "{report}");
+    }
+
+    #[test]
+    fn empty_and_garbage_inputs_are_errors() {
+        assert!(render_report("", false).is_err());
+        assert!(render_report("", true).is_err());
+        assert!(render_report("not json\n", false).is_err());
+        // A single torn line with nothing before it: tolerated shape-wise
+        // but there are no events to report on.
+        assert!(render_report("{\"ev\":", true).is_err());
+    }
+}

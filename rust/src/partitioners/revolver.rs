@@ -447,6 +447,32 @@ impl VertexProgram for RevolverProgram<'_> {
         Some(self.probs.dump())
     }
 
+    fn la_decisiveness(&self, verts: &[VertexId]) -> Option<crate::obs::diag::Decisiveness> {
+        // Coordinator-side, same quiescence window as `la_checkpoint`.
+        // Frontier-only: the cost is O(|verts|·k), proportional to the
+        // step's own phase work, not O(n·k).
+        let k = self.cfg.parts;
+        let mut row = vec![0.0f32; k];
+        let mut d = crate::obs::diag::Decisiveness::default();
+        for &v in verts {
+            unsafe { self.probs.read_row(v as usize, &mut row) };
+            let maxp = row.iter().copied().fold(0.0f32, f32::max) as f64;
+            let mut ent = 0.0f64;
+            for &p in &row {
+                if p > 0.0 {
+                    let p = p as f64;
+                    ent -= p * p.ln();
+                }
+            }
+            crate::obs::observe("la_row_maxp_milli", (maxp * 1e3) as u64);
+            crate::obs::observe("la_row_entropy_millinats", (ent * 1e3) as u64);
+            d.rows += 1;
+            d.maxp_sum += maxp;
+            d.entropy_sum += ent;
+        }
+        Some(d)
+    }
+
     fn prepare_phase_a(&self, _g: &Graph, _state: &PartitionState, _step: u32) {}
 
     fn prepare_phase_b(

@@ -84,6 +84,13 @@ impl VertexProgram for SpinnerProgram<'_> {
         }
     }
 
+    fn la_decisiveness(&self, _verts: &[VertexId]) -> Option<crate::obs::diag::Decisiveness> {
+        // Label propagation keeps no per-vertex probability rows, so
+        // there is nothing to measure — the diag event simply omits
+        // the decisiveness means.
+        None
+    }
+
     fn prepare_phase_a(&self, _g: &Graph, state: &PartitionState, _step: u32) -> Vec<f32> {
         let t = crate::obs::enabled().then(crate::util::Stopwatch::start);
         let k = self.cfg.parts;

@@ -1,0 +1,174 @@
+//! Learning-dynamics observatory integration (`--diag`): the flow
+//! matrix's exactness contract — row sums equal the engine's migration
+//! counters, cell for cell sourced from the same `StepCtx::migrate`
+//! calls — and the `report` renderer's agreement with the run's own
+//! CSV trace on both a complete log and a killed-run prefix.
+//!
+//! These tests install into the process-global recorder slot, so they
+//! serialize behind one mutex (same pattern as `tests/obs.rs`).
+
+use std::io::Write;
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use revolver::config::{Frontier, ProbFormat, RevolverConfig};
+use revolver::graph::gen::{generate_dataset, Dataset};
+use revolver::metrics::quality;
+use revolver::obs::{self, events, report, RunRecorder};
+use revolver::partitioners::revolver::Revolver;
+use revolver::partitioners::Partitioner;
+use revolver::util::json::Json;
+
+fn serialize() -> MutexGuard<'static, ()> {
+    static GUARD: OnceLock<Mutex<()>> = OnceLock::new();
+    GUARD.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl Write for SharedBuf {
+    fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(data);
+        Ok(data.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+fn diag_cfg(k: usize, steps: u32, seed: u64) -> RevolverConfig {
+    RevolverConfig {
+        parts: k,
+        max_steps: steps,
+        threads: 1,
+        seed,
+        frontier: Frontier::Off,
+        prob_format: ProbFormat::F32,
+        trace_every: 1,
+        diag: true,
+        ..Default::default()
+    }
+}
+
+/// Run one recorded `--diag` partition; returns (labels CSV-side trace
+/// output, the JSONL text, the recorder).
+fn recorded_diag_run(
+    k: usize,
+    steps: u32,
+    seed: u64,
+) -> (revolver::partitioners::PartitionOutput, String, Arc<RunRecorder>) {
+    let g = generate_dataset(Dataset::So, 512, 4).unwrap();
+    let buf = Arc::new(Mutex::new(Vec::<u8>::new()));
+    let rec = Arc::new(RunRecorder::with_sink(Box::new(SharedBuf(buf.clone()))));
+    obs::install(rec.clone());
+    obs::event("run_start", &[]);
+    let out = Revolver::new(diag_cfg(k, steps, seed)).partition(&g);
+    obs::event("run_end", &[("wall_s", rec.elapsed_s())]);
+    obs::uninstall();
+    rec.flush();
+    let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+    (out, text, rec)
+}
+
+fn num(j: &Json, key: &str) -> f64 {
+    j.get(key).and_then(Json::as_f64).unwrap_or_else(|| panic!("missing {key}: {j:?}"))
+}
+
+/// The acceptance contract: with diag enabled, the flow matrix's cells
+/// sum to the engine's migration counters *exactly* — the JSONL flow
+/// events, the accumulated `DiagStore`, the `engine_migrations`
+/// counter, and the CSV trace's per-step migrations all agree.
+#[test]
+fn flow_matrix_row_sums_equal_engine_migration_counters() {
+    let _serial = serialize();
+    let k = 4;
+    let (out, text, rec) = recorded_diag_run(k, 8, 11);
+    events::validate_events(&text).expect("diag log must be schema-valid");
+
+    // Σ over JSONL flow events (cell granularity, nonzero cells only).
+    let mut event_moves = 0u64;
+    let mut per_step_moves: std::collections::BTreeMap<u64, u64> = Default::default();
+    for line in text.lines() {
+        let j = Json::parse(line).unwrap();
+        if j.get("ev").and_then(Json::as_str) == Some("flow") {
+            let moves = num(&j, "moves") as u64;
+            event_moves += moves;
+            *per_step_moves.entry(num(&j, "step") as u64).or_insert(0) += moves;
+        }
+    }
+    assert!(event_moves > 0, "an 8-step revolver run must migrate: {text}");
+
+    // The engine's own counter (one fetch_add per executed migrate).
+    let counters = rec.registry().counters();
+    let engine_migrations =
+        counters.iter().find(|(n, _)| n == "engine_migrations").map(|(_, v)| *v).unwrap();
+    assert_eq!(event_moves, engine_migrations, "flow cells must sum to the counter");
+
+    // The accumulated store behind /state and /metrics.
+    let snap = rec.diag().snapshot();
+    assert_eq!(snap.k, k);
+    assert_eq!(snap.flow_moves.iter().sum::<u64>(), engine_migrations);
+
+    // The CSV trace (trace_every = 1: every step sampled once).
+    let trace_migrations: u64 = out.trace.points.iter().map(|p| p.migrations).sum();
+    assert_eq!(trace_migrations, engine_migrations);
+
+    // And per step: each step's flow cells sum to that step's trace
+    // migrations (the swap-to-zero drain makes steps disjoint).
+    for p in &out.trace.points {
+        let step_flow = per_step_moves.get(&(p.step as u64)).copied().unwrap_or(0);
+        assert_eq!(step_flow, p.migrations, "step {} flow vs trace", p.step);
+    }
+}
+
+/// `report` renders a complete run without error and its summary
+/// numbers match the run's own CSV trace: total migrations and the
+/// final per-partition loads.
+#[test]
+fn report_matches_the_runs_csv_trace() {
+    let _serial = serialize();
+    let k = 4;
+    let (out, text, _rec) = recorded_diag_run(k, 8, 11);
+    let g = generate_dataset(Dataset::So, 512, 4).unwrap();
+
+    let rendered = report::render_report(&text, false).expect("complete log must render");
+    assert!(rendered.contains("flow matrix"), "{rendered}");
+    assert!(rendered.contains("halt reason"), "{rendered}");
+    assert!(rendered.contains("per-partition trajectories"), "{rendered}");
+
+    let trace_migrations: u64 = out.trace.points.iter().map(|p| p.migrations).sum();
+    assert!(
+        rendered.contains(&format!("total migrations: {trace_migrations}")),
+        "report total must match the CSV trace ({trace_migrations}):\n{rendered}"
+    );
+
+    let want_loads = quality::partition_loads(&g, &out.labels, k);
+    let loads_line = rendered
+        .lines()
+        .find(|l| l.starts_with("final loads:"))
+        .unwrap_or_else(|| panic!("no final loads line:\n{rendered}"));
+    let got_loads: Vec<u64> = loads_line["final loads:".len()..]
+        .split_whitespace()
+        .map(|t| t.parse().unwrap())
+        .collect();
+    assert_eq!(got_loads, want_loads, "report loads vs quality::partition_loads");
+}
+
+/// `--partial` accepts the prefix a killed run leaves behind: a torn
+/// final line plus no `run_end`, attributed as an interrupted run.
+#[test]
+fn report_renders_a_killed_run_prefix() {
+    let _serial = serialize();
+    let (_out, text, _rec) = recorded_diag_run(4, 8, 11);
+    // Simulate a mid-write kill: drop run_end, tear the last line.
+    let mut lines: Vec<&str> = text.lines().collect();
+    assert!(lines.pop().unwrap().contains("run_end"));
+    let torn_tail = &lines.pop().unwrap()[..10];
+    let prefix = format!("{}\n{}", lines.join("\n"), torn_tail);
+
+    let rendered = report::render_report(&prefix, true).expect("--partial must accept a prefix");
+    assert!(rendered.contains("flow matrix"), "{rendered}");
+    assert!(rendered.contains("halt reason: run interrupted"), "{rendered}");
+    assert!(rendered.contains("partial log (torn final line dropped)"), "{rendered}");
+    // Without --partial the same prefix is an error (torn JSON).
+    assert!(report::render_report(&prefix, false).is_err());
+}

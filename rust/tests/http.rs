@@ -144,3 +144,32 @@ fn events_endpoint_works_without_a_sink_and_honours_cursors() {
     drop(srv);
     obs::uninstall();
 }
+
+/// Regression: a cursor *past* the ring end (a stale client, or a
+/// typo'd `since`) must get an immediate empty 200 whose
+/// `X-Events-Next` points at the real end — not park for the full 10 s
+/// long-poll waiting for sequence numbers that may never come.
+#[test]
+fn events_cursor_past_ring_end_returns_immediately() {
+    let _serial = serialize();
+    let rec = Arc::new(RunRecorder::new());
+    obs::install(rec.clone());
+    obs::event("run_start", &[]);
+    obs::event("run_end", &[("wall_s", 0.01)]);
+    let srv = MetricsServer::start("127.0.0.1:0", rec.clone()).unwrap();
+    let addr = srv.local_addr();
+
+    let end = rec.events_end();
+    let t0 = Instant::now();
+    let (status, headers, body) =
+        httpd::get(addr, &format!("/events?since={}", end + 1_000), T).unwrap();
+    assert!(t0.elapsed() < Duration::from_secs(2), "must not long-poll: {:?}", t0.elapsed());
+    assert_eq!(status, 200);
+    assert!(body.is_empty(), "nothing newer than the end exists: {body:?}");
+    let hdr = |k: &str| headers.iter().find(|(n, _)| n == k).map(|(_, v)| v.clone());
+    assert_eq!(hdr("X-Events-Start").as_deref(), Some(end.to_string().as_str()));
+    assert_eq!(hdr("X-Events-Next").as_deref(), Some(end.to_string().as_str()));
+
+    drop(srv);
+    obs::uninstall();
+}

@@ -131,9 +131,72 @@ fn installed_recorder_never_changes_labels() {
 
     // The no-op recorder exercises dispatch without retention.
     obs::install(Arc::new(obs::NoopRecorder));
-    let noop = Revolver::new(cfg).partition(&g).labels;
+    let noop = Revolver::new(cfg.clone()).partition(&g).labels;
     obs::uninstall();
     assert_eq!(plain, noop, "no-op recorder must not perturb the run");
+
+    // The learning-dynamics observatory (`--diag`) adds flow recording
+    // inside `StepCtx::migrate`, decisiveness reads over the ProbSlab,
+    // an oscillation scan, and partition sampling — none of which may
+    // perturb the trajectory either.
+    let mut diag_cfg = cfg;
+    diag_cfg.diag = true;
+    let rec = Arc::new(RunRecorder::new());
+    obs::install(rec.clone());
+    let diag = Revolver::new(diag_cfg).partition(&g).labels;
+    obs::uninstall();
+    assert_eq!(plain, diag, "diag probes must not perturb the run");
+    let snap = rec.diag().snapshot();
+    assert!(snap.k > 0 && !snap.flow_moves.is_empty(), "diag probes must actually record");
+}
+
+/// Install/uninstall racing metric writers and progress readers must
+/// never panic, tear a step/epoch pair, or leave a recorder installed.
+/// Writers racing an uninstall may lose samples (the slot is an
+/// `RwLock<Option<_>>`, not a queue) — that's the documented contract;
+/// what this pins is memory safety plus the terminal state.
+#[test]
+fn install_uninstall_races_are_safe_and_end_uninstalled() {
+    let _serial = serialize();
+    let rec = Arc::new(RunRecorder::new());
+    std::thread::scope(|s| {
+        // Churn the global slot.
+        s.spawn(|| {
+            for _ in 0..500 {
+                obs::install(rec.clone());
+                obs::uninstall();
+            }
+        });
+        // Hammer metrics + events through whatever is installed.
+        s.spawn(|| {
+            for i in 0..2_000u64 {
+                obs::counter_add("race_total", 1);
+                obs::observe("race_hist", i % 64);
+                obs::event("run_start", &[]);
+            }
+        });
+        // Progress writes (step always advanced before epoch)...
+        s.spawn(|| {
+            for j in 0..2_000u64 {
+                obs::progress().set_phase("engine");
+                obs::progress().set_step(j);
+                obs::progress().set_epoch(j);
+            }
+        });
+        // ...racing snapshot reads: the /healthz invariant.
+        s.spawn(|| {
+            for _ in 0..2_000 {
+                let p = obs::progress().snapshot();
+                assert!(p.epoch <= p.step, "torn pair: step={} epoch={}", p.step, p.epoch);
+            }
+        });
+    });
+    obs::uninstall();
+    assert!(!obs::enabled(), "slot must end uninstalled");
+    // With no run active the readout resets to a stable idle state.
+    obs::progress().reset();
+    let p = obs::progress().snapshot();
+    assert_eq!((p.phase, p.step, p.epoch), ("idle", 0, 0));
 }
 
 /// Registry contention property: N threads hammering the *same*

@@ -31,6 +31,11 @@ EVENT_SPEC = {
     "epoch": ["epoch", "placed", "seeds", "evaluated", "repair_s"],
     "fault": ["step"],
     "checkpoint": ["step", "epoch"],
+    # Learning-dynamics observatory (--diag); extras like maxp_mean /
+    # entropy_mean / frontier / halt / epoch ride as optional fields.
+    "flow": ["step", "from", "to", "moves", "mass"],
+    "partition": ["step", "part", "load", "boundary", "local_frac"],
+    "diag": ["step", "oscillating"],
     "run_end": ["wall_s"],
 }
 
@@ -106,10 +111,15 @@ def self_test():
         '{"ev":"run_start","t_s":0.0}',
         step,
         "",  # blank lines are permitted
+        '{"ev":"flow","t_s":0.6,"step":0,"from":0,"to":1,"moves":2,"mass":17}',
+        '{"ev":"partition","t_s":0.6,"step":0,"part":1,"load":40,'
+        '"boundary":3,"local_frac":0.9}',
+        '{"ev":"diag","t_s":0.7,"step":0,"oscillating":1,"maxp_mean":0.8,"halt":3}',
         '{"ev":"run_end","t_s":1.0,"wall_s":1.0}',
     ]
     kinds, steps = validate(good)
-    assert kinds == ["run_start", "step", "run_end"] and steps == 1, kinds
+    assert kinds == ["run_start", "step", "flow", "partition", "diag", "run_end"], kinds
+    assert steps == 1, steps
 
     # Partial mode: a killed-run prefix without run_end passes, and an
     # empty log is fine.
@@ -145,6 +155,16 @@ def self_test():
             "no step events",
             ['{"ev":"run_start","t_s":0.0}', '{"ev":"run_end","t_s":1.0,"wall_s":1.0}'],
         ),
+        # Observatory kinds: each rejects a missing required field.
+        (
+            "required field",
+            ['{"ev":"flow","t_s":0.0,"step":0,"from":1,"to":2,"moves":3}'],
+        ),
+        (
+            "required field",
+            ['{"ev":"partition","t_s":0.0,"step":0,"part":1,"load":5,"boundary":2}'],
+        ),
+        ("required field", ['{"ev":"diag","t_s":0.0,"step":0}']),
     ]
     for expect, lines in bad_cases:
         try:

@@ -55,6 +55,7 @@ grep '^epoch ' "$WORK/ref.txt" | tail -n 1 >&2
 echo "== victim: same run, checkpointed, killed -9 mid-flight ==" >&2
 run_dynamic --checkpoint "$WORK/ckpt" --checkpoint-every 2 \
     --metrics-addr 127.0.0.1:0 \
+    --obs-log "$WORK/victim.jsonl" --diag \
     >"$WORK/victim.txt" 2>"$WORK/victim.err" &
 RUN_PID=$!
 
@@ -110,6 +111,7 @@ echo "== checkpoints on disk: $(ls "$WORK/ckpt" | tr '\n' ' ')==" >&2
 
 echo "== resume: finishing the victim's run from its checkpoint ==" >&2
 run_dynamic --checkpoint "$WORK/ckpt" --checkpoint-every 2 --resume \
+    --obs-log "$WORK/resumed.jsonl" --diag \
     >"$WORK/resumed.txt" 2>"$WORK/resumed.err"
 grep -q 'resumed from checkpoint' "$WORK/resumed.txt" || {
     echo "error: resumed run did not pick up the checkpoint" >&2
@@ -151,3 +153,27 @@ print("ok: resumed run converged to the reference quality")
 PY
 
 echo "ok: kill -9 + --resume round trip preserved run quality" >&2
+
+# Post-mortem reporting: the killed run's obs log is a prefix (torn
+# final line possible — the kill is mid-write by design), the resumed
+# run's is complete. Both must render, with the observatory's flow
+# matrix and the halt attribution present.
+echo "== report: rendering the interrupted and resumed obs logs ==" >&2
+(cd rust && cargo run --release --quiet -- report \
+    --obs-log "$WORK/victim.jsonl" --partial) >"$WORK/victim.report"
+(cd rust && cargo run --release --quiet -- report \
+    --obs-log "$WORK/resumed.jsonl") >"$WORK/resumed.report"
+for rpt in victim resumed; do
+    grep -qi 'flow matrix' "$WORK/$rpt.report" || {
+        echo "error: $rpt report is missing its flow matrix section" >&2
+        cat "$WORK/$rpt.report" >&2
+        exit 1
+    }
+    grep -qi 'halt reason' "$WORK/$rpt.report" || {
+        echo "error: $rpt report is missing its halt attribution" >&2
+        cat "$WORK/$rpt.report" >&2
+        exit 1
+    }
+done
+grep -i 'halt reason' "$WORK/victim.report" "$WORK/resumed.report" >&2
+echo "ok: post-mortem reports rendered for both runs" >&2
